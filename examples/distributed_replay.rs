@@ -1,0 +1,79 @@
+//! Distributed resiliency demo (§Future-Work, implemented): task replay
+//! and replication across simulated localities, surviving node death
+//! mid-run.
+//!
+//! ```sh
+//! cargo run --release --offline --example distributed_replay
+//! ```
+
+use std::sync::Arc;
+
+use rhpx::agas::LocalityId;
+use rhpx::distributed::{
+    async_replay_distributed, async_replicate_distributed, Cluster, DistBody, NetworkConfig,
+};
+use rhpx::metrics::Table;
+use rhpx::resilience::vote_majority;
+
+fn main() {
+    let n_loc = 4;
+    let cl = Cluster::new(n_loc, 1, NetworkConfig { latency_us: 20 });
+    println!("cluster: {n_loc} localities, 20µs interconnect latency\n");
+
+    let body: DistBody<usize> = Arc::new(|loc| {
+        // a little work, then report where we ran
+        rhpx::metrics::busy_wait_ns(50_000);
+        Ok(loc.id().0)
+    });
+
+    let mut table = Table::new(
+        "work placement under failures (distributed replay)",
+        &["phase", "loc0", "loc1", "loc2", "loc3", "failed"],
+    );
+
+    let mut phase = |label: &str, tasks: usize| {
+        let mut per_loc = vec![0usize; n_loc];
+        let mut failed = 0;
+        for _ in 0..tasks {
+            match async_replay_distributed(&cl, n_loc, Arc::clone(&body)).get() {
+                Ok(id) => per_loc[id] += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        table.add([
+            label.to_string(),
+            per_loc[0].to_string(),
+            per_loc[1].to_string(),
+            per_loc[2].to_string(),
+            per_loc[3].to_string(),
+            failed.to_string(),
+        ]);
+    };
+
+    phase("all healthy", 40);
+
+    println!("-> killing locality 1 and 2 ...");
+    cl.kill(LocalityId(1));
+    cl.kill(LocalityId(2));
+    phase("loc1+loc2 dead", 40);
+
+    println!("-> reviving locality 1 ...");
+    cl.revive(LocalityId(1));
+    phase("loc1 rejoined", 40);
+
+    print!("\n{}", table.render());
+
+    // Replication with voting across localities, node 3 silently corrupt.
+    let corrupt_body: DistBody<i64> = Arc::new(|loc| {
+        if loc.id().0 == 3 {
+            Ok(-1) // bad node: silently wrong result
+        } else {
+            Ok(42)
+        }
+    });
+    let f = async_replicate_distributed(&cl, 3, Some(Arc::new(vote_majority)), corrupt_body);
+    println!(
+        "\nreplicate(3) across localities with a silently-corrupt node 3, majority vote: {:?}",
+        f.get()
+    );
+}

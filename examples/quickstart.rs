@@ -1,0 +1,77 @@
+//! Quickstart: the resiliency API surface in two minutes.
+//!
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+//!
+//! Mirrors the paper's Listings 1 and 2: every replay/replicate variant,
+//! launched over a deliberately flaky task.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use rhpx::resilience::{
+    async_replay, async_replay_validate, async_replicate, async_replicate_validate,
+    async_replicate_vote, async_replicate_vote_validate, dataflow_replay, vote_majority,
+};
+use rhpx::{async_, Runtime, TaskResult};
+
+fn main() {
+    let rt = Runtime::builder().workers(4).build();
+    println!("rhpx {} — quickstart on {} workers\n", rhpx::VERSION, rt.workers());
+
+    // A task that fails twice, then succeeds — the "transient fault".
+    let attempts = Arc::new(AtomicUsize::new(0));
+    let flaky = {
+        let attempts = Arc::clone(&attempts);
+        move || -> TaskResult<i64> {
+            if attempts.fetch_add(1, Ordering::SeqCst) < 2 {
+                Err("transient hardware fault".into())
+            } else {
+                Ok(42)
+            }
+        }
+    };
+
+    // --- Task Replay (Listing 1) -----------------------------------
+    let f = async_replay(&rt, 5, flaky);
+    println!("async_replay(5):                {:?}", f.get());
+    println!("  attempts used:                {}", attempts.load(Ordering::SeqCst));
+
+    let f = async_replay_validate(&rt, 5, |v: &i64| *v == 42, || 42i64);
+    println!("async_replay_validate(5):       {:?}", f.get());
+
+    // --- Task Replicate (Listing 2) ---------------------------------
+    let f = async_replicate(&rt, 3, || 7i64);
+    println!("async_replicate(3):             {:?}", f.get());
+
+    let f = async_replicate_validate(&rt, 3, |v: &i64| *v > 0, || 7i64);
+    println!("async_replicate_validate(3):    {:?}", f.get());
+
+    // Vote masks a silently corrupted replica.
+    let replica = Arc::new(AtomicUsize::new(0));
+    let silently_corrupt = {
+        let replica = Arc::clone(&replica);
+        move || -> i64 {
+            if replica.fetch_add(1, Ordering::SeqCst) == 0 {
+                666 // bit-flipped result: no error raised!
+            } else {
+                42
+            }
+        }
+    };
+    let f = async_replicate_vote(&rt, 3, vote_majority, silently_corrupt);
+    println!("async_replicate_vote(3):        {:?}  (one replica returned 666)", f.get());
+
+    let f = async_replicate_vote_validate(&rt, 3, vote_majority, |v: &i64| *v < 100, || 42i64);
+    println!("async_replicate_vote_validate:  {:?}", f.get());
+
+    // --- Dataflow composition ---------------------------------------
+    // Resilient futures are ordinary futures: feed them to dataflow.
+    let a = async_(&rt, || 20i64);
+    let b = async_replay(&rt, 3, || 22i64);
+    let sum = dataflow_replay(&rt, 3, |v: &[i64]| v.iter().sum::<i64>(), vec![a, b]);
+    println!("dataflow_replay over mixed deps: {:?}", sum.get());
+
+    println!("\nscheduler stats: {:?}", rt.stats());
+}

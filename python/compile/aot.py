@@ -1,0 +1,99 @@
+"""AOT pipeline: lower the L2 stencil task to HLO text artifacts.
+
+HLO *text* (not ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts            # default set
+    python -m compile.aot --out-dir ../artifacts --config 64:4 --config 1000:16
+
+Each ``--config nx:steps`` emits ``stencil_nx{nx}_s{steps}.hlo.txt`` with
+signature ``(ext: f64[nx+2*steps], c: f64[1]) -> (out: f64[nx], ck: f64[1])``.
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# (nx, steps) configurations compiled by default:
+#  - 64:4       tiny (tests, quickstart example)
+#  - 1000:16    scaled bench geometry
+#  - 16000:128  paper case A
+#  - 8000:128   paper case B
+DEFAULT_CONFIGS = [(64, 4), (1000, 16), (500, 16), (16000, 128), (8000, 128)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stencil(nx: int, steps: int) -> str:
+    """Lower stencil_task for one geometry to HLO text."""
+    ext_spec = jax.ShapeDtypeStruct((nx + 2 * steps,), jnp.float64)
+    c_spec = jax.ShapeDtypeStruct((1,), jnp.float64)
+    fn = functools.partial(model.stencil_task, nx=nx, steps=steps)
+    lowered = jax.jit(fn).lower(ext_spec, c_spec)
+    return to_hlo_text(lowered)
+
+
+def artifact_name(nx: int, steps: int) -> str:
+    return f"stencil_nx{nx}_s{steps}.hlo.txt"
+
+
+def emit(out_dir: str, configs) -> list:
+    """Write artifacts that are missing or stale; returns written paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for nx, steps in configs:
+        path = os.path.join(out_dir, artifact_name(nx, steps))
+        text = lower_stencil(nx, steps)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        print(f"wrote {path} ({len(text)} chars)")
+    return written
+
+
+def parse_config(s: str):
+    nx, steps = s.split(":")
+    nx, steps = int(nx), int(steps)
+    if steps > nx:
+        raise ValueError(f"steps ({steps}) must be <= nx ({nx})")
+    return nx, steps
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--config",
+        action="append",
+        type=parse_config,
+        help="nx:steps geometry (repeatable); default = standard set",
+    )
+    args = ap.parse_args(argv)
+    configs = args.config or DEFAULT_CONFIGS
+    emit(args.out_dir, configs)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

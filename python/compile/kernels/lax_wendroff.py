@@ -1,0 +1,66 @@
+"""L1: the Lax-Wendroff multistep ghost-zone kernel as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's kernel
+is CPU C++; here it is authored TPU-style —
+
+* the whole extended subdomain (``nx + 2*steps`` elements) is staged into
+  VMEM as a single block via ``BlockSpec`` (no blocking needed: case A's
+  16256 f64 row is ~127 KiB, far under VMEM);
+* all ``steps`` time levels run as an in-kernel ``fori_loop`` over the
+  VMEM-resident row — the ghost-region trick means one HBM read and one
+  HBM write per task regardless of ``steps``, exactly the paper's
+  "multiple time steps per iteration … reducing overheads and latency";
+* the update is expressed as full-row shifted adds (``jnp.roll``), which
+  vectorizes onto the VPU lanes. Cells within ``s`` of the edge hold
+  garbage after level ``s``, but the valid window shrinks at the same
+  rate, so the final center ``nx`` slice is exact (the same argument the
+  Rust kernel's shrinking-slice formulation makes explicit).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter
+into plain HLO — numerically identical, TPU-shaped structurally.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ext_ref, c_ref, out_ref, ck_ref, *, nx, steps):
+    """Pallas kernel body: ext (nx+2*steps,), c (1,) -> out (nx,), ck (1,)."""
+    u = ext_ref[...]
+    c = c_ref[0]
+
+    def step(_, u):
+        up = jnp.roll(u, -1)
+        um = jnp.roll(u, 1)
+        return u - 0.5 * c * (up - um) + 0.5 * c * c * (up - 2.0 * u + um)
+
+    u = jax.lax.fori_loop(0, steps, step, u)
+    out = jax.lax.dynamic_slice(u, (steps,), (nx,))
+    out_ref[...] = out
+    ck_ref[0] = jnp.sum(out)
+
+
+@functools.partial(jax.jit, static_argnames=("nx", "steps"))
+def stencil_task(ext, c, *, nx, steps):
+    """Advance one subdomain by ``steps`` levels; returns (out, checksum).
+
+    Args:
+      ext: extended subdomain, shape ``(nx + 2*steps,)``.
+      c: Courant number as a shape-``(1,)`` array (runtime input so one
+        artifact serves every CFL setting).
+      nx, steps: static geometry.
+    """
+    dtype = ext.dtype
+    out, ck = pl.pallas_call(
+        functools.partial(_kernel, nx=nx, steps=steps),
+        out_shape=(
+            jax.ShapeDtypeStruct((nx,), dtype),
+            jax.ShapeDtypeStruct((1,), dtype),
+        ),
+        interpret=True,
+    )(ext, c.astype(dtype))
+    return out, ck

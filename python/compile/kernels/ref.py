@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the Lax-Wendroff multistep kernel.
+
+This is the correctness reference: the Pallas kernel
+(``lax_wendroff.py``), the Rust native kernel
+(``rust/src/stencil/kernel.rs``), and the AOT artifact executed through
+PJRT must all agree with this implementation.
+
+Scheme (linear advection ``u_t + a u_x = 0``, Courant ``c = a dt/dx``)::
+
+    u_i' = u_i - (c/2)(u_{i+1} - u_{i-1}) + (c^2/2)(u_{i+1} - 2 u_i + u_{i-1})
+
+A task advances ``steps`` time levels over an extended subdomain of
+``nx + 2*steps`` points; each level consumes one ghost cell per side.
+"""
+
+import jax.numpy as jnp
+
+
+def lax_wendroff_step(u, c):
+    """One Lax-Wendroff level over the interior (shrinks by one per side)."""
+    um = u[:-2]
+    u0 = u[1:-1]
+    up = u[2:]
+    return u0 - 0.5 * c * (up - um) + 0.5 * c * c * (up - 2.0 * u0 + um)
+
+
+def lax_wendroff_multistep(ext, steps, c):
+    """Advance ``steps`` levels; input (nx + 2*steps,) -> output (nx,)."""
+    u = ext
+    for _ in range(steps):
+        u = lax_wendroff_step(u, c)
+    return u
+
+
+def checksum(u):
+    """Task-output checksum (plain sum, Teranishi-style)."""
+    return jnp.sum(u)
+
+
+def stencil_task(ext, c, steps):
+    """The full task payload: advanced subdomain plus its checksum."""
+    out = lax_wendroff_multistep(ext, steps, c)
+    return out, checksum(out)

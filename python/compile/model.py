@@ -1,0 +1,70 @@
+"""L2: the stencil compute graph over the L1 Pallas kernel.
+
+Two entry points:
+
+* :func:`stencil_task` — the per-task graph the Rust coordinator executes
+  through PJRT (one subdomain, ``steps`` levels, checksum);
+* :func:`advance_domain` — a whole-domain update (all subdomains through
+  the kernel with periodic ghost assembly), used by the Python tests to
+  validate multi-subdomain composition against a global reference.
+
+Everything here is build-time only: ``aot.py`` lowers ``stencil_task`` to
+HLO text once, and Rust never imports Python again.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lax_wendroff, ref
+
+
+def stencil_task(ext, c, *, nx, steps):
+    """The per-task model: delegate to the L1 kernel."""
+    return lax_wendroff.stencil_task(ext, c, nx=nx, steps=steps)
+
+
+def build_extended(domain, j, *, nx, steps):
+    """Extended array for subdomain ``j`` of a (n_sub, nx) domain with
+    periodic neighbors (mirrors ``rust/src/stencil/domain.rs``)."""
+    n_sub = domain.shape[0]
+    left = domain[(j - 1) % n_sub, nx - steps:]
+    right = domain[(j + 1) % n_sub, :steps]
+    return jnp.concatenate([left, domain[j], right])
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def advance_domain(domain, c, *, steps):
+    """Advance every subdomain one task-iteration (``steps`` levels).
+
+    Args:
+      domain: shape ``(n_sub, nx)``.
+      c: Courant number, shape ``(1,)``.
+    Returns:
+      (new_domain, checksums) with shapes ``(n_sub, nx)`` and ``(n_sub,)``.
+    """
+    n_sub, nx = domain.shape
+
+    def one(j):
+        ext = build_extended(domain, j, nx=nx, steps=steps)
+        out, ck = stencil_task(ext, c, nx=nx, steps=steps)
+        return out, ck[0]
+
+    outs = []
+    cks = []
+    for j in range(n_sub):
+        o, k = one(j)
+        outs.append(o)
+        cks.append(k)
+    return jnp.stack(outs), jnp.stack(cks)
+
+
+def advance_domain_ref(domain, c, *, steps):
+    """Pure-jnp whole-domain reference for :func:`advance_domain`."""
+    n_sub, nx = domain.shape
+    outs = []
+    for j in range(n_sub):
+        ext = build_extended(domain, j, nx=nx, steps=steps)
+        outs.append(ref.lax_wendroff_multistep(ext, steps, c[0]))
+    return jnp.stack(outs)

@@ -1,0 +1,151 @@
+#!/usr/bin/env python
+"""Regenerate the paper's figures from the benchmark CSVs.
+
+The Rust harnesses write ``results/bench_*.csv`` (``cargo bench`` or
+``rhpx bench ... --csv``); this script renders the same graphs the paper
+shows (Fig 2a, 2b, 3a, 3b) plus Table-shaped bar charts.
+
+Usage::
+
+    python python/plots/plot_results.py [results_dir] [out_dir]
+"""
+
+import csv
+import os
+import sys
+
+
+def read_csv(path):
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    return rows
+
+
+def maybe(path):
+    return read_csv(path) if os.path.exists(path) else None
+
+
+def plot_fig2(rows, out_dir, plt):
+    xs = [float(r["error_prob_pct"]) for r in rows]
+    # Fig 2a: replay
+    plt.figure(figsize=(6, 4))
+    plt.plot(xs, [float(r["replay3_extra_us"]) for r in rows], "o-", label="async_replay(3)")
+    plt.xlabel("Probability of error occurrence per task (%)")
+    plt.ylabel("Extra execution time per task (µs)")
+    plt.title("Fig 2a: Async Replay — extra time vs error probability")
+    plt.grid(True, alpha=0.3)
+    plt.legend()
+    plt.savefig(os.path.join(out_dir, "fig2a_replay.png"), dpi=120, bbox_inches="tight")
+    plt.close()
+    # Fig 2b: replicate
+    plt.figure(figsize=(6, 4))
+    plt.plot(
+        xs,
+        [float(r["replicate3_extra_us"]) for r in rows],
+        "s-",
+        color="tab:orange",
+        label="async_replicate(3)",
+    )
+    plt.xlabel("Probability of error occurrence per task (%)")
+    plt.ylabel("Extra execution time per task (µs)")
+    plt.title("Fig 2b: Async Replicate — flat in error probability")
+    plt.grid(True, alpha=0.3)
+    plt.legend()
+    plt.savefig(os.path.join(out_dir, "fig2b_replicate.png"), dpi=120, bbox_inches="tight")
+    plt.close()
+    print("wrote fig2a_replay.png, fig2b_replicate.png")
+
+
+def plot_fig3(rows, out_dir, plt):
+    cases = sorted({r["case"] for r in rows})
+    for tag, case in zip("ab", cases):
+        sub = [r for r in rows if r["case"] == case]
+        xs = [float(r["error_prob_pct"]) for r in sub]
+        plt.figure(figsize=(6, 4))
+        plt.plot(xs, [float(r["replay_pct"]) for r in sub], "o-", label="replay")
+        plt.plot(
+            xs, [float(r["replay_checksum_pct"]) for r in sub], "s-", label="replay + checksums"
+        )
+        plt.xlabel("Probability of error occurrence per task (%)")
+        plt.ylabel("Extra execution time (%)")
+        plt.title(f"Fig 3{tag}: 1D stencil {case}")
+        plt.grid(True, alpha=0.3)
+        plt.legend()
+        plt.savefig(
+            os.path.join(out_dir, f"fig3{tag}_{case.replace('(', '_').replace(')', '')}.png"),
+            dpi=120,
+            bbox_inches="tight",
+        )
+        plt.close()
+    print("wrote fig3 plots")
+
+
+def plot_table1(rows, out_dir, plt):
+    cores = [r["cores"] for r in rows]
+    series = [k for k in rows[0] if k != "cores"]
+    plt.figure(figsize=(7, 4))
+    for s in series:
+        plt.plot(cores, [float(r[s]) for r in rows], "o-", label=s)
+    plt.xlabel("Cores")
+    plt.ylabel("Amortized overhead per task (µs)")
+    plt.title("Table I: resilient async overheads vs cores (200µs grain)")
+    plt.grid(True, alpha=0.3)
+    plt.legend(fontsize=7)
+    plt.savefig(os.path.join(out_dir, "table1_overheads.png"), dpi=120, bbox_inches="tight")
+    plt.close()
+    print("wrote table1_overheads.png")
+
+
+def plot_table2(rows, out_dir, plt):
+    modes = [k for k in rows[0] if k != "case"]
+    cases = [r["case"] for r in rows]
+    width = 0.8 / len(modes)
+    plt.figure(figsize=(7, 4))
+    for i, m in enumerate(modes):
+        xs = [j + i * width for j in range(len(cases))]
+        plt.bar(xs, [float(r[m]) for r in rows], width=width, label=m)
+    plt.xticks([j + 0.4 - width / 2 for j in range(len(cases))], cases)
+    plt.ylabel("Execution time (s)")
+    plt.title("Table II: 1D stencil wall time, no failures")
+    plt.grid(True, axis="y", alpha=0.3)
+    plt.legend(fontsize=8)
+    plt.savefig(os.path.join(out_dir, "table2_stencil.png"), dpi=120, bbox_inches="tight")
+    plt.close()
+    print("wrote table2_stencil.png")
+
+
+def main():
+    results = sys.argv[1] if len(sys.argv) > 1 else "results"
+    out_dir = sys.argv[2] if len(sys.argv) > 2 else os.path.join(results, "graphs")
+    os.makedirs(out_dir, exist_ok=True)
+
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    any_plotted = False
+    rows = maybe(os.path.join(results, "bench_fig2.csv"))
+    if rows:
+        plot_fig2(rows, out_dir, plt)
+        any_plotted = True
+    rows = maybe(os.path.join(results, "bench_fig3.csv"))
+    if rows:
+        plot_fig3(rows, out_dir, plt)
+        any_plotted = True
+    rows = maybe(os.path.join(results, "bench_table1.csv"))
+    if rows:
+        plot_table1(rows, out_dir, plt)
+        any_plotted = True
+    rows = maybe(os.path.join(results, "bench_table2.csv"))
+    if rows:
+        plot_table2(rows, out_dir, plt)
+        any_plotted = True
+    if not any_plotted:
+        print(f"no bench_*.csv found under {results}/ — run `cargo bench` first")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""AOT pipeline: artifacts are emitted as parseable HLO text with the
+expected signature markers."""
+
+import os
+
+import pytest
+
+from compile import aot
+
+
+class TestAot:
+    def test_artifact_name(self):
+        assert aot.artifact_name(64, 4) == "stencil_nx64_s4.hlo.txt"
+
+    def test_parse_config(self):
+        assert aot.parse_config("100:8") == (100, 8)
+        with pytest.raises(ValueError):
+            aot.parse_config("4:100")  # steps > nx
+
+    def test_lower_tiny_config(self):
+        text = aot.lower_stencil(16, 2)
+        assert text.startswith("HloModule")
+        # f64 in/out with the right shapes must appear in the module text
+        assert "f64[20]" in text  # ext = nx + 2*steps
+        assert "f64[16]" in text  # out
+        assert "f64[1]" in text  # courant / checksum
+
+    def test_emit_writes_files(self, tmp_path):
+        paths = aot.emit(str(tmp_path), [(16, 2)])
+        assert len(paths) == 1
+        assert os.path.exists(paths[0])
+        with open(paths[0]) as f:
+            assert f.read().startswith("HloModule")
+
+    def test_default_configs_include_paper_cases(self):
+        assert (16000, 128) in aot.DEFAULT_CONFIGS
+        assert (8000, 128) in aot.DEFAULT_CONFIGS

@@ -1,0 +1,108 @@
+"""L1 correctness: Pallas kernel vs. the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer: the Rust side
+executes exactly what these tests validate (the same jitted function is
+what aot.py lowers).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lax_wendroff, ref
+
+
+def make_ext(rng, nx, steps, dtype=jnp.float64):
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=nx + 2 * steps), dtype=dtype)
+
+
+class TestOracle:
+    def test_single_step_formula(self):
+        u = jnp.array([1.0, 2.0, 4.0])
+        out = ref.lax_wendroff_step(u, 0.5)
+        expect = 2.0 - 0.25 * (4.0 - 1.0) + 0.125 * (4.0 - 4.0 + 1.0)
+        np.testing.assert_allclose(out, [expect], rtol=1e-15)
+
+    def test_unit_courant_is_exact_shift(self):
+        nx, steps = 64, 5
+        u = jnp.sin(2 * jnp.pi * jnp.arange(nx) / nx)
+        ext = jnp.concatenate([u[-steps:], u, u[:steps]])
+        out = ref.lax_wendroff_multistep(ext, steps, 1.0)
+        np.testing.assert_allclose(out, jnp.roll(u, steps), atol=1e-12)
+
+    def test_output_shape(self):
+        ext = jnp.zeros(20)
+        assert ref.lax_wendroff_multistep(ext, 3, 0.5).shape == (14,)
+
+    def test_checksum(self):
+        np.testing.assert_allclose(ref.checksum(jnp.array([1.0, 2.5])), 3.5)
+
+
+class TestPallasVsOracle:
+    @pytest.mark.parametrize("nx,steps", [(8, 1), (64, 4), (100, 7), (1000, 16)])
+    @pytest.mark.parametrize("c", [0.0, 0.5, 0.9, 1.0])
+    def test_matches_reference(self, nx, steps, c):
+        rng = np.random.default_rng(nx * 1000 + steps)
+        ext = make_ext(rng, nx, steps)
+        c_arr = jnp.array([c])
+        out, ck = lax_wendroff.stencil_task(ext, c_arr, nx=nx, steps=steps)
+        ref_out = ref.lax_wendroff_multistep(ext, steps, c)
+        assert out.shape == (nx,)
+        assert ck.shape == (1,)
+        np.testing.assert_allclose(out, ref_out, rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(ck[0], jnp.sum(ref_out), rtol=1e-12)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        nx=st.integers(min_value=4, max_value=256),
+        steps=st.integers(min_value=1, max_value=16),
+        c=st.floats(min_value=0.0, max_value=1.0),
+        seed=st.integers(min_value=0, max_value=2**32 - 1),
+    )
+    def test_property_sweep(self, nx, steps, c, seed):
+        """Hypothesis sweep over shapes and Courant numbers."""
+        rng = np.random.default_rng(seed)
+        ext = make_ext(rng, nx, steps)
+        out, ck = lax_wendroff.stencil_task(
+            ext, jnp.array([c]), nx=nx, steps=steps
+        )
+        ref_out = ref.lax_wendroff_multistep(ext, steps, c)
+        np.testing.assert_allclose(out, ref_out, rtol=1e-10, atol=1e-10)
+        np.testing.assert_allclose(ck[0], jnp.sum(ref_out), rtol=1e-10)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+    def test_dtype_sweep(self, dtype):
+        nx, steps = 32, 3
+        rng = np.random.default_rng(7)
+        ext = make_ext(rng, nx, steps, dtype=dtype)
+        out, ck = lax_wendroff.stencil_task(
+            ext, jnp.array([0.8]), nx=nx, steps=steps
+        )
+        assert out.dtype == dtype
+        assert ck.dtype == dtype
+        tol = 1e-5 if dtype == jnp.float32 else 1e-12
+        ref_out = ref.lax_wendroff_multistep(ext, steps, dtype(0.8))
+        np.testing.assert_allclose(out, ref_out, rtol=tol, atol=tol)
+
+    def test_zero_courant_is_identity_on_interior(self):
+        nx, steps = 16, 2
+        rng = np.random.default_rng(1)
+        ext = make_ext(rng, nx, steps)
+        out, _ = lax_wendroff.stencil_task(
+            ext, jnp.array([0.0]), nx=nx, steps=steps
+        )
+        np.testing.assert_allclose(out, ext[steps:-steps], rtol=0, atol=0)
+
+    def test_stability_under_cfl(self):
+        """Max-norm must not blow up for c <= 1 on smooth data."""
+        nx, steps = 128, 64
+        u = jnp.sin(2 * jnp.pi * jnp.arange(nx + 2 * steps) / (nx + 2 * steps))
+        out, _ = lax_wendroff.stencil_task(
+            u, jnp.array([0.95]), nx=nx, steps=steps
+        )
+        assert float(jnp.max(jnp.abs(out))) < 1.5

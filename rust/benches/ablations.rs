@@ -1,0 +1,194 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A1. Replication factor sweep — cost of replicate(n) vs n.
+//!  A2. Grain-size sweep — where the paper's "minimal overhead for
+//!      tasks ≥ 200µs" claim breaks down.
+//!  A3. Replay-within-replicate (future-work feature) vs plain
+//!      replicate under failures.
+//!  A4. Coordinated C/R vs task replay — redone work and wall time.
+//!  A5. PJRT vs native kernel dispatch cost on the stencil task.
+//!
+//!   cargo bench --bench ablations
+
+use rhpx::checkpoint::{run_with_checkpoints, CheckpointStore, Storage};
+use rhpx::failure::FaultInjector;
+use rhpx::metrics::{Table, Timer};
+use rhpx::resilience;
+use rhpx::runtime::ArtifactStore;
+use rhpx::stencil::{self, Backend, StencilParams};
+use rhpx::workload::{run, Variant, WorkloadParams};
+use rhpx::{Runtime, TaskResult};
+
+fn scale() -> f64 {
+    std::env::var("RHPX_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.01)
+}
+
+fn a1_replication_factor(rt: &Runtime) {
+    let tasks = ((200_000.0 * scale()) as usize).max(500);
+    let params = WorkloadParams { tasks, grain_ns: 50_000, ..Default::default() };
+    let mut t = Table::new(
+        "A1: replicate(n) per-task cost, 50µs grain, no failures",
+        &["n", "per_task_us", "overhead_us"],
+    );
+    for n in [1, 2, 3, 4, 6, 8] {
+        let rep = run(rt, Variant::Replicate { n }, &params);
+        t.add([n.to_string(), format!("{:.3}", rep.per_task_us), format!("{:.3}", rep.overhead_us)]);
+    }
+    print!("{}", t.render());
+}
+
+fn a2_grain_sweep(rt: &Runtime) {
+    let mut t = Table::new(
+        "A2: replay(3) relative overhead vs task grain (paper claims ~free at 200µs)",
+        &["grain_us", "plain_us", "replay_us", "overhead_pct"],
+    );
+    for grain_us in [1u64, 10, 50, 100, 200, 500] {
+        let tasks = (((400_000 / grain_us.max(1)) as f64 * scale() * 10.0) as usize).max(200);
+        let params = WorkloadParams { tasks, grain_ns: grain_us * 1000, ..Default::default() };
+        let plain = run(rt, Variant::Plain, &params);
+        let replay = run(rt, Variant::Replay { n: 3 }, &params);
+        let pct = 100.0 * (replay.per_task_us - plain.per_task_us) / (grain_us as f64);
+        t.add([
+            grain_us.to_string(),
+            format!("{:.3}", plain.per_task_us),
+            format!("{:.3}", replay.per_task_us),
+            format!("{pct:.2}"),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn a3_replicate_replay(rt: &Runtime) {
+    let n_launches = ((50_000.0 * scale()) as usize).max(200);
+    let p = 0.20; // heavy failures: where the nested replay pays off
+    let mut t = Table::new(
+        "A3: replicate(3) vs replicate(3)+replay(3) under 20% failures",
+        &["scheme", "launch_errors", "wall_s"],
+    );
+    for (label, nested) in [("replicate(3)", false), ("replicate(3)+replay(3)", true)] {
+        let inj = FaultInjector::with_probability(p, 7);
+        let timer = Timer::start();
+        let mut errors = 0u64;
+        for _ in 0..n_launches {
+            let i = inj.clone();
+            let body = move || -> TaskResult<i32> {
+                i.draw("a3")?;
+                Ok(1)
+            };
+            let f = if nested {
+                resilience::async_replicate_replay::<i32, TaskResult<i32>, _, fn(&[i32]) -> Option<i32>>(
+                    rt, 3, 3, None, body,
+                )
+            } else {
+                resilience::async_replicate(rt, 3, body)
+            };
+            if f.get().is_err() {
+                errors += 1;
+            }
+        }
+        t.add([label.to_string(), errors.to_string(), format!("{:.3}", timer.elapsed_secs())]);
+    }
+    print!("{}", t.render());
+    println!("(nested replay should drive launch_errors to ~0: p_fail^9 vs p_fail^3)\n");
+}
+
+fn a4_cr_vs_replay(rt: &Runtime) {
+    let iterations = ((2_000.0 * scale() * 10.0) as u64).max(100);
+    let n_sub = 8;
+    let p = 0.02;
+    let mut t = Table::new(
+        "A4: coordinated C/R vs task replay (redone task-equivalents)",
+        &["scheme", "wall_s", "redone_tasks", "rollbacks"],
+    );
+    // C/R with disk snapshots
+    let dir = std::env::temp_dir().join(format!("rhpx_ablation_cr_{}", std::process::id()));
+    let store = CheckpointStore::new(Storage::Disk(dir.clone()));
+    let inj = FaultInjector::with_probability(p, 99);
+    let mut state = vec![0.0f64; 4096];
+    let timer = Timer::start();
+    let cr = run_with_checkpoints(&mut state, iterations, 10, &store, |_, s| {
+        for _ in 0..n_sub {
+            inj.draw("a4-cr")?;
+        }
+        for v in s.iter_mut() {
+            *v += 1.0;
+        }
+        Ok(())
+    })
+    .expect("cr failed");
+    t.add([
+        "coordinated C/R(disk)".to_string(),
+        format!("{:.3}", timer.elapsed_secs()),
+        (cr.redone * n_sub as u64).to_string(),
+        cr.rollbacks.to_string(),
+    ]);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // task replay on the same workload
+    let inj = FaultInjector::with_probability(p, 99);
+    let timer = Timer::start();
+    for _ in 0..iterations {
+        let futs: Vec<_> = (0..n_sub)
+            .map(|_| {
+                let i = inj.clone();
+                resilience::async_replay(rt, 50, move || -> TaskResult<()> {
+                    i.draw("a4-replay")?;
+                    Ok(())
+                })
+            })
+            .collect();
+        for f in futs {
+            f.get().expect("replay exhausted");
+        }
+    }
+    t.add([
+        "task replay".to_string(),
+        format!("{:.3}", timer.elapsed_secs()),
+        inj.counters().injected().to_string(),
+        "0".to_string(),
+    ]);
+    print!("{}", t.render());
+}
+
+fn a5_pjrt_vs_native(rt: &Runtime) {
+    let Ok(store) = ArtifactStore::open(std::path::Path::new("artifacts")) else {
+        println!("A5: skipped (run `make artifacts` first)\n");
+        return;
+    };
+    let iters = ((8192.0 * scale() * 0.2) as usize).max(4);
+    let base = StencilParams {
+        n_sub: 8,
+        nx: 1000,
+        iterations: iters,
+        steps: 16,
+        courant: 0.9,
+        ..StencilParams::tiny()
+    };
+    let mut t = Table::new(
+        "A5: stencil kernel dispatch — native Rust vs AOT JAX/Pallas via PJRT",
+        &["backend", "wall_s", "tasks/s"],
+    );
+    for (label, backend) in [
+        ("native", Backend::Native),
+        ("pjrt", Backend::pjrt(&store, base.nx, base.steps).expect("artifact")),
+    ] {
+        let params = StencilParams { backend, ..base.clone() };
+        let (_, rep) = stencil::run(rt, &params).expect("run failed");
+        t.add([
+            label.to_string(),
+            format!("{:.3}", rep.wall_secs),
+            format!("{:.0}", rep.tasks as f64 / rep.wall_secs),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn main() {
+    let rt = Runtime::builder().build();
+    println!("== ablations (scale {}) on {} workers ==\n", scale(), rt.workers());
+    a1_replication_factor(&rt);
+    a2_grain_sweep(&rt);
+    a3_replicate_replay(&rt);
+    a4_cr_vs_replay(&rt);
+    a5_pjrt_vs_native(&rt);
+}

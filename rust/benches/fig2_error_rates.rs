@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig 2a/2b (extra execution time per task vs error
+//! probability; replay grows ~linearly, replicate stays flat).
+//!
+//!   cargo bench --bench fig2_error_rates
+
+use rhpx::harness::{emit, fig2, HarnessOpts};
+
+fn main() {
+    let opts = HarnessOpts {
+        scale: std::env::var("RHPX_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.01),
+        repeats: std::env::var("RHPX_BENCH_REPEATS").ok().and_then(|s| s.parse().ok()).unwrap_or(3),
+        csv: Some("bench_fig2.csv".into()),
+        ..Default::default()
+    };
+    let t = fig2::run_fig2(&opts, &fig2::default_probabilities());
+    emit(&t, &opts);
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig 3a/3b (1D stencil % extra execution time vs
+//! error probability, cases A and B, replay without+with checksums).
+//!
+//!   cargo bench --bench fig3_stencil_errors
+
+use rhpx::harness::{emit, fig3, HarnessOpts, KernelBackend};
+
+fn main() {
+    let opts = HarnessOpts {
+        scale: std::env::var("RHPX_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.003),
+        repeats: std::env::var("RHPX_BENCH_REPEATS").ok().and_then(|s| s.parse().ok()).unwrap_or(3),
+        csv: Some("bench_fig3.csv".into()),
+        ..Default::default()
+    };
+    let t = fig3::run_fig3(&opts, &KernelBackend::Native, &fig3::default_probabilities(), 5);
+    emit(&t, &opts);
+}

@@ -1,0 +1,55 @@
+//! Zero-grain launch-overhead microbench (the §Perf instrument in
+//! EXPERIMENTS.md): per-launch cost of each API with no task work,
+//! isolating pure runtime overhead.
+
+// zero-grain overhead microbench: pure per-launch runtime cost
+use rhpx::{Runtime, async_};
+use rhpx::resilience::{async_replay, async_replicate};
+
+use rhpx::metrics::Timer;
+
+fn main() {
+    let rt = Runtime::builder().workers(1).build();
+    let n = 200_000;
+    // async_
+    let t = Timer::start();
+    let mut fs = Vec::with_capacity(1024);
+    for _ in 0..n {
+        fs.push(async_(&rt, || 1i32));
+        if fs.len() == 1024 { for f in fs.drain(..) { let _ = f.get(); } }
+    }
+    for f in fs { let _ = f.get(); }
+    println!("async_      : {:.0} ns/launch", t.elapsed_secs()*1e9/n as f64);
+    // replay
+    let t = Timer::start();
+    let mut fs = Vec::with_capacity(1024);
+    for _ in 0..n {
+        fs.push(async_replay(&rt, 3, || 1i32));
+        if fs.len() == 1024 { for f in fs.drain(..) { let _ = f.get(); } }
+    }
+    for f in fs { let _ = f.get(); }
+    println!("replay(3)   : {:.0} ns/launch", t.elapsed_secs()*1e9/n as f64);
+    // replicate
+    let n2 = n/3;
+    let t = Timer::start();
+    let mut fs = Vec::with_capacity(1024);
+    for _ in 0..n2 {
+        fs.push(async_replicate(&rt, 3, || 1i32));
+        if fs.len() == 1024 { for f in fs.drain(..) { let _ = f.get(); } }
+    }
+    for f in fs { let _ = f.get(); }
+    println!("replicate(3): {:.0} ns/launch", t.elapsed_secs()*1e9/n2 as f64);
+    // dataflow chain
+    let t = Timer::start();
+    let mut f = async_(&rt, || 0i64);
+    for _ in 0..n/4 {
+        f = rhpx::dataflow(&rt, |v: Vec<i64>| v[0]+1, vec![f]);
+    }
+    let _ = f.get();
+    println!("dataflow    : {:.0} ns/link", t.elapsed_secs()*1e9/(n/4) as f64);
+    // stencil-shaped dataflow (3 deps, Chunk-sized payload clones)
+    let params = rhpx::stencil::StencilParams { n_sub: 8, nx: 64, iterations: 500, steps: 4, courant: 0.9, window: 16, ..rhpx::stencil::StencilParams::tiny() };
+    let t = Timer::start();
+    let (_, rep) = rhpx::stencil::run(&rt, &params).unwrap();
+    println!("stencil task: {:.0} ns/task ({} tasks)", t.elapsed_secs()*1e9/rep.tasks as f64, rep.tasks);
+}

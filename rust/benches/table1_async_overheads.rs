@@ -1,0 +1,20 @@
+//! Bench: regenerate Table I (amortized per-task overhead of resilient
+//! async variants vs core count, 200µs grain, no failures).
+//!
+//!   cargo bench --bench table1_async_overheads
+//!
+//! Env: RHPX_BENCH_SCALE (default 0.01 of the paper's 1M tasks),
+//!      RHPX_BENCH_REPEATS (default 3).
+
+use rhpx::harness::{emit, table1, HarnessOpts};
+
+fn main() {
+    let opts = HarnessOpts {
+        scale: std::env::var("RHPX_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.01),
+        repeats: std::env::var("RHPX_BENCH_REPEATS").ok().and_then(|s| s.parse().ok()).unwrap_or(3),
+        csv: Some("bench_table1.csv".into()),
+        ..Default::default()
+    };
+    let t = table1::run_table1(&opts, &table1::default_cores(), 3);
+    emit(&t, &opts);
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate Table II (1D stencil wall time, no failures: pure
+//! dataflow / replay without+with checksums / replicate; cases A and B).
+//!
+//!   cargo bench --bench table2_stencil
+//!
+//! Env: RHPX_BENCH_SCALE (default 0.005 of 8192 iterations),
+//!      RHPX_BENCH_BACKEND=pjrt to run on the AOT JAX/Pallas kernel.
+
+use rhpx::harness::{emit, table2, HarnessOpts, KernelBackend};
+use rhpx::runtime::ArtifactStore;
+
+fn main() {
+    let opts = HarnessOpts {
+        scale: std::env::var("RHPX_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.005),
+        repeats: std::env::var("RHPX_BENCH_REPEATS").ok().and_then(|s| s.parse().ok()).unwrap_or(3),
+        csv: Some("bench_table2.csv".into()),
+        ..Default::default()
+    };
+    let backend = if std::env::var("RHPX_BENCH_BACKEND").as_deref() == Ok("pjrt") {
+        KernelBackend::Pjrt(
+            ArtifactStore::open(std::path::Path::new("artifacts"))
+                .expect("run `make artifacts` first"),
+        )
+    } else {
+        KernelBackend::Native
+    };
+    let t = table2::run_table2(&opts, &backend, 3);
+    emit(&t, &opts);
+}

@@ -1,0 +1,194 @@
+//! AGAS — an Active Global Address Space object registry.
+//!
+//! HPX component (2): "an active global address space that supports load
+//! balancing via object migration". Components are registered under
+//! globally unique ids ([`Gid`]); lookups resolve to the owning locality
+//! plus the object; [`Agas::migrate`] atomically re-homes an object to
+//! another locality. The distributed layer (see [`crate::distributed`])
+//! uses this registry to route active messages to wherever an object
+//! currently lives.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Globally unique id of a registered component.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Gid(pub u64);
+
+/// Locality (node) identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LocalityId(pub usize);
+
+/// A registered component: any `Send + Sync` object behind an `Arc`.
+pub type Component = Arc<dyn Any + Send + Sync>;
+
+struct Entry {
+    home: LocalityId,
+    object: Component,
+    generation: u64,
+}
+
+/// The registry. Cheap to clone (shared state).
+#[derive(Clone)]
+pub struct Agas {
+    inner: Arc<AgasInner>,
+}
+
+struct AgasInner {
+    next_gid: AtomicU64,
+    entries: RwLock<HashMap<Gid, Mutex<Entry>>>,
+    migrations: AtomicU64,
+}
+
+impl Default for Agas {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Agas {
+    pub fn new() -> Self {
+        Agas {
+            inner: Arc::new(AgasInner {
+                next_gid: AtomicU64::new(1),
+                entries: RwLock::new(HashMap::new()),
+                migrations: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Register `object` on `home`, returning its new global id.
+    pub fn register<T: Any + Send + Sync>(&self, home: LocalityId, object: T) -> Gid {
+        let gid = Gid(self.inner.next_gid.fetch_add(1, Ordering::Relaxed));
+        self.inner.entries.write().unwrap().insert(
+            gid,
+            Mutex::new(Entry { home, object: Arc::new(object), generation: 0 }),
+        );
+        gid
+    }
+
+    /// Drop a registration; returns true if it existed.
+    pub fn unregister(&self, gid: Gid) -> bool {
+        self.inner.entries.write().unwrap().remove(&gid).is_some()
+    }
+
+    /// The locality an object currently lives on.
+    pub fn locate(&self, gid: Gid) -> Option<LocalityId> {
+        self.inner
+            .entries
+            .read()
+            .unwrap()
+            .get(&gid)
+            .map(|e| e.lock().unwrap().home)
+    }
+
+    /// Resolve an object (typed). `None` if missing or of another type.
+    pub fn resolve<T: Any + Send + Sync>(&self, gid: Gid) -> Option<Arc<T>> {
+        let guard = self.inner.entries.read().unwrap();
+        let entry = guard.get(&gid)?;
+        let obj = entry.lock().unwrap().object.clone();
+        obj.downcast::<T>().ok()
+    }
+
+    /// Atomically move an object to a new home locality (the AGAS
+    /// "migration for load balancing" hook). Returns the previous home.
+    pub fn migrate(&self, gid: Gid, to: LocalityId) -> Option<LocalityId> {
+        let guard = self.inner.entries.read().unwrap();
+        let entry = guard.get(&gid)?;
+        let mut e = entry.lock().unwrap();
+        let prev = e.home;
+        e.home = to;
+        e.generation += 1;
+        self.inner.migrations.fetch_add(1, Ordering::Relaxed);
+        Some(prev)
+    }
+
+    /// Number of completed migrations (metrics).
+    pub fn migrations(&self) -> u64 {
+        self.inner.migrations.load(Ordering::Relaxed)
+    }
+
+    /// Number of live registrations.
+    pub fn len(&self) -> usize {
+        self.inner.entries.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Generation counter of an object (bumps on each migration).
+    pub fn generation(&self, gid: Gid) -> Option<u64> {
+        self.inner
+            .entries
+            .read()
+            .unwrap()
+            .get(&gid)
+            .map(|e| e.lock().unwrap().generation)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_resolve_roundtrip() {
+        let agas = Agas::new();
+        let gid = agas.register(LocalityId(0), 42i64);
+        assert_eq!(agas.locate(gid), Some(LocalityId(0)));
+        assert_eq!(*agas.resolve::<i64>(gid).unwrap(), 42);
+        assert_eq!(agas.len(), 1);
+    }
+
+    #[test]
+    fn resolve_wrong_type_is_none() {
+        let agas = Agas::new();
+        let gid = agas.register(LocalityId(0), "hello".to_string());
+        assert!(agas.resolve::<i64>(gid).is_none());
+        assert!(agas.resolve::<String>(gid).is_some());
+    }
+
+    #[test]
+    fn unregister_removes() {
+        let agas = Agas::new();
+        let gid = agas.register(LocalityId(0), 1u8);
+        assert!(agas.unregister(gid));
+        assert!(!agas.unregister(gid));
+        assert_eq!(agas.locate(gid), None);
+        assert!(agas.is_empty());
+    }
+
+    #[test]
+    fn migrate_rehomes_and_bumps_generation() {
+        let agas = Agas::new();
+        let gid = agas.register(LocalityId(0), vec![1, 2, 3]);
+        assert_eq!(agas.generation(gid), Some(0));
+        let prev = agas.migrate(gid, LocalityId(3)).unwrap();
+        assert_eq!(prev, LocalityId(0));
+        assert_eq!(agas.locate(gid), Some(LocalityId(3)));
+        assert_eq!(agas.generation(gid), Some(1));
+        assert_eq!(agas.migrations(), 1);
+        // object still resolvable after migration
+        assert_eq!(*agas.resolve::<Vec<i32>>(gid).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn gids_are_unique_across_threads() {
+        let agas = Agas::new();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let a = agas.clone();
+            handles.push(std::thread::spawn(move || {
+                (0..100).map(|_| a.register(LocalityId(t), 0u8)).collect::<Vec<_>>()
+            }));
+        }
+        let mut all: Vec<Gid> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let n = all.len();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicate gids issued");
+    }
+}

@@ -1,0 +1,235 @@
+//! The base launch API: `async_` and `dataflow`.
+//!
+//! These are the HPX facilities (`hpx::async`, `hpx::dataflow`) that the
+//! resiliency layer of the paper extends: "all new functionalities are
+//! implemented as extensions of the existing HPX async and dataflow API
+//! functions" (§IV). A task body is any `FnOnce() -> R` where `R`
+//! converts into a [`TaskResult`]; panics inside the body are caught at
+//! the task boundary and surface as [`TaskError::Panic`] — the analogue
+//! of a C++ task throwing.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use crate::error::{TaskError, TaskResult};
+use crate::future::{Future, Promise};
+use crate::runtime_handle::Runtime;
+
+/// Conversion of task-body return values into `TaskResult`.
+///
+/// Implemented for plain values (`T`) and for `Result<T, E>` where the
+/// error converts into [`TaskError`], so infallible tasks need no
+/// boilerplate.
+pub trait IntoTaskResult<T> {
+    fn into_task_result(self) -> TaskResult<T>;
+}
+
+impl<T, E: Into<TaskError>> IntoTaskResult<T> for Result<T, E> {
+    fn into_task_result(self) -> TaskResult<T> {
+        self.map_err(Into::into)
+    }
+}
+
+macro_rules! impl_into_task_result_value {
+    ($($t:ty),*) => {$(
+        impl IntoTaskResult<$t> for $t {
+            fn into_task_result(self) -> TaskResult<$t> { Ok(self) }
+        }
+    )*};
+}
+
+impl_into_task_result_value!(
+    (), bool, i8, i16, i32, i64, i128, isize, u8, u16, u32, u64, u128, usize, f32, f64, String
+);
+
+impl<T> IntoTaskResult<Vec<T>> for Vec<T> {
+    fn into_task_result(self) -> TaskResult<Vec<T>> {
+        Ok(self)
+    }
+}
+
+/// Run `f` catching panics, converting them to [`TaskError::Panic`].
+pub fn run_task_body<T, R, F>(f: F) -> TaskResult<T>
+where
+    F: FnOnce() -> R,
+    R: IntoTaskResult<T>,
+{
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r.into_task_result(),
+        // NB: `&*payload`, not `&payload` — the latter would unsize the
+        // Box itself into `dyn Any` and every downcast would miss.
+        Err(payload) => Err(TaskError::Panic(panic_message(&*payload))),
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
+/// `hpx::async` — schedule `f` on the runtime, returning a future.
+pub fn async_<T, R, F>(rt: &Runtime, f: F) -> Future<T>
+where
+    T: Send + 'static,
+    R: IntoTaskResult<T>,
+    F: FnOnce() -> R + Send + 'static,
+{
+    let (p, fut) = Promise::new();
+    rt.pool().spawn_job(Box::new(move || {
+        p.set_result(run_task_body(f));
+    }));
+    fut
+}
+
+/// `hpx::dataflow` — schedule `f(values)` once every future in `deps`
+/// holds a value. If any dependency failed, `f` does not run and the
+/// result carries [`TaskError::DependencyFailed`].
+pub fn dataflow<T, U, R, F>(rt: &Runtime, f: F, deps: Vec<Future<T>>) -> Future<U>
+where
+    T: Clone + Send + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: FnOnce(Vec<T>) -> R + Send + 'static,
+{
+    let rt = rt.clone();
+    let (p, fut) = Promise::new();
+    crate::future::when_all_results(deps).on_ready(move |r| {
+        match r.as_ref().map(|results| crate::future::collapse_results(results)) {
+            Ok(Ok(values)) => {
+                rt.pool().spawn_job(Box::new(move || {
+                    p.set_result(run_task_body(move || f(values)));
+                }));
+            }
+            Ok(Err(e)) => p.set_error(e),
+            Err(e) => p.set_error(e.clone()),
+        }
+    });
+    fut
+}
+
+/// Variant of [`dataflow`] whose body receives per-dependency
+/// `TaskResult`s instead of failing wholesale — the building block the
+/// resilient dataflow variants use to decide replay on *dependency*
+/// content rather than collapse.
+pub fn dataflow_results<T, U, R, F>(rt: &Runtime, f: F, deps: Vec<Future<T>>) -> Future<U>
+where
+    T: Clone + Send + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: FnOnce(Vec<TaskResult<T>>) -> R + Send + 'static,
+{
+    let rt = rt.clone();
+    let (p, fut) = Promise::new();
+    crate::future::when_all_results(deps).on_ready(move |r| match r {
+        Ok(results) => {
+            let results = results.clone();
+            rt.pool().spawn_job(Box::new(move || {
+                p.set_result(run_task_body(move || f(results)));
+            }));
+        }
+        Err(e) => p.set_error(e.clone()),
+    });
+    fut
+}
+
+/// Fire-and-forget spawn (`hpx::apply`): no future is returned.
+pub fn apply<F>(rt: &Runtime, f: F)
+where
+    F: FnOnce() + Send + 'static,
+{
+    rt.pool().spawn_job(Box::new(move || {
+        // Swallow panics: an applied task has no observer.
+        let _ = catch_unwind(AssertUnwindSafe(f));
+    }));
+}
+
+/// Bundle used by resilient dataflow: shared, immutable dependency values.
+pub type DepValues<T> = Arc<Vec<T>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_handle::Runtime;
+
+    fn rt() -> Runtime {
+        Runtime::builder().workers(2).build()
+    }
+
+    #[test]
+    fn async_returns_value() {
+        let rt = rt();
+        let f = async_(&rt, || 21 * 2);
+        assert_eq!(f.get(), Ok(42));
+    }
+
+    #[test]
+    fn async_propagates_app_error() {
+        let rt = rt();
+        let f: Future<i32> = async_(&rt, || -> Result<i32, TaskError> {
+            Err(TaskError::App("fail".into()))
+        });
+        assert_eq!(f.get(), Err(TaskError::App("fail".to_string())));
+    }
+
+    #[test]
+    fn async_catches_panic() {
+        let rt = rt();
+        let f: Future<i32> = async_(&rt, || -> i32 { panic!("kaboom") });
+        match f.get() {
+            Err(TaskError::Panic(m)) => assert!(m.contains("kaboom"), "payload: {m}"),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dataflow_runs_after_deps() {
+        let rt = rt();
+        let a = async_(&rt, || 1i64);
+        let b = async_(&rt, || 2i64);
+        let c = dataflow(&rt, |vals| vals.iter().sum::<i64>(), vec![a, b]);
+        assert_eq!(c.get(), Ok(3));
+    }
+
+    #[test]
+    fn dataflow_skips_body_on_failed_dep() {
+        let rt = rt();
+        let a = async_(&rt, || 1i64);
+        let b: Future<i64> = async_(&rt, || -> Result<i64, TaskError> { Err("dead".into()) });
+        let c = dataflow(
+            &rt,
+            |_vals| -> i64 { unreachable!("body must not run") },
+            vec![a, b],
+        );
+        match c.get() {
+            Err(TaskError::DependencyFailed(_)) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nested_get_inside_task_does_not_deadlock() {
+        // Even on a single worker: the inner get() helps run the inner task.
+        let rt = Runtime::builder().workers(1).build();
+        let rt2 = rt.clone();
+        let outer = async_(&rt, move || {
+            let inner = async_(&rt2, || 5i32);
+            inner.get().unwrap() + 1
+        });
+        assert_eq!(outer.get(), Ok(6));
+    }
+
+    #[test]
+    fn deep_dataflow_chain() {
+        let rt = rt();
+        let mut f = async_(&rt, || 0i64);
+        for _ in 0..100 {
+            f = dataflow(&rt, |v| v[0] + 1, vec![f]);
+        }
+        assert_eq!(f.get(), Ok(100));
+    }
+}

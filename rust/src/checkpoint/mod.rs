@@ -1,0 +1,254 @@
+//! Coordinated Checkpoint/Restart — the baseline the paper argues
+//! against (§I).
+//!
+//! "Generating snapshots involves global communication and coordination
+//! and is achieved by synchronizing all running processes … On failure
+//! detection, the runtime initiates a global rollback to the most recent
+//! previously saved checkpoint," aborting and restarting everything.
+//!
+//! This module implements that scheme over the same task abstractions so
+//! the ablation bench (`cargo bench --bench ablations`) can measure
+//! task-replay vs. coordinated-C/R on identical workloads: a
+//! [`CheckpointStore`] holds serialized global snapshots (in memory or on
+//! disk, modeling the paper's "persistent storage" with its I/O cost),
+//! and [`run_with_checkpoints`] drives an iterative application with
+//! global barrier + snapshot every `interval` iterations and global
+//! rollback on failure.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::error::{TaskError, TaskResult};
+
+/// Where snapshots are persisted.
+pub enum Storage {
+    /// In-memory (lower bound on C/R cost).
+    Memory,
+    /// On-disk under the given directory (models global I/O cost).
+    Disk(PathBuf),
+}
+
+/// A store of global snapshots of an application state `S`.
+pub struct CheckpointStore<S: Clone> {
+    storage: Storage,
+    latest: Mutex<Option<(u64, S)>>,
+    written: Mutex<u64>,
+}
+
+impl<S: Clone + Snapshot> CheckpointStore<S> {
+    pub fn new(storage: Storage) -> Self {
+        if let Storage::Disk(dir) = &storage {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        CheckpointStore { storage, latest: Mutex::new(None), written: Mutex::new(0) }
+    }
+
+    /// Persist a coordinated snapshot taken at `iteration`.
+    pub fn save(&self, iteration: u64, state: &S) -> TaskResult<()> {
+        if let Storage::Disk(dir) = &self.storage {
+            let bytes = state.serialize();
+            let path = dir.join(format!("ckpt_{iteration:012}.bin"));
+            let mut f = std::fs::File::create(&path)
+                .map_err(|e| TaskError::Runtime(format!("checkpoint create: {e}")))?;
+            f.write_all(&bytes)
+                .map_err(|e| TaskError::Runtime(format!("checkpoint write: {e}")))?;
+            f.sync_all()
+                .map_err(|e| TaskError::Runtime(format!("checkpoint sync: {e}")))?;
+        }
+        *self.latest.lock().unwrap() = Some((iteration, state.clone()));
+        *self.written.lock().unwrap() += 1;
+        Ok(())
+    }
+
+    /// Roll back: return the most recent snapshot (iteration, state).
+    pub fn restore(&self) -> Option<(u64, S)> {
+        self.latest.lock().unwrap().clone()
+    }
+
+    /// Number of snapshots persisted.
+    pub fn count(&self) -> u64 {
+        *self.written.lock().unwrap()
+    }
+}
+
+/// State that can be serialized for disk persistence.
+pub trait Snapshot {
+    fn serialize(&self) -> Vec<u8>;
+}
+
+impl Snapshot for Vec<f64> {
+    fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() * 8);
+        for v in self {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+}
+
+impl Snapshot for Vec<Vec<f64>> {
+    fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.len() as u64).to_le_bytes());
+        for row in self {
+            out.extend_from_slice(&(row.len() as u64).to_le_bytes());
+            for v in row {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+}
+
+/// Outcome of a coordinated-C/R driven run.
+#[derive(Debug, Clone)]
+pub struct CrReport {
+    /// Iterations the application needed (logical progress).
+    pub iterations: u64,
+    /// Total iterations *executed* including re-execution after rollbacks.
+    pub executed: u64,
+    /// Number of global rollbacks triggered.
+    pub rollbacks: u64,
+    /// Number of snapshots taken.
+    pub checkpoints: u64,
+    /// Iterations of work lost and redone.
+    pub redone: u64,
+}
+
+/// Run an iterative application under coordinated C/R.
+///
+/// `step(iter, &mut state)` advances the global state by one iteration
+/// and may fail (a failure anywhere is a *global* failure: the whole
+/// state rolls back to the last snapshot — this is exactly the cost
+/// structure the paper's task replay avoids).
+pub fn run_with_checkpoints<S, F>(
+    state: &mut S,
+    iterations: u64,
+    interval: u64,
+    store: &CheckpointStore<S>,
+    mut step: F,
+) -> TaskResult<CrReport>
+where
+    S: Clone + Snapshot,
+    F: FnMut(u64, &mut S) -> TaskResult<()>,
+{
+    assert!(interval >= 1);
+    let mut iter: u64 = 0;
+    let mut executed: u64 = 0;
+    let mut rollbacks: u64 = 0;
+    let mut redone: u64 = 0;
+    // Initial coordinated snapshot (iteration 0).
+    store.save(0, state)?;
+    while iter < iterations {
+        executed += 1;
+        match step(iter, state) {
+            Ok(()) => {
+                iter += 1;
+                if iter % interval == 0 && iter < iterations {
+                    store.save(iter, state)?;
+                }
+            }
+            Err(_) => {
+                // Global rollback + restart from the last snapshot.
+                let (snap_iter, snap_state) =
+                    store.restore().ok_or(TaskError::App("no checkpoint".into()))?;
+                redone += iter - snap_iter;
+                iter = snap_iter;
+                *state = snap_state;
+                rollbacks += 1;
+            }
+        }
+    }
+    Ok(CrReport {
+        iterations,
+        executed,
+        rollbacks,
+        checkpoints: store.count(),
+        redone,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::failure::FaultInjector;
+
+    #[test]
+    fn no_failures_no_rollbacks() {
+        let store = CheckpointStore::new(Storage::Memory);
+        let mut state = vec![0.0f64];
+        let rep = run_with_checkpoints(&mut state, 100, 10, &store, |_, s| {
+            s[0] += 1.0;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(state[0], 100.0);
+        assert_eq!(rep.rollbacks, 0);
+        assert_eq!(rep.executed, 100);
+        assert_eq!(rep.redone, 0);
+        // initial + every 10 iters except the final boundary
+        assert!(rep.checkpoints >= 10);
+    }
+
+    #[test]
+    fn failure_rolls_back_whole_state() {
+        let store = CheckpointStore::new(Storage::Memory);
+        let mut state = vec![0.0f64];
+        let mut failed_once = false;
+        let rep = run_with_checkpoints(&mut state, 20, 5, &store, |i, s| {
+            if i == 12 && !failed_once {
+                failed_once = true;
+                return Err("crash".into());
+            }
+            s[0] += 1.0;
+            Ok(())
+        })
+        .unwrap();
+        // Final state is still exactly 20 increments despite the rollback.
+        assert_eq!(state[0], 20.0);
+        assert_eq!(rep.rollbacks, 1);
+        // Rolled back from iter 12 to the snapshot at 10: 2 redone.
+        assert_eq!(rep.redone, 2);
+        assert_eq!(rep.executed, 20 + 2 + 1); // +1 for the failed attempt
+    }
+
+    #[test]
+    fn disk_storage_persists_files() {
+        let dir = std::env::temp_dir().join(format!("rhpx_ckpt_test_{}", std::process::id()));
+        let store = CheckpointStore::new(Storage::Disk(dir.clone()));
+        let mut state = vec![1.0f64, 2.0];
+        let _ = run_with_checkpoints(&mut state, 10, 2, &store, |_, s| {
+            s[0] += 1.0;
+            Ok(())
+        })
+        .unwrap();
+        let files = std::fs::read_dir(&dir).unwrap().count();
+        assert!(files >= 4, "expected several checkpoint files, got {files}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_failures_still_reach_completion() {
+        let store = CheckpointStore::new(Storage::Memory);
+        let inj = FaultInjector::with_probability(0.10, 99);
+        let mut state = vec![0.0f64];
+        let rep = run_with_checkpoints(&mut state, 200, 10, &store, |_, s| {
+            inj.draw("cr-step")?;
+            s[0] += 1.0;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(state[0], 200.0, "state must be exact despite rollbacks");
+        assert!(rep.rollbacks > 0, "10% failure rate must trigger rollbacks");
+        assert!(rep.executed > 200);
+    }
+
+    #[test]
+    fn vec_vec_snapshot_roundtrip_format() {
+        let v = vec![vec![1.0f64, 2.0], vec![3.0]];
+        let bytes = v.serialize();
+        // 8 (outer len) + 8+16 (row 0) + 8+8 (row 1)
+        assert_eq!(bytes.len(), 8 + 8 + 16 + 8 + 8);
+    }
+}

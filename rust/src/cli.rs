@@ -1,0 +1,453 @@
+//! The `rhpx` command-line launcher.
+//!
+//! Hand-rolled argument parsing (no clap in the offline build). See
+//! `rhpx help` for the surface:
+//!
+//! ```text
+//! rhpx info
+//! rhpx bench <table1|fig2|table2|fig3|all> [--scale F] [--repeats N]
+//!            [--workers N] [--csv PATH] [--backend native|pjrt]
+//! rhpx stencil [--case a|b|tiny] [--mode MODE] [--backend native|pjrt]
+//!              [--scale F] [--error-prob PCT] [--silent-prob PCT] [--workers N]
+//! rhpx workload [--tasks N] [--grain-us N] [--variant V] [--error-prob PCT]
+//! rhpx distributed [--localities N] [--kill IDX] [--tasks N]
+//! ```
+
+use std::collections::HashMap;
+
+use crate::config::RuntimeConfig;
+use crate::harness::{emit, fig2, fig3, table1, table2, HarnessOpts, KernelBackend};
+use crate::metrics::Table;
+use crate::runtime_handle::Runtime;
+use crate::stencil::{self, Backend, Mode, StencilParams};
+use crate::workload::{self, Variant, WorkloadParams};
+
+/// Parsed flags: `--key value` pairs plus positional args.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+/// Parse `--key value` style flags (also accepts `--key=value`).
+pub fn parse_args(argv: &[String]) -> Result<Args, String> {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .ok_or_else(|| format!("flag --{key} expects a value"))?;
+                flags.insert(key.to_string(), v.clone());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(Args { positional, flags })
+}
+
+impl Args {
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad number {v:?}")),
+        }
+    }
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer {v:?}")),
+        }
+    }
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("run `rhpx help` for usage");
+            1
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<(), String> {
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = parse_args(&argv[1.min(argv.len())..])?;
+    match cmd {
+        "help" | "-h" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        "info" => cmd_info(),
+        "bench" => cmd_bench(&args),
+        "stencil" => cmd_stencil(&args),
+        "workload" => cmd_workload(&args),
+        "distributed" => cmd_distributed(&args),
+        other => Err(format!("unknown command {other:?}")),
+    }
+}
+
+const HELP: &str = r#"rhpx — resilient AMT runtime (reproduction of SAND2020-3975)
+
+USAGE:
+  rhpx info
+  rhpx bench <table1|fig2|table2|fig3|all>
+       [--scale F] [--repeats N] [--workers N] [--csv PATH]
+       [--backend native|pjrt] [--replicas N]
+  rhpx stencil [--case a|b|tiny] [--mode pure|replay|replay_checksum|
+               replicate|replicate_checksum|replicate_vote|replicate_replay]
+               [--backend native|pjrt] [--scale F] [--n N]
+               [--error-prob PCT] [--silent-prob PCT] [--workers N]
+  rhpx workload [--tasks N] [--grain-us N] [--error-prob PCT] [--workers N]
+       [--variant plain|replay|replay_validate|replicate|replicate_validate|
+                 replicate_vote|replicate_vote_validate] [--n N]
+  rhpx distributed [--localities N] [--kill IDX] [--tasks N] [--latency-us N]
+"#;
+
+fn cmd_info() -> Result<(), String> {
+    let cfg = RuntimeConfig::load(None).map_err(|e| e.to_string())?;
+    println!("rhpx {}", crate::VERSION);
+    println!("available parallelism : {}", cfg.workers);
+    println!("artifacts dir         : {}", cfg.artifacts_dir);
+    match crate::runtime::ArtifactStore::open(std::path::Path::new(&cfg.artifacts_dir)) {
+        Ok(store) => {
+            println!("artifacts             : {}", store.names().collect::<Vec<_>>().join(", "))
+        }
+        Err(_) => println!("artifacts             : (none — run `make artifacts`)"),
+    }
+    // Exercise the runtime briefly and publish its performance counters.
+    let rt = Runtime::builder().workers(cfg.workers).build();
+    let f = crate::api::async_(&rt, || 0u8);
+    let _ = f.get();
+    rt.wait_idle();
+    let reg = crate::perfcounters::global();
+    crate::perfcounters::publish_scheduler_stats(reg, &rt.stats());
+    println!("\nperformance counters:\n{}", reg.render());
+    Ok(())
+}
+
+fn harness_opts(args: &Args) -> Result<HarnessOpts, String> {
+    Ok(HarnessOpts {
+        scale: args.get_f64("scale", 0.01)?,
+        repeats: args.get_usize("repeats", 3)?,
+        csv: args.flags.get("csv").cloned(),
+        workers: args.get_usize(
+            "workers",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )?,
+    })
+}
+
+fn backend_from(args: &Args) -> Result<Backend, String> {
+    match args.get_str("backend", "native").as_str() {
+        "native" => Ok(Backend::Native),
+        "pjrt" => {
+            // geometry resolved later per case; here we only check the dir
+            Ok(Backend::Native) // replaced per-case by callers that need it
+        }
+        other => Err(format!("unknown backend {other:?}")),
+    }
+}
+
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let what = args.positional.first().map(String::as_str).unwrap_or("all");
+    let opts = harness_opts(args)?;
+    let replicas = args.get_usize("replicas", 3)?;
+    let use_pjrt = args.get_str("backend", "native") == "pjrt";
+    let _ = backend_from(args)?;
+
+    let run_table2_fig3 = |which: &str| -> Result<(), String> {
+        let backend = if use_pjrt {
+            KernelBackend::Pjrt(
+                crate::runtime::ArtifactStore::open(std::path::Path::new("artifacts"))
+                    .map_err(|e| e.to_string())?,
+            )
+        } else {
+            KernelBackend::Native
+        };
+        if which == "table2" {
+            emit(&table2::run_table2(&opts, &backend, replicas), &opts);
+        } else {
+            emit(
+                &fig3::run_fig3(&opts, &backend, &fig3::default_probabilities(), 5),
+                &opts,
+            );
+        }
+        Ok(())
+    };
+
+    match what {
+        "table1" => emit(&table1::run_table1(&opts, &table1::default_cores(), replicas), &opts),
+        "fig2" => emit(&fig2::run_fig2(&opts, &fig2::default_probabilities()), &opts),
+        "table2" => run_table2_fig3("table2")?,
+        "fig3" => run_table2_fig3("fig3")?,
+        "all" => {
+            emit(&table1::run_table1(&opts, &table1::default_cores(), replicas), &opts);
+            emit(&fig2::run_fig2(&opts, &fig2::default_probabilities()), &opts);
+            run_table2_fig3("table2")?;
+            run_table2_fig3("fig3")?;
+        }
+        other => return Err(format!("unknown bench {other:?}")),
+    }
+    Ok(())
+}
+
+fn parse_mode(s: &str, n: usize) -> Result<Mode, String> {
+    Ok(match s {
+        "pure" => Mode::Pure,
+        "replay" => Mode::Replay { n },
+        "replay_checksum" => Mode::ReplayChecksum { n },
+        "replicate" => Mode::Replicate { n },
+        "replicate_checksum" => Mode::ReplicateChecksum { n },
+        "replicate_vote" => Mode::ReplicateVote { n },
+        "replicate_replay" => Mode::ReplicateReplay { n, replays: 3 },
+        other => return Err(format!("unknown mode {other:?}")),
+    })
+}
+
+fn cmd_stencil(args: &Args) -> Result<(), String> {
+    let scale = args.get_f64("scale", 0.001)?;
+    let n = args.get_usize("n", 3)?;
+    let workers = args.get_usize(
+        "workers",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    )?;
+    let mut params = match args.get_str("case", "tiny").as_str() {
+        "a" => StencilParams::case_a(scale),
+        "b" => StencilParams::case_b(scale),
+        "tiny" => StencilParams::tiny(),
+        other => return Err(format!("unknown case {other:?}")),
+    };
+    params.mode = parse_mode(&args.get_str("mode", "pure"), n)?;
+    let p_err = args.get_f64("error-prob", 0.0)? / 100.0;
+    if p_err > 0.0 {
+        params.error_rate = Some(-p_err.ln());
+    }
+    let p_silent = args.get_f64("silent-prob", 0.0)? / 100.0;
+    if p_silent > 0.0 {
+        params.silent_rate = Some(p_silent);
+    }
+    if args.get_str("backend", "native") == "pjrt" {
+        let store = crate::runtime::ArtifactStore::open(std::path::Path::new("artifacts"))
+            .map_err(|e| e.to_string())?;
+        params.backend = Backend::pjrt(&store, params.nx, params.steps).map_err(|e| e.to_string())?;
+    }
+
+    let rt = Runtime::builder().workers(workers).build();
+    println!(
+        "stencil: {} subdomains x {} points, {} iterations x {} steps, mode {}, {} tasks",
+        params.n_sub,
+        params.nx,
+        params.iterations,
+        params.steps,
+        params.mode.label(),
+        params.total_tasks()
+    );
+    let (_, rep) = stencil::run(&rt, &params).map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        "stencil result",
+        &["mode", "wall_s", "tasks", "task/s", "injected", "silent", "launch_errors", "checksum"],
+    );
+    t.add([
+        rep.mode.clone(),
+        format!("{:.3}", rep.wall_secs),
+        rep.tasks.to_string(),
+        format!("{:.0}", rep.tasks as f64 / rep.wall_secs),
+        rep.failures_injected.to_string(),
+        rep.silent_corruptions.to_string(),
+        rep.launch_errors.to_string(),
+        format!("{:.6e}", rep.final_checksum),
+    ]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn parse_variant(s: &str, n: usize) -> Result<Variant, String> {
+    Ok(match s {
+        "plain" => Variant::Plain,
+        "replay" => Variant::Replay { n },
+        "replay_validate" => Variant::ReplayValidate { n },
+        "replicate" => Variant::Replicate { n },
+        "replicate_validate" => Variant::ReplicateValidate { n },
+        "replicate_vote" => Variant::ReplicateVote { n },
+        "replicate_vote_validate" => Variant::ReplicateVoteValidate { n },
+        other => return Err(format!("unknown variant {other:?}")),
+    })
+}
+
+fn cmd_workload(args: &Args) -> Result<(), String> {
+    let workers = args.get_usize(
+        "workers",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    )?;
+    let n = args.get_usize("n", 3)?;
+    let variant = parse_variant(&args.get_str("variant", "replay"), n)?;
+    let p = args.get_f64("error-prob", 0.0)? / 100.0;
+    let params = WorkloadParams {
+        tasks: args.get_usize("tasks", 100_000)?,
+        grain_ns: args.get_usize("grain-us", 200)? as u64 * 1000,
+        error_rate: if p > 0.0 { Some(-p.ln()) } else { None },
+        ..Default::default()
+    };
+    let rt = Runtime::builder().workers(workers).build();
+    let rep = workload::run(&rt, variant, &params);
+    let mut t = Table::new(
+        "artificial workload",
+        &["variant", "tasks", "wall_s", "per_task_us", "overhead_us", "injected", "launch_errors"],
+    );
+    t.add([
+        rep.variant.clone(),
+        rep.tasks.to_string(),
+        format!("{:.3}", rep.wall_secs),
+        format!("{:.3}", rep.per_task_us),
+        format!("{:.3}", rep.overhead_us),
+        rep.failures_injected.to_string(),
+        rep.launch_errors.to_string(),
+    ]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_distributed(args: &Args) -> Result<(), String> {
+    use crate::agas::LocalityId;
+    use crate::distributed::{async_replay_distributed, Cluster, DistBody, NetworkConfig};
+    use std::sync::Arc;
+
+    let n_loc = args.get_usize("localities", 3)?;
+    let tasks = args.get_usize("tasks", 100)?;
+    let latency = args.get_usize("latency-us", 10)? as u64;
+    let cl = Cluster::new(n_loc, 1, NetworkConfig { latency_us: latency });
+    if let Some(kill) = args.flags.get("kill") {
+        let idx: usize = kill.parse().map_err(|_| "bad --kill index".to_string())?;
+        if idx >= n_loc {
+            return Err(format!("--kill {idx} out of range (localities={n_loc})"));
+        }
+        cl.kill(LocalityId(idx));
+        println!("killed locality {idx}");
+    }
+    let body: DistBody<usize> = Arc::new(|loc| Ok(loc.id().0));
+    let timer = crate::metrics::Timer::start();
+    let mut per_loc = vec![0usize; n_loc];
+    let mut failed = 0usize;
+    for _ in 0..tasks {
+        match async_replay_distributed(&cl, n_loc.max(2), Arc::clone(&body)).get() {
+            Ok(id) => per_loc[id] += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let wall = timer.elapsed_secs();
+    let mut t = Table::new(
+        &format!("distributed replay over {n_loc} localities ({tasks} tasks, {wall:.3}s)"),
+        &["locality", "tasks_executed", "alive"],
+    );
+    for (i, count) in per_loc.iter().enumerate() {
+        t.add([
+            i.to_string(),
+            count.to_string(),
+            cl.locality(LocalityId(i)).is_alive().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("failed launches: {failed}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positional() {
+        let a = parse_args(&argv(&["table1", "--scale", "0.5", "--csv=out.csv"])).unwrap();
+        assert_eq!(a.positional, vec!["table1"]);
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_str("csv", ""), "out.csv");
+        assert_eq!(a.get_usize("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn missing_flag_value_errors() {
+        assert!(parse_args(&argv(&["--scale"])).is_err());
+    }
+
+    #[test]
+    fn mode_and_variant_parsing() {
+        assert_eq!(parse_mode("replay", 4).unwrap(), Mode::Replay { n: 4 });
+        assert!(parse_mode("bogus", 1).is_err());
+        assert_eq!(
+            parse_variant("replicate_vote", 3).unwrap(),
+            Variant::ReplicateVote { n: 3 }
+        );
+        assert!(parse_variant("bogus", 1).is_err());
+    }
+
+    #[test]
+    fn dispatch_help_and_info() {
+        assert!(dispatch(&argv(&["help"])).is_ok());
+        assert!(dispatch(&argv(&["info"])).is_ok());
+        assert!(dispatch(&argv(&["nope"])).is_err());
+    }
+
+    #[test]
+    fn workload_command_smoke() {
+        let r = dispatch(&argv(&[
+            "workload",
+            "--tasks",
+            "50",
+            "--grain-us",
+            "1",
+            "--variant",
+            "replay",
+            "--workers",
+            "2",
+        ]));
+        assert!(r.is_ok(), "{r:?}");
+    }
+
+    #[test]
+    fn stencil_command_smoke() {
+        let r = dispatch(&argv(&[
+            "stencil",
+            "--case",
+            "tiny",
+            "--mode",
+            "replay",
+            "--workers",
+            "2",
+        ]));
+        assert!(r.is_ok(), "{r:?}");
+    }
+
+    #[test]
+    fn distributed_command_smoke() {
+        let r = dispatch(&argv(&[
+            "distributed",
+            "--localities",
+            "2",
+            "--tasks",
+            "10",
+            "--kill",
+            "1",
+            "--latency-us",
+            "0",
+        ]));
+        assert!(r.is_ok(), "{r:?}");
+    }
+}

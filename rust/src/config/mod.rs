@@ -1,0 +1,132 @@
+//! Typed configuration for the runtime, applications, and benchmarks.
+//!
+//! Sources, lowest to highest precedence: built-in defaults → TOML file
+//! (`--config path.toml`) → `RHPX_*` environment variables → CLI flags.
+
+pub mod toml;
+
+use std::path::Path;
+
+pub use toml::{Document, ParseError, Value};
+
+/// Runtime-level configuration (the `[runtime]` section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuntimeConfig {
+    /// Worker threads in the scheduler.
+    pub workers: usize,
+    /// Directory holding AOT-compiled `*.hlo.txt` artifacts.
+    pub artifacts_dir: String,
+    /// Default replay attempts used by applications when unspecified.
+    pub replay_attempts: usize,
+    /// Default replication factor used by applications when unspecified.
+    pub replicas: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            artifacts_dir: "artifacts".to_string(),
+            replay_attempts: 3,
+            replicas: 3,
+        }
+    }
+}
+
+impl RuntimeConfig {
+    /// Build from a parsed document (`[runtime]` section), then apply
+    /// `RHPX_*` environment overrides.
+    pub fn from_document(doc: &Document) -> Self {
+        let mut c = RuntimeConfig::default();
+        if let Some(v) = doc.get("runtime.workers").and_then(Value::as_int) {
+            c.workers = (v.max(1)) as usize;
+        }
+        if let Some(v) = doc.get("runtime.artifacts_dir").and_then(Value::as_str) {
+            c.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.get("runtime.replay_attempts").and_then(Value::as_int) {
+            c.replay_attempts = (v.max(1)) as usize;
+        }
+        if let Some(v) = doc.get("runtime.replicas").and_then(Value::as_int) {
+            c.replicas = (v.max(1)) as usize;
+        }
+        c.apply_env();
+        c
+    }
+
+    /// Load from a TOML file (missing file = defaults + env).
+    pub fn load(path: Option<&Path>) -> Result<Self, String> {
+        match path {
+            None => {
+                let mut c = RuntimeConfig::default();
+                c.apply_env();
+                Ok(c)
+            }
+            Some(p) => {
+                let text = std::fs::read_to_string(p)
+                    .map_err(|e| format!("reading {}: {e}", p.display()))?;
+                let doc = toml::parse(&text).map_err(|e| e.to_string())?;
+                Ok(Self::from_document(&doc))
+            }
+        }
+    }
+
+    /// Apply `RHPX_WORKERS`, `RHPX_ARTIFACTS_DIR`, `RHPX_REPLAY_ATTEMPTS`,
+    /// `RHPX_REPLICAS`.
+    pub fn apply_env(&mut self) {
+        if let Ok(v) = std::env::var("RHPX_WORKERS") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.workers = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("RHPX_ARTIFACTS_DIR") {
+            self.artifacts_dir = v;
+        }
+        if let Ok(v) = std::env::var("RHPX_REPLAY_ATTEMPTS") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.replay_attempts = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("RHPX_REPLICAS") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.replicas = n.max(1);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = RuntimeConfig::default();
+        assert!(c.workers >= 1);
+        assert_eq!(c.replay_attempts, 3);
+    }
+
+    #[test]
+    fn from_document_reads_runtime_section() {
+        let doc = toml::parse(
+            "[runtime]\nworkers = 7\nartifacts_dir = \"art\"\nreplay_attempts = 5\nreplicas = 4\n",
+        )
+        .unwrap();
+        let c = RuntimeConfig::from_document(&doc);
+        assert_eq!(c.workers, 7);
+        assert_eq!(c.artifacts_dir, "art");
+        assert_eq!(c.replay_attempts, 5);
+        assert_eq!(c.replicas, 4);
+    }
+
+    #[test]
+    fn load_missing_path_is_defaults() {
+        let c = RuntimeConfig::load(None).unwrap();
+        assert!(c.workers >= 1);
+    }
+
+    #[test]
+    fn load_bad_file_errors() {
+        assert!(RuntimeConfig::load(Some(Path::new("/nonexistent/x.toml"))).is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! A small TOML-subset parser (no external crates are available in this
+//! offline build, so the config system carries its own parser).
+//!
+//! Supported subset — more than enough for runtime/benchmark configs:
+//! `[section]` and `[section.sub]` headers; `key = value` pairs with
+//! string (`"…"`), integer, float, boolean, and flat array values;
+//! `#` comments; blank lines. Keys are addressed as dotted paths
+//! (`section.sub.key`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document: dotted-path -> value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert / override an entry (used for env and CLI overrides).
+    pub fn set(&mut self, path: &str, value: Value) {
+        self.entries.insert(path.to_string(), value);
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (i, raw) in input.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(stripped) = line.strip_prefix('[') {
+            let name = stripped.strip_suffix(']').ok_or_else(|| ParseError {
+                line: lineno,
+                message: "unterminated section header".into(),
+            })?;
+            let name = name.trim();
+            if name.is_empty()
+                || !name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-')
+            {
+                return Err(ParseError { line: lineno, message: format!("bad section name {name:?}") });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| ParseError {
+            line: lineno,
+            message: "expected `key = value`".into(),
+        })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(ParseError { line: lineno, message: "empty key".into() });
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(path, value);
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    let err = |m: &str| ParseError { line: lineno, message: m.to_string() };
+    if s.is_empty() {
+        return Err(err("missing value"));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or_else(|| err("unterminated string"))?;
+        if body.contains('"') {
+            return Err(err("embedded quote in string (escapes unsupported)"));
+        }
+        return Ok(Value::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or_else(|| err("unterminated array"))?;
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for item in body.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue; // trailing comma
+            }
+            items.push(parse_value(item, lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    // Numbers: underscores allowed as digit separators.
+    let cleaned: String = s.chars().filter(|c| *c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        cleaned
+            .parse::<f64>()
+            .map(Value::Float)
+            .map_err(|_| err(&format!("bad float {s:?}")))
+    } else {
+        cleaned
+            .parse::<i64>()
+            .map(Value::Int)
+            .map_err(|_| err(&format!("bad value {s:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = parse(
+            r#"
+# runtime settings
+workers = 4
+name = "rhpx"   # inline comment
+
+[stencil]
+subdomains = 128
+points = 16_000
+dt_factor = 0.5
+resilient = true
+cases = [1, 2, 3]
+
+[stencil.replay]
+attempts = 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("workers").unwrap().as_int(), Some(4));
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("rhpx"));
+        assert_eq!(doc.get("stencil.subdomains").unwrap().as_int(), Some(128));
+        assert_eq!(doc.get("stencil.points").unwrap().as_int(), Some(16000));
+        assert_eq!(doc.get("stencil.dt_factor").unwrap().as_float(), Some(0.5));
+        assert_eq!(doc.get("stencil.resilient").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("stencil.cases").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(doc.get("stencil.replay.attempts").unwrap().as_int(), Some(3));
+    }
+
+    #[test]
+    fn int_coerces_to_float_not_reverse() {
+        let doc = parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_float(), Some(3.0));
+        assert_eq!(doc.get("b").unwrap().as_int(), None);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc.get("tag").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("x = \"oops").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut doc = parse("a = 1").unwrap();
+        doc.set("a", Value::Int(2));
+        assert_eq!(doc.get("a").unwrap().as_int(), Some(2));
+    }
+}

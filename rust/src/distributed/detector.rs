@@ -1,0 +1,183 @@
+//! Heartbeat failure detection over the simulated cluster.
+//!
+//! The distributed executors in this crate learn about dead localities
+//! only when a task routed there fails. Real deployments (MPI-ULFM,
+//! SLURM health checks) run an out-of-band failure detector instead;
+//! this module provides one: a monitor thread heartbeats every locality
+//! through the active-message layer, maintains a membership view, and
+//! notifies subscribers on state transitions — so schedulers can avoid
+//! routing to dead nodes *before* burning a replay attempt.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::agas::LocalityId;
+use crate::error::TaskError;
+use crate::future::{channel, Receiver, Sender};
+
+use super::locality::Cluster;
+
+/// A membership transition observed by the detector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipEvent {
+    Died(LocalityId),
+    Rejoined(LocalityId),
+}
+
+/// Snapshot of the detector's view.
+#[derive(Debug, Clone)]
+pub struct MembershipView {
+    /// Localities believed alive.
+    pub alive: Vec<LocalityId>,
+    /// Localities believed dead.
+    pub dead: Vec<LocalityId>,
+    /// Heartbeat rounds completed.
+    pub rounds: u64,
+}
+
+struct DetectorState {
+    alive: HashMap<LocalityId, bool>,
+    rounds: u64,
+    subscribers: Vec<Sender<MembershipEvent>>,
+}
+
+/// Heartbeat-based failure detector for a [`Cluster`].
+pub struct FailureDetector {
+    state: Arc<Mutex<DetectorState>>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FailureDetector {
+    /// Start monitoring `cluster`, heartbeating every `period`.
+    pub fn start(cluster: &Cluster, period: Duration) -> Self {
+        let state = Arc::new(Mutex::new(DetectorState {
+            alive: (0..cluster.len()).map(|i| (LocalityId(i), true)).collect(),
+            rounds: 0,
+            subscribers: Vec::new(),
+        }));
+        let stop = Arc::new(AtomicBool::new(false));
+        let cluster = cluster.clone();
+        let st = Arc::clone(&state);
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("rhpx-failure-detector".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    let mut events = Vec::new();
+                    // Heartbeat: a trivial task per locality. A dead
+                    // locality rejects it at dispatch.
+                    for i in 0..cluster.len() {
+                        let id = LocalityId(i);
+                        let beat = cluster
+                            .run_on(id, |_| Ok::<_, TaskError>(()))
+                            .get()
+                            .is_ok();
+                        let mut g = st.lock().unwrap();
+                        let prev = g.alive.insert(id, beat).unwrap_or(true);
+                        if prev != beat {
+                            events.push(if beat {
+                                MembershipEvent::Rejoined(id)
+                            } else {
+                                MembershipEvent::Died(id)
+                            });
+                        }
+                    }
+                    {
+                        let mut g = st.lock().unwrap();
+                        g.rounds += 1;
+                        for ev in &events {
+                            for sub in &g.subscribers {
+                                sub.send(*ev);
+                            }
+                        }
+                    }
+                    std::thread::sleep(period);
+                }
+            })
+            .expect("spawn failure detector");
+        FailureDetector { state, stop, handle: Some(handle) }
+    }
+
+    /// Current membership view.
+    pub fn view(&self) -> MembershipView {
+        let g = self.state.lock().unwrap();
+        let mut alive: Vec<LocalityId> =
+            g.alive.iter().filter(|(_, a)| **a).map(|(id, _)| *id).collect();
+        let mut dead: Vec<LocalityId> =
+            g.alive.iter().filter(|(_, a)| !**a).map(|(id, _)| *id).collect();
+        alive.sort();
+        dead.sort();
+        MembershipView { alive, dead, rounds: g.rounds }
+    }
+
+    /// True if the detector currently believes `id` is alive.
+    pub fn is_alive(&self, id: LocalityId) -> bool {
+        *self.state.lock().unwrap().alive.get(&id).unwrap_or(&false)
+    }
+
+    /// Subscribe to membership transitions (death/rejoin events).
+    pub fn subscribe(&self) -> Receiver<MembershipEvent> {
+        let (tx, rx) = channel();
+        self.state.lock().unwrap().subscribers.push(tx);
+        rx
+    }
+
+    /// Block until at least `n` heartbeat rounds have completed.
+    pub fn wait_rounds(&self, n: u64) {
+        while self.state.lock().unwrap().rounds < n {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+impl Drop for FailureDetector {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::NetworkConfig;
+
+    #[test]
+    fn detects_death_and_rejoin() {
+        let cl = Cluster::new(3, 1, NetworkConfig::default());
+        let det = FailureDetector::start(&cl, Duration::from_millis(1));
+        det.wait_rounds(2);
+        assert_eq!(det.view().alive.len(), 3);
+        assert!(det.is_alive(LocalityId(1)));
+
+        let events = det.subscribe();
+        cl.kill(LocalityId(1));
+        let base = det.view().rounds;
+        det.wait_rounds(base + 2);
+        assert!(!det.is_alive(LocalityId(1)));
+        assert_eq!(det.view().dead, vec![LocalityId(1)]);
+        assert_eq!(events.recv().get(), Ok(MembershipEvent::Died(LocalityId(1))));
+
+        cl.revive(LocalityId(1));
+        let base = det.view().rounds;
+        det.wait_rounds(base + 2);
+        assert!(det.is_alive(LocalityId(1)));
+        assert_eq!(
+            events.recv().get(),
+            Ok(MembershipEvent::Rejoined(LocalityId(1)))
+        );
+    }
+
+    #[test]
+    fn detector_shuts_down_cleanly() {
+        let cl = Cluster::new(2, 1, NetworkConfig::default());
+        let det = FailureDetector::start(&cl, Duration::from_millis(1));
+        det.wait_rounds(1);
+        drop(det); // must join without hanging
+    }
+}

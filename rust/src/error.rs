@@ -1,0 +1,178 @@
+//! Error types for tasks and the resiliency layer.
+//!
+//! In the paper a "failure" is a manifestation of a failing task: a task
+//! that throws an exception, or whose result a user-supplied validation
+//! function rejects (§III-B). In Rust we model "throwing" as a task body
+//! returning `Err(TaskError)` or panicking (panics are caught at the task
+//! boundary and converted into [`TaskError::Panic`]).
+
+use std::fmt;
+
+/// An error produced by a single task execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskError {
+    /// The task body returned an application-level error ("threw").
+    App(String),
+    /// The task body panicked; the payload is the panic message.
+    Panic(String),
+    /// An error injected by the failure-injection substrate (§V-C).
+    Injected { site: &'static str },
+    /// The dependencies of a dataflow task failed, so the task never ran.
+    DependencyFailed(String),
+    /// Executing an AOT compute artifact through PJRT failed.
+    Runtime(String),
+    /// A user validation function rejected the computed result.
+    ValidationRejected,
+    /// A resilient launch ultimately failed (replay exhausted, all
+    /// replicas failed, ...). Wrapping it in `TaskError` lets resilient
+    /// futures flow through `dataflow` dependencies unchanged.
+    Resilience(Box<ResilienceError>),
+}
+
+impl TaskError {
+    /// Short classification tag used in logs and metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TaskError::App(_) => "app",
+            TaskError::Panic(_) => "panic",
+            TaskError::Injected { .. } => "injected",
+            TaskError::DependencyFailed(_) => "dependency",
+            TaskError::Runtime(_) => "runtime",
+            TaskError::ValidationRejected => "validation",
+            TaskError::Resilience(_) => "resilience",
+        }
+    }
+
+    /// The wrapped resilience error, if this failure came from a
+    /// resilient launch.
+    pub fn as_resilience(&self) -> Option<&ResilienceError> {
+        match self {
+            TaskError::Resilience(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ResilienceError> for TaskError {
+    fn from(e: ResilienceError) -> Self {
+        TaskError::Resilience(Box::new(e))
+    }
+}
+
+impl fmt::Display for TaskError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TaskError::App(m) => write!(f, "task error: {m}"),
+            TaskError::Panic(m) => write!(f, "task panicked: {m}"),
+            TaskError::Injected { site } => write!(f, "injected failure at {site}"),
+            TaskError::DependencyFailed(m) => write!(f, "dependency failed: {m}"),
+            TaskError::Runtime(m) => write!(f, "runtime error: {m}"),
+            TaskError::ValidationRejected => write!(f, "result failed validation"),
+            TaskError::Resilience(e) => write!(f, "resilient launch failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TaskError {}
+
+impl From<String> for TaskError {
+    fn from(m: String) -> Self {
+        TaskError::App(m)
+    }
+}
+
+impl From<&str> for TaskError {
+    fn from(m: &str) -> Self {
+        TaskError::App(m.to_string())
+    }
+}
+
+/// Errors surfaced by the resiliency APIs (§IV).
+///
+/// These mirror the exceptions HPX re-throws when a resilient launch
+/// ultimately fails: replay exhausts its `n` trials, every replica of a
+/// replicated task fails, or finite results are computed but none passes
+/// validation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ResilienceError {
+    /// `async_replay`/`dataflow_replay` exceeded the allowed number of
+    /// trials; carries the last task error encountered.
+    Exhausted { attempts: usize, last: TaskError },
+    /// Every replica of a replicated task failed; carries the last error.
+    AllReplicasFailed { replicas: usize, last: TaskError },
+    /// Replicas produced finite results but none passed the validation
+    /// check (paper §IV-B(iv): "an exception is re-thrown").
+    ValidationFailed { replicas: usize },
+    /// The voting function could not build a consensus from the results.
+    NoConsensus { candidates: usize },
+}
+
+impl ResilienceError {
+    /// The last underlying task error, when one exists.
+    pub fn last_task_error(&self) -> Option<&TaskError> {
+        match self {
+            ResilienceError::Exhausted { last, .. } => Some(last),
+            ResilienceError::AllReplicasFailed { last, .. } => Some(last),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ResilienceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ResilienceError::Exhausted { attempts, last } => {
+                write!(f, "replay exhausted after {attempts} attempts; last: {last}")
+            }
+            ResilienceError::AllReplicasFailed { replicas, last } => {
+                write!(f, "all {replicas} replicas failed; last: {last}")
+            }
+            ResilienceError::ValidationFailed { replicas } => {
+                write!(f, "no result of {replicas} replicas passed validation")
+            }
+            ResilienceError::NoConsensus { candidates } => {
+                write!(f, "voting failed to reach consensus over {candidates} candidates")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ResilienceError {}
+
+/// Convenience alias used throughout the crate for task-result values.
+pub type TaskResult<T> = Result<T, TaskError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_error_display_and_kind() {
+        let e = TaskError::App("boom".into());
+        assert_eq!(e.kind(), "app");
+        assert!(e.to_string().contains("boom"));
+        let p = TaskError::Panic("oops".into());
+        assert_eq!(p.kind(), "panic");
+        let i = TaskError::Injected { site: "stencil" };
+        assert_eq!(i.kind(), "injected");
+        assert!(i.to_string().contains("stencil"));
+    }
+
+    #[test]
+    fn from_str_conversions() {
+        let e: TaskError = "bad".into();
+        assert_eq!(e, TaskError::App("bad".to_string()));
+        let e: TaskError = String::from("worse").into();
+        assert_eq!(e, TaskError::App("worse".to_string()));
+    }
+
+    #[test]
+    fn resilience_error_last() {
+        let last = TaskError::App("x".into());
+        let e = ResilienceError::Exhausted { attempts: 3, last: last.clone() };
+        assert_eq!(e.last_task_error(), Some(&last));
+        assert!(e.to_string().contains("3 attempts"));
+        let v = ResilienceError::ValidationFailed { replicas: 4 };
+        assert_eq!(v.last_task_error(), None);
+    }
+}

@@ -1,0 +1,213 @@
+//! Executors — pluggable launch policies.
+//!
+//! The paper's future work anticipates "special executors that will
+//! manage the aspects of resiliency and task distribution across nodes".
+//! This module generalizes that idea: an [`Executor`] turns a task body
+//! into a future under some policy, so generic code (e.g. the
+//! [`crate::algorithms`] parallel algorithms) is written once and gains
+//! resiliency — local replay, replication with voting, or distributed
+//! replay across localities — by swapping the executor.
+
+use std::sync::Arc;
+
+use crate::distributed::Cluster;
+use crate::error::TaskResult;
+use crate::future::Future;
+use crate::resilience::{self, Voter};
+use crate::runtime_handle::Runtime;
+
+/// A launch policy. Bodies are `Fn` (re-runnable) because resilient
+/// policies may need to execute them more than once.
+pub trait Executor: Clone + Send + Sync + 'static {
+    /// Launch `f` under this executor's policy.
+    fn execute<T, F>(&self, f: F) -> Future<T>
+    where
+        T: Clone + Send + 'static,
+        F: Fn() -> TaskResult<T> + Send + Sync + 'static;
+
+    /// Parallelism hint used by algorithms for chunking.
+    fn concurrency(&self) -> usize;
+}
+
+/// Plain `async_` launches — no resiliency (the baseline policy).
+#[derive(Clone)]
+pub struct PlainExecutor {
+    rt: Runtime,
+}
+
+impl PlainExecutor {
+    pub fn new(rt: &Runtime) -> Self {
+        PlainExecutor { rt: rt.clone() }
+    }
+}
+
+impl Executor for PlainExecutor {
+    fn execute<T, F>(&self, f: F) -> Future<T>
+    where
+        T: Clone + Send + 'static,
+        F: Fn() -> TaskResult<T> + Send + Sync + 'static,
+    {
+        crate::api::async_(&self.rt, f)
+    }
+
+    fn concurrency(&self) -> usize {
+        self.rt.workers()
+    }
+}
+
+/// Every launch is an `async_replay(n, …)` (§IV-A as a policy).
+#[derive(Clone)]
+pub struct ReplayExecutor {
+    rt: Runtime,
+    n: usize,
+}
+
+impl ReplayExecutor {
+    pub fn new(rt: &Runtime, n: usize) -> Self {
+        ReplayExecutor { rt: rt.clone(), n: n.max(1) }
+    }
+}
+
+impl Executor for ReplayExecutor {
+    fn execute<T, F>(&self, f: F) -> Future<T>
+    where
+        T: Clone + Send + 'static,
+        F: Fn() -> TaskResult<T> + Send + Sync + 'static,
+    {
+        resilience::async_replay(&self.rt, self.n, f)
+    }
+
+    fn concurrency(&self) -> usize {
+        self.rt.workers()
+    }
+}
+
+/// Every launch is replicated `n`× (§IV-B as a policy), with an optional
+/// voting function for consensus over the replicas.
+#[derive(Clone)]
+pub struct ReplicateExecutor<T: Clone + Send + 'static> {
+    rt: Runtime,
+    n: usize,
+    voter: Option<Voter<T>>,
+}
+
+impl<T: Clone + Send + 'static> ReplicateExecutor<T> {
+    pub fn new(rt: &Runtime, n: usize) -> Self {
+        ReplicateExecutor { rt: rt.clone(), n: n.max(1), voter: None }
+    }
+
+    pub fn with_vote(rt: &Runtime, n: usize, voter: Voter<T>) -> Self {
+        ReplicateExecutor { rt: rt.clone(), n: n.max(1), voter: Some(voter) }
+    }
+
+    /// Launch under this policy (typed executor: `T` is fixed by the
+    /// voter, so this is an inherent method rather than the trait).
+    pub fn execute<F>(&self, f: F) -> Future<T>
+    where
+        F: Fn() -> TaskResult<T> + Send + Sync + 'static,
+    {
+        match &self.voter {
+            None => resilience::async_replicate(&self.rt, self.n, f),
+            Some(v) => {
+                let v = Arc::clone(v);
+                resilience::async_replicate_vote(&self.rt, self.n, move |b: &[T]| v(b), f)
+            }
+        }
+    }
+
+    pub fn concurrency(&self) -> usize {
+        self.rt.workers()
+    }
+}
+
+/// Launches are replayed *across localities* of a cluster: the
+/// distributed executor of the paper's future work.
+#[derive(Clone)]
+pub struct DistributedReplayExecutor {
+    cluster: Cluster,
+    n: usize,
+}
+
+impl DistributedReplayExecutor {
+    pub fn new(cluster: &Cluster, n: usize) -> Self {
+        DistributedReplayExecutor { cluster: cluster.clone(), n: n.max(1) }
+    }
+}
+
+impl Executor for DistributedReplayExecutor {
+    fn execute<T, F>(&self, f: F) -> Future<T>
+    where
+        T: Clone + Send + 'static,
+        F: Fn() -> TaskResult<T> + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        crate::distributed::async_replay_distributed(
+            &self.cluster,
+            self.n,
+            Arc::new(move |_loc| f()),
+        )
+    }
+
+    fn concurrency(&self) -> usize {
+        self.cluster.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agas::LocalityId;
+    use crate::distributed::NetworkConfig;
+    use crate::resilience::vote_majority;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn rt() -> Runtime {
+        Runtime::builder().workers(2).build()
+    }
+
+    #[test]
+    fn plain_executor_runs() {
+        let rt = rt();
+        let ex = PlainExecutor::new(&rt);
+        assert_eq!(ex.execute(|| Ok(5i32)).get(), Ok(5));
+        assert_eq!(ex.concurrency(), 2);
+    }
+
+    #[test]
+    fn replay_executor_retries() {
+        let rt = rt();
+        let ex = ReplayExecutor::new(&rt, 4);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = ex.execute(move || -> TaskResult<i32> {
+            if c.fetch_add(1, Ordering::SeqCst) < 2 {
+                Err("flaky".into())
+            } else {
+                Ok(1)
+            }
+        });
+        assert_eq!(f.get(), Ok(1));
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn replicate_executor_votes() {
+        let rt = rt();
+        let ex = ReplicateExecutor::with_vote(&rt, 3, Arc::new(vote_majority));
+        let i = Arc::new(AtomicUsize::new(0));
+        let ic = Arc::clone(&i);
+        let f = ex.execute(move || {
+            Ok(if ic.fetch_add(1, Ordering::SeqCst) == 0 { -1i64 } else { 9 })
+        });
+        assert_eq!(f.get(), Ok(9));
+    }
+
+    #[test]
+    fn distributed_executor_survives_dead_node() {
+        let cl = Cluster::new(3, 1, NetworkConfig::default());
+        cl.kill(LocalityId(0));
+        let ex = DistributedReplayExecutor::new(&cl, 3);
+        assert_eq!(ex.execute(|| Ok(7u8)).get(), Ok(7));
+        assert_eq!(ex.concurrency(), 3);
+    }
+}

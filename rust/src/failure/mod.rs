@@ -1,0 +1,181 @@
+//! Failure injection (§V-C) and failure accounting.
+//!
+//! "Errors injected within the applications are artificial … We use an
+//! exponential distribution function to generate an exponential curve
+//! signature such that the probability of errors is equal to e^{-x},
+//! where x is the error rate factor."
+
+pub mod rng;
+
+pub use rng::Rng;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::TaskError;
+
+/// Shared counters kept by an injector (the paper's "atomic counter to
+/// count the total number of failed tasks").
+#[derive(Debug, Default)]
+pub struct FailureCounters {
+    pub injected: AtomicU64,
+    pub evaluated: AtomicU64,
+}
+
+impl FailureCounters {
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+    pub fn evaluated(&self) -> u64 {
+        self.evaluated.load(Ordering::Relaxed)
+    }
+    /// Observed failure fraction.
+    pub fn rate(&self) -> f64 {
+        let e = self.evaluated();
+        if e == 0 {
+            0.0
+        } else {
+            self.injected() as f64 / e as f64
+        }
+    }
+}
+
+/// Probabilistic fault injector with the paper's exponential model.
+///
+/// `error_rate` is the paper's *x*: each draw samples `Exp(x)` and
+/// injects a failure when the sample exceeds 1.0, giving
+/// P(failure) = e^{-x}. `error_rate <= 0` disables injection entirely
+/// (P = 0), mirroring the benchmarks' no-failure baseline.
+#[derive(Clone)]
+pub struct FaultInjector {
+    error_rate: f64,
+    seed: u64,
+    counters: Arc<FailureCounters>,
+}
+
+thread_local! {
+    /// Per-thread RNG stream so concurrent tasks don't contend on a lock;
+    /// streams are derived from (seed, thread id counter).
+    static TL_RNG: RefCell<Option<(u64, Rng)>> = const { RefCell::new(None) };
+}
+
+static THREAD_COUNTER: AtomicU64 = AtomicU64::new(1);
+
+impl FaultInjector {
+    /// Injector with P(failure per draw) = e^{-error_rate}.
+    pub fn new(error_rate: f64, seed: u64) -> Self {
+        FaultInjector { error_rate, seed, counters: Arc::new(FailureCounters::default()) }
+    }
+
+    /// Injector from a target failure *probability* p: rate = -ln(p).
+    pub fn with_probability(p: f64, seed: u64) -> Self {
+        assert!((0.0..1.0).contains(&p), "probability must be in [0,1)");
+        if p <= 0.0 {
+            Self::new(0.0, seed) // disabled
+        } else {
+            Self::new(-p.ln(), seed)
+        }
+    }
+
+    /// The probability a single draw injects a failure.
+    pub fn probability(&self) -> f64 {
+        if self.error_rate <= 0.0 {
+            0.0
+        } else {
+            (-self.error_rate).exp()
+        }
+    }
+
+    pub fn counters(&self) -> &Arc<FailureCounters> {
+        &self.counters
+    }
+
+    /// Decide whether this draw fails (paper Listing 3's criterion:
+    /// `Exp(rate) > 1.0`).
+    pub fn should_fail(&self) -> bool {
+        self.counters.evaluated.fetch_add(1, Ordering::Relaxed);
+        if self.error_rate <= 0.0 {
+            return false;
+        }
+        let fail = TL_RNG.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            let entry = slot.get_or_insert_with(|| {
+                let tid = THREAD_COUNTER.fetch_add(1, Ordering::Relaxed);
+                (self.seed, Rng::seeded(self.seed ^ tid.wrapping_mul(0xa076_1d64_78bd_642f)))
+            });
+            if entry.0 != self.seed {
+                let tid = THREAD_COUNTER.fetch_add(1, Ordering::Relaxed);
+                *entry = (self.seed, Rng::seeded(self.seed ^ tid.wrapping_mul(0xa076_1d64_78bd_642f)));
+            }
+            entry.1.exponential(self.error_rate) > 1.0
+        });
+        if fail {
+            self.counters.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fail
+    }
+
+    /// Draw and return an injected error, or `Ok(())`.
+    pub fn draw(&self, site: &'static str) -> Result<(), TaskError> {
+        if self.should_fail() {
+            Err(TaskError::Injected { site })
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_never_fails() {
+        let inj = FaultInjector::new(0.0, 1);
+        for _ in 0..10_000 {
+            assert!(!inj.should_fail());
+        }
+        assert_eq!(inj.counters().injected(), 0);
+        assert_eq!(inj.counters().evaluated(), 10_000);
+        assert_eq!(inj.probability(), 0.0);
+    }
+
+    #[test]
+    fn rate_one_fails_at_e_minus_one() {
+        let inj = FaultInjector::new(1.0, 42);
+        let n = 100_000;
+        let fails = (0..n).filter(|_| inj.should_fail()).count();
+        let p = fails as f64 / n as f64;
+        assert!((p - 0.3679).abs() < 0.02, "p = {p}");
+        assert_eq!(inj.counters().injected(), fails as u64);
+    }
+
+    #[test]
+    fn with_probability_hits_target() {
+        let inj = FaultInjector::with_probability(0.05, 7);
+        assert!((inj.probability() - 0.05).abs() < 1e-12);
+        let n = 200_000;
+        let fails = (0..n).filter(|_| inj.should_fail()).count();
+        let p = fails as f64 / n as f64;
+        assert!((p - 0.05).abs() < 0.005, "p = {p}");
+    }
+
+    #[test]
+    fn draw_returns_injected_error() {
+        let inj = FaultInjector::with_probability(0.999_999, 3);
+        // overwhelmingly likely to fail within a few draws
+        let failed = (0..100).any(|_| inj.draw("here").is_err());
+        assert!(failed);
+    }
+
+    #[test]
+    fn counters_shared_across_clones() {
+        let inj = FaultInjector::new(1.0, 5);
+        let inj2 = inj.clone();
+        for _ in 0..100 {
+            let _ = inj2.should_fail();
+        }
+        assert_eq!(inj.counters().evaluated(), 100);
+    }
+}

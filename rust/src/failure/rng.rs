@@ -1,0 +1,147 @@
+//! Deterministic PRNG + distributions (no `rand` crate offline).
+//!
+//! xoshiro256++ (Blackman & Vigna): fast, high-quality, trivially
+//! seedable — the failure injector needs reproducible error sequences so
+//! benchmark runs are comparable across API variants.
+
+/// xoshiro256++ generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 (as recommended by the xoshiro authors) so
+    /// low-entropy seeds still produce well-mixed state.
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9e3779b97f4a7c15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Seed from the system clock (distinct per call).
+    pub fn from_time() -> Self {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5eed);
+        Self::seeded(nanos ^ (std::process::id() as u64) << 32)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        // Multiply-shift; bias is negligible for n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Sample from Exp(rate) by inversion: -ln(U)/rate.
+    ///
+    /// This is `std::exponential_distribution<>(rate)` from the paper's
+    /// Listing 3: the benchmark draws `num ~ Exp(error_rate)` and flags
+    /// an error when `num > 1.0`, so P(error) = e^{-rate} (§V-C).
+    #[inline]
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        let mut u = self.next_f64();
+        if u <= 0.0 {
+            u = f64::MIN_POSITIVE;
+        }
+        -(1.0 - u).ln() / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::seeded(1);
+        let mut b = Rng::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_roughly_uniform() {
+        let mut r = Rng::seeded(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut r = Rng::seeded(3);
+        for _ in 0..10_000 {
+            assert!(r.next_below(10) < 10);
+        }
+    }
+
+    #[test]
+    fn exponential_matches_paper_error_model() {
+        // §V-C: P(sample > 1.0) = e^{-rate}. Check empirically at rate 1:
+        // e^{-1} ≈ 0.3679.
+        let mut r = Rng::seeded(11);
+        let n = 200_000;
+        let over = (0..n).filter(|_| r.exponential(1.0) > 1.0).count();
+        let p = over as f64 / n as f64;
+        assert!((p - (-1.0f64).exp()).abs() < 0.01, "p = {p}");
+        // rate 3 -> e^{-3} ≈ 0.0498
+        let over = (0..n).filter(|_| r.exponential(3.0) > 1.0).count();
+        let p = over as f64 / n as f64;
+        assert!((p - (-3.0f64).exp()).abs() < 0.01, "p = {p}");
+    }
+
+    #[test]
+    fn exponential_mean_is_inverse_rate() {
+        let mut r = Rng::seeded(13);
+        let n = 200_000;
+        let sum: f64 = (0..n).map(|_| r.exponential(2.0)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+}

@@ -1,0 +1,178 @@
+//! Asynchronous channels in the HPX style.
+//!
+//! An HPX channel is a pipe of futures: `recv` returns a [`Future`] that
+//! resolves when a matching `send` arrives (possibly before the send).
+//! Sends never block; pending receives are matched FIFO.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{TaskError, TaskResult};
+
+use super::{Future, Promise};
+
+struct ChannelState<T> {
+    /// Values sent with no receiver waiting.
+    queued: VecDeque<TaskResult<T>>,
+    /// Receivers waiting for a value.
+    waiting: VecDeque<Promise<T>>,
+    /// Set once every `Sender` has been dropped.
+    closed: bool,
+}
+
+/// Create an unbounded multi-producer multi-consumer future channel.
+pub fn channel<T: Send + 'static>() -> (Sender<T>, Receiver<T>) {
+    let state = Arc::new(Mutex::new(ChannelState {
+        queued: VecDeque::new(),
+        waiting: VecDeque::new(),
+        closed: false,
+    }));
+    (
+        Sender { state: Arc::clone(&state) },
+        Receiver { state },
+    )
+}
+
+/// Sending half; cloneable. Use [`Receiver::close`] to close the channel
+/// and fail all pending and future receives.
+pub struct Sender<T: Send + 'static> {
+    state: Arc<Mutex<ChannelState<T>>>,
+}
+
+impl<T: Send + 'static> Sender<T> {
+    /// Deliver a value: wakes the oldest waiting receiver, or queues.
+    pub fn send(&self, value: T) {
+        let waiter = {
+            let mut g = self.state.lock().unwrap();
+            match g.waiting.pop_front() {
+                Some(p) => Some(p),
+                None => {
+                    g.queued.push_back(Ok(value));
+                    return;
+                }
+            }
+        };
+        waiter.expect("checked above").set_value(value);
+    }
+}
+
+impl<T: Send + 'static> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        Sender { state: Arc::clone(&self.state) }
+    }
+}
+
+/// Receiving half; cloneable (competing consumers).
+pub struct Receiver<T: Send + 'static> {
+    state: Arc<Mutex<ChannelState<T>>>,
+}
+
+impl<T: Send + 'static> Receiver<T> {
+    /// A future for the next value.
+    pub fn recv(&self) -> Future<T> {
+        let mut g = self.state.lock().unwrap();
+        if let Some(v) = g.queued.pop_front() {
+            return Future::ready(v);
+        }
+        if g.closed {
+            return Future::ready(Err(TaskError::App("channel closed".to_string())));
+        }
+        let (p, f) = Promise::new();
+        g.waiting.push_back(p);
+        f
+    }
+
+    /// Close the channel explicitly: pending receivers fail, queued
+    /// values remain readable.
+    pub fn close(&self) {
+        let waiters: Vec<Promise<T>> = {
+            let mut g = self.state.lock().unwrap();
+            g.closed = true;
+            g.waiting.drain(..).collect()
+        };
+        for w in waiters {
+            w.set_error(TaskError::App("channel closed".to_string()));
+        }
+    }
+
+    /// Number of queued, unconsumed values.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queued.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T: Send + 'static> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver { state: Arc::clone(&self.state) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_then_recv() {
+        let (tx, rx) = channel();
+        tx.send(1);
+        tx.send(2);
+        assert_eq!(rx.recv().get(), Ok(1));
+        assert_eq!(rx.recv().get(), Ok(2));
+    }
+
+    #[test]
+    fn recv_then_send() {
+        let (tx, rx) = channel();
+        let f = rx.recv();
+        assert!(!f.is_ready());
+        tx.send(9);
+        assert_eq!(f.get(), Ok(9));
+    }
+
+    #[test]
+    fn fifo_matching_of_waiters() {
+        let (tx, rx) = channel();
+        let f1 = rx.recv();
+        let f2 = rx.recv();
+        tx.send("a");
+        tx.send("b");
+        assert_eq!(f1.get(), Ok("a"));
+        assert_eq!(f2.get(), Ok("b"));
+    }
+
+    #[test]
+    fn close_fails_waiters_but_keeps_queue() {
+        let (tx, rx) = channel();
+        tx.send(5);
+        let pending = {
+            let rx2 = rx.clone();
+            let f = rx2.recv(); // consumes the queued 5
+            assert_eq!(f.get(), Ok(5));
+            rx.recv()
+        };
+        rx.close();
+        assert!(pending.get().is_err());
+        assert!(rx.recv().get().is_err());
+        tx.send(6); // send after close: queued but unreachable; must not panic
+    }
+
+    #[test]
+    fn cross_thread_channel() {
+        let (tx, rx) = channel();
+        let h = std::thread::spawn(move || {
+            for i in 0..100 {
+                tx.send(i);
+            }
+        });
+        let mut sum = 0i64;
+        for _ in 0..100 {
+            sum += rx.recv().get().unwrap();
+        }
+        h.join().unwrap();
+        assert_eq!(sum, 4950);
+    }
+}

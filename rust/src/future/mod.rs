@@ -1,0 +1,364 @@
+//! Lightweight futures and promises — the HPX synchronization substrate.
+//!
+//! HPX component (1): "futures, channels and other asynchronization
+//! primitives". These are *eager, runtime-scheduled* futures in the HPX /
+//! C++ `std::future` tradition, not Rust `async` futures: a [`Promise`]
+//! owns the write side of a shared state, a [`Future`] the read side;
+//! continuations attached with [`Future::then`] run on the scheduler as
+//! soon as the value is set, and [`Future::get`] blocks — cooperatively
+//! helping the pool run other tasks when called from a worker thread, so
+//! waiting inside a task can never deadlock the pool.
+
+mod channel;
+mod when_all;
+
+pub use channel::{channel, Receiver, Sender};
+pub use when_all::{collapse_results, when_all, when_all_results};
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::{TaskError, TaskResult};
+use crate::scheduler::{current_worker, Pool};
+
+type Continuation<T> = Box<dyn FnOnce(&TaskResult<T>) + Send + 'static>;
+
+/// Continuation storage tuned for the common case: almost every future
+/// gets zero or one continuation, so avoid a `Vec` allocation for those.
+enum Conts<T> {
+    None,
+    One(Continuation<T>),
+    Many(Vec<Continuation<T>>),
+}
+
+impl<T> Conts<T> {
+    fn push(&mut self, c: Continuation<T>) {
+        match std::mem::replace(self, Conts::None) {
+            Conts::None => *self = Conts::One(c),
+            Conts::One(first) => *self = Conts::Many(vec![first, c]),
+            Conts::Many(mut v) => {
+                v.push(c);
+                *self = Conts::Many(v);
+            }
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        matches!(self, Conts::None)
+    }
+
+    fn fire(self, v: &TaskResult<T>) {
+        match self {
+            Conts::None => {}
+            Conts::One(c) => c(v),
+            Conts::Many(cs) => {
+                for c in cs {
+                    c(v);
+                }
+            }
+        }
+    }
+}
+
+enum State<T> {
+    /// Value not yet produced; holds continuations to fire on set.
+    Pending(Conts<T>),
+    /// Value produced (taken by at most one `get`/`try_take`).
+    Ready(TaskResult<T>),
+    /// Value produced and consumed by `into_result`.
+    Taken,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+impl<T> Shared<T> {
+    fn new() -> Arc<Self> {
+        Arc::new(Shared { state: Mutex::new(State::Pending(Conts::None)), cv: Condvar::new() })
+    }
+
+    /// Publish the value: drain and fire continuations (without holding
+    /// the state lock, so continuations may freely attach further
+    /// continuations), then store the value and wake blocked waiters.
+    /// Loops because a firing continuation may attach new continuations.
+    fn set(&self, value: TaskResult<T>) {
+        let mut value = Some(value);
+        loop {
+            let mut g = self.state.lock().unwrap();
+            match &mut *g {
+                State::Pending(conts) if !conts.is_empty() => {
+                    let cs = std::mem::replace(conts, Conts::None);
+                    drop(g);
+                    let v = value.as_ref().expect("value present until stored");
+                    cs.fire(v);
+                }
+                State::Pending(_) => {
+                    *g = State::Ready(value.take().expect("single store"));
+                    drop(g);
+                    self.cv.notify_all();
+                    return;
+                }
+                // Double-set is a programming error in this crate.
+                _ => panic!("promise value set twice"),
+            }
+        }
+    }
+}
+
+/// Write side of a future's shared state.
+///
+/// Dropping a `Promise` without setting a value resolves the future with
+/// a "broken promise" [`TaskError`], matching `std::future_errc`.
+pub struct Promise<T> {
+    shared: Arc<Shared<T>>,
+    set: bool,
+}
+
+impl<T> Promise<T> {
+    pub fn new() -> (Promise<T>, Future<T>) {
+        let shared = Shared::new();
+        (
+            Promise { shared: Arc::clone(&shared), set: false },
+            Future { shared },
+        )
+    }
+
+    /// Fulfil the promise with a successful value.
+    pub fn set_value(mut self, value: T) {
+        self.set = true;
+        self.shared.set(Ok(value));
+    }
+
+    /// Fulfil the promise with an error.
+    pub fn set_error(mut self, err: TaskError) {
+        self.set = true;
+        self.shared.set(Err(err));
+    }
+
+    /// Fulfil the promise with a `TaskResult`.
+    pub fn set_result(mut self, r: TaskResult<T>) {
+        self.set = true;
+        self.shared.set(r);
+    }
+}
+
+impl<T> Drop for Promise<T> {
+    fn drop(&mut self) {
+        if !self.set {
+            self.shared
+                .set(Err(TaskError::App("broken promise".to_string())));
+        }
+    }
+}
+
+/// Read side of an asynchronously produced value.
+pub struct Future<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Clone for Future<T> {
+    fn clone(&self) -> Self {
+        Future { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<T: Send + 'static> Future<T> {
+    /// A future that is already resolved.
+    pub fn ready(value: TaskResult<T>) -> Self {
+        let (p, f) = Promise::new();
+        p.set_result(value);
+        f
+    }
+
+    /// True once a value (or error) is available.
+    pub fn is_ready(&self) -> bool {
+        !matches!(*self.shared.state.lock().unwrap(), State::Pending(_))
+    }
+
+    /// Block until the value is available.
+    ///
+    /// On a worker thread this *helps*: it runs queued tasks while
+    /// waiting, so nested `get` calls keep the pool making progress (the
+    /// HPX "suspend the hpx-thread" analogue).
+    pub fn wait(&self) {
+        if self.is_ready() {
+            return;
+        }
+        if let Some((pool, idx)) = current_worker() {
+            self.wait_helping(&pool, idx);
+        } else {
+            let mut g = self.shared.state.lock().unwrap();
+            while matches!(*g, State::Pending(_)) {
+                g = self.shared.cv.wait(g).unwrap();
+            }
+        }
+    }
+
+    fn wait_helping(&self, pool: &Arc<Pool>, idx: usize) {
+        loop {
+            if self.is_ready() {
+                return;
+            }
+            if !pool.try_run_one(idx) {
+                // No runnable work; sleep briefly on the future's condvar.
+                let g = self.shared.state.lock().unwrap();
+                if !matches!(*g, State::Pending(_)) {
+                    return;
+                }
+                let _ = self
+                    .shared
+                    .cv
+                    .wait_timeout(g, std::time::Duration::from_micros(50))
+                    .unwrap();
+            }
+        }
+    }
+
+    /// Block and consume the future, returning the task's result.
+    ///
+    /// Panics if the value was already consumed by a previous
+    /// `into_result`/`get` through a clone of this future.
+    pub fn into_result(self) -> TaskResult<T> {
+        self.wait();
+        let mut g = self.shared.state.lock().unwrap();
+        match std::mem::replace(&mut *g, State::Taken) {
+            State::Ready(v) => v,
+            State::Taken => panic!("future value already consumed"),
+            State::Pending(_) => unreachable!("wait() returned while pending"),
+        }
+    }
+
+    /// Alias for [`Future::into_result`], matching `future::get()`.
+    pub fn get(self) -> TaskResult<T> {
+        self.into_result()
+    }
+
+    /// Non-blocking: consume the value if it is ready.
+    pub fn try_take(&self) -> Option<TaskResult<T>> {
+        let mut g = self.shared.state.lock().unwrap();
+        match &*g {
+            State::Pending(_) => None,
+            State::Taken => panic!("future value already consumed"),
+            State::Ready(_) => match std::mem::replace(&mut *g, State::Taken) {
+                State::Ready(v) => Some(v),
+                _ => unreachable!(),
+            },
+        }
+    }
+
+    /// Attach a continuation that runs (on the caller's scheduler if the
+    /// value is not yet ready; inline otherwise) with a reference to the
+    /// result. Returns a future for the continuation's value.
+    pub fn then<U, F>(&self, f: F) -> Future<U>
+    where
+        U: Send + 'static,
+        F: FnOnce(&TaskResult<T>) -> TaskResult<U> + Send + 'static,
+    {
+        let (p, fut) = Promise::new();
+        self.on_ready(move |r| p.set_result(f(r)));
+        fut
+    }
+
+    /// Lower-level hook: run `f` with the result as soon as it is set.
+    /// If the value is already available, `f` runs inline.
+    pub fn on_ready<F>(&self, f: F)
+    where
+        F: FnOnce(&TaskResult<T>) + Send + 'static,
+    {
+        let mut g = self.shared.state.lock().unwrap();
+        match &mut *g {
+            State::Pending(conts) => conts.push(Box::new(f)),
+            State::Ready(v) => {
+                // Fire inline while holding the lock: cheap (no job is
+                // scheduled) and consistent with the set() path.
+                f(v);
+            }
+            State::Taken => panic!("future value already consumed"),
+        }
+    }
+}
+
+impl<T: Clone + Send + 'static> Future<T> {
+    /// Block and return a clone of the value, leaving it in place so
+    /// other holders of this (cloned) future can also read it.
+    pub fn get_copy(&self) -> TaskResult<T> {
+        self.wait();
+        let g = self.shared.state.lock().unwrap();
+        match &*g {
+            State::Ready(v) => v.clone(),
+            State::Taken => panic!("future value already consumed"),
+            State::Pending(_) => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn promise_future_roundtrip() {
+        let (p, f) = Promise::new();
+        p.set_value(42);
+        assert!(f.is_ready());
+        assert_eq!(f.get(), Ok(42));
+    }
+
+    #[test]
+    fn broken_promise() {
+        let (p, f) = Promise::<i32>::new();
+        drop(p);
+        assert_eq!(f.get(), Err(TaskError::App("broken promise".to_string())));
+    }
+
+    #[test]
+    fn then_chains_inline_when_ready() {
+        let f = Future::ready(Ok(2));
+        let g = f.then(|r| r.clone().map(|v| v * 10));
+        assert_eq!(g.get(), Ok(20));
+    }
+
+    #[test]
+    fn then_fires_on_later_set() {
+        let (p, f) = Promise::new();
+        let g = f.then(|r| r.clone().map(|v: i32| v + 1));
+        assert!(!g.is_ready());
+        p.set_value(9);
+        assert_eq!(g.get(), Ok(10));
+    }
+
+    #[test]
+    fn error_propagates_through_then() {
+        let f: Future<i32> = Future::ready(Err(TaskError::App("x".into())));
+        let g = f.then(|r| r.clone().map(|v| v + 1));
+        assert_eq!(g.get(), Err(TaskError::App("x".to_string())));
+    }
+
+    #[test]
+    fn cross_thread_wait() {
+        let (p, f) = Promise::new();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            p.set_value(7u64);
+        });
+        assert_eq!(f.get(), Ok(7));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn get_copy_leaves_value() {
+        let f = Future::ready(Ok(5i32));
+        assert_eq!(f.get_copy(), Ok(5));
+        assert_eq!(f.get_copy(), Ok(5));
+        assert_eq!(f.get(), Ok(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "promise value set twice")]
+    fn double_set_panics() {
+        let shared = Shared::new();
+        shared.set(Ok(1));
+        shared.set(Ok(2));
+    }
+}

@@ -1,0 +1,141 @@
+//! `when_all` — the synchronization primitive under `dataflow`.
+//!
+//! A dataflow task "waits for all provided futures to become ready, and
+//! then executes the specified function" (paper §V-B). `when_all` is the
+//! waiting half: it completes when every input future holds a value,
+//! without blocking any thread (a shared atomic countdown fired from each
+//! input's continuation).
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::{TaskError, TaskResult};
+
+use super::{Future, Promise};
+
+/// Resolve with the values of all `futs`; if any input fails, resolve
+/// with that input's error (first one observed wins deterministically by
+/// index priority: the lowest-index error is reported).
+pub fn when_all<T: Clone + Send + 'static>(futs: Vec<Future<T>>) -> Future<Vec<T>> {
+    when_all_results(futs).then(|r| match r {
+        Ok(results) => collapse_results(results),
+        Err(e) => Err(e.clone()),
+    })
+}
+
+/// Collapse per-dependency results into all-values-or-first-error (by
+/// index order, deterministically). Shared by `when_all` and the
+/// dataflow launch paths, which call it inline on `when_all_results`
+/// output to avoid an extra future hop per task.
+pub fn collapse_results<T: Clone>(results: &[TaskResult<T>]) -> Result<Vec<T>, TaskError> {
+    if let Some(e) = results.iter().find_map(|r| r.as_ref().err()) {
+        return Err(TaskError::DependencyFailed(e.to_string()));
+    }
+    Ok(results
+        .iter()
+        .map(|r| r.as_ref().ok().expect("checked above").clone())
+        .collect())
+}
+
+/// Resolve with every input's `TaskResult` (never fails itself): the
+/// error-tolerant variant used by the resiliency layer, which must see
+/// *which* dependencies failed rather than a collapsed error.
+///
+/// Hot path of every dataflow task: a *single* shared allocation (one
+/// `Arc<Mutex<…>>` holding slots + countdown + promise) and one lock per
+/// dependency completion.
+pub fn when_all_results<T: Clone + Send + 'static>(
+    futs: Vec<Future<T>>,
+) -> Future<Vec<TaskResult<T>>> {
+    if futs.is_empty() {
+        return Future::ready(Ok(Vec::new()));
+    }
+    let n = futs.len();
+    let (promise, out) = Promise::new();
+
+    struct JoinState<T> {
+        slots: Vec<Option<TaskResult<T>>>,
+        remaining: usize,
+        promise: Option<Promise<Vec<TaskResult<T>>>>,
+    }
+    let state = Arc::new(Mutex::new(JoinState {
+        slots: (0..n).map(|_| None).collect(),
+        remaining: n,
+        promise: Some(promise),
+    }));
+
+    for (i, f) in futs.iter().enumerate() {
+        let state = Arc::clone(&state);
+        f.on_ready(move |r| {
+            let finish = {
+                let mut g = state.lock().unwrap();
+                g.slots[i] = Some(r.clone());
+                g.remaining -= 1;
+                if g.remaining == 0 {
+                    let results: Vec<TaskResult<T>> = g
+                        .slots
+                        .drain(..)
+                        .map(|s| s.expect("all slots filled"))
+                        .collect();
+                    g.promise.take().map(|p| (p, results))
+                } else {
+                    None
+                }
+            };
+            if let Some((p, results)) = finish {
+                p.set_value(results);
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn when_all_ready_inputs() {
+        let futs = vec![Future::ready(Ok(1)), Future::ready(Ok(2)), Future::ready(Ok(3))];
+        assert_eq!(when_all(futs).get(), Ok(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn when_all_empty() {
+        let futs: Vec<Future<i32>> = vec![];
+        assert_eq!(when_all(futs).get(), Ok(vec![]));
+    }
+
+    #[test]
+    fn when_all_orders_by_index_not_completion() {
+        let (p1, f1) = Promise::new();
+        let (p2, f2) = Promise::new();
+        let all = when_all(vec![f1, f2]);
+        p2.set_value(20); // second input completes first
+        p1.set_value(10);
+        assert_eq!(all.get(), Ok(vec![10, 20]));
+    }
+
+    #[test]
+    fn when_all_propagates_lowest_index_error() {
+        let (p1, f1) = Promise::<i32>::new();
+        let (p2, f2) = Promise::<i32>::new();
+        let all = when_all(vec![f1, f2]);
+        p2.set_error(TaskError::App("late".into()));
+        p1.set_error(TaskError::App("early".into()));
+        match all.get() {
+            Err(TaskError::DependencyFailed(m)) => assert!(m.contains("early"), "{m}"),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn when_all_results_preserves_individual_errors() {
+        let futs = vec![
+            Future::ready(Ok(1)),
+            Future::ready(Err(TaskError::App("x".into()))),
+        ];
+        let r = when_all_results(futs).get().unwrap();
+        assert_eq!(r[0], Ok(1));
+        assert!(r[1].is_err());
+    }
+}

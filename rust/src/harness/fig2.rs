@@ -1,0 +1,97 @@
+//! Fig 2: extra execution time per task vs. probability of error
+//! occurrence, task grain 200 µs.
+//!
+//! * Fig 2a — `async_replay` (n = 3): overhead grows with the error
+//!   probability because failing tasks re-run (≈ p·grain extra per task
+//!   at small p).
+//! * Fig 2b — `async_replicate` (×3): a flat line — every task runs
+//!   three replicas regardless of errors, so error probability does not
+//!   change the (already ×3) cost.
+//!
+//! The paper sweeps error probabilities up to 5% (error-rate factors
+//! x = -ln(p)).
+
+use crate::metrics::{fmt_micros, Stats, Table};
+use crate::runtime_handle::Runtime;
+use crate::workload::{run, Variant, WorkloadParams};
+
+use super::HarnessOpts;
+
+/// The paper's x-axis: probability of error occurrence per task (%).
+pub fn default_probabilities() -> Vec<f64> {
+    vec![0.0, 0.5, 1.0, 2.0, 3.0, 4.0, 5.0]
+}
+
+/// Run both Fig 2 series; rows are error probabilities, columns the
+/// extra per-task time of replay(3) and replicate(3) over the
+/// zero-error plain baseline.
+pub fn run_fig2(opts: &HarnessOpts, probs_pct: &[f64]) -> Table {
+    let tasks = ((1_000_000.0 * opts.scale) as usize).max(1_000);
+    let grain_ns = 200_000;
+    let rt = Runtime::builder().workers(opts.workers).build();
+
+    let base_params = WorkloadParams { tasks, grain_ns, ..Default::default() };
+    let mut base = Stats::new();
+    for _ in 0..opts.repeats {
+        base.push(run(&rt, Variant::Plain, &base_params).per_task_us);
+    }
+    let base_us = base.mean();
+    let grain_us = grain_ns as f64 / 1e3;
+    // (3-1)×grain of inherent duplicated compute, packed over the
+    // parallelism that can actually run (capped by physical cores).
+    let physical = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let ideal_replicate_extra = 2.0 * grain_us / (opts.workers.min(physical)) as f64;
+
+    let mut table = Table::new(
+        &format!(
+            "Fig 2: extra time per task (µs) vs error probability, grain 200µs, {tasks} tasks"
+        ),
+        &["error_prob_pct", "replay3_extra_us", "replicate3_extra_us", "injected_replay", "injected_replicate"],
+    );
+
+    for &p_pct in probs_pct {
+        let p = p_pct / 100.0;
+        let error_rate = if p > 0.0 { Some(-p.ln()) } else { None };
+        let params = WorkloadParams { error_rate, ..base_params.clone() };
+
+        let mut replay = Stats::new();
+        let mut injected_replay = 0u64;
+        for _ in 0..opts.repeats {
+            let rep = run(&rt, Variant::Replay { n: 3 }, &params);
+            replay.push(rep.per_task_us - base_us);
+            injected_replay = rep.failures_injected;
+        }
+        let mut replicate = Stats::new();
+        let mut injected_repl = 0u64;
+        for _ in 0..opts.repeats {
+            let rep = run(&rt, Variant::Replicate { n: 3 }, &params);
+            replicate.push(rep.per_task_us - base_us - ideal_replicate_extra);
+            injected_repl = rep.failures_injected;
+        }
+        table.add_row(&[
+            format!("{p_pct:.1}"),
+            fmt_micros(replay.mean()),
+            fmt_micros(replicate.mean()),
+            injected_replay.to_string(),
+            injected_repl.to_string(),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_smoke() {
+        let opts = HarnessOpts { scale: 0.002, repeats: 1, workers: 2, ..Default::default() };
+        let t = run_fig2(&opts, &[0.0, 5.0]);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        // the 5% row must actually inject failures
+        let last = csv.lines().last().unwrap();
+        let injected: u64 = last.split(',').nth(3).unwrap().parse().unwrap();
+        assert!(injected > 0, "row: {last}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Fig 3: 1D stencil percentage extra execution time vs. probability of
+//! error occurrence, cases A and B.
+//!
+//! Series per case: replay without checksums and replay with checksums
+//! (the paper's 5.9%/6.9% at case A and 8.5%/9.6% at case B for the
+//! largest error rates).
+
+use crate::metrics::{Stats, Table};
+use crate::runtime_handle::Runtime;
+use crate::stencil::{run, Mode, StencilParams};
+
+use super::table2::cases;
+use super::{HarnessOpts, KernelBackend};
+
+/// Error probabilities swept (percent).
+pub fn default_probabilities() -> Vec<f64> {
+    vec![0.0, 1.0, 2.0, 5.0]
+}
+
+/// Run Fig 3 for both cases; overhead is % extra wall time over the
+/// pure-dataflow zero-error baseline of the same case.
+pub fn run_fig3(opts: &HarnessOpts, backend: &KernelBackend, probs_pct: &[f64], replays: usize) -> Table {
+    let rt = Runtime::builder().workers(opts.workers).build();
+    let mut table = Table::new(
+        "Fig 3: stencil % extra execution time vs error probability",
+        &["case", "error_prob_pct", "replay_pct", "replay_checksum_pct", "injected"],
+    );
+
+    for (label, base) in cases(opts.scale) {
+        let case_backend = backend.for_case(&base).expect("artifact for case geometry");
+        // Warmup: compile PJRT executables on every worker before timing.
+        let warm = StencilParams { iterations: 2, backend: case_backend.clone(), ..base.clone() };
+        run(&rt, &warm).expect("warmup failed");
+        // Zero-error pure baseline for this case.
+        let mut b = Stats::new();
+        for _ in 0..opts.repeats {
+            let (_, rep) = run(&rt, &StencilParams { backend: case_backend.clone(), ..base.clone() })
+                .expect("baseline run failed");
+            b.push(rep.wall_secs);
+        }
+        let base_secs = b.mean();
+
+        for &p_pct in probs_pct {
+            let p = p_pct / 100.0;
+            let error_rate = if p > 0.0 { Some(-p.ln()) } else { None };
+            let mut injected = 0u64;
+            let mut pct = |mode: Mode| -> f64 {
+                let params = StencilParams {
+                    mode,
+                    error_rate,
+                    backend: case_backend.clone(),
+                    ..base.clone()
+                };
+                let mut s = Stats::new();
+                for _ in 0..opts.repeats {
+                    let (_, rep) = run(&rt, &params).expect("fig3 run failed");
+                    injected = injected.max(rep.failures_injected);
+                    s.push(100.0 * (rep.wall_secs - base_secs) / base_secs);
+                }
+                s.mean()
+            };
+            let replay = pct(Mode::Replay { n: replays });
+            let replay_ck = pct(Mode::ReplayChecksum { n: replays });
+            table.add_row(&[
+                label.to_string(),
+                format!("{p_pct:.1}"),
+                format!("{replay:.1}"),
+                format!("{replay_ck:.1}"),
+                injected.to_string(),
+            ]);
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_smoke() {
+        let opts = HarnessOpts { scale: 0.0005, repeats: 1, workers: 2, ..Default::default() };
+        let t = run_fig3(&opts, &KernelBackend::Native, &[0.0, 5.0], 5);
+        let csv = t.to_csv();
+        // 2 cases x 2 probabilities
+        assert_eq!(csv.lines().count(), 5, "{csv}");
+    }
+}

@@ -1,0 +1,69 @@
+//! Benchmark harnesses — one per paper table/figure (DESIGN.md §3).
+//!
+//! Shared between the `cargo bench` targets (`rust/benches/*.rs`) and the
+//! `rhpx bench` CLI subcommand, so a result can always be regenerated
+//! both ways. Each harness prints the same rows/series the paper
+//! reports and can emit CSV for the plotting scripts.
+
+pub mod fig2;
+pub mod fig3;
+pub mod table1;
+pub mod table2;
+
+use crate::error::TaskResult;
+use crate::metrics::Table;
+use crate::runtime::ArtifactStore;
+use crate::stencil::{Backend, StencilParams};
+
+/// Kernel selection for stencil harnesses. `Pjrt` resolves the artifact
+/// *per case geometry* (each (nx, steps) pair has its own AOT module).
+pub enum KernelBackend {
+    Native,
+    Pjrt(ArtifactStore),
+}
+
+impl KernelBackend {
+    /// Resolve the concrete backend for one case's geometry.
+    pub fn for_case(&self, params: &StencilParams) -> TaskResult<Backend> {
+        match self {
+            KernelBackend::Native => Ok(Backend::Native),
+            KernelBackend::Pjrt(store) => Backend::pjrt(store, params.nx, params.steps),
+        }
+    }
+}
+
+/// Common scale/IO options for a harness run.
+#[derive(Debug, Clone)]
+pub struct HarnessOpts {
+    /// Fraction of the paper's full workload (1.0 = paper scale).
+    pub scale: f64,
+    /// Repetitions per cell (paper: 10; scaled default: 3).
+    pub repeats: usize,
+    /// Also emit CSV to this path.
+    pub csv: Option<String>,
+    /// Worker threads for the runtime under test.
+    pub workers: usize,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        HarnessOpts {
+            scale: 0.01,
+            repeats: 3,
+            csv: None,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+}
+
+/// Print a harness table and optionally write its CSV.
+pub fn emit(table: &Table, opts: &HarnessOpts) {
+    print!("{}", table.render());
+    if let Some(path) = &opts.csv {
+        if let Err(e) = std::fs::write(path, table.to_csv()) {
+            eprintln!("warning: failed to write {path}: {e}");
+        } else {
+            println!("(csv written to {path})");
+        }
+    }
+}

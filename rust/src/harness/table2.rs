@@ -1,0 +1,111 @@
+//! Table II: 1D stencil execution time with no failures.
+//!
+//! Paper columns: Pure Dataflow / Replay without checksums / Replay with
+//! checksums / Replicate without checksums; rows: case A (128 × 16000)
+//! and case B (256 × 8000), 8192 iterations × 128 steps.
+
+use crate::metrics::{fmt_secs, Stats, Table};
+use crate::runtime_handle::Runtime;
+use crate::stencil::{run, Mode, StencilParams};
+
+use super::{HarnessOpts, KernelBackend};
+
+/// The four Table II configurations.
+pub fn table2_modes(n: usize) -> Vec<Mode> {
+    vec![
+        Mode::Pure,
+        Mode::Replay { n },
+        Mode::ReplayChecksum { n },
+        Mode::Replicate { n },
+    ]
+}
+
+/// Run Table II. `backend` selects the kernel (native Rust or the PJRT
+/// artifact, resolved per case geometry); the paper's relative overheads
+/// are a property of the runtime, not the kernel, so both backends
+/// reproduce the shape.
+pub fn run_table2(opts: &HarnessOpts, backend: &KernelBackend, replicas: usize) -> Table {
+    let mut table = Table::new(
+        &format!(
+            "Table II: 1D stencil wall time (s), no failures, scale {} of paper geometry",
+            opts.scale
+        ),
+        &["case", "pure_dataflow", "replay", "replay_checksum", "replicate"],
+    );
+    let rt = Runtime::builder().workers(opts.workers).build();
+
+    for (label, base) in cases(opts.scale) {
+        let case_backend = backend.for_case(&base).expect("artifact for case geometry");
+        // Warmup: compile PJRT executables on every worker before timing.
+        let warm = StencilParams { iterations: 2, backend: case_backend.clone(), ..base.clone() };
+        run(&rt, &warm).expect("warmup failed");
+        let mut cells = vec![label.to_string()];
+        for mode in table2_modes(replicas) {
+            let params = StencilParams { mode, backend: case_backend.clone(), ..base.clone() };
+            let mut s = Stats::new();
+            for _ in 0..opts.repeats {
+                let (_, rep) = run(&rt, &params).expect("stencil run failed");
+                assert_eq!(rep.launch_errors, 0);
+                s.push(rep.wall_secs);
+            }
+            cells.push(fmt_secs(s.mean()));
+        }
+        table.add_row(&cells);
+    }
+    table
+}
+
+/// Case A and B geometries scaled to the harness budget. Scaling reduces
+/// the iteration count and the subdomain size while keeping the paper's
+/// task *structure* (many more tasks than subdomains, 128 ghost steps at
+/// full scale, proportionally fewer when scaled).
+pub fn cases(scale: f64) -> Vec<(&'static str, StencilParams)> {
+    if scale >= 1.0 {
+        vec![
+            ("case_A", StencilParams::case_a(1.0)),
+            ("case_B", StencilParams::case_b(1.0)),
+        ]
+    } else {
+        // Scaled-down: keep the A:B shape (A = fewer, larger subdomains;
+        // B = 2x subdomains at half size => 2x tasks).
+        let iters = ((8192.0 * scale) as usize).clamp(4, 8192);
+        let a = StencilParams {
+            n_sub: 16,
+            nx: 1000,
+            iterations: iters,
+            steps: 16,
+            courant: 0.9,
+            ..StencilParams::tiny()
+        };
+        let b = StencilParams {
+            n_sub: 32,
+            nx: 500,
+            iterations: iters,
+            steps: 16,
+            courant: 0.9,
+            seed: 0xB,
+            ..StencilParams::tiny()
+        };
+        vec![("case_A(scaled)", a), ("case_B(scaled)", b)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_smoke_native() {
+        let opts = HarnessOpts { scale: 0.001, repeats: 1, workers: 2, ..Default::default() };
+        let t = run_table2(&opts, &KernelBackend::Native, 3);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3, "{csv}");
+    }
+
+    #[test]
+    fn scaled_cases_preserve_a_b_shape() {
+        let cs = cases(0.01);
+        assert_eq!(cs[1].1.n_sub, 2 * cs[0].1.n_sub);
+        assert_eq!(cs[0].1.nx, 2 * cs[1].1.nx);
+    }
+}

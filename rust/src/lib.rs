@@ -1,0 +1,58 @@
+//! # rhpx — software resiliency for asynchronous many-task runtimes
+//!
+//! A Rust reproduction of *"Implementing Software Resiliency in HPX for
+//! Extreme Scale Computing"* (Gupta, Mayo, Lemoine, Kaiser; SAND2020-3975).
+//!
+//! The crate contains a complete HPX-like AMT substrate — a work-stealing
+//! lightweight task [`scheduler`], eager [`future`]s with continuations
+//! and `when_all`, channels, an AGAS-style object registry ([`agas`]),
+//! and simulated multi-locality distribution ([`distributed`]) — plus the
+//! paper's contribution as [`resilience`]: **task replay** and **task
+//! replicate** in every variant of Listings 1 and 2, implemented as
+//! drop-in extensions of [`async_`](api::async_)/[`dataflow`](api::dataflow).
+//!
+//! The 1D Lax-Wendroff stencil application of §V-B lives in [`stencil`];
+//! its numeric kernel is authored in JAX/Pallas, AOT-lowered to HLO at
+//! build time (`make artifacts`), and executed from Rust through PJRT by
+//! [`runtime`]. Python never runs on the task path.
+//!
+//! ```no_run
+//! use rhpx::{Runtime, resilience};
+//!
+//! let rt = Runtime::builder().workers(4).build();
+//! let f = resilience::async_replay(&rt, 3, || {
+//!     // flaky computation
+//!     Ok::<_, rhpx::TaskError>(42)
+//! });
+//! assert_eq!(f.get().unwrap(), 42);
+//! ```
+
+pub mod agas;
+pub mod algorithms;
+pub mod api;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod distributed;
+pub mod error;
+pub mod executor;
+pub mod failure;
+pub mod future;
+pub mod harness;
+pub mod metrics;
+pub mod perfcounters;
+pub mod resilience;
+pub mod runtime;
+mod runtime_handle;
+pub mod scheduler;
+pub mod stencil;
+pub mod testing;
+pub mod workload;
+
+pub use api::{apply, async_, dataflow, dataflow_results};
+pub use error::{ResilienceError, TaskError, TaskResult};
+pub use future::{channel, when_all, when_all_results, Future, Promise};
+pub use runtime_handle::{Runtime, RuntimeBuilder};
+
+/// Crate version string.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

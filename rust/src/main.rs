@@ -1,0 +1,6 @@
+//! `rhpx` — the launcher binary. See `rhpx help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(rhpx::cli::run(&argv));
+}

@@ -1,0 +1,86 @@
+//! Timers, streaming statistics, and table/CSV rendering for the
+//! benchmark harnesses.
+
+mod stats;
+mod table;
+
+pub use stats::Stats;
+pub use table::Table;
+
+use std::time::{Duration, Instant};
+
+/// Monotonic stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_micros(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Busy-wait for `delay_ns` nanoseconds — the paper's task-grain control
+/// (Listing 3 spins on `high_resolution_clock` until the requested grain
+/// has elapsed; sleeping would deschedule the worker and under-report
+/// scheduling overheads).
+#[inline]
+pub fn busy_wait_ns(delay_ns: u64) {
+    let start = Instant::now();
+    let target = Duration::from_nanos(delay_ns);
+    while start.elapsed() < target {
+        std::hint::spin_loop();
+    }
+}
+
+/// Format seconds with 3 decimals (paper tables print e.g. `46.564`).
+pub fn fmt_secs(s: f64) -> String {
+    format!("{s:.3}")
+}
+
+/// Format microseconds with 3 decimals (Table I prints e.g. `0.792`).
+pub fn fmt_micros(us: f64) -> String {
+    format!("{us:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        busy_wait_ns(1_000_000); // 1 ms
+        let e = t.elapsed_secs();
+        assert!(e >= 0.001, "elapsed {e}");
+        assert!(e < 1.0, "elapsed {e}");
+    }
+
+    #[test]
+    fn busy_wait_respects_grain() {
+        let t = Timer::start();
+        busy_wait_ns(200_000); // the paper's 200 µs grain
+        let us = t.elapsed_micros();
+        assert!(us >= 200.0, "only waited {us} µs");
+        assert!(us < 20_000.0, "waited way too long: {us} µs");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(46.5641), "46.564");
+        assert_eq!(fmt_micros(0.7923), "0.792");
+    }
+}

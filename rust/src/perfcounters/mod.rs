@@ -1,0 +1,206 @@
+//! Performance counters — HPX-style named runtime instrumentation.
+//!
+//! HPX exposes `/threads{locality#0}/count/cumulative`-style counters;
+//! this is the same idea at the scale of this crate: a process-wide
+//! registry of named monotonic counters and gauges, sampled on demand
+//! (`rhpx info`), plus interval snapshots for before/after deltas in the
+//! benchmark harnesses.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Kind of instrument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Monotonically increasing count (tasks spawned, failures, …).
+    Counter,
+    /// Point-in-time value (queue depth, inflight tasks, …).
+    Gauge,
+}
+
+/// A single named instrument.
+pub struct Instrument {
+    value: AtomicU64,
+    kind: Kind,
+}
+
+impl Instrument {
+    pub fn increment(&self, by: u64) {
+        self.value.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn kind(&self) -> Kind {
+        self.kind
+    }
+}
+
+/// A registry of instruments. Usually accessed through [`global`].
+#[derive(Default)]
+pub struct Registry {
+    instruments: Mutex<BTreeMap<String, Arc<Instrument>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create an instrument. Names follow the HPX convention
+    /// `/<component>/<kind>/<what>`, e.g. `/scheduler/count/spawned`.
+    pub fn instrument(&self, name: &str, kind: Kind) -> Arc<Instrument> {
+        let mut g = self.instruments.lock().unwrap();
+        Arc::clone(g.entry(name.to_string()).or_insert_with(|| {
+            Arc::new(Instrument { value: AtomicU64::new(0), kind })
+        }))
+    }
+
+    /// Shorthand for a counter.
+    pub fn counter(&self, name: &str) -> Arc<Instrument> {
+        self.instrument(name, Kind::Counter)
+    }
+
+    /// Shorthand for a gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Instrument> {
+        self.instrument(name, Kind::Gauge)
+    }
+
+    /// Sample every instrument.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.instruments
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect()
+    }
+
+    /// Delta of counters between two snapshots (gauges: the later value).
+    pub fn delta(
+        &self,
+        before: &BTreeMap<String, u64>,
+        after: &BTreeMap<String, u64>,
+    ) -> BTreeMap<String, u64> {
+        let kinds: BTreeMap<String, Kind> = self
+            .instruments
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.kind()))
+            .collect();
+        after
+            .iter()
+            .map(|(k, &a)| {
+                let v = match kinds.get(k) {
+                    Some(Kind::Counter) => a.saturating_sub(*before.get(k).unwrap_or(&0)),
+                    _ => a,
+                };
+                (k.clone(), v)
+            })
+            .collect()
+    }
+
+    /// Render a snapshot as an aligned text block.
+    pub fn render(&self) -> String {
+        let snap = self.snapshot();
+        let width = snap.keys().map(|k| k.len()).max().unwrap_or(0);
+        let mut out = String::new();
+        for (k, v) in snap {
+            out.push_str(&format!("{k:<width$}  {v}\n"));
+        }
+        out
+    }
+}
+
+/// The process-wide registry.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Publish a [`crate::Runtime`]'s scheduler stats into a registry under
+/// `/scheduler/...` (called by `rhpx info` and the harnesses).
+pub fn publish_scheduler_stats(reg: &Registry, stats: &crate::scheduler::SchedulerStats) {
+    reg.counter("/scheduler/count/spawned").set(stats.spawned);
+    reg.counter("/scheduler/count/completed").set(stats.completed);
+    reg.counter("/scheduler/count/stolen").set(stats.stolen);
+    reg.gauge("/scheduler/gauge/workers").set(stats.workers as u64);
+    reg.gauge("/scheduler/gauge/inflight")
+        .set(stats.spawned.saturating_sub(stats.completed));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_roundtrip() {
+        let reg = Registry::new();
+        let c = reg.counter("/x/count/things");
+        c.increment(3);
+        c.increment(2);
+        assert_eq!(c.get(), 5);
+        // same name -> same instrument
+        assert_eq!(reg.counter("/x/count/things").get(), 5);
+        assert_eq!(reg.snapshot()["/x/count/things"], 5);
+    }
+
+    #[test]
+    fn gauge_sets() {
+        let reg = Registry::new();
+        let g = reg.gauge("/x/gauge/depth");
+        g.set(9);
+        g.set(4);
+        assert_eq!(g.get(), 4);
+        assert_eq!(g.kind(), Kind::Gauge);
+    }
+
+    #[test]
+    fn delta_subtracts_counters_keeps_gauges() {
+        let reg = Registry::new();
+        let c = reg.counter("/c");
+        let g = reg.gauge("/g");
+        c.increment(10);
+        g.set(5);
+        let before = reg.snapshot();
+        c.increment(7);
+        g.set(2);
+        let after = reg.snapshot();
+        let d = reg.delta(&before, &after);
+        assert_eq!(d["/c"], 7);
+        assert_eq!(d["/g"], 2);
+    }
+
+    #[test]
+    fn publish_scheduler() {
+        let rt = crate::Runtime::builder().workers(2).build();
+        let f = crate::async_(&rt, || 1i32);
+        let _ = f.get();
+        rt.wait_idle();
+        let reg = Registry::new();
+        publish_scheduler_stats(&reg, &rt.stats());
+        let snap = reg.snapshot();
+        assert_eq!(snap["/scheduler/count/spawned"], 1);
+        assert_eq!(snap["/scheduler/gauge/workers"], 2);
+        assert_eq!(snap["/scheduler/gauge/inflight"], 0);
+    }
+
+    #[test]
+    fn render_is_aligned() {
+        let reg = Registry::new();
+        reg.counter("/a").increment(1);
+        reg.counter("/long/name").increment(2);
+        let s = reg.render();
+        assert!(s.contains("/a"));
+        assert!(s.contains("/long/name"));
+        assert_eq!(s.lines().count(), 2);
+    }
+}

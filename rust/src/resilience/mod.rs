@@ -1,0 +1,39 @@
+//! `rhpx::resilience` — the paper's contribution (§IV).
+//!
+//! Two families of resiliency primitives, each implemented as an
+//! extension of the base `async_`/`dataflow` launch API so existing code
+//! migrates by changing only the launch call:
+//!
+//! * **Task Replay** (§IV-A) — the localized analogue of
+//!   checkpoint/restart: a failing task is rescheduled up to *n* times
+//!   before its error is re-thrown. Variants: plain, and `_validate`
+//!   (a user predicate must accept the result).
+//! * **Task Replicate** (§IV-B) — *n* instances launched concurrently
+//!   (none deferred, unlike Subasi et al.); variants select the first
+//!   successful result, the first *validated* result, or run a *vote*
+//!   over all (optionally validated) results to defeat silent errors.
+//!
+//! Plus the paper's future-work extension, implemented here: replay
+//! nested inside replicate (`*_replicate_replay`) so each replica
+//! individually retries before the consensus step ("finer consensus in
+//! case of soft failures").
+
+mod replay;
+mod replicate;
+pub mod vote;
+
+pub use replay::{
+    async_replay, async_replay_validate, dataflow_replay, dataflow_replay_validate,
+};
+pub use replicate::{
+    async_replicate, async_replicate_replay, async_replicate_validate, async_replicate_vote,
+    async_replicate_vote_validate, dataflow_replicate, dataflow_replicate_replay,
+    dataflow_replicate_validate, dataflow_replicate_vote, dataflow_replicate_vote_validate,
+};
+pub use replicate::Voter;
+pub use vote::{vote_majority, vote_majority_approx, vote_median_f64, vote_plurality};
+
+use crate::error::ResilienceError;
+
+/// Result type returned by every resilient launch.
+pub type ResilientResult<T> = Result<T, ResilienceError>;

@@ -1,0 +1,328 @@
+//! Task Replay (§IV-A): the localized analogue of checkpoint/restart.
+//!
+//! "When the runtime detects an error it replays the failing task as
+//! opposed to completely rolling back of the entire program to the
+//! previous checkpoint." A failing attempt (error, panic, or rejected
+//! validation) is *rescheduled* — each retry is a fresh task on the
+//! scheduler, not a loop inside the current task, so a replayed task
+//! yields to other runnable work exactly as HPX's implementation does.
+
+use std::sync::Arc;
+
+use crate::api::{run_task_body, IntoTaskResult};
+use crate::error::{ResilienceError, TaskError, TaskResult};
+use crate::future::{Future, Promise};
+use crate::runtime_handle::Runtime;
+
+pub(crate) type Validator<T> = Arc<dyn Fn(&T) -> bool + Send + Sync>;
+pub(crate) type Body<T> = Arc<dyn Fn() -> TaskResult<T> + Send + Sync>;
+
+/// Core replay loop shared by every replay variant (and by the
+/// replicate+replay extension): run `body`, accept the result if it is
+/// `Ok` and passes `validate`, otherwise reschedule up to `n` total
+/// attempts, then surface [`ResilienceError::Exhausted`].
+pub(crate) fn replay_impl<T: Send + 'static>(
+    rt: &Runtime,
+    n: usize,
+    body: Body<T>,
+    validate: Option<Validator<T>>,
+) -> Future<T> {
+    let (p, fut) = Promise::new();
+    let n = n.max(1);
+    schedule_attempt(rt.clone(), p, body, validate, n, 1);
+    fut
+}
+
+fn schedule_attempt<T: Send + 'static>(
+    rt: Runtime,
+    promise: Promise<T>,
+    body: Body<T>,
+    validate: Option<Validator<T>>,
+    n: usize,
+    attempt: usize,
+) {
+    let pool = Arc::clone(rt.pool());
+    pool.spawn_job(Box::new(move || {
+        let outcome = body();
+        let outcome = match outcome {
+            Ok(v) => match &validate {
+                Some(check) if !check(&v) => Err(TaskError::ValidationRejected),
+                _ => Ok(v),
+            },
+            Err(e) => Err(e),
+        };
+        match outcome {
+            Ok(v) => promise.set_value(v),
+            Err(_) if attempt < n => {
+                schedule_attempt(rt, promise, body, validate, n, attempt + 1);
+            }
+            Err(e) => {
+                promise.set_error(
+                    ResilienceError::Exhausted { attempts: attempt, last: e }.into(),
+                );
+            }
+        }
+    }));
+}
+
+/// `hpxr::async_replay(n, f)` — run `f`, rescheduling on error up to `n`
+/// total attempts before re-throwing the last error.
+pub fn async_replay<T, R, F>(rt: &Runtime, n: usize, f: F) -> Future<T>
+where
+    T: Send + 'static,
+    R: IntoTaskResult<T>,
+    F: Fn() -> R + Send + Sync + 'static,
+{
+    replay_impl(rt, n, Arc::new(move || run_task_body(&f)), None)
+}
+
+/// `hpxr::async_replay_validate(n, val_f, f)` — as [`async_replay`], but
+/// a result is accepted only if `val_f` returns `true`; a rejected
+/// result counts as a failed attempt.
+pub fn async_replay_validate<T, R, F, V>(rt: &Runtime, n: usize, val_f: V, f: F) -> Future<T>
+where
+    T: Send + 'static,
+    R: IntoTaskResult<T>,
+    F: Fn() -> R + Send + Sync + 'static,
+    V: Fn(&T) -> bool + Send + Sync + 'static,
+{
+    replay_impl(rt, n, Arc::new(move || run_task_body(&f)), Some(Arc::new(val_f)))
+}
+
+/// Resolve dataflow dependencies then hand the shared values to replay.
+///
+/// Failed dependencies are *not* replayed (re-running the dependent task
+/// cannot repair its inputs — the dependency itself carries its own
+/// resilient launch if desired); the dependency error propagates, as in
+/// HPX.
+pub(crate) fn dataflow_replay_impl<T, U, R, F>(
+    rt: &Runtime,
+    n: usize,
+    f: F,
+    deps: Vec<Future<T>>,
+    validate: Option<Validator<U>>,
+) -> Future<U>
+where
+    T: Clone + Send + Sync + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+{
+    let rt2 = rt.clone();
+    let (p, fut) = Promise::new();
+    crate::future::when_all_results(deps).on_ready(move |r| {
+        let collapsed = match r {
+            Ok(results) => crate::future::collapse_results(results),
+            Err(e) => Err(e.clone()),
+        };
+        match collapsed {
+        Ok(values) => {
+            let values: Arc<Vec<T>> = Arc::new(values);
+            let f = Arc::new(f);
+            let body: Body<U> = Arc::new(move || {
+                let values = Arc::clone(&values);
+                let f = Arc::clone(&f);
+                run_task_body(move || f(&values))
+            });
+            // Drive the replay loop straight into the outer promise: no
+            // intermediate future, no result forwarding/cloning.
+            schedule_attempt(rt2.clone(), p, body, validate, n.max(1), 1);
+        }
+        Err(e) => p.set_error(e),
+        }
+    });
+    fut
+}
+
+/// `hpxr::dataflow_replay(n, f, deps)` — dataflow whose body is replayed
+/// up to `n` times on failure once all dependencies are ready.
+pub fn dataflow_replay<T, U, R, F>(rt: &Runtime, n: usize, f: F, deps: Vec<Future<T>>) -> Future<U>
+where
+    T: Clone + Send + Sync + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+{
+    dataflow_replay_impl(rt, n, f, deps, None)
+}
+
+/// `hpxr::dataflow_replay_validate(n, val_f, f, deps)` — as
+/// [`dataflow_replay`] with a validation predicate on the result.
+pub fn dataflow_replay_validate<T, U, R, F, V>(
+    rt: &Runtime,
+    n: usize,
+    val_f: V,
+    f: F,
+    deps: Vec<Future<T>>,
+) -> Future<U>
+where
+    T: Clone + Send + Sync + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+    V: Fn(&U) -> bool + Send + Sync + 'static,
+{
+    dataflow_replay_impl(rt, n, f, deps, Some(Arc::new(val_f)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::async_;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn rt() -> Runtime {
+        Runtime::builder().workers(2).build()
+    }
+
+    #[test]
+    fn replay_succeeds_first_try() {
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replay(&rt, 3, move || {
+            c.fetch_add(1, Ordering::SeqCst);
+            7i32
+        });
+        assert_eq!(f.get(), Ok(7));
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn replay_retries_until_success() {
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replay(&rt, 5, move || -> TaskResult<i32> {
+            if c.fetch_add(1, Ordering::SeqCst) < 2 {
+                Err("transient".into())
+            } else {
+                Ok(99)
+            }
+        });
+        assert_eq!(f.get(), Ok(99));
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn replay_exhausts_and_reports_last_error() {
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replay(&rt, 3, move || -> TaskResult<i32> {
+            c.fetch_add(1, Ordering::SeqCst);
+            Err("permanent".into())
+        });
+        let err = f.get().unwrap_err();
+        match err.as_resilience() {
+            Some(ResilienceError::Exhausted { attempts: 3, last }) => {
+                assert_eq!(last, &TaskError::App("permanent".to_string()));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn replay_never_exceeds_n_attempts_on_panic() {
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f: Future<i32> = async_replay(&rt, 4, move || -> i32 {
+            c.fetch_add(1, Ordering::SeqCst);
+            panic!("always")
+        });
+        assert!(f.get().is_err());
+        assert_eq!(calls.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn replay_validate_rejects_then_accepts() {
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        // Returns 0,1,2,...; validator accepts values >= 2.
+        let f = async_replay_validate(
+            &rt,
+            5,
+            |v: &usize| *v >= 2,
+            move || c.fetch_add(1, Ordering::SeqCst),
+        );
+        assert_eq!(f.get(), Ok(2));
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn replay_validate_exhaustion_reports_validation() {
+        let rt = rt();
+        let f = async_replay_validate(&rt, 2, |_: &i32| false, || 1i32);
+        match f.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::Exhausted { attempts: 2, last }) => {
+                assert_eq!(last, &TaskError::ValidationRejected);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dataflow_replay_gets_dep_values_each_attempt() {
+        let rt = rt();
+        let a = async_(&rt, || 10i64);
+        let b = async_(&rt, || 20i64);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = dataflow_replay(
+            &rt,
+            4,
+            move |vals: &[i64]| -> TaskResult<i64> {
+                if c.fetch_add(1, Ordering::SeqCst) < 2 {
+                    Err("flaky".into())
+                } else {
+                    Ok(vals.iter().sum())
+                }
+            },
+            vec![a, b],
+        );
+        assert_eq!(f.get(), Ok(30));
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn dataflow_replay_does_not_replay_failed_deps() {
+        let rt = rt();
+        let bad: Future<i64> = async_(&rt, || -> TaskResult<i64> { Err("dep dead".into()) });
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = dataflow_replay(
+            &rt,
+            3,
+            move |_: &[i64]| -> i64 {
+                c.fetch_add(1, Ordering::SeqCst);
+                0
+            },
+            vec![bad],
+        );
+        match f.get() {
+            Err(TaskError::DependencyFailed(_)) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 0, "body must never run");
+    }
+
+    #[test]
+    fn dataflow_replay_validate_end_to_end() {
+        let rt = rt();
+        let a = async_(&rt, || 3i64);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = dataflow_replay_validate(
+            &rt,
+            5,
+            |v: &i64| *v > 10,
+            move |vals: &[i64]| vals[0] + c.fetch_add(1, Ordering::SeqCst) as i64 * 10,
+            vec![a],
+        );
+        // attempts produce 3, 13 -> second passes validation
+        assert_eq!(f.get(), Ok(13));
+    }
+}

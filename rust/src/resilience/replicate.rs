@@ -1,0 +1,682 @@
+//! Task Replicate (§IV-B): concurrent redundant execution.
+//!
+//! "This feature launches N instances of a task concurrently" — all
+//! replicas are launched eagerly (the paper explicitly does *not* defer
+//! replicas the way Subasi et al. do). Four consensus policies, matching
+//! the four API variations:
+//!
+//! * plain — first replica that completes without error wins;
+//! * `_validate` — first replica whose result passes validation wins;
+//! * `_vote` — wait for all replicas, vote over every computed result
+//!   (defeats silent data corruption that completes "successfully");
+//! * `_vote_validate` — wait for all, vote over the validated subset.
+//!
+//! Failure taxonomy on the way out (paper §IV-B(iv)): if every replica
+//! errored, the last error is re-thrown (`AllReplicasFailed`); if finite
+//! results were computed but none validated, `ValidationFailed`; if the
+//! voting function cannot produce a winner, `NoConsensus`.
+
+use std::sync::{Arc, Mutex};
+
+use crate::api::{run_task_body, IntoTaskResult};
+use crate::error::{ResilienceError, TaskError, TaskResult};
+use crate::future::{Future, Promise};
+use crate::runtime_handle::Runtime;
+
+use super::replay::{Body, Validator};
+
+/// A voting function: select the consensus value from the computed
+/// results, or `None` if no consensus exists.
+pub type Voter<T> = Arc<dyn Fn(&[T]) -> Option<T> + Send + Sync>;
+
+/// Consensus policy for a replicated launch.
+enum Policy<T> {
+    /// Resolve with the first acceptable result (plain / `_validate`).
+    FirstAcceptable,
+    /// Collect all results, then vote (`_vote` / `_vote_validate`).
+    Vote(Voter<T>),
+}
+
+/// Mutable consensus state, all under one lock (hot path: one lock
+/// round-trip per replica completion).
+struct ReplicateInner<T> {
+    promise: Option<Promise<T>>,
+    /// Results that completed without error (and passed validation when a
+    /// validator is present); only collected under the vote policy.
+    accepted: Vec<T>,
+    /// Count of replicas that produced *some* finite result (vote policy
+    /// distinguishes "all errored" from "none validated").
+    finite_results: usize,
+    last_error: Option<TaskError>,
+    remaining: usize,
+}
+
+struct ReplicateState<T> {
+    inner: Mutex<ReplicateInner<T>>,
+    policy: Policy<T>,
+    replicas: usize,
+}
+
+impl<T: Send + 'static> ReplicateState<T> {
+    /// Record one replica's outcome; resolve the launch when the policy
+    /// allows (first acceptable result, or all replicas accounted for).
+    fn on_replica_done(&self, outcome: TaskResult<T>, validated: Option<bool>) {
+        enum Action<T> {
+            None,
+            Resolve(Promise<T>, T),
+            Finish,
+        }
+        let action = {
+            let mut g = self.inner.lock().unwrap();
+            let mut action = Action::None;
+            match outcome {
+                Ok(v) => {
+                    g.finite_results += 1;
+                    match (&self.policy, validated) {
+                        (Policy::FirstAcceptable, Some(false)) => {
+                            g.last_error = Some(TaskError::ValidationRejected);
+                        }
+                        (Policy::FirstAcceptable, _) => {
+                            if let Some(p) = g.promise.take() {
+                                action = Action::Resolve(p, v);
+                            }
+                        }
+                        (Policy::Vote(_), Some(false)) => {
+                            // invalid result: excluded from the ballot
+                        }
+                        (Policy::Vote(_), _) => g.accepted.push(v),
+                    }
+                }
+                Err(e) => {
+                    g.last_error = Some(e);
+                }
+            }
+            g.remaining -= 1;
+            if g.remaining == 0 && g.promise.is_some() {
+                if matches!(action, Action::None) {
+                    action = Action::Finish;
+                }
+            }
+            action
+        };
+        match action {
+            Action::None => {}
+            Action::Resolve(p, v) => p.set_value(v),
+            Action::Finish => self.finish(),
+        }
+    }
+
+    /// All replicas have reported and nothing resolved yet.
+    fn finish(&self) {
+        let (promise, ballot, finite, last_error) = {
+            let mut g = self.inner.lock().unwrap();
+            let Some(p) = g.promise.take() else { return };
+            (
+                p,
+                std::mem::take(&mut g.accepted),
+                g.finite_results,
+                g.last_error.take(),
+            )
+        };
+        let all_failed_error = |finite: usize, last: Option<TaskError>| -> ResilienceError {
+            if finite > 0 {
+                // Results were computed but all rejected by validation.
+                ResilienceError::ValidationFailed { replicas: self.replicas }
+            } else {
+                ResilienceError::AllReplicasFailed {
+                    replicas: self.replicas,
+                    last: last.unwrap_or(TaskError::App("no replica produced a result".into())),
+                }
+            }
+        };
+        match &self.policy {
+            Policy::FirstAcceptable => {
+                promise.set_error(all_failed_error(finite, last_error).into());
+            }
+            Policy::Vote(voter) => {
+                if ballot.is_empty() {
+                    promise.set_error(all_failed_error(finite, last_error).into());
+                } else {
+                    match voter(&ballot) {
+                        Some(winner) => promise.set_value(winner),
+                        None => promise.set_error(
+                            ResilienceError::NoConsensus { candidates: ballot.len() }.into(),
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Launch `n` replicas of `body` and resolve `promise` per the policy.
+pub(crate) fn replicate_impl<T: Send + 'static>(
+    rt: &Runtime,
+    n: usize,
+    promise: Promise<T>,
+    body: Body<T>,
+    validate: Option<Validator<T>>,
+    policy_vote: Option<Voter<T>>,
+) {
+    let n = n.max(1);
+    let state = Arc::new(ReplicateState {
+        inner: Mutex::new(ReplicateInner {
+            promise: Some(promise),
+            accepted: Vec::with_capacity(n),
+            finite_results: 0,
+            last_error: None,
+            remaining: n,
+        }),
+        policy: match policy_vote {
+            Some(v) => Policy::Vote(v),
+            None => Policy::FirstAcceptable,
+        },
+        replicas: n,
+    });
+
+    for _ in 0..n {
+        let state = Arc::clone(&state);
+        let body = Arc::clone(&body);
+        let validate = validate.clone();
+        rt.pool().spawn_job(Box::new(move || {
+            let outcome = body();
+            match outcome {
+                Ok(v) => {
+                    let validated = validate.as_ref().map(|check| check(&v));
+                    state.on_replica_done(Ok(v), validated);
+                }
+                Err(e) => state.on_replica_done(Err(e), None),
+            }
+        }));
+    }
+}
+
+/// Wrap `body` so each replica privately retries up to `attempts` times
+/// (validation included in the retry criterion) before reporting — the
+/// paper's future-work refinement of replicate ("allowing any failed
+/// replicated task to replay until its computed without error
+/// detection"), giving "finer consensus in case of soft failures".
+pub(crate) fn with_retries<T: Send + 'static>(
+    body: Body<T>,
+    validate: Option<Validator<T>>,
+    attempts: usize,
+) -> Body<T> {
+    let attempts = attempts.max(1);
+    Arc::new(move || {
+        let mut last: Option<TaskError> = None;
+        for _ in 0..attempts {
+            match body() {
+                Ok(v) => {
+                    if validate.as_ref().map_or(true, |check| check(&v)) {
+                        return Ok(v);
+                    }
+                    last = Some(TaskError::ValidationRejected);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("attempts >= 1 recorded an error"))
+    })
+}
+
+// ---------------------------------------------------------------------
+// async_* wrappers (Listing 2)
+// ---------------------------------------------------------------------
+
+fn make_body<T, R, F>(f: F) -> Body<T>
+where
+    T: Send + 'static,
+    R: IntoTaskResult<T>,
+    F: Fn() -> R + Send + Sync + 'static,
+{
+    Arc::new(move || run_task_body(&f))
+}
+
+/// `hpxr::async_replicate(n, f)` — launch `n` concurrent instances of
+/// `f`; resolve with the first result that completes without error.
+pub fn async_replicate<T, R, F>(rt: &Runtime, n: usize, f: F) -> Future<T>
+where
+    T: Send + 'static,
+    R: IntoTaskResult<T>,
+    F: Fn() -> R + Send + Sync + 'static,
+{
+    let (p, fut) = Promise::new();
+    replicate_impl(rt, n, p, make_body(f), None, None);
+    fut
+}
+
+/// `hpxr::async_replicate_validate(n, val_f, f)` — first result that is
+/// positively validated wins.
+pub fn async_replicate_validate<T, R, F, V>(rt: &Runtime, n: usize, val_f: V, f: F) -> Future<T>
+where
+    T: Send + 'static,
+    R: IntoTaskResult<T>,
+    F: Fn() -> R + Send + Sync + 'static,
+    V: Fn(&T) -> bool + Send + Sync + 'static,
+{
+    let (p, fut) = Promise::new();
+    replicate_impl(rt, n, p, make_body(f), Some(Arc::new(val_f)), None);
+    fut
+}
+
+/// `hpxr::async_replicate_vote(n, vote_f, f)` — wait for all replicas and
+/// build a consensus over every computed result (silent-error defence).
+pub fn async_replicate_vote<T, R, F, W>(rt: &Runtime, n: usize, vote_f: W, f: F) -> Future<T>
+where
+    T: Send + 'static,
+    R: IntoTaskResult<T>,
+    F: Fn() -> R + Send + Sync + 'static,
+    W: Fn(&[T]) -> Option<T> + Send + Sync + 'static,
+{
+    let (p, fut) = Promise::new();
+    replicate_impl(rt, n, p, make_body(f), None, Some(Arc::new(vote_f)));
+    fut
+}
+
+/// `hpxr::async_replicate_vote_validate(n, vote_f, val_f, f)` — wait for
+/// all replicas, vote over the positively validated subset.
+pub fn async_replicate_vote_validate<T, R, F, V, W>(
+    rt: &Runtime,
+    n: usize,
+    vote_f: W,
+    val_f: V,
+    f: F,
+) -> Future<T>
+where
+    T: Send + 'static,
+    R: IntoTaskResult<T>,
+    F: Fn() -> R + Send + Sync + 'static,
+    V: Fn(&T) -> bool + Send + Sync + 'static,
+    W: Fn(&[T]) -> Option<T> + Send + Sync + 'static,
+{
+    let (p, fut) = Promise::new();
+    replicate_impl(rt, n, p, make_body(f), Some(Arc::new(val_f)), Some(Arc::new(vote_f)));
+    fut
+}
+
+/// Replicate-of-replays (§Future-Work, implemented): `n` concurrent
+/// replicas, each privately retrying up to `replay_n` times before it
+/// reports; consensus by vote when `vote_f` is given, else first-OK.
+pub fn async_replicate_replay<T, R, F, W>(
+    rt: &Runtime,
+    n: usize,
+    replay_n: usize,
+    vote_f: Option<W>,
+    f: F,
+) -> Future<T>
+where
+    T: Send + 'static,
+    R: IntoTaskResult<T>,
+    F: Fn() -> R + Send + Sync + 'static,
+    W: Fn(&[T]) -> Option<T> + Send + Sync + 'static,
+{
+    let (p, fut) = Promise::new();
+    let body = with_retries(make_body(f), None, replay_n);
+    let voter: Option<Voter<T>> = vote_f.map(|w| Arc::new(w) as Voter<T>);
+    replicate_impl(rt, n, p, body, None, voter);
+    fut
+}
+
+// ---------------------------------------------------------------------
+// dataflow_* wrappers (Listing 2)
+// ---------------------------------------------------------------------
+
+/// Shared plumbing: resolve deps, build a `Body` over the shared values,
+/// then replicate it into the outer promise.
+fn dataflow_replicate_common<T, U, R, F>(
+    rt: &Runtime,
+    n: usize,
+    f: F,
+    deps: Vec<Future<T>>,
+    validate: Option<Validator<U>>,
+    voter: Option<Voter<U>>,
+    replay_each: usize,
+) -> Future<U>
+where
+    T: Clone + Send + Sync + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+{
+    let rt2 = rt.clone();
+    let (p, fut) = Promise::new();
+    crate::future::when_all_results(deps).on_ready(move |r| {
+        let collapsed = match r {
+            Ok(results) => crate::future::collapse_results(results),
+            Err(e) => Err(e.clone()),
+        };
+        match collapsed {
+        Ok(values) => {
+            let values: Arc<Vec<T>> = Arc::new(values);
+            let f = Arc::new(f);
+            let base: Body<U> = Arc::new(move || {
+                let values = Arc::clone(&values);
+                let f = Arc::clone(&f);
+                run_task_body(move || f(&values))
+            });
+            let body = if replay_each > 1 {
+                with_retries(base, validate.clone(), replay_each)
+            } else {
+                base
+            };
+            replicate_impl(&rt2, n, p, body, validate, voter);
+        }
+        Err(e) => p.set_error(e),
+        }
+    });
+    fut
+}
+
+/// `hpxr::dataflow_replicate(n, f, deps)`.
+pub fn dataflow_replicate<T, U, R, F>(
+    rt: &Runtime,
+    n: usize,
+    f: F,
+    deps: Vec<Future<T>>,
+) -> Future<U>
+where
+    T: Clone + Send + Sync + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+{
+    dataflow_replicate_common(rt, n, f, deps, None, None, 1)
+}
+
+/// `hpxr::dataflow_replicate_validate(n, val_f, f, deps)`.
+pub fn dataflow_replicate_validate<T, U, R, F, V>(
+    rt: &Runtime,
+    n: usize,
+    val_f: V,
+    f: F,
+    deps: Vec<Future<T>>,
+) -> Future<U>
+where
+    T: Clone + Send + Sync + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+    V: Fn(&U) -> bool + Send + Sync + 'static,
+{
+    dataflow_replicate_common(rt, n, f, deps, Some(Arc::new(val_f)), None, 1)
+}
+
+/// `hpxr::dataflow_replicate_vote(n, vote_f, f, deps)`.
+pub fn dataflow_replicate_vote<T, U, R, F, W>(
+    rt: &Runtime,
+    n: usize,
+    vote_f: W,
+    f: F,
+    deps: Vec<Future<T>>,
+) -> Future<U>
+where
+    T: Clone + Send + Sync + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+    W: Fn(&[U]) -> Option<U> + Send + Sync + 'static,
+{
+    dataflow_replicate_common(rt, n, f, deps, None, Some(Arc::new(vote_f)), 1)
+}
+
+/// `hpxr::dataflow_replicate_vote_validate(n, vote_f, val_f, f, deps)`.
+pub fn dataflow_replicate_vote_validate<T, U, R, F, V, W>(
+    rt: &Runtime,
+    n: usize,
+    vote_f: W,
+    val_f: V,
+    f: F,
+    deps: Vec<Future<T>>,
+) -> Future<U>
+where
+    T: Clone + Send + Sync + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+    V: Fn(&U) -> bool + Send + Sync + 'static,
+    W: Fn(&[U]) -> Option<U> + Send + Sync + 'static,
+{
+    dataflow_replicate_common(rt, n, f, deps, Some(Arc::new(val_f)), Some(Arc::new(vote_f)), 1)
+}
+
+/// Dataflow replicate-of-replays (§Future-Work, implemented).
+pub fn dataflow_replicate_replay<T, U, R, F>(
+    rt: &Runtime,
+    n: usize,
+    replay_n: usize,
+    f: F,
+    deps: Vec<Future<T>>,
+) -> Future<U>
+where
+    T: Clone + Send + Sync + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+{
+    dataflow_replicate_common(rt, n, f, deps, None, None, replay_n.max(2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::async_;
+    use crate::resilience::vote::vote_majority;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn rt() -> Runtime {
+        Runtime::builder().workers(2).build()
+    }
+
+    #[test]
+    fn replicate_first_ok_wins() {
+        let rt = rt();
+        let f = async_replicate(&rt, 3, || 11i32);
+        assert_eq!(f.get(), Ok(11));
+        rt.wait_idle(); // remaining replicas still run to completion
+        assert_eq!(rt.stats().spawned, 3);
+    }
+
+    #[test]
+    fn replicate_all_replicas_launched_eagerly() {
+        // The paper: "we replicate the tasks and do not defer the launch
+        // of any task" — all n run even after an early success.
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replicate(&rt, 4, move || {
+            c.fetch_add(1, Ordering::SeqCst);
+            1i32
+        });
+        assert_eq!(f.get(), Ok(1));
+        rt.wait_idle();
+        assert_eq!(calls.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn replicate_survives_partial_failures() {
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replicate(&rt, 3, move || -> TaskResult<usize> {
+            // First two replicas fail; the third succeeds.
+            let i = c.fetch_add(1, Ordering::SeqCst);
+            if i < 2 {
+                Err("replica died".into())
+            } else {
+                Ok(i)
+            }
+        });
+        assert_eq!(f.get(), Ok(2));
+    }
+
+    #[test]
+    fn replicate_all_fail_reports_last_error() {
+        let rt = rt();
+        let f: Future<i32> =
+            async_replicate(&rt, 3, || -> TaskResult<i32> { Err("dead".into()) });
+        match f.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::AllReplicasFailed { replicas: 3, last }) => {
+                assert_eq!(last, &TaskError::App("dead".to_string()));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn replicate_validate_filters() {
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replicate_validate(
+            &rt,
+            4,
+            |v: &usize| *v >= 2,
+            move || c.fetch_add(1, Ordering::SeqCst),
+        );
+        let v = f.get().unwrap();
+        assert!(v >= 2, "validated result only: got {v}");
+    }
+
+    #[test]
+    fn replicate_validate_none_validates() {
+        let rt = rt();
+        let f = async_replicate_validate(&rt, 3, |_: &i32| false, || 5i32);
+        match f.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::ValidationFailed { replicas: 3 }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn replicate_vote_defeats_silent_minority_corruption() {
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replicate_vote(&rt, 3, vote_majority, move || {
+            // One replica silently corrupts its result.
+            if c.fetch_add(1, Ordering::SeqCst) == 0 {
+                666i64
+            } else {
+                42i64
+            }
+        });
+        assert_eq!(f.get(), Ok(42));
+    }
+
+    #[test]
+    fn replicate_vote_validate_combines_filters() {
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replicate_vote_validate(
+            &rt,
+            4,
+            vote_majority,
+            |v: &i64| *v < 100,
+            move || {
+                let i = c.fetch_add(1, Ordering::SeqCst);
+                if i == 0 {
+                    666i64 // rejected by validation
+                } else {
+                    7i64
+                }
+            },
+        );
+        assert_eq!(f.get(), Ok(7));
+    }
+
+    #[test]
+    fn replicate_vote_no_consensus() {
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        // All distinct values, majority threshold unreachable.
+        let f = async_replicate_vote(&rt, 3, vote_majority, move || {
+            c.fetch_add(1, Ordering::SeqCst) as i64
+        });
+        match f.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::NoConsensus { candidates: 3 }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn replicate_replay_recovers_flaky_replicas() {
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        // Every first call of a replica fails; retries succeed.
+        let f = async_replicate_replay::<i64, TaskResult<i64>, _, fn(&[i64]) -> Option<i64>>(
+            &rt,
+            2,
+            3,
+            None,
+            move || {
+                let i = c.fetch_add(1, Ordering::SeqCst);
+                if i % 2 == 0 {
+                    Err("flaky".into())
+                } else {
+                    Ok(5)
+                }
+            },
+        );
+        assert_eq!(f.get(), Ok(5));
+    }
+
+    #[test]
+    fn dataflow_replicate_end_to_end() {
+        let rt = rt();
+        let a = async_(&rt, || 2i64);
+        let b = async_(&rt, || 3i64);
+        let f = dataflow_replicate(&rt, 3, |v: &[i64]| v[0] * v[1], vec![a, b]);
+        assert_eq!(f.get(), Ok(6));
+    }
+
+    #[test]
+    fn dataflow_replicate_vote_validate_end_to_end() {
+        let rt = rt();
+        let a = async_(&rt, || 10i64);
+        let f = dataflow_replicate_vote_validate(
+            &rt,
+            3,
+            vote_majority,
+            |v: &i64| *v > 0,
+            |vals: &[i64]| vals[0] * 2,
+            vec![a],
+        );
+        assert_eq!(f.get(), Ok(20));
+    }
+
+    #[test]
+    fn dataflow_replicate_propagates_dep_failure() {
+        let rt = rt();
+        let bad: Future<i64> = async_(&rt, || -> TaskResult<i64> { Err("dep".into()) });
+        let f = dataflow_replicate(&rt, 3, |v: &[i64]| v[0], vec![bad]);
+        match f.get() {
+            Err(TaskError::DependencyFailed(_)) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dataflow_replicate_replay_end_to_end() {
+        let rt = rt();
+        let a = async_(&rt, || 1i64);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = dataflow_replicate_replay(
+            &rt,
+            2,
+            3,
+            move |v: &[i64]| -> TaskResult<i64> {
+                if c.fetch_add(1, Ordering::SeqCst) == 0 {
+                    Err("first attempt dies".into())
+                } else {
+                    Ok(v[0] + 100)
+                }
+            },
+            vec![a],
+        );
+        assert_eq!(f.get(), Ok(101));
+    }
+}

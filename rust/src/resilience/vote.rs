@@ -1,0 +1,114 @@
+//! Stock voting functions for the `_vote` replicate variants.
+
+/// Strict-majority vote for comparable results: the value that more than
+/// half of the replicas computed, or `None` when no value reaches a
+/// strict majority.
+///
+/// O(n²) pairwise comparison — ballots are replica counts (3–5), not
+/// data-sized.
+pub fn vote_majority<T: PartialEq + Clone>(ballot: &[T]) -> Option<T> {
+    let need = ballot.len() / 2 + 1;
+    for (i, candidate) in ballot.iter().enumerate() {
+        // Count identical values; skip candidates already counted via an
+        // earlier equal element.
+        if ballot[..i].iter().any(|b| b == candidate) {
+            continue;
+        }
+        let count = ballot.iter().filter(|b| *b == candidate).count();
+        if count >= need {
+            return Some(candidate.clone());
+        }
+    }
+    None
+}
+
+/// Plurality vote: the most frequent value (ties broken by first
+/// occurrence). Always produces a winner on a non-empty ballot.
+pub fn vote_plurality<T: PartialEq + Clone>(ballot: &[T]) -> Option<T> {
+    let mut best: Option<(usize, &T)> = None;
+    for (i, candidate) in ballot.iter().enumerate() {
+        if ballot[..i].iter().any(|b| b == candidate) {
+            continue;
+        }
+        let count = ballot.iter().filter(|b| *b == candidate).count();
+        if best.map_or(true, |(c, _)| count > c) {
+            best = Some((count, candidate));
+        }
+    }
+    best.map(|(_, v)| v.clone())
+}
+
+/// Median vote for floating-point results — robust consensus when
+/// replicas legitimately differ in the low bits (e.g. non-deterministic
+/// reduction orders) and a silent error produces an outlier.
+pub fn vote_median_f64(ballot: &[f64]) -> Option<f64> {
+    if ballot.is_empty() {
+        return None;
+    }
+    let mut sorted: Vec<f64> = ballot.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    Some(sorted[sorted.len() / 2])
+}
+
+/// Approximate-equality majority for floats: values within `tol` of each
+/// other count as the same candidate; returns the centroid of the
+/// majority cluster.
+pub fn vote_majority_approx(ballot: &[f64], tol: f64) -> Option<f64> {
+    let need = ballot.len() / 2 + 1;
+    for (i, &candidate) in ballot.iter().enumerate() {
+        if ballot[..i].iter().any(|b| (b - candidate).abs() <= tol) {
+            continue;
+        }
+        let cluster: Vec<f64> = ballot
+            .iter()
+            .copied()
+            .filter(|b| (b - candidate).abs() <= tol)
+            .collect();
+        if cluster.len() >= need {
+            return Some(cluster.iter().sum::<f64>() / cluster.len() as f64);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn majority_simple() {
+        assert_eq!(vote_majority(&[1, 1, 2]), Some(1));
+        assert_eq!(vote_majority(&[2, 1, 1]), Some(1));
+        assert_eq!(vote_majority(&[1, 2, 3]), None);
+        assert_eq!(vote_majority(&[1]), Some(1));
+        assert_eq!(vote_majority::<i32>(&[]), None);
+    }
+
+    #[test]
+    fn majority_requires_strict_majority() {
+        assert_eq!(vote_majority(&[1, 1, 2, 2]), None);
+        assert_eq!(vote_majority(&[1, 1, 1, 2, 2]), Some(1));
+    }
+
+    #[test]
+    fn plurality_picks_most_frequent() {
+        assert_eq!(vote_plurality(&[3, 1, 3, 2]), Some(3));
+        assert_eq!(vote_plurality(&[1, 2]), Some(1)); // tie -> first seen
+        assert_eq!(vote_plurality::<i32>(&[]), None);
+    }
+
+    #[test]
+    fn median_f64() {
+        assert_eq!(vote_median_f64(&[1.0, 100.0, 2.0]), Some(2.0));
+        assert_eq!(vote_median_f64(&[]), None);
+        assert_eq!(vote_median_f64(&[5.0]), Some(5.0));
+    }
+
+    #[test]
+    fn majority_approx_clusters() {
+        // Two close values + one outlier: cluster wins, centroid returned.
+        let got = vote_majority_approx(&[1.0000001, 1.0000002, 9.0], 1e-3).unwrap();
+        assert!((got - 1.00000015).abs() < 1e-6);
+        assert_eq!(vote_majority_approx(&[1.0, 2.0, 3.0], 1e-6), None);
+    }
+}

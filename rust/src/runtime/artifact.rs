@@ -1,0 +1,105 @@
+//! Artifact discovery and naming.
+//!
+//! Artifacts follow the naming convention emitted by
+//! `python/compile/aot.py`: `stencil_nx<points>_s<steps>.hlo.txt` for the
+//! Lax-Wendroff subdomain kernel, plus free-form names for auxiliary
+//! kernels. The store maps logical names to paths and answers staleness
+//! queries for `make artifacts`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{TaskError, TaskResult};
+
+/// Directory of AOT artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    entries: BTreeMap<String, PathBuf>,
+}
+
+impl ArtifactStore {
+    /// Scan `dir` for `*.hlo.txt` artifacts.
+    pub fn open(dir: &Path) -> TaskResult<Self> {
+        let mut entries = BTreeMap::new();
+        let rd = std::fs::read_dir(dir)
+            .map_err(|e| TaskError::Runtime(format!("artifacts dir {}: {e}", dir.display())))?;
+        for entry in rd.flatten() {
+            let path = entry.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                entries.insert(stem.to_string(), path.clone());
+            }
+        }
+        Ok(ArtifactStore { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Logical name of the stencil kernel artifact for a subdomain size
+    /// and step count.
+    pub fn stencil_name(nx: usize, steps: usize) -> String {
+        format!("stencil_nx{nx}_s{steps}")
+    }
+
+    /// Path of a named artifact.
+    pub fn path(&self, name: &str) -> TaskResult<&Path> {
+        self.entries
+            .get(name)
+            .map(|p| p.as_path())
+            .ok_or_else(|| {
+                TaskError::Runtime(format!(
+                    "artifact '{name}' not found in {} (have: {}); run `make artifacts`",
+                    self.dir.display(),
+                    self.names().collect::<Vec<_>>().join(", ")
+                ))
+            })
+    }
+
+    /// Path for a stencil kernel configuration.
+    pub fn stencil_path(&self, nx: usize, steps: usize) -> TaskResult<&Path> {
+        self.path(&Self::stencil_name(nx, steps))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naming_convention() {
+        assert_eq!(ArtifactStore::stencil_name(16000, 128), "stencil_nx16000_s128");
+    }
+
+    #[test]
+    fn scans_directory() {
+        let dir = std::env::temp_dir().join(format!("rhpx_art_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("stencil_nx64_s4.hlo.txt"), "HloModule m").unwrap();
+        std::fs::write(dir.join("notes.md"), "not an artifact").unwrap();
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 1);
+        assert!(store.stencil_path(64, 4).is_ok());
+        assert!(store.path("missing").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactStore::open(Path::new("/definitely/not/here")).is_err());
+    }
+}

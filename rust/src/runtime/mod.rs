@@ -1,0 +1,109 @@
+//! PJRT execution of AOT-compiled artifacts — the L3↔L1/L2 bridge.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once at build time,
+//! lowering the JAX/Pallas stencil kernel to **HLO text** under
+//! `artifacts/` (text, not serialized proto: jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids). This module loads those artifacts and executes them
+//! through the PJRT CPU client of the `xla` crate.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so each
+//! worker thread lazily creates its own client and compiles artifacts
+//! into a thread-local executable cache ([`ThreadEngine`]): compilation
+//! happens once per (thread, artifact) and the request path afterwards is
+//! a pure in-thread PJRT execute with no locks and no Python.
+
+mod artifact;
+
+pub use artifact::ArtifactStore;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{TaskError, TaskResult};
+
+thread_local! {
+    static ENGINE: RefCell<Option<ThreadEngine>> = const { RefCell::new(None) };
+}
+
+struct ThreadEngine {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl ThreadEngine {
+    fn new() -> TaskResult<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| TaskError::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(ThreadEngine { client, cache: HashMap::new() })
+    }
+
+    fn executable(&mut self, path: &Path) -> TaskResult<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(path) {
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
+                TaskError::Runtime(format!("non-utf8 artifact path {path:?}"))
+            })?)
+            .map_err(|e| TaskError::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| TaskError::Runtime(format!("compile {}: {e}", path.display())))?;
+            self.cache.insert(path.to_path_buf(), exe);
+        }
+        Ok(self.cache.get(path).expect("just inserted"))
+    }
+}
+
+/// Execute the artifact at `path` with 1-D `f64` inputs, returning the
+/// flattened `f64` outputs of the (tupled) result.
+///
+/// Artifacts are lowered with `return_tuple=True`; multi-output kernels
+/// come back as a tuple whose leaves are returned in order.
+pub fn execute_f64(path: &Path, inputs: &[&[f64]]) -> TaskResult<Vec<Vec<f64>>> {
+    ENGINE.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(ThreadEngine::new()?);
+        }
+        let engine = slot.as_mut().expect("initialized above");
+        let exe = engine.executable(path)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|x| xla::Literal::vec1(x)).collect();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| TaskError::Runtime(format!("execute {}: {e}", path.display())))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| TaskError::Runtime(format!("to_literal: {e}")))?;
+        let tuple = out
+            .to_tuple()
+            .map_err(|e| TaskError::Runtime(format!("to_tuple: {e}")))?;
+        let mut vecs = Vec::with_capacity(tuple.len());
+        for leaf in tuple {
+            vecs.push(
+                leaf.to_vec::<f64>()
+                    .map_err(|e| TaskError::Runtime(format!("to_vec<f64>: {e}")))?,
+            );
+        }
+        Ok(vecs)
+    })
+}
+
+/// Number of executables cached on the current thread (diagnostics).
+pub fn cached_executables() -> usize {
+    ENGINE.with(|cell| cell.borrow().as_ref().map_or(0, |e| e.cache.len()))
+}
+
+/// Pre-compile an artifact on the current thread so first-task latency
+/// doesn't include compilation (benchmark warmup).
+pub fn warmup(path: &Path) -> TaskResult<()> {
+    ENGINE.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(ThreadEngine::new()?);
+        }
+        slot.as_mut().expect("initialized").executable(path).map(|_| ())
+    })
+}

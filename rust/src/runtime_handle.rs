@@ -1,0 +1,109 @@
+//! The `Runtime` facade: owns the scheduler and runtime-wide services.
+
+use std::sync::Arc;
+
+use crate::config::RuntimeConfig;
+use crate::scheduler::{Pool, Scheduler, SchedulerStats};
+
+struct Inner {
+    scheduler: Scheduler,
+    config: RuntimeConfig,
+}
+
+/// A running rhpx runtime instance (the analogue of an initialized HPX
+/// runtime on one locality). Cheap to clone; the worker threads shut
+/// down when the last clone is dropped.
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Arc<Inner>,
+}
+
+impl Runtime {
+    /// Start building a runtime.
+    pub fn builder() -> RuntimeBuilder {
+        RuntimeBuilder { config: RuntimeConfig::default() }
+    }
+
+    /// Start a runtime from a parsed configuration.
+    pub fn from_config(config: RuntimeConfig) -> Self {
+        let scheduler = Scheduler::new(config.workers);
+        Runtime { inner: Arc::new(Inner { scheduler, config }) }
+    }
+
+    /// The scheduler pool (used by the launch APIs).
+    pub fn pool(&self) -> &Arc<Pool> {
+        self.inner.scheduler.pool()
+    }
+
+    /// Runtime configuration in effect.
+    pub fn config(&self) -> &RuntimeConfig {
+        &self.inner.config
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.pool().workers()
+    }
+
+    /// Block until all currently spawned tasks have finished.
+    pub fn wait_idle(&self) {
+        self.inner.scheduler.wait_idle();
+    }
+
+    /// Scheduler counters (spawned / completed / stolen).
+    pub fn stats(&self) -> SchedulerStats {
+        self.pool().stats()
+    }
+}
+
+/// Builder for [`Runtime`].
+pub struct RuntimeBuilder {
+    config: RuntimeConfig,
+}
+
+impl RuntimeBuilder {
+    /// Set the number of worker threads (defaults to available
+    /// parallelism).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.config.workers = n.max(1);
+        self
+    }
+
+    /// Replace the whole configuration.
+    pub fn config(mut self, config: RuntimeConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn build(self) -> Runtime {
+        Runtime::from_config(self.config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults() {
+        let rt = Runtime::builder().build();
+        assert!(rt.workers() >= 1);
+    }
+
+    #[test]
+    fn wait_idle_sees_all_tasks() {
+        let rt = Runtime::builder().workers(2).build();
+        let n = 100;
+        let counter = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        for _ in 0..n {
+            let c = Arc::clone(&counter);
+            crate::api::apply(&rt, move || {
+                c.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            });
+        }
+        rt.wait_idle();
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), n);
+        let stats = rt.stats();
+        assert_eq!(stats.spawned, stats.completed);
+    }
+}

@@ -1,0 +1,265 @@
+//! Work-stealing lightweight task scheduler — the HPX substrate.
+//!
+//! HPX component (4): "work-stealing lightweight task scheduler that
+//! enables finer-grained parallelization and synchronization". This module
+//! provides the thread pool the whole crate schedules onto:
+//!
+//! * one [`WorkQueue`] per worker (LIFO pop / FIFO steal) plus a global
+//!   injector queue for submissions from non-worker threads,
+//! * condvar-based parking with a lost-wakeup-safe idle protocol,
+//! * cooperative helping: a worker blocked on a future runs queued tasks
+//!   while it waits (see [`crate::future`]), so `Future::get` inside a
+//!   task cannot deadlock the pool.
+
+mod queue;
+mod worker;
+
+pub use queue::WorkQueue;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of schedulable work.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// Set for the lifetime of a worker thread: (pool, worker index).
+    /// Holds a strong `Arc` — cheaper to read on the spawn hot path than
+    /// upgrading a `Weak`; cleared by the worker loop at shutdown, so no
+    /// cycle outlives the pool.
+    static CURRENT: RefCell<Option<(Arc<Pool>, usize)>> = const { RefCell::new(None) };
+}
+
+/// Shared state of the scheduler.
+pub struct Pool {
+    queues: Vec<Arc<WorkQueue>>,
+    injector: WorkQueue,
+    sleep_lock: Mutex<()>,
+    sleep_cv: Condvar,
+    idle: AtomicUsize,
+    shutdown: AtomicBool,
+    spawned: AtomicU64,
+    completed: AtomicU64,
+    stolen: AtomicU64,
+    idle_lock: Mutex<()>,
+    idle_cv: Condvar,
+}
+
+impl Pool {
+    fn new(workers: usize) -> Arc<Self> {
+        Arc::new(Pool {
+            queues: (0..workers).map(|_| Arc::new(WorkQueue::new())).collect(),
+            injector: WorkQueue::new(),
+            sleep_lock: Mutex::new(()),
+            sleep_cv: Condvar::new(),
+            idle: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            spawned: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            stolen: AtomicU64::new(0),
+            idle_lock: Mutex::new(()),
+            idle_cv: Condvar::new(),
+        })
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Submit a job. From a worker thread the job lands on the local
+    /// queue (depth-first execution order, like HPX); otherwise on the
+    /// global injector. See the free function [`spawn_on`].
+    pub fn spawn_job(self: &Arc<Self>, job: Job) {
+        spawn_on(self, job);
+    }
+
+    /// True if any queue (local or injector) currently holds work.
+    fn has_work(&self) -> bool {
+        if !self.injector.is_empty() {
+            return true;
+        }
+        self.queues.iter().any(|q| !q.is_empty())
+    }
+
+    /// Wake one parked worker if any are parked.
+    fn notify_one(&self) {
+        if self.idle.load(Ordering::SeqCst) > 0 {
+            let _g = self.sleep_lock.lock().unwrap();
+            self.sleep_cv.notify_one();
+        }
+    }
+
+    fn notify_all(&self) {
+        let _g = self.sleep_lock.lock().unwrap();
+        self.sleep_cv.notify_all();
+    }
+
+    /// Find a job for worker `idx`: local LIFO, then injector, then steal.
+    fn find_job(&self, idx: usize, rng_state: &mut u64) -> Option<Job> {
+        if let Some(j) = self.queues[idx].pop() {
+            return Some(j);
+        }
+        if let Some(j) = self.injector.steal() {
+            return Some(j);
+        }
+        let n = self.queues.len();
+        if n > 1 {
+            // Start the steal scan at a pseudo-random victim to avoid
+            // convoying on worker 0.
+            *rng_state = rng_state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let start = (*rng_state >> 33) as usize % n;
+            for off in 0..n {
+                let v = (start + off) % n;
+                if v == idx {
+                    continue;
+                }
+                if let Some(j) = self.queues[v].steal() {
+                    self.stolen.fetch_add(1, Ordering::Relaxed);
+                    return Some(j);
+                }
+            }
+        }
+        None
+    }
+
+    /// Run a single queued job if one is available. Used both by the
+    /// worker loop and by cooperative helping in `Future::get`.
+    pub fn try_run_one(self: &Arc<Self>, idx: usize) -> bool {
+        let mut rng = 0x9e3779b97f4a7c15u64 ^ (idx as u64);
+        if let Some(job) = self.find_job(idx, &mut rng) {
+            self.run_job(job);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn run_job(self: &Arc<Self>, job: Job) {
+        job();
+        let done = self.completed.fetch_add(1, Ordering::SeqCst) + 1;
+        if done == self.spawned.load(Ordering::SeqCst) {
+            let _g = self.idle_lock.lock().unwrap();
+            self.idle_cv.notify_all();
+        }
+    }
+
+    /// Block until every spawned job has completed.
+    pub fn wait_idle(&self) {
+        let mut g = self.idle_lock.lock().unwrap();
+        loop {
+            if self.completed.load(Ordering::SeqCst) == self.spawned.load(Ordering::SeqCst) {
+                return;
+            }
+            let (ng, _t) = self
+                .idle_cv
+                .wait_timeout(g, std::time::Duration::from_millis(1))
+                .unwrap();
+            g = ng;
+        }
+    }
+
+    /// Scheduler statistics snapshot.
+    pub fn stats(&self) -> SchedulerStats {
+        SchedulerStats {
+            spawned: self.spawned.load(Ordering::SeqCst),
+            completed: self.completed.load(Ordering::SeqCst),
+            stolen: self.stolen.load(Ordering::Relaxed),
+            workers: self.queues.len(),
+        }
+    }
+}
+
+/// Counters exposed by [`Pool::stats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulerStats {
+    pub spawned: u64,
+    pub completed: u64,
+    pub stolen: u64,
+    pub workers: usize,
+}
+
+/// Handle that owns the worker threads; dropping it shuts the pool down.
+pub struct Scheduler {
+    pool: Arc<Pool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Start a scheduler with `workers` worker threads (min 1).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let pool = Pool::new(workers);
+        let handles = (0..workers)
+            .map(|idx| {
+                let pool = Arc::clone(&pool);
+                std::thread::Builder::new()
+                    .name(format!("rhpx-worker-{idx}"))
+                    .spawn(move || worker::worker_loop(pool, idx))
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        Scheduler { pool, handles }
+    }
+
+    pub fn pool(&self) -> &Arc<Pool> {
+        &self.pool
+    }
+
+    /// Submit a job for execution.
+    pub fn spawn(&self, job: Job) {
+        spawn_on(&self.pool, job);
+    }
+
+    /// Block until all submitted work has completed.
+    pub fn wait_idle(&self) {
+        self.pool.wait_idle();
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.pool.shutdown.store(true, Ordering::SeqCst);
+        self.pool.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // Drop any jobs that never ran (only possible if the user dropped
+        // the scheduler without `wait_idle`); their futures resolve to a
+        // broken-promise error via `Promise::drop`.
+        for q in &self.pool.queues {
+            drop(q.drain());
+        }
+        drop(self.pool.injector.drain());
+    }
+}
+
+/// Submit `job` to `pool`, preferring the current worker's local queue.
+pub fn spawn_on(pool: &Arc<Pool>, job: Job) {
+    pool.spawned.fetch_add(1, Ordering::SeqCst);
+    let local = CURRENT.with(|c| {
+        c.borrow()
+            .as_ref()
+            .and_then(|(p, idx)| Arc::ptr_eq(p, pool).then_some(*idx))
+    });
+    match local {
+        Some(idx) => pool.queues[idx].push(job),
+        None => pool.injector.push(job),
+    }
+    pool.notify_one();
+}
+
+/// The (pool, worker index) of the current thread, if it is a worker.
+pub fn current_worker() -> Option<(Arc<Pool>, usize)> {
+    CURRENT.with(|c| c.borrow().as_ref().map(|(p, idx)| (Arc::clone(p), *idx)))
+}
+
+pub(crate) fn set_current(pool: &Arc<Pool>, idx: usize) {
+    CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(pool), idx)));
+}
+
+pub(crate) fn clear_current() {
+    CURRENT.with(|c| *c.borrow_mut() = None);
+}

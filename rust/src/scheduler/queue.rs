@@ -1,0 +1,109 @@
+//! Per-worker task queues.
+//!
+//! HPX uses lock-free Chase–Lev deques; on this single-vCPU testbed a
+//! mutex-guarded deque with LIFO local pop and FIFO steal has the same
+//! scheduling semantics (depth-first local execution, breadth-first
+//! stealing) with negligible contention cost relative to the paper's
+//! 200 µs task grains. The queue API mirrors the classic work-stealing
+//! deque so a lock-free implementation can be dropped in behind it.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::Job;
+
+/// A work-stealing deque: the owning worker pushes/pops at the back
+/// (LIFO, cache-friendly); thieves steal from the front (FIFO, oldest
+/// and typically largest subtree of work).
+pub struct WorkQueue {
+    inner: Mutex<VecDeque<Job>>,
+}
+
+impl WorkQueue {
+    pub fn new() -> Self {
+        WorkQueue { inner: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Owner-side push (back).
+    pub fn push(&self, job: Job) {
+        self.inner.lock().unwrap().push_back(job);
+    }
+
+    /// Owner-side pop (back, LIFO).
+    pub fn pop(&self) -> Option<Job> {
+        self.inner.lock().unwrap().pop_back()
+    }
+
+    /// Thief-side steal (front, FIFO).
+    pub fn steal(&self) -> Option<Job> {
+        self.inner.lock().unwrap().pop_front()
+    }
+
+    /// Number of queued jobs (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain every queued job (used at shutdown).
+    pub fn drain(&self) -> Vec<Job> {
+        self.inner.lock().unwrap().drain(..).collect()
+    }
+}
+
+impl Default for WorkQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn job(counter: &Arc<AtomicUsize>, v: usize) -> Job {
+        let c = Arc::clone(counter);
+        Box::new(move || {
+            c.fetch_add(v, Ordering::SeqCst);
+        })
+    }
+
+    #[test]
+    fn lifo_pop_fifo_steal() {
+        let q = WorkQueue::new();
+        let c = Arc::new(AtomicUsize::new(0));
+        q.push(job(&c, 1));
+        q.push(job(&c, 10));
+        q.push(job(&c, 100));
+        assert_eq!(q.len(), 3);
+        // Owner pop gets the newest (100); thief steal gets the oldest (1).
+        let newest = q.pop().unwrap();
+        let oldest = q.steal().unwrap();
+        newest();
+        assert_eq!(c.load(Ordering::SeqCst), 100);
+        oldest();
+        assert_eq!(c.load(Ordering::SeqCst), 101);
+        q.pop().unwrap()(); // remaining middle job
+        assert_eq!(c.load(Ordering::SeqCst), 111);
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+        assert!(q.steal().is_none());
+    }
+
+    #[test]
+    fn drain_returns_all() {
+        let q = WorkQueue::new();
+        let c = Arc::new(AtomicUsize::new(0));
+        for _ in 0..5 {
+            q.push(job(&c, 1));
+        }
+        let jobs = q.drain();
+        assert_eq!(jobs.len(), 5);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,53 @@
+//! The worker-thread main loop.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::{clear_current, set_current, Pool};
+
+/// Body of each `rhpx-worker-N` thread.
+///
+/// Loop: execute whatever [`Pool::find_job`] yields (local LIFO →
+/// injector → steal); when nothing is runnable, park on the pool condvar
+/// using the lost-wakeup-safe protocol (increment `idle` *under the sleep
+/// lock*, re-check the queues, then wait — submitters push first and only
+/// then read `idle`, so either they observe us idle and notify, or we
+/// observe their job on the re-check).
+pub(super) fn worker_loop(pool: Arc<Pool>, idx: usize) {
+    set_current(&pool, idx);
+    // Per-worker steal-victim RNG state; seeded by index so the scan
+    // pattern differs between workers.
+    let mut rng: u64 = 0x9e3779b97f4a7c15u64.wrapping_mul(idx as u64 + 1);
+
+    loop {
+        if pool.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Some(job) = pool.find_job(idx, &mut rng) {
+            pool.run_job(job);
+            continue;
+        }
+        // Nothing runnable: park.
+        let guard = pool.sleep_lock.lock().unwrap();
+        if pool.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        pool.idle.fetch_add(1, Ordering::SeqCst);
+        if pool.has_work() {
+            // A job arrived between the failed scan and taking the lock.
+            pool.idle.fetch_sub(1, Ordering::SeqCst);
+            drop(guard);
+            continue;
+        }
+        // Timed wait as a belt-and-braces guard: correctness does not
+        // depend on the timeout, it only bounds the cost of a missed
+        // wakeup under exotic schedulers.
+        let (guard, _timeout) = pool
+            .sleep_cv
+            .wait_timeout(guard, std::time::Duration::from_millis(10))
+            .unwrap();
+        pool.idle.fetch_sub(1, Ordering::SeqCst);
+        drop(guard);
+    }
+    clear_current();
+}

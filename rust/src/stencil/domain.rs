@@ -1,0 +1,173 @@
+//! Domain decomposition for the 1D periodic advection problem.
+
+use std::sync::Arc;
+
+/// A subdomain's worth of state plus its checksum — the unit of data
+/// flowing through the stencil DAG. `data` is shared (`Arc`) so dataflow
+/// dependencies clone cheaply; `checksum` travels with the data so
+/// consumers (and the `_validate` API variants) can detect silent
+/// corruption without rescanning the producer's memory.
+#[derive(Debug, Clone)]
+pub struct Chunk {
+    pub data: Arc<Vec<f64>>,
+    pub checksum: f64,
+}
+
+impl PartialEq for Chunk {
+    /// Equality on the *data* (used by majority voting over replicas).
+    fn eq(&self, other: &Self) -> bool {
+        self.data == other.data
+    }
+}
+
+impl Chunk {
+    pub fn new(data: Vec<f64>) -> Self {
+        let checksum = super::kernel::checksum(&data);
+        Chunk { data: Arc::new(data), checksum }
+    }
+
+    /// A chunk with an explicit (possibly stale) checksum — used by the
+    /// silent-corruption injector, which alters data *without* fixing
+    /// the checksum.
+    pub fn with_checksum(data: Vec<f64>, checksum: f64) -> Self {
+        Chunk { data: Arc::new(data), checksum }
+    }
+
+    /// True if the checksum matches the data (the `_validate` predicate).
+    pub fn verify(&self, tol: f64) -> bool {
+        (super::kernel::checksum(&self.data) - self.checksum).abs() <= tol
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// The decomposed global domain.
+#[derive(Debug, Clone)]
+pub struct Domain {
+    /// Number of subdomains.
+    pub n_sub: usize,
+    /// Points per subdomain.
+    pub nx: usize,
+    /// Per-subdomain state.
+    pub subdomains: Vec<Chunk>,
+}
+
+impl Domain {
+    /// Initialize with a sine profile over the global periodic domain
+    /// (smooth, so Lax-Wendroff's 2nd-order accuracy is observable and
+    /// the exact solution is a pure shift).
+    pub fn sine(n_sub: usize, nx: usize) -> Self {
+        let total = n_sub * nx;
+        let mut subdomains = Vec::with_capacity(n_sub);
+        for j in 0..n_sub {
+            let data: Vec<f64> = (0..nx)
+                .map(|i| {
+                    let g = (j * nx + i) as f64;
+                    (2.0 * std::f64::consts::PI * g / total as f64).sin()
+                })
+                .collect();
+            subdomains.push(Chunk::new(data));
+        }
+        Domain { n_sub, nx, subdomains }
+    }
+
+    /// Total points.
+    pub fn total_points(&self) -> usize {
+        self.n_sub * self.nx
+    }
+
+    /// Gather all subdomains into one global vector.
+    pub fn gather(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.total_points());
+        for c in &self.subdomains {
+            out.extend_from_slice(&c.data);
+        }
+        out
+    }
+
+    /// Global checksum (sum over all points). For periodic linear
+    /// advection, Lax-Wendroff conserves this exactly up to rounding —
+    /// the whole-run conservation invariant the integration tests check.
+    pub fn global_checksum(&self) -> f64 {
+        self.subdomains.iter().map(|c| super::kernel::checksum(&c.data)).sum()
+    }
+
+    /// The exact solution after the profile has advected by `shift_cells`
+    /// grid cells (may be fractional).
+    pub fn exact_sine_shifted(&self, shift_cells: f64) -> Vec<f64> {
+        let total = self.total_points();
+        (0..total)
+            .map(|i| {
+                let x = i as f64 - shift_cells;
+                (2.0 * std::f64::consts::PI * x / total as f64).sin()
+            })
+            .collect()
+    }
+}
+
+/// Build the extended array for subdomain `j` from its three dependency
+/// chunks `[left, center, right]`: the last `ghost` cells of `left`, all
+/// of `center`, the first `ghost` cells of `right`.
+pub fn build_extended(left: &Chunk, center: &Chunk, right: &Chunk, ghost: usize) -> Vec<f64> {
+    assert!(ghost <= left.len() && ghost <= right.len(), "ghost exceeds neighbor size");
+    let mut ext = Vec::with_capacity(center.len() + 2 * ghost);
+    ext.extend_from_slice(&left.data[left.len() - ghost..]);
+    ext.extend_from_slice(&center.data);
+    ext.extend_from_slice(&right.data[..ghost]);
+    ext
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_checksum_and_verify() {
+        let c = Chunk::new(vec![1.0, 2.0, 3.0]);
+        assert_eq!(c.checksum, 6.0);
+        assert!(c.verify(1e-12));
+        let bad = Chunk::with_checksum(vec![1.0, 2.0, 3.0], 99.0);
+        assert!(!bad.verify(1e-6));
+    }
+
+    #[test]
+    fn sine_domain_is_periodic_and_zero_sum() {
+        let d = Domain::sine(4, 32);
+        assert_eq!(d.total_points(), 128);
+        assert_eq!(d.gather().len(), 128);
+        // sine over a full period sums to ~0
+        assert!(d.global_checksum().abs() < 1e-10);
+    }
+
+    #[test]
+    fn build_extended_wraps_neighbors() {
+        let l = Chunk::new(vec![1.0, 2.0, 3.0]);
+        let c = Chunk::new(vec![4.0, 5.0, 6.0]);
+        let r = Chunk::new(vec![7.0, 8.0, 9.0]);
+        let ext = build_extended(&l, &c, &r, 2);
+        assert_eq!(ext, vec![2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn exact_shift_zero_is_initial() {
+        let d = Domain::sine(2, 16);
+        let exact = d.exact_sine_shifted(0.0);
+        let init = d.gather();
+        for (a, b) in exact.iter().zip(init.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn chunk_equality_is_data_equality() {
+        let a = Chunk::new(vec![1.0, 2.0]);
+        let b = Chunk::with_checksum(vec![1.0, 2.0], 999.0);
+        assert_eq!(a, b); // checksum not part of identity
+    }
+}

@@ -1,0 +1,458 @@
+//! The resilient 1D stencil driver (§V-B).
+//!
+//! Builds the dataflow DAG of the benchmark: one task per (subdomain,
+//! iteration), each task depending on its own subdomain and its two
+//! neighbors from the previous iteration, advancing `steps` time levels
+//! per iteration through the ghost-region kernel. The launch API used
+//! per task is selected by [`Mode`] — the exact configurations of
+//! Table II and Fig 3 (pure dataflow / replay without and with checksums
+//! / replicate), plus this repo's extensions.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::api::dataflow;
+use crate::error::{TaskError, TaskResult};
+use crate::failure::{FaultInjector, Rng};
+use crate::future::Future;
+use crate::metrics::Timer;
+use crate::resilience::{
+    dataflow_replay, dataflow_replay_validate, dataflow_replicate, dataflow_replicate_replay,
+    dataflow_replicate_validate, dataflow_replicate_vote, vote_majority,
+};
+use crate::runtime::ArtifactStore;
+use crate::runtime_handle::Runtime;
+
+use super::domain::{build_extended, Chunk, Domain};
+use super::kernel;
+
+/// Which launch API each stencil task uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Plain `dataflow` — Table II's "Pure Dataflow" baseline.
+    Pure,
+    /// `dataflow_replay(n)` — "Replay without checksums".
+    Replay { n: usize },
+    /// `dataflow_replay_validate(n, checksum)` — "Replay with checksums".
+    ReplayChecksum { n: usize },
+    /// `dataflow_replicate(n)` — "Replicate without checksums".
+    Replicate { n: usize },
+    /// `dataflow_replicate_validate(n, checksum)`.
+    ReplicateChecksum { n: usize },
+    /// `dataflow_replicate_vote(n, majority)` — silent-error consensus.
+    ReplicateVote { n: usize },
+    /// Replicate-of-replays extension (§Future-Work).
+    ReplicateReplay { n: usize, replays: usize },
+}
+
+impl Mode {
+    pub fn label(&self) -> String {
+        match self {
+            Mode::Pure => "pure_dataflow".into(),
+            Mode::Replay { n } => format!("replay({n})"),
+            Mode::ReplayChecksum { n } => format!("replay_checksum({n})"),
+            Mode::Replicate { n } => format!("replicate({n})"),
+            Mode::ReplicateChecksum { n } => format!("replicate_checksum({n})"),
+            Mode::ReplicateVote { n } => format!("replicate_vote({n})"),
+            Mode::ReplicateReplay { n, replays } => format!("replicate_replay({n},{replays})"),
+        }
+    }
+}
+
+/// Which kernel executes the math.
+#[derive(Clone)]
+pub enum Backend {
+    /// Pure-Rust reference kernel.
+    Native,
+    /// The AOT JAX/Pallas artifact through PJRT (the production path).
+    Pjrt { artifact: PathBuf },
+}
+
+impl Backend {
+    /// Resolve the PJRT backend from an artifact store.
+    pub fn pjrt(store: &ArtifactStore, nx: usize, steps: usize) -> TaskResult<Backend> {
+        Ok(Backend::Pjrt { artifact: store.stencil_path(nx, steps)?.to_path_buf() })
+    }
+}
+
+/// Stencil run parameters. Paper cases (Table II):
+/// * case A: 128 subdomains × 16000 points;
+/// * case B: 256 subdomains × 8000 points;
+/// both: 8192 iterations, 128 time steps per iteration.
+#[derive(Clone)]
+pub struct StencilParams {
+    pub n_sub: usize,
+    pub nx: usize,
+    pub iterations: usize,
+    /// Time steps advanced per task (= ghost cells per side).
+    pub steps: usize,
+    /// Courant number (c = 1 makes Lax-Wendroff an exact shift).
+    pub courant: f64,
+    pub mode: Mode,
+    pub backend: Backend,
+    /// Exception-style failures: error-rate factor x, P = e^{-x}.
+    pub error_rate: Option<f64>,
+    /// Silent-corruption probability per task (checksum-detectable).
+    pub silent_rate: Option<f64>,
+    pub seed: u64,
+    /// Barrier every `window` iterations to bound in-flight tasks.
+    pub window: usize,
+    /// Checksum validation tolerance.
+    pub tol: f64,
+}
+
+impl StencilParams {
+    /// Paper case A geometry, scaled by `scale` (1 = full paper size).
+    pub fn case_a(scale: f64) -> Self {
+        StencilParams {
+            n_sub: 128,
+            nx: 16_000,
+            iterations: ((8192.0 * scale) as usize).max(1),
+            steps: 128,
+            courant: 0.9,
+            mode: Mode::Pure,
+            backend: Backend::Native,
+            error_rate: None,
+            silent_rate: None,
+            seed: 0xA,
+            window: 16,
+            tol: 1e-6,
+        }
+    }
+
+    /// Paper case B geometry, scaled by `scale`.
+    pub fn case_b(scale: f64) -> Self {
+        StencilParams {
+            n_sub: 256,
+            nx: 8_000,
+            iterations: ((8192.0 * scale) as usize).max(1),
+            steps: 128,
+            seed: 0xB,
+            ..Self::case_a(scale)
+        }
+    }
+
+    /// A small configuration for tests and quick examples.
+    pub fn tiny() -> Self {
+        StencilParams {
+            n_sub: 8,
+            nx: 64,
+            iterations: 10,
+            steps: 4,
+            courant: 1.0,
+            mode: Mode::Pure,
+            backend: Backend::Native,
+            error_rate: None,
+            silent_rate: None,
+            seed: 0x7,
+            window: 4,
+            tol: 1e-6,
+        }
+    }
+
+    /// Total number of top-level tasks the run launches.
+    pub fn total_tasks(&self) -> usize {
+        self.n_sub * self.iterations
+    }
+}
+
+/// Outcome of a stencil run.
+#[derive(Debug, Clone)]
+pub struct StencilReport {
+    pub mode: String,
+    pub wall_secs: f64,
+    pub tasks: usize,
+    pub failures_injected: u64,
+    pub silent_corruptions: u64,
+    /// Tasks whose resilient launch ultimately failed (DAG poisoned).
+    pub launch_errors: u64,
+    pub final_checksum: f64,
+}
+
+/// Run the stencil; returns the final global state and the report.
+pub fn run(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, StencilReport)> {
+    assert!(params.steps <= params.nx, "ghost region larger than subdomain");
+    let injector = FaultInjector::new(params.error_rate.unwrap_or(0.0), params.seed);
+    let corruptor = SilentCorruptor::new(params.silent_rate, params.seed ^ 0xDEAD);
+    let domain = Domain::sine(params.n_sub, params.nx);
+
+    let timer = Timer::start();
+    let mut futs: Vec<Future<Chunk>> = domain
+        .subdomains
+        .iter()
+        .map(|c| Future::ready(Ok(c.clone())))
+        .collect();
+
+    let n_sub = params.n_sub;
+    for iter in 0..params.iterations {
+        let mut next: Vec<Future<Chunk>> = Vec::with_capacity(n_sub);
+        for j in 0..n_sub {
+            let deps = vec![
+                futs[(j + n_sub - 1) % n_sub].clone(),
+                futs[j].clone(),
+                futs[(j + 1) % n_sub].clone(),
+            ];
+            next.push(launch_task(rt, params, &injector, &corruptor, deps));
+        }
+        futs = next;
+        if params.window > 0 && (iter + 1) % params.window == 0 {
+            // Bound in-flight work: block until this wavefront is done.
+            for f in &futs {
+                f.wait();
+            }
+        }
+    }
+
+    let mut launch_errors = 0u64;
+    let mut final_domain = Domain { n_sub: params.n_sub, nx: params.nx, subdomains: Vec::new() };
+    let mut first_error: Option<TaskError> = None;
+    for f in futs {
+        match f.get() {
+            Ok(chunk) => final_domain.subdomains.push(chunk),
+            Err(e) => {
+                // A poisoned subdomain (resilience exhausted): keep the
+                // gather shape with a zero placeholder and count it.
+                launch_errors += 1;
+                if first_error.is_none() {
+                    first_error = Some(e);
+                }
+                final_domain.subdomains.push(Chunk::new(vec![0.0; params.nx]));
+            }
+        }
+    }
+    let wall = timer.elapsed_secs();
+
+    let report = StencilReport {
+        mode: params.mode.label(),
+        wall_secs: wall,
+        tasks: params.total_tasks(),
+        failures_injected: injector.counters().injected(),
+        silent_corruptions: corruptor.count(),
+        launch_errors,
+        final_checksum: final_domain.global_checksum(),
+    };
+    match first_error {
+        Some(e) if launch_errors as usize == params.n_sub => Err(e),
+        _ => Ok((final_domain.gather(), report)),
+    }
+}
+
+/// Launch one stencil task through the configured API variant.
+fn launch_task(
+    rt: &Runtime,
+    params: &StencilParams,
+    injector: &FaultInjector,
+    corruptor: &SilentCorruptor,
+    deps: Vec<Future<Chunk>>,
+) -> Future<Chunk> {
+    let steps = params.steps;
+    let courant = params.courant;
+    let backend = params.backend.clone();
+    let injector = injector.clone();
+    let corruptor = corruptor.clone();
+    let tol = params.tol;
+
+    let body = move |vals: &[Chunk]| -> TaskResult<Chunk> {
+        injector.draw("stencil-task")?;
+        let ext = build_extended(&vals[0], &vals[1], &vals[2], steps);
+        let (mut out, cksum) = match &backend {
+            Backend::Native => {
+                let out = kernel::lax_wendroff_multistep(&ext, steps, courant);
+                let ck = kernel::checksum(&out);
+                (out, ck)
+            }
+            Backend::Pjrt { artifact } => {
+                let c_arr = [courant];
+                let mut vecs = crate::runtime::execute_f64(artifact, &[&ext, &c_arr])?;
+                if vecs.len() != 2 || vecs[1].len() != 1 {
+                    return Err(TaskError::Runtime(format!(
+                        "stencil artifact returned unexpected shape: {:?}",
+                        vecs.iter().map(|v| v.len()).collect::<Vec<_>>()
+                    )));
+                }
+                let ck = vecs[1][0];
+                (std::mem::take(&mut vecs[0]), ck)
+            }
+        };
+        corruptor.maybe_corrupt(&mut out);
+        Ok(Chunk::with_checksum(out, cksum))
+    };
+
+    let validate = move |c: &Chunk| c.verify(tol);
+
+    match params.mode {
+        Mode::Pure => dataflow(rt, move |v: Vec<Chunk>| body(&v), deps),
+        Mode::Replay { n } => dataflow_replay(rt, n, move |v: &[Chunk]| body(v), deps),
+        Mode::ReplayChecksum { n } => {
+            dataflow_replay_validate(rt, n, validate, move |v: &[Chunk]| body(v), deps)
+        }
+        Mode::Replicate { n } => dataflow_replicate(rt, n, move |v: &[Chunk]| body(v), deps),
+        Mode::ReplicateChecksum { n } => {
+            dataflow_replicate_validate(rt, n, validate, move |v: &[Chunk]| body(v), deps)
+        }
+        Mode::ReplicateVote { n } => {
+            dataflow_replicate_vote(rt, n, vote_majority, move |v: &[Chunk]| body(v), deps)
+        }
+        Mode::ReplicateReplay { n, replays } => {
+            dataflow_replicate_replay(rt, n, replays, move |v: &[Chunk]| body(v), deps)
+        }
+    }
+}
+
+/// Injects *silent* errors: corrupts one element of a task's output
+/// without updating the checksum, so only checksum validation (or
+/// replica voting) can catch it.
+#[derive(Clone)]
+pub struct SilentCorruptor {
+    injector: Option<FaultInjector>,
+    count: Arc<AtomicU64>,
+    seed: u64,
+}
+
+impl SilentCorruptor {
+    pub fn new(probability: Option<f64>, seed: u64) -> Self {
+        SilentCorruptor {
+            injector: probability
+                .filter(|p| *p > 0.0)
+                .map(|p| FaultInjector::with_probability(p, seed)),
+            count: Arc::new(AtomicU64::new(0)),
+            seed,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// With the configured probability, perturb one element.
+    pub fn maybe_corrupt(&self, data: &mut [f64]) {
+        let Some(inj) = &self.injector else { return };
+        if data.is_empty() || !inj.should_fail() {
+            return;
+        }
+        let n = self.count.fetch_add(1, Ordering::Relaxed);
+        let idx = Rng::seeded(self.seed ^ n).next_below(data.len() as u64) as usize;
+        data[idx] += 1.0; // large, checksum-visible corruption
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt() -> Runtime {
+        Runtime::builder().workers(2).build()
+    }
+
+    #[test]
+    fn pure_run_is_exact_shift_at_unit_courant() {
+        let rt = rt();
+        let params = StencilParams::tiny(); // courant = 1.0
+        let domain = Domain::sine(params.n_sub, params.nx);
+        let (out, rep) = run(&rt, &params).unwrap();
+        assert_eq!(rep.launch_errors, 0);
+        assert_eq!(rep.tasks, 80);
+        // total shift = iterations * steps cells
+        let shift = (params.iterations * params.steps) as f64;
+        let exact = domain.exact_sine_shifted(shift);
+        for (a, b) in out.iter().zip(exact.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn all_modes_agree_without_failures() {
+        let rt = rt();
+        let base = StencilParams::tiny();
+        let (ref_out, _) = run(&rt, &base).unwrap();
+        for mode in [
+            Mode::Replay { n: 3 },
+            Mode::ReplayChecksum { n: 3 },
+            Mode::Replicate { n: 2 },
+            Mode::ReplicateChecksum { n: 2 },
+            Mode::ReplicateVote { n: 3 },
+            Mode::ReplicateReplay { n: 2, replays: 2 },
+        ] {
+            let params = StencilParams { mode, ..base.clone() };
+            let (out, rep) = run(&rt, &params).unwrap();
+            assert_eq!(rep.launch_errors, 0, "{mode:?}");
+            assert_eq!(out, ref_out, "mode {mode:?} diverged");
+        }
+    }
+
+    #[test]
+    fn replay_recovers_from_injected_exceptions() {
+        let rt = rt();
+        let params = StencilParams {
+            mode: Mode::Replay { n: 5 },
+            error_rate: Some(2.0), // P ≈ 0.135 per task
+            ..StencilParams::tiny()
+        };
+        let domain = Domain::sine(params.n_sub, params.nx);
+        let (out, rep) = run(&rt, &params).unwrap();
+        assert!(rep.failures_injected > 0);
+        assert_eq!(rep.launch_errors, 0);
+        let shift = (params.iterations * params.steps) as f64;
+        let exact = domain.exact_sine_shifted(shift);
+        for (a, b) in out.iter().zip(exact.iter()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn checksum_validation_catches_silent_corruption() {
+        let rt = rt();
+        let params = StencilParams {
+            mode: Mode::ReplayChecksum { n: 8 },
+            silent_rate: Some(0.2),
+            ..StencilParams::tiny()
+        };
+        let domain = Domain::sine(params.n_sub, params.nx);
+        let (out, rep) = run(&rt, &params).unwrap();
+        assert!(rep.silent_corruptions > 0, "corruptor must fire");
+        assert_eq!(rep.launch_errors, 0);
+        // Despite corruption attempts, replay-on-validation-failure must
+        // deliver the exact result.
+        let shift = (params.iterations * params.steps) as f64;
+        let exact = domain.exact_sine_shifted(shift);
+        for (a, b) in out.iter().zip(exact.iter()) {
+            assert!((a - b).abs() < 1e-9, "corruption leaked into result");
+        }
+    }
+
+    #[test]
+    fn pure_mode_does_not_catch_silent_corruption() {
+        // Negative control: without checksums the corruption lands.
+        let rt = rt();
+        let params = StencilParams {
+            silent_rate: Some(0.5),
+            ..StencilParams::tiny()
+        };
+        let domain = Domain::sine(params.n_sub, params.nx);
+        let (out, rep) = run(&rt, &params).unwrap();
+        assert!(rep.silent_corruptions > 0);
+        let shift = (params.iterations * params.steps) as f64;
+        let exact = domain.exact_sine_shifted(shift);
+        let max_err = out
+            .iter()
+            .zip(exact.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_err > 0.1, "corruption should have survived: {max_err}");
+    }
+
+    #[test]
+    fn conservation_invariant_under_replay() {
+        let rt = rt();
+        let params = StencilParams {
+            mode: Mode::Replay { n: 5 },
+            error_rate: Some(1.5),
+            courant: 0.8, // non-exact path, still conservative
+            ..StencilParams::tiny()
+        };
+        let (_, rep) = run(&rt, &params).unwrap();
+        // sine over full periods sums to ~0, conserved by LW
+        assert!(rep.final_checksum.abs() < 1e-8, "{}", rep.final_checksum);
+    }
+}

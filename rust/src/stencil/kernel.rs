@@ -1,0 +1,166 @@
+//! Native (pure-Rust) Lax-Wendroff kernel — the reference implementation
+//! the PJRT artifact is validated against, and the fast path for
+//! overhead-focused benchmarks (the paper measures *runtime* overheads;
+//! the kernel itself only sets the task grain).
+//!
+//! Linear advection `u_t + a u_x = 0` on a uniform grid; Lax-Wendroff:
+//!
+//! ```text
+//! u_i' = u_i - (c/2)(u_{i+1} - u_{i-1}) + (c²/2)(u_{i+1} - 2 u_i + u_{i-1})
+//! ```
+//!
+//! with Courant number `c = a·dt/dx`. A task advances `steps` time levels
+//! over a subdomain extended with `steps` ghost cells per side ("reading
+//! an extended ghost region of data values from each neighbor, which
+//! helps reducing overheads and latency effects", §V-B): each level
+//! consumes one ghost cell per side, so the output is exactly the
+//! interior subdomain.
+
+/// One Lax-Wendroff time level over the interior of `u` (drops one cell
+/// per side). Writes into `out`, which must have length `u.len() - 2`.
+#[inline]
+pub fn lax_wendroff_step(u: &[f64], c: f64, out: &mut [f64]) {
+    debug_assert_eq!(out.len() + 2, u.len());
+    let half_c = 0.5 * c;
+    let half_c2 = 0.5 * c * c;
+    for i in 0..out.len() {
+        let (um, u0, up) = (u[i], u[i + 1], u[i + 2]);
+        out[i] = u0 - half_c * (up - um) + half_c2 * (up - 2.0 * u0 + um);
+    }
+}
+
+/// Advance `steps` time levels over an extended subdomain of length
+/// `nx + 2*steps`; returns the `nx` interior points.
+pub fn lax_wendroff_multistep(extended: &[f64], steps: usize, c: f64) -> Vec<f64> {
+    assert!(extended.len() > 2 * steps, "extended region too small");
+    let mut cur = extended.to_vec();
+    let mut next = vec![0.0; cur.len().saturating_sub(2)];
+    for _ in 0..steps {
+        next.resize(cur.len() - 2, 0.0);
+        lax_wendroff_step(&cur, c, &mut next);
+        std::mem::swap(&mut cur, &mut next);
+    }
+    cur
+}
+
+/// Checksum of a data block (plain sum, as in the Teranishi et al.
+/// milestone the paper's stencil follows): recomputed by consumers to
+/// detect silent corruption of task outputs.
+#[inline]
+pub fn checksum(data: &[f64]) -> f64 {
+    data.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sine(n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| (2.0 * std::f64::consts::PI * i as f64 / n as f64).sin())
+            .collect()
+    }
+
+    /// Extended array for a periodic domain: `steps` ghosts per side.
+    fn extend_periodic(u: &[f64], ghost: usize) -> Vec<f64> {
+        let n = u.len();
+        let mut ext = Vec::with_capacity(n + 2 * ghost);
+        for i in 0..ghost {
+            ext.push(u[(n - ghost + i) % n]);
+        }
+        ext.extend_from_slice(u);
+        for i in 0..ghost {
+            ext.push(u[i % n]);
+        }
+        ext
+    }
+
+    #[test]
+    fn unit_courant_is_exact_shift() {
+        // With c = 1 Lax-Wendroff reduces to u_i' = u_{i-1}: an exact
+        // one-cell shift per step.
+        let n = 64;
+        let u = sine(n);
+        let steps = 5;
+        let ext = extend_periodic(&u, steps);
+        let out = lax_wendroff_multistep(&ext, steps, 1.0);
+        assert_eq!(out.len(), n);
+        for i in 0..n {
+            let expect = u[(i + n - steps) % n];
+            assert!(
+                (out[i] - expect).abs() < 1e-12,
+                "i={i}: {} vs {}",
+                out[i],
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn single_step_matches_formula() {
+        let u = [1.0, 2.0, 4.0];
+        let c = 0.5;
+        let mut out = [0.0];
+        lax_wendroff_step(&u, c, &mut out);
+        let expect = 2.0 - 0.25 * (4.0 - 1.0) + 0.125 * (4.0 - 4.0 + 1.0);
+        assert!((out[0] - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn multistep_equals_repeated_single_steps() {
+        let ext = sine(32);
+        let a = lax_wendroff_multistep(&ext, 3, 0.8);
+        // manual: three applications
+        let mut cur = ext.to_vec();
+        for _ in 0..3 {
+            let mut next = vec![0.0; cur.len() - 2];
+            lax_wendroff_step(&cur, 0.8, &mut next);
+            cur = next;
+        }
+        assert_eq!(a, cur);
+    }
+
+    #[test]
+    fn second_order_convergence() {
+        // Halving dx (with fixed c, so dt halves too) should shrink the
+        // error by ~4x for this smooth profile over a fixed time window.
+        let c = 0.5;
+        let err = |n: usize| -> f64 {
+            // advance T = n_steps*dt where n_steps scales with n to fix
+            // physical time: steps = n/4 cells of travel at c=0.5 means
+            // shift = steps*c cells.
+            let steps = n / 8;
+            let u = sine(n);
+            let ext = extend_periodic(&u, steps);
+            let out = lax_wendroff_multistep(&ext, steps, c);
+            // exact: shift by c*steps cells (fractional): u0(x - a t)
+            let shift = c * steps as f64;
+            (0..n)
+                .map(|i| {
+                    let x = i as f64 - shift;
+                    let exact = (2.0 * std::f64::consts::PI * x / n as f64).sin();
+                    (out[i] - exact).powi(2)
+                })
+                .sum::<f64>()
+                .sqrt()
+                / (n as f64).sqrt()
+        };
+        let e1 = err(64);
+        let e2 = err(128);
+        // N doubles, steps double: fixed physical window in grid units
+        // relative to wavelength. Expect ratio ≈ 4 (2nd order); accept ≥ 3.
+        assert!(e1 / e2 > 3.0, "e1={e1:.3e} e2={e2:.3e} ratio={}", e1 / e2);
+    }
+
+    #[test]
+    fn checksum_sums() {
+        assert_eq!(checksum(&[1.0, 2.0, 3.5]), 6.5);
+        assert_eq!(checksum(&[]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "extended region too small")]
+    fn rejects_undersized_extension() {
+        lax_wendroff_multistep(&[1.0, 2.0], 1, 0.5);
+    }
+}

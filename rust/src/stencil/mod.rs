@@ -1,0 +1,19 @@
+//! The 1D stencil benchmark application (§V-B).
+//!
+//! A linear-advection solver decomposed into subdomains, advanced by a
+//! multi-timestep Lax-Wendroff ghost-region kernel, with one dataflow
+//! task per (subdomain, iteration) — each task depending on its own and
+//! both neighboring subdomains from the previous iteration. This is the
+//! application whose resilient variants produce Table II and Fig 3.
+//!
+//! * [`kernel`] — the native Rust reference kernel (validated against the
+//!   JAX/Pallas oracle and the PJRT artifact);
+//! * [`domain`] — decomposition, chunks-with-checksums, exact solutions;
+//! * [`driver`] — the dataflow driver with per-task resiliency modes.
+
+pub mod domain;
+pub mod driver;
+pub mod kernel;
+
+pub use domain::{build_extended, Chunk, Domain};
+pub use driver::{run, Backend, Mode, SilentCorruptor, StencilParams, StencilReport};

@@ -1,0 +1,138 @@
+//! A miniature property-based testing harness.
+//!
+//! The offline build has no `proptest`/`quickcheck`, so the crate carries
+//! its own: generate many random cases from a seeded [`Rng`]
+//! (deterministic → reproducible failures), run the property, and on
+//! failure report the case number and seed so the exact case can be
+//! replayed.
+
+use crate::failure::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `property` for each of `cfg.cases` seeded RNGs; panic with a
+/// replayable diagnostic on the first failure.
+///
+/// The property returns `Result<(), String>`: `Err` describes the
+/// violated invariant.
+pub fn check<F>(name: &str, cfg: PropConfig, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::seeded(case_seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{} (seed {case_seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn check_default<F>(name: &str, property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), property);
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use crate::failure::Rng;
+
+    /// Uniform usize in [lo, hi].
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        lo + rng.next_f64() * (hi - lo)
+    }
+
+    /// Vector of f64 with the given length range and value range.
+    pub fn vec_f64(rng: &mut Rng, len_lo: usize, len_hi: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let len = usize_in(rng, len_lo, len_hi);
+        (0..len).map(|_| f64_in(rng, lo, hi)).collect()
+    }
+
+    /// Vector of i64 in a value range.
+    pub fn vec_i64(rng: &mut Rng, len_lo: usize, len_hi: usize, lo: i64, hi: i64) -> Vec<i64> {
+        let len = usize_in(rng, len_lo, len_hi);
+        (0..len)
+            .map(|_| lo + rng.next_below((hi - lo + 1) as u64) as i64)
+            .collect()
+    }
+
+    /// Bernoulli draw.
+    pub fn bool_with(rng: &mut Rng, p: f64) -> bool {
+        rng.next_f64() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default("sum-commutes", |rng| {
+            let v = gen::vec_i64(rng, 0, 20, -100, 100);
+            let mut r = v.clone();
+            r.reverse();
+            let a: i64 = v.iter().sum();
+            let b: i64 = r.iter().sum();
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("{a} != {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports() {
+        check(
+            "always-fails",
+            PropConfig { cases: 3, seed: 1 },
+            |_rng| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check_default("gen-bounds", |rng| {
+            let n = gen::usize_in(rng, 3, 9);
+            if !(3..=9).contains(&n) {
+                return Err(format!("usize_in out of range: {n}"));
+            }
+            let x = gen::f64_in(rng, -1.0, 1.0);
+            if !(-1.0..1.0).contains(&x) {
+                return Err(format!("f64_in out of range: {x}"));
+            }
+            let v = gen::vec_f64(rng, 1, 5, 0.0, 10.0);
+            if v.is_empty() || v.len() > 5 || v.iter().any(|x| !(0.0..10.0).contains(x)) {
+                return Err(format!("vec_f64 bad: {v:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,299 @@
+//! The artificial workload benchmark (§V-A, Listing 3).
+//!
+//! "This benchmark was written in order for the user to precisely control
+//! the task grain size and therefore correctly compute the overheads of
+//! the resiliency implementation." A task busy-waits for a configurable
+//! grain, probabilistically throws per the exponential error model, and
+//! returns 42; the harness launches it through each API variant and
+//! amortizes the wall time over the number of tasks.
+
+use crate::error::{TaskError, TaskResult};
+use crate::failure::FaultInjector;
+use crate::future::Future;
+use crate::metrics::{busy_wait_ns, Timer};
+use crate::resilience;
+use crate::runtime_handle::Runtime;
+
+/// Listing 3's `universal_ans`: busy-wait `delay_ns`, fail per the
+/// injector's exponential model (decided *before* the wait, as in the
+/// paper, so a failing task still consumes its grain), return 42.
+pub fn universal_ans(delay_ns: u64, injector: &FaultInjector) -> TaskResult<i32> {
+    let failed = injector.should_fail();
+    busy_wait_ns(delay_ns);
+    if failed {
+        Err(TaskError::Injected { site: "universal_ans" })
+    } else {
+        Ok(42)
+    }
+}
+
+/// Which launch API a workload run exercises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Plain `async_` — the non-resilient baseline.
+    Plain,
+    /// `async_replay(n)`.
+    Replay { n: usize },
+    /// `async_replay_validate(n)` (validates result == 42).
+    ReplayValidate { n: usize },
+    /// `async_replicate(n)`.
+    Replicate { n: usize },
+    /// `async_replicate_validate(n)`.
+    ReplicateValidate { n: usize },
+    /// `async_replicate_vote(n)` with majority voting.
+    ReplicateVote { n: usize },
+    /// `async_replicate_vote_validate(n)`.
+    ReplicateVoteValidate { n: usize },
+}
+
+impl Variant {
+    pub fn label(&self) -> String {
+        match self {
+            Variant::Plain => "async".to_string(),
+            Variant::Replay { n } => format!("async_replay({n})"),
+            Variant::ReplayValidate { n } => format!("async_replay_validate({n})"),
+            Variant::Replicate { n } => format!("async_replicate({n})"),
+            Variant::ReplicateValidate { n } => format!("async_replicate_validate({n})"),
+            Variant::ReplicateVote { n } => format!("async_replicate_vote({n})"),
+            Variant::ReplicateVoteValidate { n } => {
+                format!("async_replicate_vote_validate({n})")
+            }
+        }
+    }
+
+    /// All six resilient variants of Table I at replication factor `n`.
+    pub fn table1_variants(n: usize) -> Vec<Variant> {
+        vec![
+            Variant::Replay { n },
+            Variant::ReplayValidate { n },
+            Variant::Replicate { n },
+            Variant::ReplicateValidate { n },
+            Variant::ReplicateVote { n },
+            Variant::ReplicateVoteValidate { n },
+        ]
+    }
+
+    /// True for the replicate family (affects the compute multiplier).
+    pub fn is_replicate(&self) -> bool {
+        matches!(
+            self,
+            Variant::Replicate { .. }
+                | Variant::ReplicateValidate { .. }
+                | Variant::ReplicateVote { .. }
+                | Variant::ReplicateVoteValidate { .. }
+        )
+    }
+}
+
+/// Parameters of one workload run.
+#[derive(Debug, Clone)]
+pub struct WorkloadParams {
+    /// Number of top-level task launches (paper: 1,000,000).
+    pub tasks: usize,
+    /// Task grain in nanoseconds (paper: 200 µs = 200_000).
+    pub grain_ns: u64,
+    /// Error-rate factor x with P(error) = e^{-x}; `None` disables.
+    pub error_rate: Option<f64>,
+    /// RNG seed for the injector.
+    pub seed: u64,
+    /// How many launches are in flight before the harness starts
+    /// retiring them (bounds memory at the paper's 1M-task scale).
+    pub window: usize,
+}
+
+impl Default for WorkloadParams {
+    fn default() -> Self {
+        WorkloadParams {
+            tasks: 100_000,
+            grain_ns: 200_000,
+            error_rate: None,
+            seed: 0x5EED,
+            window: 4096,
+        }
+    }
+}
+
+/// Result of one workload run.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub variant: String,
+    pub tasks: usize,
+    pub wall_secs: f64,
+    /// Wall time per task in µs (the paper's amortized unit).
+    pub per_task_us: f64,
+    /// Amortized *overhead* per task vs. the ideal packed grain, in µs.
+    pub overhead_us: f64,
+    /// Percentage extra execution time vs. ideal grain time.
+    pub overhead_pct: f64,
+    pub failures_injected: u64,
+    pub launch_errors: u64,
+}
+
+/// Launch one task through `variant`.
+pub fn launch(
+    rt: &Runtime,
+    variant: Variant,
+    grain_ns: u64,
+    injector: &FaultInjector,
+) -> Future<i32> {
+    let inj = injector.clone();
+    let body = move || universal_ans(grain_ns, &inj);
+    let validate = |v: &i32| *v == 42;
+    match variant {
+        Variant::Plain => crate::api::async_(rt, body),
+        Variant::Replay { n } => resilience::async_replay(rt, n, body),
+        Variant::ReplayValidate { n } => {
+            resilience::async_replay_validate(rt, n, validate, body)
+        }
+        Variant::Replicate { n } => resilience::async_replicate(rt, n, body),
+        Variant::ReplicateValidate { n } => {
+            resilience::async_replicate_validate(rt, n, validate, body)
+        }
+        Variant::ReplicateVote { n } => {
+            resilience::async_replicate_vote(rt, n, resilience::vote_majority, body)
+        }
+        Variant::ReplicateVoteValidate { n } => resilience::async_replicate_vote_validate(
+            rt,
+            n,
+            resilience::vote_majority,
+            validate,
+            body,
+        ),
+    }
+}
+
+/// Run the workload: `params.tasks` launches of `variant`, windowed so at
+/// most `params.window` futures are outstanding; reports amortized
+/// per-task time and overhead vs. the ideal grain.
+pub fn run(rt: &Runtime, variant: Variant, params: &WorkloadParams) -> WorkloadReport {
+    let injector = match params.error_rate {
+        Some(x) => FaultInjector::new(x, params.seed),
+        None => FaultInjector::new(0.0, params.seed),
+    };
+    let mut launch_errors = 0u64;
+    let timer = Timer::start();
+    let mut inflight: std::collections::VecDeque<Future<i32>> =
+        std::collections::VecDeque::with_capacity(params.window);
+    for _ in 0..params.tasks {
+        if inflight.len() >= params.window {
+            let f = inflight.pop_front().expect("window non-empty");
+            if f.get().is_err() {
+                launch_errors += 1;
+            }
+        }
+        inflight.push_back(launch(rt, variant, params.grain_ns, &injector));
+    }
+    for f in inflight {
+        if f.get().is_err() {
+            launch_errors += 1;
+        }
+    }
+    let wall = timer.elapsed_secs();
+
+    let per_task_us = wall * 1e6 / params.tasks as f64;
+    let grain_us = params.grain_ns as f64 / 1e3;
+    // Ideal packed time per task across the pool, accounting for the n×
+    // duplicated compute of replicate variants.
+    let multiplier = match variant {
+        v if v.is_replicate() => match variant {
+            Variant::Replicate { n }
+            | Variant::ReplicateValidate { n }
+            | Variant::ReplicateVote { n }
+            | Variant::ReplicateVoteValidate { n } => n as f64,
+            _ => unreachable!(),
+        },
+        _ => 1.0,
+    };
+    let ideal_us = grain_us * multiplier / rt.workers() as f64;
+    let overhead_us = per_task_us - ideal_us;
+    let overhead_pct = 100.0 * overhead_us / grain_us;
+    WorkloadReport {
+        variant: variant.label(),
+        tasks: params.tasks,
+        wall_secs: wall,
+        per_task_us,
+        overhead_us,
+        overhead_pct,
+        failures_injected: injector.counters().injected(),
+        launch_errors,
+    }
+}
+
+/// Convenience used by benches: run every Table-I variant.
+pub fn run_all_variants(rt: &Runtime, n: usize, params: &WorkloadParams) -> Vec<WorkloadReport> {
+    Variant::table1_variants(n)
+        .into_iter()
+        .map(|v| run(rt, v, params))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt() -> Runtime {
+        Runtime::builder().workers(2).build()
+    }
+
+    #[test]
+    fn universal_ans_returns_42() {
+        let inj = FaultInjector::new(0.0, 1);
+        assert_eq!(universal_ans(1000, &inj), Ok(42));
+    }
+
+    #[test]
+    fn universal_ans_fails_when_injected() {
+        let inj = FaultInjector::with_probability(0.999_999, 2);
+        let saw_failure = (0..50).any(|_| universal_ans(100, &inj).is_err());
+        assert!(saw_failure);
+    }
+
+    #[test]
+    fn plain_run_no_failures() {
+        let rt = rt();
+        let params = WorkloadParams { tasks: 200, grain_ns: 10_000, ..Default::default() };
+        let rep = run(&rt, Variant::Plain, &params);
+        assert_eq!(rep.tasks, 200);
+        assert_eq!(rep.launch_errors, 0);
+        assert_eq!(rep.failures_injected, 0);
+        assert!(rep.wall_secs > 0.0);
+    }
+
+    #[test]
+    fn replay_run_with_failures_all_recover() {
+        let rt = rt();
+        let params = WorkloadParams {
+            tasks: 300,
+            grain_ns: 5_000,
+            error_rate: Some(1.0), // P(fail) ≈ 0.37 per attempt
+            ..Default::default()
+        };
+        let rep = run(&rt, Variant::Replay { n: 10 }, &params);
+        assert!(rep.failures_injected > 0, "injector must fire");
+        assert_eq!(rep.launch_errors, 0, "replay(10) should always recover");
+    }
+
+    #[test]
+    fn replicate_vote_run_recovers() {
+        let rt = rt();
+        let params = WorkloadParams {
+            tasks: 100,
+            grain_ns: 5_000,
+            error_rate: Some(3.0), // P(fail) ≈ 0.05
+            ..Default::default()
+        };
+        let rep = run(&rt, Variant::ReplicateVote { n: 3 }, &params);
+        // All-three-replicas-fail has p ≈ 1.25e-4 per launch; over 100
+        // launches failures are unlikely but not impossible — accept <= 1.
+        assert!(rep.launch_errors <= 1, "got {}", rep.launch_errors);
+    }
+
+    #[test]
+    fn variant_labels() {
+        assert_eq!(Variant::Plain.label(), "async");
+        assert_eq!(Variant::Replay { n: 3 }.label(), "async_replay(3)");
+        assert_eq!(Variant::table1_variants(3).len(), 6);
+        assert!(Variant::Replicate { n: 3 }.is_replicate());
+        assert!(!Variant::Replay { n: 3 }.is_replicate());
+    }
+}

@@ -1,0 +1,107 @@
+//! Integration: the AOT JAX/Pallas artifact executed through PJRT from
+//! Rust must agree with the native Rust kernel — the cross-layer
+//! correctness contract (L1/L2 ↔ L3).
+//!
+//! Requires `make artifacts` to have run (the Makefile `test` target
+//! guarantees ordering).
+
+use std::path::Path;
+
+use rhpx::runtime::{execute_f64, warmup, ArtifactStore};
+use rhpx::stencil::{kernel, Backend, Mode, StencilParams};
+use rhpx::Runtime;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open(Path::new("artifacts"))
+        .expect("artifacts/ missing — run `make artifacts` first")
+}
+
+#[test]
+fn artifact_store_finds_default_configs() {
+    let s = store();
+    assert!(s.stencil_path(64, 4).is_ok());
+    assert!(s.stencil_path(1000, 16).is_ok());
+    assert!(s.stencil_path(16000, 128).is_ok());
+    assert!(s.stencil_path(8000, 128).is_ok());
+}
+
+#[test]
+fn pjrt_matches_native_kernel_tiny() {
+    let s = store();
+    let path = s.stencil_path(64, 4).unwrap();
+    let nx = 64;
+    let steps = 4;
+    let ext: Vec<f64> = (0..nx + 2 * steps)
+        .map(|i| (i as f64 * 0.37).sin())
+        .collect();
+    for c in [0.0, 0.5, 0.9, 1.0] {
+        let outs = execute_f64(path, &[&ext, &[c]]).unwrap();
+        assert_eq!(outs.len(), 2, "expected (out, checksum) tuple");
+        assert_eq!(outs[0].len(), nx);
+        assert_eq!(outs[1].len(), 1);
+        let native = kernel::lax_wendroff_multistep(&ext, steps, c);
+        for (a, b) in outs[0].iter().zip(native.iter()) {
+            assert!((a - b).abs() < 1e-11, "c={c}: {a} vs {b}");
+        }
+        let ck_native = kernel::checksum(&native);
+        assert!((outs[1][0] - ck_native).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn pjrt_executable_cache_reuses_compilation() {
+    let s = store();
+    let path = s.stencil_path(64, 4).unwrap();
+    warmup(path).unwrap();
+    let n_before = rhpx::runtime::cached_executables();
+    let ext = vec![0.5f64; 72];
+    for _ in 0..10 {
+        execute_f64(path, &[&ext, &[0.9]]).unwrap();
+    }
+    assert_eq!(rhpx::runtime::cached_executables(), n_before);
+}
+
+#[test]
+fn stencil_run_on_pjrt_backend_matches_native() {
+    let s = store();
+    let rt = Runtime::builder().workers(2).build();
+    let base = StencilParams {
+        n_sub: 4,
+        nx: 64,
+        iterations: 3,
+        steps: 4,
+        courant: 1.0,
+        ..StencilParams::tiny()
+    };
+    let (native_out, _) = rhpx::stencil::run(&rt, &base).unwrap();
+    let pjrt = StencilParams {
+        backend: Backend::pjrt(&s, 64, 4).unwrap(),
+        ..base
+    };
+    let (pjrt_out, rep) = rhpx::stencil::run(&rt, &pjrt).unwrap();
+    assert_eq!(rep.launch_errors, 0);
+    assert_eq!(native_out.len(), pjrt_out.len());
+    for (a, b) in native_out.iter().zip(pjrt_out.iter()) {
+        assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn stencil_resilient_pjrt_run_with_failures() {
+    let s = store();
+    let rt = Runtime::builder().workers(2).build();
+    let params = StencilParams {
+        n_sub: 4,
+        nx: 64,
+        iterations: 3,
+        steps: 4,
+        courant: 1.0,
+        mode: Mode::Replay { n: 5 },
+        error_rate: Some(1.0), // P ≈ 0.37 per task
+        backend: Backend::pjrt(&s, 64, 4).unwrap(),
+        ..StencilParams::tiny()
+    };
+    let (_, rep) = rhpx::stencil::run(&rt, &params).unwrap();
+    assert!(rep.failures_injected > 0);
+    assert_eq!(rep.launch_errors, 0, "replay must absorb failures");
+}

@@ -1,0 +1,181 @@
+//! Integration: runtime + resilience + workload + config, cross-module.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use rhpx::config::RuntimeConfig;
+use rhpx::failure::FaultInjector;
+use rhpx::resilience;
+use rhpx::workload::{run, Variant, WorkloadParams};
+use rhpx::{async_, channel, dataflow, Runtime, TaskError, TaskResult};
+
+#[test]
+fn thousands_of_tasks_across_apis() {
+    let rt = Runtime::builder().workers(3).build();
+    let n = 2_000;
+    let counter = Arc::new(AtomicUsize::new(0));
+    let futs: Vec<_> = (0..n)
+        .map(|i| {
+            let c = Arc::clone(&counter);
+            match i % 3 {
+                0 => async_(&rt, move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    i as i64
+                }),
+                1 => resilience::async_replay(&rt, 3, move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    i as i64
+                }),
+                _ => {
+                    let dep = async_(&rt, move || i as i64);
+                    dataflow(
+                        &rt,
+                        move |v: Vec<i64>| {
+                            c.fetch_add(1, Ordering::SeqCst);
+                            v[0]
+                        },
+                        vec![dep],
+                    )
+                }
+            }
+        })
+        .collect();
+    let mut sum = 0i64;
+    for f in futs {
+        sum += f.get().unwrap();
+    }
+    assert_eq!(sum, (0..n as i64).sum::<i64>());
+    assert_eq!(counter.load(Ordering::SeqCst), n);
+}
+
+#[test]
+fn workload_replay_beats_unprotected_failures() {
+    let rt = Runtime::builder().workers(2).build();
+    let params = WorkloadParams {
+        tasks: 400,
+        grain_ns: 2_000,
+        error_rate: Some(1.0), // P(fail) ≈ 0.37
+        ..Default::default()
+    };
+    let plain = run(&rt, Variant::Plain, &params);
+    // n = 20: P(exhaust) = (e^-1)^20 ≈ 2e-9 per launch — statistically
+    // impossible over 400 launches (n = 10 flaked ~2% of runs).
+    let replay = run(&rt, Variant::Replay { n: 20 }, &params);
+    assert!(plain.launch_errors > 0, "plain must observe failures");
+    assert_eq!(replay.launch_errors, 0, "replay(20) must absorb failures");
+}
+
+#[test]
+fn deep_dependency_chain_with_failures_recovers() {
+    let rt = Runtime::builder().workers(2).build();
+    let inj = FaultInjector::new(1.5, 42); // P ≈ 0.22
+    let mut f = async_(&rt, || 0i64);
+    for _ in 0..200 {
+        let inj = inj.clone();
+        f = resilience::dataflow_replay(
+            &rt,
+            10,
+            move |v: &[i64]| -> TaskResult<i64> {
+                inj.draw("chain")?;
+                Ok(v[0] + 1)
+            },
+            vec![f],
+        );
+    }
+    assert_eq!(f.get(), Ok(200));
+    assert!(inj.counters().injected() > 0);
+}
+
+#[test]
+fn channels_pipeline_through_workers() {
+    let rt = Runtime::builder().workers(2).build();
+    let (tx, rx) = channel::<i64>();
+    // producer task
+    let txc = tx.clone();
+    rhpx::apply(&rt, move || {
+        for i in 0..50 {
+            txc.send(i);
+        }
+    });
+    // consumer graph: sum the first 50
+    let mut sum = 0;
+    for _ in 0..50 {
+        sum += rx.recv().get().unwrap();
+    }
+    assert_eq!(sum, (0..50).sum::<i64>());
+}
+
+#[test]
+fn runtime_from_config_file() {
+    let dir = std::env::temp_dir().join(format!("rhpx_cfg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rhpx.toml");
+    std::fs::write(&path, "[runtime]\nworkers = 2\nreplay_attempts = 7\n").unwrap();
+    let cfg = RuntimeConfig::load(Some(&path)).unwrap();
+    let rt = Runtime::from_config(cfg);
+    assert_eq!(rt.workers(), 2);
+    assert_eq!(rt.config().replay_attempts, 7);
+    let f = async_(&rt, || 1i32);
+    assert_eq!(f.get(), Ok(1));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mixed_resilient_dag() {
+    // replay feeding replicate feeding vote — APIs compose through
+    // ordinary futures.
+    let rt = Runtime::builder().workers(2).build();
+    let a = resilience::async_replay(&rt, 3, || 10i64);
+    let b = resilience::dataflow_replicate(&rt, 3, |v: &[i64]| v[0] * 2, vec![a]);
+    let c = resilience::dataflow_replicate_vote(
+        &rt,
+        3,
+        resilience::vote_majority,
+        |v: &[i64]| v[0] + 1,
+        vec![b],
+    );
+    assert_eq!(c.get(), Ok(21));
+}
+
+#[test]
+fn resilience_error_taxonomy_end_to_end() {
+    let rt = Runtime::builder().workers(2).build();
+    // Exhausted
+    let f = resilience::async_replay(&rt, 2, || -> TaskResult<i32> { Err("x".into()) });
+    assert!(matches!(
+        f.get().unwrap_err(),
+        TaskError::Resilience(e) if matches!(*e, rhpx::ResilienceError::Exhausted { attempts: 2, .. })
+    ));
+    // AllReplicasFailed
+    let f = resilience::async_replicate(&rt, 2, || -> TaskResult<i32> { Err("y".into()) });
+    assert!(matches!(
+        f.get().unwrap_err(),
+        TaskError::Resilience(e) if matches!(*e, rhpx::ResilienceError::AllReplicasFailed { replicas: 2, .. })
+    ));
+    // ValidationFailed
+    let f = resilience::async_replicate_validate(&rt, 2, |_: &i32| false, || 1i32);
+    assert!(matches!(
+        f.get().unwrap_err(),
+        TaskError::Resilience(e) if matches!(*e, rhpx::ResilienceError::ValidationFailed { replicas: 2 })
+    ));
+}
+
+#[test]
+fn scheduler_steals_across_workers() {
+    // Push a burst from the main thread (injector) and verify it drains
+    // with multiple workers picking up tasks.
+    let rt = Runtime::builder().workers(4).build();
+    let barrier = Arc::new(std::sync::Barrier::new(1));
+    let _ = barrier;
+    let counter = Arc::new(AtomicUsize::new(0));
+    for _ in 0..500 {
+        let c = Arc::clone(&counter);
+        rhpx::apply(&rt, move || {
+            rhpx::metrics::busy_wait_ns(10_000);
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+    }
+    rt.wait_idle();
+    assert_eq!(counter.load(Ordering::SeqCst), 500);
+    assert_eq!(rt.stats().completed, 500);
+}

@@ -1,0 +1,178 @@
+//! Integration: the stencil application end-to-end, including the
+//! coordinated-C/R baseline comparison the paper motivates in §I.
+
+use rhpx::checkpoint::{run_with_checkpoints, CheckpointStore, Storage};
+use rhpx::failure::FaultInjector;
+use rhpx::stencil::{self, Domain, Mode, StencilParams};
+use rhpx::Runtime;
+
+#[test]
+fn stencil_medium_run_exact() {
+    let rt = Runtime::builder().workers(2).build();
+    let params = StencilParams {
+        n_sub: 16,
+        nx: 128,
+        iterations: 25,
+        steps: 8,
+        courant: 1.0,
+        ..StencilParams::tiny()
+    };
+    let domain = Domain::sine(params.n_sub, params.nx);
+    let (out, rep) = stencil::run(&rt, &params).unwrap();
+    assert_eq!(rep.tasks, 400);
+    assert_eq!(rep.launch_errors, 0);
+    let shift = (params.iterations * params.steps) as f64;
+    let exact = domain.exact_sine_shifted(shift);
+    for (a, b) in out.iter().zip(exact.iter()) {
+        assert!((a - b).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn replicate_vote_defeats_silent_errors_in_stencil() {
+    // Silent corruption + replica voting: since replicas re-draw the
+    // corruption independently, a corrupted replica is outvoted by the
+    // two clean ones.
+    // NB: voting is consensus, not magic — if a strict majority of the n
+    // replicas of one task corrupt simultaneously (P ≈ C(n,⌈n/2⌉)·p^⌈n/2⌉),
+    // the launch legitimately fails with NoConsensus. With n = 5 and
+    // p = 0.02 that is ~1e-4 per task; we retry the whole run in the
+    // (rare) case the dice land there, since injector streams are
+    // thread-timing dependent.
+    let rt = Runtime::builder().workers(2).build();
+    let base = StencilParams {
+        mode: Mode::ReplicateVote { n: 5 },
+        silent_rate: Some(0.02),
+        ..StencilParams::tiny()
+    };
+    let domain = Domain::sine(base.n_sub, base.nx);
+    let mut done = false;
+    for attempt in 0..5 {
+        let params = StencilParams { seed: base.seed + attempt, ..base.clone() };
+        let Ok((out, rep)) = stencil::run(&rt, &params) else { continue };
+        if rep.launch_errors > 0 {
+            continue;
+        }
+        if rep.silent_corruptions == 0 {
+            continue; // corruptor must fire for the test to be meaningful
+        }
+        let shift = (params.iterations * params.steps) as f64;
+        let exact = domain.exact_sine_shifted(shift);
+        for (a, b) in out.iter().zip(exact.iter()) {
+            assert!((a - b).abs() < 1e-9, "silent error leaked through voting");
+        }
+        done = true;
+        break;
+    }
+    assert!(done, "no clean voted run in 5 attempts — voting is broken");
+}
+
+/// The paper's core economic argument (§I): under local failures, task
+/// replay redoes only the failed task, while coordinated C/R rolls the
+/// whole application back to the last global snapshot. Measure redone
+/// work on identical failure sequences.
+#[test]
+fn task_replay_redoes_less_work_than_coordinated_cr() {
+    let iterations = 60u64;
+    let n_sub = 8usize;
+    let p_fail = 0.05;
+
+    // --- coordinated C/R over the same logical workload ---
+    let store = CheckpointStore::new(Storage::Memory);
+    let inj = FaultInjector::with_probability(p_fail, 1234);
+    let mut state: Vec<f64> = vec![0.0; n_sub];
+    let cr = run_with_checkpoints(&mut state, iterations, 10, &store, |_, s| {
+        // one "iteration" = n_sub subdomain tasks; any task failure is a
+        // global failure under coordinated C/R
+        for v in s.iter_mut() {
+            inj.draw("cr-task")?;
+            *v += 1.0;
+        }
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(state, vec![iterations as f64; n_sub]);
+
+    // --- task replay over the same workload ---
+    let rt = Runtime::builder().workers(2).build();
+    let inj2 = FaultInjector::with_probability(p_fail, 1234);
+    let mut replay_reexecutions = 0u64;
+    for _ in 0..iterations {
+        for _ in 0..n_sub {
+            let i = inj2.clone();
+            let f = rhpx::resilience::async_replay(&rt, 20, move || -> rhpx::TaskResult<()> {
+                i.draw("replay-task")?;
+                Ok(())
+            });
+            f.get().unwrap();
+        }
+    }
+    // replay's redone work = injected failures (each failure redoes ONE task)
+    replay_reexecutions += inj2.counters().injected();
+
+    // C/R redone work = redone iterations × n_sub tasks each
+    let cr_reexecutions = cr.redone * n_sub as u64 + cr.rollbacks; // + failed attempts
+    assert!(cr.rollbacks > 0, "C/R must have rolled back at this failure rate");
+    assert!(
+        cr_reexecutions > replay_reexecutions,
+        "C/R redid {cr_reexecutions} task-equivalents, replay only {replay_reexecutions}"
+    );
+}
+
+#[test]
+fn stencil_checkpoint_restart_equivalence() {
+    // Running the stencil under C/R yields bit-identical results to the
+    // uninterrupted run (rollback must be exact).
+    let n_sub = 4;
+    let nx = 32;
+    let steps = 2;
+    let domain0 = Domain::sine(n_sub, nx);
+
+    let advance = |d: &Vec<Vec<f64>>| -> Vec<Vec<f64>> {
+        let chunks: Vec<stencil::Chunk> =
+            d.iter().map(|v| stencil::Chunk::new(v.clone())).collect();
+        (0..n_sub)
+            .map(|j| {
+                let ext = stencil::build_extended(
+                    &chunks[(j + n_sub - 1) % n_sub],
+                    &chunks[j],
+                    &chunks[(j + 1) % n_sub],
+                    steps,
+                );
+                stencil::kernel::lax_wendroff_multistep(&ext, steps, 1.0)
+            })
+            .collect()
+    };
+
+    // Uninterrupted reference.
+    let mut reference: Vec<Vec<f64>> =
+        domain0.subdomains.iter().map(|c| c.data.to_vec()).collect();
+    for _ in 0..20 {
+        reference = advance(&reference);
+    }
+
+    // C/R run with injected failures.
+    let store = CheckpointStore::new(Storage::Memory);
+    let inj = FaultInjector::with_probability(0.15, 77);
+    let mut state: Vec<Vec<f64>> =
+        domain0.subdomains.iter().map(|c| c.data.to_vec()).collect();
+    let rep = run_with_checkpoints(&mut state, 20, 5, &store, |_, s| {
+        inj.draw("stencil-cr")?;
+        *s = advance(s);
+        Ok(())
+    })
+    .unwrap();
+    assert!(rep.rollbacks > 0);
+    assert_eq!(state, reference, "C/R result must match uninterrupted run");
+}
+
+#[test]
+fn large_window_bounds_inflight_memory() {
+    // window = 1: full barrier every iteration; still correct.
+    let rt = Runtime::builder().workers(2).build();
+    let params = StencilParams { window: 1, ..StencilParams::tiny() };
+    let (out1, _) = stencil::run(&rt, &params).unwrap();
+    let params = StencilParams { window: 1000, ..StencilParams::tiny() };
+    let (out2, _) = stencil::run(&rt, &params).unwrap();
+    assert_eq!(out1, out2);
+}

@@ -1,0 +1,277 @@
+//! Property-based tests over the coordinator invariants (mini-proptest
+//! harness in `rhpx::testing` — no external crates offline).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use rhpx::resilience::{
+    async_replay, async_replicate, async_replicate_vote, vote_majority,
+};
+use rhpx::stencil::{self, Mode, StencilParams};
+use rhpx::testing::{check, gen, PropConfig};
+use rhpx::{async_, when_all, Runtime, TaskResult};
+
+/// ∀ worker counts and task counts: every spawned task runs exactly once.
+#[test]
+fn prop_every_task_runs_exactly_once() {
+    check("exactly-once", PropConfig { cases: 24, seed: 0x11 }, |rng| {
+        let workers = gen::usize_in(rng, 1, 4);
+        let tasks = gen::usize_in(rng, 1, 300);
+        let rt = Runtime::builder().workers(workers).build();
+        let counter = Arc::new(AtomicUsize::new(0));
+        let futs: Vec<_> = (0..tasks)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                async_(&rt, move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    0u8
+                })
+            })
+            .collect();
+        for f in futs {
+            f.get().map_err(|e| e.to_string())?;
+        }
+        let ran = counter.load(Ordering::SeqCst);
+        if ran != tasks {
+            return Err(format!("{ran} executions for {tasks} tasks"));
+        }
+        let stats = rt.stats();
+        if stats.spawned != tasks as u64 {
+            return Err(format!("spawned {} != {tasks}", stats.spawned));
+        }
+        Ok(())
+    });
+}
+
+/// ∀ n, failure patterns: replay runs min(first_success, n) attempts and
+/// never more than n.
+#[test]
+fn prop_replay_attempt_bound() {
+    check("replay-bound", PropConfig { cases: 48, seed: 0x22 }, |rng| {
+        let n = gen::usize_in(rng, 1, 6);
+        let fail_first = gen::usize_in(rng, 0, 8);
+        let rt = Runtime::builder().workers(2).build();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replay(&rt, n, move || -> TaskResult<u32> {
+            if c.fetch_add(1, Ordering::SeqCst) < fail_first {
+                Err("boom".into())
+            } else {
+                Ok(1)
+            }
+        });
+        let result = f.get();
+        let attempts = calls.load(Ordering::SeqCst);
+        let expected = (fail_first + 1).min(n);
+        if attempts != expected {
+            return Err(format!("n={n} fail_first={fail_first}: {attempts} attempts, expected {expected}"));
+        }
+        match result {
+            Ok(_) if fail_first < n => Ok(()),
+            Err(_) if fail_first >= n => Ok(()),
+            other => Err(format!("wrong outcome {other:?} for n={n} fail_first={fail_first}")),
+        }
+    });
+}
+
+/// ∀ n: replicate launches exactly n replicas, eagerly.
+#[test]
+fn prop_replicate_launch_count() {
+    check("replicate-count", PropConfig { cases: 24, seed: 0x33 }, |rng| {
+        let n = gen::usize_in(rng, 1, 8);
+        let rt = Runtime::builder().workers(2).build();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replicate(&rt, n, move || {
+            c.fetch_add(1, Ordering::SeqCst);
+            7i32
+        });
+        f.get().map_err(|e| e.to_string())?;
+        rt.wait_idle();
+        let launched = calls.load(Ordering::SeqCst);
+        if launched != n {
+            return Err(format!("launched {launched}, expected {n}"));
+        }
+        Ok(())
+    });
+}
+
+/// ∀ minority corruption patterns: majority vote returns the true value.
+#[test]
+fn prop_vote_defeats_minority_corruption() {
+    check("vote-minority", PropConfig { cases: 48, seed: 0x44 }, |rng| {
+        let n = 2 * gen::usize_in(rng, 1, 3) + 1; // odd: 3,5,7
+        let corrupt = gen::usize_in(rng, 0, n / 2); // strict minority
+        let rt = Runtime::builder().workers(2).build();
+        let idx = Arc::new(AtomicUsize::new(0));
+        let i = Arc::clone(&idx);
+        let f = async_replicate_vote(&rt, n, vote_majority, move || {
+            // The first `corrupt` replicas silently return garbage.
+            if i.fetch_add(1, Ordering::SeqCst) < corrupt {
+                -1i64
+            } else {
+                42i64
+            }
+        });
+        match f.get() {
+            Ok(42) => Ok(()),
+            other => Err(format!("n={n} corrupt={corrupt}: {other:?}")),
+        }
+    });
+}
+
+/// ∀ completion orders: when_all preserves input order.
+#[test]
+fn prop_when_all_order_invariant() {
+    check("when-all-order", PropConfig { cases: 32, seed: 0x55 }, |rng| {
+        let n = gen::usize_in(rng, 1, 40);
+        let rt = Runtime::builder().workers(3).build();
+        let futs: Vec<_> = (0..n)
+            .map(|i| {
+                // Randomize completion order via random busy work.
+                let spin = gen::usize_in(rng, 0, 500);
+                async_(&rt, move || {
+                    for _ in 0..spin {
+                        std::hint::spin_loop();
+                    }
+                    i as i64
+                })
+            })
+            .collect();
+        let all = when_all(futs).get().map_err(|e| e.to_string())?;
+        let expect: Vec<i64> = (0..n as i64).collect();
+        if all != expect {
+            return Err(format!("order violated: {all:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// ∀ small stencil configurations: the global checksum is conserved and
+/// replay under injected failures yields the identical result to the
+/// failure-free run.
+#[test]
+fn prop_stencil_replay_equals_pure() {
+    check("stencil-replay-exact", PropConfig { cases: 10, seed: 0x66 }, |rng| {
+        let n_sub = gen::usize_in(rng, 2, 6);
+        let steps = gen::usize_in(rng, 1, 4);
+        let nx = gen::usize_in(rng, steps.max(4), 32);
+        let iterations = gen::usize_in(rng, 1, 6);
+        let rt = Runtime::builder().workers(2).build();
+        let base = StencilParams {
+            n_sub,
+            nx,
+            iterations,
+            steps,
+            courant: 0.9,
+            ..StencilParams::tiny()
+        };
+        let (pure, _) = stencil::run(&rt, &base).map_err(|e| e.to_string())?;
+        let resilient = StencilParams {
+            mode: Mode::Replay { n: 8 },
+            error_rate: Some(1.0),
+            ..base
+        };
+        let (replayed, rep) = stencil::run(&rt, &resilient).map_err(|e| e.to_string())?;
+        if rep.launch_errors != 0 {
+            return Err(format!("launch errors: {}", rep.launch_errors));
+        }
+        if pure != replayed {
+            return Err("replayed result diverged from pure run".into());
+        }
+        Ok(())
+    });
+}
+
+/// ∀ random inputs: the Rust kernel conserves the sum for interior-only
+/// updates against the analytic telescoping property of the flux form.
+#[test]
+fn prop_kernel_linearity() {
+    // Lax-Wendroff is linear: K(a·u + b·v) = a·K(u) + b·K(v).
+    check("kernel-linearity", PropConfig { cases: 40, seed: 0x77 }, |rng| {
+        let steps = gen::usize_in(rng, 1, 5);
+        let nx = gen::usize_in(rng, 4, 40);
+        let len = nx + 2 * steps;
+        let u = gen::vec_f64(rng, len, len, -1.0, 1.0);
+        let v = gen::vec_f64(rng, len, len, -1.0, 1.0);
+        let a = gen::f64_in(rng, -2.0, 2.0);
+        let b = gen::f64_in(rng, -2.0, 2.0);
+        let c = gen::f64_in(rng, 0.0, 1.0);
+        let combo: Vec<f64> = u.iter().zip(&v).map(|(x, y)| a * x + b * y).collect();
+        let k_combo = stencil::kernel::lax_wendroff_multistep(&combo, steps, c);
+        let ku = stencil::kernel::lax_wendroff_multistep(&u, steps, c);
+        let kv = stencil::kernel::lax_wendroff_multistep(&v, steps, c);
+        for i in 0..k_combo.len() {
+            let expect = a * ku[i] + b * kv[i];
+            if (k_combo[i] - expect).abs() > 1e-9 {
+                return Err(format!("linearity violated at {i}: {} vs {expect}", k_combo[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ∀ random key/value docs: the TOML-subset parser round-trips values.
+#[test]
+fn prop_toml_roundtrip() {
+    use rhpx::config::toml::{parse, Value};
+    check("toml-roundtrip", PropConfig { cases: 64, seed: 0x88 }, |rng| {
+        let n = gen::usize_in(rng, 1, 12);
+        let mut src = String::from("[s]\n");
+        let mut expect: Vec<(String, Value)> = Vec::new();
+        for i in 0..n {
+            let key = format!("k{i}");
+            match gen::usize_in(rng, 0, 2) {
+                0 => {
+                    let v = gen::usize_in(rng, 0, 1_000_000) as i64 - 500_000;
+                    src.push_str(&format!("{key} = {v}\n"));
+                    expect.push((key, Value::Int(v)));
+                }
+                1 => {
+                    let v = (gen::f64_in(rng, -100.0, 100.0) * 8.0).round() / 8.0;
+                    src.push_str(&format!("{key} = {v:?}\n"));
+                    expect.push((key, Value::Float(v)));
+                }
+                _ => {
+                    let v = gen::bool_with(rng, 0.5);
+                    src.push_str(&format!("{key} = {v}\n"));
+                    expect.push((key, Value::Bool(v)));
+                }
+            }
+        }
+        let doc = parse(&src).map_err(|e| e.to_string())?;
+        for (key, val) in expect {
+            let got = doc.get(&format!("s.{key}")).ok_or(format!("missing {key}"))?;
+            match (got, &val) {
+                (Value::Float(a), Value::Float(b)) if (a - b).abs() < 1e-9 => {}
+                _ if got == &val => {}
+                _ => return Err(format!("{key}: {got:?} != {val:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ∀ random migration sequences: AGAS locate always reflects the last
+/// migrate, and generation counts migrations exactly.
+#[test]
+fn prop_agas_migration_consistency() {
+    use rhpx::agas::{Agas, LocalityId};
+    check("agas-migrations", PropConfig { cases: 32, seed: 0x99 }, |rng| {
+        let agas = Agas::new();
+        let gid = agas.register(LocalityId(0), 0u8);
+        let moves = gen::usize_in(rng, 0, 20);
+        let mut last = 0usize;
+        for _ in 0..moves {
+            last = gen::usize_in(rng, 0, 7);
+            agas.migrate(gid, LocalityId(last));
+        }
+        if agas.locate(gid) != Some(LocalityId(if moves == 0 { 0 } else { last })) {
+            return Err("locate out of sync".into());
+        }
+        if agas.generation(gid) != Some(moves as u64) {
+            return Err(format!("generation {:?} != {moves}", agas.generation(gid)));
+        }
+        Ok(())
+    });
+}
