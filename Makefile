@@ -1,0 +1,63 @@
+# rhpx — build / verify / bench entry points.
+#
+# Tier-1 verification is exactly what CI runs:
+#     make build test
+# which is equivalent to `cargo build --release && cargo test -q`.
+
+CARGO ?= cargo
+PYTHON ?= python3
+BENCHES := perf_micro table1_async_overheads fig2_error_rates table2_stencil fig3_stencil_errors ablations
+
+.PHONY: all build test bench bench-smoke artifacts fmt fmt-check clippy clean help
+
+all: build
+
+help:
+	@echo "targets:"
+	@echo "  build       cargo build --release (lib, rhpx CLI, bench binaries)"
+	@echo "  test        cargo test -q (tier-1 verify; green on a bare checkout)"
+	@echo "  bench       run every bench binary, writing BENCH_<name>.json"
+	@echo "  bench-smoke same, at smoke scale (seconds, what CI runs)"
+	@echo "  artifacts   AOT-lower the JAX/Pallas kernels to artifacts/*.hlo.txt"
+	@echo "  fmt         cargo fmt"
+	@echo "  fmt-check   cargo fmt --check"
+	@echo "  clippy      cargo clippy -- -D warnings"
+	@echo "  clean       cargo clean + remove bench outputs"
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Full-scale benches: one BENCH_<name>.json per harness.
+bench: build
+	@set -e; for b in $(BENCHES); do \
+		echo "== $$b =="; \
+		$(CARGO) run --release --bin $$b -- --json BENCH_$$b.json; \
+	done
+
+# Smoke-scale benches (what the CI bench-smoke job runs).
+bench-smoke: build
+	@set -e; for b in $(BENCHES); do \
+		echo "== $$b (smoke) =="; \
+		$(CARGO) run --release --bin $$b -- --smoke --json BENCH_$$b.json; \
+	done
+
+# AOT-lower the L1/L2 kernels to HLO text artifacts for the PJRT path.
+# Requires the Python toolchain (jax); the Rust build never does.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+fmt:
+	$(CARGO) fmt
+
+fmt-check:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+clean:
+	$(CARGO) clean
+	rm -f BENCH_*.json bench_*.csv

@@ -8,23 +8,20 @@
 //!  A4. Coordinated C/R vs task replay — redone work and wall time.
 //!  A5. PJRT vs native kernel dispatch cost on the stencil task.
 //!
+//!   cargo run --release --bin ablations -- [--smoke] [--json PATH]
 //!   cargo bench --bench ablations
 
 use rhpx::checkpoint::{run_with_checkpoints, CheckpointStore, Storage};
 use rhpx::failure::FaultInjector;
-use rhpx::metrics::{Table, Timer};
+use rhpx::metrics::{BenchCli, JsonValue, Table, Timer};
 use rhpx::resilience;
 use rhpx::runtime::ArtifactStore;
 use rhpx::stencil::{self, Backend, StencilParams};
 use rhpx::workload::{run, Variant, WorkloadParams};
 use rhpx::{Runtime, TaskResult};
 
-fn scale() -> f64 {
-    std::env::var("RHPX_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.01)
-}
-
-fn a1_replication_factor(rt: &Runtime) {
-    let tasks = ((200_000.0 * scale()) as usize).max(500);
+fn a1_replication_factor(rt: &Runtime, scale: f64) -> Table {
+    let tasks = ((200_000.0 * scale) as usize).max(500);
     let params = WorkloadParams { tasks, grain_ns: 50_000, ..Default::default() };
     let mut t = Table::new(
         "A1: replicate(n) per-task cost, 50µs grain, no failures",
@@ -35,15 +32,16 @@ fn a1_replication_factor(rt: &Runtime) {
         t.add([n.to_string(), format!("{:.3}", rep.per_task_us), format!("{:.3}", rep.overhead_us)]);
     }
     print!("{}", t.render());
+    t
 }
 
-fn a2_grain_sweep(rt: &Runtime) {
+fn a2_grain_sweep(rt: &Runtime, scale: f64) -> Table {
     let mut t = Table::new(
         "A2: replay(3) relative overhead vs task grain (paper claims ~free at 200µs)",
         &["grain_us", "plain_us", "replay_us", "overhead_pct"],
     );
     for grain_us in [1u64, 10, 50, 100, 200, 500] {
-        let tasks = (((400_000 / grain_us.max(1)) as f64 * scale() * 10.0) as usize).max(200);
+        let tasks = (((400_000 / grain_us.max(1)) as f64 * scale * 10.0) as usize).max(200);
         let params = WorkloadParams { tasks, grain_ns: grain_us * 1000, ..Default::default() };
         let plain = run(rt, Variant::Plain, &params);
         let replay = run(rt, Variant::Replay { n: 3 }, &params);
@@ -56,10 +54,11 @@ fn a2_grain_sweep(rt: &Runtime) {
         ]);
     }
     print!("{}", t.render());
+    t
 }
 
-fn a3_replicate_replay(rt: &Runtime) {
-    let n_launches = ((50_000.0 * scale()) as usize).max(200);
+fn a3_replicate_replay(rt: &Runtime, scale: f64) -> Table {
+    let n_launches = ((50_000.0 * scale) as usize).max(200);
     let p = 0.20; // heavy failures: where the nested replay pays off
     let mut t = Table::new(
         "A3: replicate(3) vs replicate(3)+replay(3) under 20% failures",
@@ -90,10 +89,11 @@ fn a3_replicate_replay(rt: &Runtime) {
     }
     print!("{}", t.render());
     println!("(nested replay should drive launch_errors to ~0: p_fail^9 vs p_fail^3)\n");
+    t
 }
 
-fn a4_cr_vs_replay(rt: &Runtime) {
-    let iterations = ((2_000.0 * scale() * 10.0) as u64).max(100);
+fn a4_cr_vs_replay(rt: &Runtime, scale: f64) -> Table {
+    let iterations = ((2_000.0 * scale * 10.0) as u64).max(100);
     let n_sub = 8;
     let p = 0.02;
     let mut t = Table::new(
@@ -148,14 +148,22 @@ fn a4_cr_vs_replay(rt: &Runtime) {
         "0".to_string(),
     ]);
     print!("{}", t.render());
+    t
 }
 
-fn a5_pjrt_vs_native(rt: &Runtime) {
-    let Ok(store) = ArtifactStore::open(std::path::Path::new("artifacts")) else {
-        println!("A5: skipped (run `make artifacts` first)\n");
-        return;
+fn a5_pjrt_vs_native(rt: &Runtime, scale: f64) -> Option<Table> {
+    if !rhpx::runtime::pjrt_available() {
+        println!("A5: skipped (PJRT engine not compiled in; see rust/Cargo.toml)\n");
+        return None;
+    }
+    let store = match ArtifactStore::open(std::path::Path::new("artifacts")) {
+        Ok(s) if !s.is_empty() => s,
+        _ => {
+            println!("A5: skipped (run `make artifacts` first)\n");
+            return None;
+        }
     };
-    let iters = ((8192.0 * scale() * 0.2) as usize).max(4);
+    let iters = ((8192.0 * scale * 0.2) as usize).max(4);
     let base = StencilParams {
         n_sub: 8,
         nx: 1000,
@@ -181,14 +189,22 @@ fn a5_pjrt_vs_native(rt: &Runtime) {
         ]);
     }
     print!("{}", t.render());
+    Some(t)
 }
 
 fn main() {
+    let cli = BenchCli::parse();
+    let scale = cli.scale_from_env(0.01);
     let rt = Runtime::builder().build();
-    println!("== ablations (scale {}) on {} workers ==\n", scale(), rt.workers());
-    a1_replication_factor(&rt);
-    a2_grain_sweep(&rt);
-    a3_replicate_replay(&rt);
-    a4_cr_vs_replay(&rt);
-    a5_pjrt_vs_native(&rt);
+    println!("== ablations (scale {}) on {} workers ==\n", scale, rt.workers());
+    let mut sections: Vec<(String, JsonValue)> = Vec::new();
+    sections.push(("a1_replication_factor".into(), a1_replication_factor(&rt, scale).to_json()));
+    sections.push(("a2_grain_sweep".into(), a2_grain_sweep(&rt, scale).to_json()));
+    sections.push(("a3_replicate_replay".into(), a3_replicate_replay(&rt, scale).to_json()));
+    sections.push(("a4_cr_vs_replay".into(), a4_cr_vs_replay(&rt, scale).to_json()));
+    sections.push((
+        "a5_pjrt_vs_native".into(),
+        a5_pjrt_vs_native(&rt, scale).map_or(JsonValue::Null, |t| t.to_json()),
+    ));
+    cli.emit("ablations", JsonValue::obj(sections));
 }

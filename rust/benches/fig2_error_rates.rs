@@ -1,17 +1,26 @@
 //! Bench: regenerate Fig 2a/2b (extra execution time per task vs error
 //! probability; replay grows ~linearly, replicate stays flat).
 //!
+//!   cargo run --release --bin fig2_error_rates -- [--smoke] [--json PATH]
 //!   cargo bench --bench fig2_error_rates
 
 use rhpx::harness::{emit, fig2, HarnessOpts};
+use rhpx::metrics::BenchCli;
 
 fn main() {
+    let cli = BenchCli::parse();
     let opts = HarnessOpts {
-        scale: std::env::var("RHPX_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.01),
-        repeats: std::env::var("RHPX_BENCH_REPEATS").ok().and_then(|s| s.parse().ok()).unwrap_or(3),
+        scale: cli.scale_from_env(0.01),
+        repeats: cli.repeats_from_env(3),
         csv: Some("bench_fig2.csv".into()),
         ..Default::default()
     };
-    let t = fig2::run_fig2(&opts, &fig2::default_probabilities());
+    let probs: Vec<f64> = if cli.smoke {
+        vec![0.0, 5.0]
+    } else {
+        fig2::default_probabilities()
+    };
+    let t = fig2::run_fig2(&opts, &probs);
     emit(&t, &opts);
+    cli.emit("fig2_error_rates", t.to_json());
 }

@@ -1,17 +1,26 @@
 //! Bench: regenerate Fig 3a/3b (1D stencil % extra execution time vs
 //! error probability, cases A and B, replay without+with checksums).
 //!
+//!   cargo run --release --bin fig3_stencil_errors -- [--smoke] [--json PATH]
 //!   cargo bench --bench fig3_stencil_errors
 
 use rhpx::harness::{emit, fig3, HarnessOpts, KernelBackend};
+use rhpx::metrics::BenchCli;
 
 fn main() {
+    let cli = BenchCli::parse();
     let opts = HarnessOpts {
-        scale: std::env::var("RHPX_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.003),
-        repeats: std::env::var("RHPX_BENCH_REPEATS").ok().and_then(|s| s.parse().ok()).unwrap_or(3),
+        scale: cli.scale_from_env(0.003),
+        repeats: cli.repeats_from_env(3),
         csv: Some("bench_fig3.csv".into()),
         ..Default::default()
     };
-    let t = fig3::run_fig3(&opts, &KernelBackend::Native, &fig3::default_probabilities(), 5);
+    let probs: Vec<f64> = if cli.smoke {
+        vec![0.0, 5.0]
+    } else {
+        fig3::default_probabilities()
+    };
+    let t = fig3::run_fig3(&opts, &KernelBackend::Native, &probs, 5);
     emit(&t, &opts);
+    cli.emit("fig3_stencil_errors", t.to_json());
 }

@@ -1,55 +1,97 @@
 //! Zero-grain launch-overhead microbench (the §Perf instrument in
 //! EXPERIMENTS.md): per-launch cost of each API with no task work,
 //! isolating pure runtime overhead.
+//!
+//!   cargo run --release --bin perf_micro -- [--smoke] [--json PATH]
+//!   cargo bench --bench perf_micro -- --smoke --json BENCH_perf_micro.json
+//!
+//! Emits one `ns_per_launch` number per API (`async_`, `async_replay`,
+//! `async_replicate`, `dataflow`, `stencil_task`) — the baseline every
+//! future scheduler/future/resilience optimization is diffed against.
 
-// zero-grain overhead microbench: pure per-launch runtime cost
-use rhpx::{Runtime, async_};
+use rhpx::metrics::{BenchCli, JsonValue, Timer};
 use rhpx::resilience::{async_replay, async_replicate};
+use rhpx::{async_, Runtime};
 
-use rhpx::metrics::Timer;
+/// Launch `n` zero-work tasks through `launch`, retiring in windows of
+/// 1024 to bound memory; returns amortized ns per launch.
+fn measure<F: FnMut(&Runtime) -> rhpx::Future<i32>>(rt: &Runtime, n: usize, mut launch: F) -> f64 {
+    let t = Timer::start();
+    let mut fs = Vec::with_capacity(1024);
+    for _ in 0..n {
+        fs.push(launch(rt));
+        if fs.len() == 1024 {
+            for f in fs.drain(..) {
+                let _ = f.get();
+            }
+        }
+    }
+    for f in fs {
+        let _ = f.get();
+    }
+    t.elapsed_secs() * 1e9 / n as f64
+}
 
 fn main() {
+    let cli = BenchCli::parse();
     let rt = Runtime::builder().workers(1).build();
-    let n = 200_000;
-    // async_
-    let t = Timer::start();
-    let mut fs = Vec::with_capacity(1024);
-    for _ in 0..n {
-        fs.push(async_(&rt, || 1i32));
-        if fs.len() == 1024 { for f in fs.drain(..) { let _ = f.get(); } }
-    }
-    for f in fs { let _ = f.get(); }
-    println!("async_      : {:.0} ns/launch", t.elapsed_secs()*1e9/n as f64);
-    // replay
-    let t = Timer::start();
-    let mut fs = Vec::with_capacity(1024);
-    for _ in 0..n {
-        fs.push(async_replay(&rt, 3, || 1i32));
-        if fs.len() == 1024 { for f in fs.drain(..) { let _ = f.get(); } }
-    }
-    for f in fs { let _ = f.get(); }
-    println!("replay(3)   : {:.0} ns/launch", t.elapsed_secs()*1e9/n as f64);
-    // replicate
-    let n2 = n/3;
-    let t = Timer::start();
-    let mut fs = Vec::with_capacity(1024);
-    for _ in 0..n2 {
-        fs.push(async_replicate(&rt, 3, || 1i32));
-        if fs.len() == 1024 { for f in fs.drain(..) { let _ = f.get(); } }
-    }
-    for f in fs { let _ = f.get(); }
-    println!("replicate(3): {:.0} ns/launch", t.elapsed_secs()*1e9/n2 as f64);
-    // dataflow chain
+    let n = if cli.smoke { 20_000 } else { 200_000 };
+
+    let mut results: Vec<(&str, f64)> = Vec::new();
+
+    let ns = measure(&rt, n, |rt| async_(rt, || 1i32));
+    println!("async_         : {ns:.0} ns/launch");
+    results.push(("async_", ns));
+
+    let ns = measure(&rt, n, |rt| async_replay(rt, 3, || 1i32));
+    println!("async_replay   : {ns:.0} ns/launch");
+    results.push(("async_replay", ns));
+
+    let ns = measure(&rt, n / 3, |rt| async_replicate(rt, 3, || 1i32));
+    println!("async_replicate: {ns:.0} ns/launch");
+    results.push(("async_replicate", ns));
+
+    // dataflow chain: per-link cost of dependency tracking.
+    let links = n / 4;
     let t = Timer::start();
     let mut f = async_(&rt, || 0i64);
-    for _ in 0..n/4 {
-        f = rhpx::dataflow(&rt, |v: Vec<i64>| v[0]+1, vec![f]);
+    for _ in 0..links {
+        f = rhpx::dataflow(&rt, |v: Vec<i64>| v[0] + 1, vec![f]);
     }
     let _ = f.get();
-    println!("dataflow    : {:.0} ns/link", t.elapsed_secs()*1e9/(n/4) as f64);
+    let ns = t.elapsed_secs() * 1e9 / links as f64;
+    println!("dataflow       : {ns:.0} ns/link");
+    results.push(("dataflow", ns));
+
     // stencil-shaped dataflow (3 deps, Chunk-sized payload clones)
-    let params = rhpx::stencil::StencilParams { n_sub: 8, nx: 64, iterations: 500, steps: 4, courant: 0.9, window: 16, ..rhpx::stencil::StencilParams::tiny() };
+    let iterations = if cli.smoke { 100 } else { 500 };
+    let params = rhpx::stencil::StencilParams {
+        n_sub: 8,
+        nx: 64,
+        iterations,
+        steps: 4,
+        courant: 0.9,
+        window: 16,
+        ..rhpx::stencil::StencilParams::tiny()
+    };
     let t = Timer::start();
     let (_, rep) = rhpx::stencil::run(&rt, &params).unwrap();
-    println!("stencil task: {:.0} ns/task ({} tasks)", t.elapsed_secs()*1e9/rep.tasks as f64, rep.tasks);
+    let ns = t.elapsed_secs() * 1e9 / rep.tasks as f64;
+    println!("stencil task   : {ns:.0} ns/task ({} tasks)", rep.tasks);
+    results.push(("stencil_task", ns));
+
+    cli.emit(
+        "perf_micro",
+        JsonValue::Arr(
+            results
+                .into_iter()
+                .map(|(name, ns)| {
+                    JsonValue::obj([
+                        ("name".to_string(), JsonValue::from(name)),
+                        ("ns_per_launch".to_string(), JsonValue::from(ns)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
 }

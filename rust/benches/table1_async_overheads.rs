@@ -1,20 +1,30 @@
 //! Bench: regenerate Table I (amortized per-task overhead of resilient
 //! async variants vs core count, 200µs grain, no failures).
 //!
+//!   cargo run --release --bin table1_async_overheads -- [--smoke] [--json PATH]
 //!   cargo bench --bench table1_async_overheads
 //!
 //! Env: RHPX_BENCH_SCALE (default 0.01 of the paper's 1M tasks),
-//!      RHPX_BENCH_REPEATS (default 3).
+//!      RHPX_BENCH_REPEATS (default 3). `--smoke` overrides both down to
+//!      a seconds-scale run.
 
 use rhpx::harness::{emit, table1, HarnessOpts};
+use rhpx::metrics::BenchCli;
 
 fn main() {
+    let cli = BenchCli::parse();
     let opts = HarnessOpts {
-        scale: std::env::var("RHPX_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.01),
-        repeats: std::env::var("RHPX_BENCH_REPEATS").ok().and_then(|s| s.parse().ok()).unwrap_or(3),
+        scale: cli.scale_from_env(0.01),
+        repeats: cli.repeats_from_env(3),
         csv: Some("bench_table1.csv".into()),
         ..Default::default()
     };
-    let t = table1::run_table1(&opts, &table1::default_cores(), 3);
+    let cores: Vec<usize> = if cli.smoke {
+        vec![1, 2]
+    } else {
+        table1::default_cores()
+    };
+    let t = table1::run_table1(&opts, &cores, 3);
     emit(&t, &opts);
+    cli.emit("table1_async_overheads", t.to_json());
 }

@@ -1,29 +1,49 @@
 //! Bench: regenerate Table II (1D stencil wall time, no failures: pure
 //! dataflow / replay without+with checksums / replicate; cases A and B).
 //!
+//!   cargo run --release --bin table2_stencil -- [--smoke] [--json PATH]
 //!   cargo bench --bench table2_stencil
 //!
 //! Env: RHPX_BENCH_SCALE (default 0.005 of 8192 iterations),
-//!      RHPX_BENCH_BACKEND=pjrt to run on the AOT JAX/Pallas kernel.
+//!      RHPX_BENCH_BACKEND=pjrt to run on the AOT JAX/Pallas kernel
+//!      (requires the PJRT engine and `make artifacts`; falls back to
+//!      native with a note otherwise — the JSON payload records which
+//!      backend actually ran).
 
 use rhpx::harness::{emit, table2, HarnessOpts, KernelBackend};
+use rhpx::metrics::{BenchCli, JsonValue};
 use rhpx::runtime::ArtifactStore;
 
 fn main() {
+    let cli = BenchCli::parse();
     let opts = HarnessOpts {
-        scale: std::env::var("RHPX_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.005),
-        repeats: std::env::var("RHPX_BENCH_REPEATS").ok().and_then(|s| s.parse().ok()).unwrap_or(3),
+        scale: cli.scale_from_env(0.005),
+        repeats: cli.repeats_from_env(3),
         csv: Some("bench_table2.csv".into()),
         ..Default::default()
     };
-    let backend = if std::env::var("RHPX_BENCH_BACKEND").as_deref() == Ok("pjrt") {
-        KernelBackend::Pjrt(
-            ArtifactStore::open(std::path::Path::new("artifacts"))
-                .expect("run `make artifacts` first"),
-        )
+    let want_pjrt = std::env::var("RHPX_BENCH_BACKEND").as_deref() == Ok("pjrt");
+    let (backend, backend_label) = if want_pjrt {
+        let store = ArtifactStore::open(std::path::Path::new("artifacts"))
+            .expect("scan artifacts dir");
+        if rhpx::runtime::pjrt_available() && !store.is_empty() {
+            (KernelBackend::Pjrt(store), "pjrt")
+        } else {
+            eprintln!(
+                "note: PJRT unavailable (engine or artifacts missing) — using native kernel"
+            );
+            (KernelBackend::Native, "native (pjrt requested, unavailable)")
+        }
     } else {
-        KernelBackend::Native
+        (KernelBackend::Native, "native")
     };
     let t = table2::run_table2(&opts, &backend, 3);
     emit(&t, &opts);
+    cli.emit(
+        "table2_stencil",
+        JsonValue::obj([
+            ("backend".to_string(), JsonValue::from(backend_label)),
+            ("table".to_string(), t.to_json()),
+        ]),
+    );
 }

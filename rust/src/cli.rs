@@ -122,11 +122,15 @@ fn cmd_info() -> Result<(), String> {
     println!("rhpx {}", crate::VERSION);
     println!("available parallelism : {}", cfg.workers);
     println!("artifacts dir         : {}", cfg.artifacts_dir);
+    println!(
+        "pjrt engine           : {}",
+        if crate::runtime::pjrt_available() { "available" } else { "not compiled in" }
+    );
     match crate::runtime::ArtifactStore::open(std::path::Path::new(&cfg.artifacts_dir)) {
-        Ok(store) => {
+        Ok(store) if !store.is_empty() => {
             println!("artifacts             : {}", store.names().collect::<Vec<_>>().join(", "))
         }
-        Err(_) => println!("artifacts             : (none — run `make artifacts`)"),
+        _ => println!("artifacts             : (none — run `make artifacts`)"),
     }
     // Exercise the runtime briefly and publish its performance counters.
     let rt = Runtime::builder().workers(cfg.workers).build();
@@ -151,6 +155,13 @@ fn harness_opts(args: &Args) -> Result<HarnessOpts, String> {
     })
 }
 
+/// Shared diagnostic for `--backend pjrt` without the engine.
+fn pjrt_missing_msg() -> String {
+    "--backend pjrt: PJRT engine not compiled in (needs a vendored `xla` dependency \
+     plus --features pjrt; see rust/Cargo.toml)"
+        .to_string()
+}
+
 fn backend_from(args: &Args) -> Result<Backend, String> {
     match args.get_str("backend", "native").as_str() {
         "native" => Ok(Backend::Native),
@@ -171,10 +182,17 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
 
     let run_table2_fig3 = |which: &str| -> Result<(), String> {
         let backend = if use_pjrt {
-            KernelBackend::Pjrt(
-                crate::runtime::ArtifactStore::open(std::path::Path::new("artifacts"))
-                    .map_err(|e| e.to_string())?,
-            )
+            if !crate::runtime::pjrt_available() {
+                return Err(pjrt_missing_msg());
+            }
+            let store = crate::runtime::ArtifactStore::open(std::path::Path::new("artifacts"))
+                .map_err(|e| e.to_string())?;
+            if store.is_empty() {
+                return Err(
+                    "--backend pjrt: no artifacts found — run `make artifacts` first".into()
+                );
+            }
+            KernelBackend::Pjrt(store)
         } else {
             KernelBackend::Native
         };
@@ -241,6 +259,9 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
         params.silent_rate = Some(p_silent);
     }
     if args.get_str("backend", "native") == "pjrt" {
+        if !crate::runtime::pjrt_available() {
+            return Err(pjrt_missing_msg());
+        }
         let store = crate::runtime::ArtifactStore::open(std::path::Path::new("artifacts"))
             .map_err(|e| e.to_string())?;
         params.backend = Backend::pjrt(&store, params.nx, params.steps).map_err(|e| e.to_string())?;

@@ -1,0 +1,303 @@
+//! Machine-readable benchmark output: a dependency-free JSON encoder and
+//! the common `--smoke` / `--json <path>` CLI contract every bench binary
+//! implements.
+//!
+//! CI (and any future optimization PR) runs each bench as
+//! `cargo run --release --bin <bench> -- --smoke --json BENCH_<bench>.json`
+//! and diffs the emitted numbers. `--smoke` shrinks the workload to a
+//! seconds-scale run whose *shape* (keys, series) is identical to the
+//! full run; `--json` persists the results. Unknown flags are ignored so
+//! the binaries also run unchanged under `cargo bench` (which may pass
+//! harness flags of its own).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value (no external crates in the offline build).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    /// Ordered object (BTreeMap: deterministic output for diffing).
+    Obj(BTreeMap<String, JsonValue>),
+}
+
+impl JsonValue {
+    /// Convenience constructor for objects from (key, value) pairs.
+    pub fn obj<I: IntoIterator<Item = (String, JsonValue)>>(pairs: I) -> JsonValue {
+        JsonValue::Obj(pairs.into_iter().collect())
+    }
+
+    /// Serialize to a compact JSON string. Non-finite numbers become
+    /// `null` (JSON has no NaN/Inf).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Num(x) => {
+                if x.is_finite() {
+                    // Integral values print without a fraction for stable diffs.
+                    if *x == x.trunc() && x.abs() < 1e15 {
+                        let _ = write!(out, "{}", *x as i64);
+                    } else {
+                        let _ = write!(out, "{x}");
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            JsonValue::Str(s) => write_escaped(out, s),
+            JsonValue::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<f64> for JsonValue {
+    fn from(x: f64) -> Self {
+        JsonValue::Num(x)
+    }
+}
+
+impl From<u64> for JsonValue {
+    fn from(x: u64) -> Self {
+        JsonValue::Num(x as f64)
+    }
+}
+
+impl From<usize> for JsonValue {
+    fn from(x: usize) -> Self {
+        JsonValue::Num(x as f64)
+    }
+}
+
+impl From<bool> for JsonValue {
+    fn from(b: bool) -> Self {
+        JsonValue::Bool(b)
+    }
+}
+
+impl From<&str> for JsonValue {
+    fn from(s: &str) -> Self {
+        JsonValue::Str(s.to_string())
+    }
+}
+
+impl From<String> for JsonValue {
+    fn from(s: String) -> Self {
+        JsonValue::Str(s)
+    }
+}
+
+/// The common CLI contract of every bench binary.
+#[derive(Debug, Clone, Default)]
+pub struct BenchCli {
+    /// Shrink the workload to a seconds-scale smoke run.
+    pub smoke: bool,
+    /// Write the results as JSON to this path.
+    pub json: Option<String>,
+}
+
+impl BenchCli {
+    /// Parse `--smoke` and `--json <path>` / `--json=<path>` from the
+    /// process arguments, ignoring anything else (cargo's bench runner
+    /// may pass flags of its own).
+    pub fn parse() -> Self {
+        Self::from_args(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit argument iterator (testable core).
+    pub fn from_args<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut cli = BenchCli::default();
+        let args: Vec<String> = args.into_iter().collect();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--smoke" {
+                cli.smoke = true;
+            } else if a == "--json" {
+                // Only consume a value that isn't itself a flag, so
+                // `--json --smoke` (path forgotten) doesn't swallow
+                // --smoke and write a file literally named "--smoke".
+                match args.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        cli.json = Some(v.clone());
+                        i += 1;
+                    }
+                    _ => eprintln!("warning: --json expects a path; ignoring"),
+                }
+            } else if let Some(path) = a.strip_prefix("--json=") {
+                cli.json = Some(path.to_string());
+            }
+            i += 1;
+        }
+        cli
+    }
+
+    /// The default full-run scale, overridable via `RHPX_BENCH_SCALE`
+    /// (shared by every bench binary; `--smoke` still shrinks it).
+    pub fn scale_from_env(&self, default: f64) -> f64 {
+        let full = std::env::var("RHPX_BENCH_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default);
+        self.scale(full)
+    }
+
+    /// The default repeat count, overridable via `RHPX_BENCH_REPEATS`.
+    pub fn repeats_from_env(&self, default: usize) -> usize {
+        let full = std::env::var("RHPX_BENCH_REPEATS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default);
+        self.repeats(full)
+    }
+
+    /// Scale factor for workload sizing: callers multiply their default
+    /// scale by this (smoke runs shrink to ~1/10th and a single repeat).
+    pub fn scale(&self, full: f64) -> f64 {
+        if self.smoke {
+            (full * 0.1).max(1e-4)
+        } else {
+            full
+        }
+    }
+
+    /// Repeat count for workload sizing.
+    pub fn repeats(&self, full: usize) -> usize {
+        if self.smoke {
+            1
+        } else {
+            full
+        }
+    }
+
+    /// Write `value` (wrapped with standard metadata) to the `--json`
+    /// path, if one was given. `name` is the bench name recorded in the
+    /// payload. Panics on I/O failure: a bench that silently drops its
+    /// results must fail the CI job.
+    pub fn emit(&self, name: &str, value: JsonValue) {
+        let Some(path) = &self.json else { return };
+        let payload = JsonValue::obj([
+            ("bench".to_string(), JsonValue::from(name)),
+            ("smoke".to_string(), JsonValue::from(self.smoke)),
+            ("schema_version".to_string(), JsonValue::from(1u64)),
+            ("results".to_string(), value),
+        ]);
+        std::fs::write(path, payload.render() + "\n")
+            .unwrap_or_else(|e| panic!("failed to write {path}: {e}"));
+        println!("(json written to {path})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_scalars_and_nesting() {
+        let v = JsonValue::obj([
+            ("a".to_string(), JsonValue::from(1.5)),
+            ("b".to_string(), JsonValue::from("x\"y")),
+            (
+                "c".to_string(),
+                JsonValue::Arr(vec![JsonValue::from(true), JsonValue::Null]),
+            ),
+        ]);
+        assert_eq!(v.render(), r#"{"a":1.5,"b":"x\"y","c":[true,null]}"#);
+    }
+
+    #[test]
+    fn integral_floats_print_without_fraction() {
+        assert_eq!(JsonValue::from(3.0).render(), "3");
+        assert_eq!(JsonValue::from(3.25).render(), "3.25");
+        assert_eq!(JsonValue::Num(f64::NAN).render(), "null");
+        assert_eq!(JsonValue::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn escapes_control_characters() {
+        assert_eq!(JsonValue::from("a\nb\t\u{1}").render(), "\"a\\nb\\t\\u0001\"");
+    }
+
+    #[test]
+    fn cli_parses_smoke_and_json() {
+        let cli = BenchCli::from_args(
+            ["--bench", "--smoke", "--json", "out.json"].map(String::from),
+        );
+        assert!(cli.smoke);
+        assert_eq!(cli.json.as_deref(), Some("out.json"));
+        let cli = BenchCli::from_args(["--json=x.json"].map(String::from));
+        assert!(!cli.smoke);
+        assert_eq!(cli.json.as_deref(), Some("x.json"));
+        assert_eq!(cli.repeats(3), 3);
+        let smoke = BenchCli { smoke: true, json: None };
+        assert_eq!(smoke.repeats(3), 1);
+        assert!(smoke.scale(0.01) < 0.01);
+    }
+
+    #[test]
+    fn json_flag_does_not_swallow_following_flag() {
+        let cli = BenchCli::from_args(["--json", "--smoke"].map(String::from));
+        assert!(cli.smoke, "--smoke after a valueless --json must still apply");
+        assert_eq!(cli.json, None, "a flag is not a valid --json path");
+    }
+
+    #[test]
+    fn emit_writes_payload() {
+        let path = std::env::temp_dir().join(format!("rhpx_bench_json_{}.json", std::process::id()));
+        let cli = BenchCli { smoke: true, json: Some(path.to_string_lossy().into_owned()) };
+        cli.emit("unit", JsonValue::from(42.0));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""bench":"unit""#), "{text}");
+        assert!(text.contains(r#""results":42"#), "{text}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

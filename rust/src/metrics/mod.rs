@@ -1,9 +1,11 @@
 //! Timers, streaming statistics, and table/CSV rendering for the
 //! benchmark harnesses.
 
+pub mod bench_json;
 mod stats;
 mod table;
 
+pub use bench_json::{BenchCli, JsonValue};
 pub use stats::Stats;
 pub use table::Table;
 

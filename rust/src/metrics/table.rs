@@ -66,6 +66,40 @@ impl Table {
         out
     }
 
+    /// Render as a JSON value (`{"title", "header", "rows"}`) for the
+    /// `--json` bench contract. Cells that parse as numbers are emitted
+    /// as JSON numbers so downstream diffing tools can compare them.
+    pub fn to_json(&self) -> super::JsonValue {
+        use super::JsonValue;
+        let cell_value = |s: &str| -> JsonValue {
+            match s.parse::<f64>() {
+                Ok(x) if x.is_finite() => JsonValue::Num(x),
+                _ => JsonValue::Str(s.to_string()),
+            }
+        };
+        let rows: Vec<JsonValue> = self
+            .rows
+            .iter()
+            .map(|row| {
+                JsonValue::Obj(
+                    self.header
+                        .iter()
+                        .zip(row.iter())
+                        .map(|(h, c)| (h.clone(), cell_value(c)))
+                        .collect(),
+                )
+            })
+            .collect();
+        JsonValue::obj([
+            ("title".to_string(), JsonValue::Str(self.title.clone())),
+            (
+                "header".to_string(),
+                JsonValue::Arr(self.header.iter().map(|h| JsonValue::Str(h.clone())).collect()),
+            ),
+            ("rows".to_string(), JsonValue::Arr(rows)),
+        ])
+    }
+
     /// Render as CSV (header + rows) for the graphing scripts.
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
@@ -102,6 +136,16 @@ mod tests {
         t.add([1, 2]);
         t.add([3, 4]);
         assert_eq!(t.to_csv(), "x,y\n1,2\n3,4\n");
+    }
+
+    #[test]
+    fn json_output_parses_numeric_cells() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.add(["a", "1.5"]);
+        let j = t.to_json().render();
+        assert!(j.contains(r#""title":"demo""#), "{j}");
+        assert!(j.contains(r#""value":1.5"#), "{j}");
+        assert!(j.contains(r#""name":"a""#), "{j}");
     }
 
     #[test]

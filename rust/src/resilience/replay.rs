@@ -116,19 +116,19 @@ where
             Err(e) => Err(e.clone()),
         };
         match collapsed {
-        Ok(values) => {
-            let values: Arc<Vec<T>> = Arc::new(values);
-            let f = Arc::new(f);
-            let body: Body<U> = Arc::new(move || {
-                let values = Arc::clone(&values);
-                let f = Arc::clone(&f);
-                run_task_body(move || f(&values))
-            });
-            // Drive the replay loop straight into the outer promise: no
-            // intermediate future, no result forwarding/cloning.
-            schedule_attempt(rt2.clone(), p, body, validate, n.max(1), 1);
-        }
-        Err(e) => p.set_error(e),
+            Ok(values) => {
+                let values: Arc<Vec<T>> = Arc::new(values);
+                let f = Arc::new(f);
+                let body: Body<U> = Arc::new(move || {
+                    let values = Arc::clone(&values);
+                    let f = Arc::clone(&f);
+                    run_task_body(move || f(&values))
+                });
+                // Drive the replay loop straight into the outer promise: no
+                // intermediate future, no result forwarding/cloning.
+                schedule_attempt(rt2.clone(), p, body, validate, n.max(1), 1);
+            }
+            Err(e) => p.set_error(e),
         }
     });
     fut
@@ -262,6 +262,95 @@ mod tests {
             }
             other => panic!("unexpected: {other:?}"),
         }
+    }
+
+    #[test]
+    fn replay_exhaustion_runs_exactly_n_attempts_for_each_n() {
+        // The exhaustion contract, pinned across a range of n: a body
+        // that always fails runs exactly n times and surfaces
+        // ResilienceError::Exhausted { attempts: n }.
+        for n in 1..=6usize {
+            let rt = rt();
+            let calls = Arc::new(AtomicUsize::new(0));
+            let c = Arc::clone(&calls);
+            let f = async_replay(&rt, n, move || -> TaskResult<i32> {
+                c.fetch_add(1, Ordering::SeqCst);
+                Err("always".into())
+            });
+            let err = f.get().unwrap_err();
+            match err.as_resilience() {
+                Some(ResilienceError::Exhausted { attempts, last }) => {
+                    assert_eq!(*attempts, n, "n={n}");
+                    assert_eq!(last, &TaskError::App("always".to_string()));
+                }
+                other => panic!("n={n}: unexpected {other:?}"),
+            }
+            assert_eq!(calls.load(Ordering::SeqCst), n, "exactly n bodies must run");
+        }
+    }
+
+    #[test]
+    fn validator_rejection_counts_as_failed_attempt() {
+        // A result the validator rejects burns an attempt exactly like a
+        // thrown error: n rejections -> n body executions -> Exhausted
+        // with ValidationRejected as the last error.
+        let n = 4;
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replay_validate(
+            &rt,
+            n,
+            |_: &i32| false, // reject every result
+            move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                1i32
+            },
+        );
+        let err = f.get().unwrap_err();
+        match err.as_resilience() {
+            Some(ResilienceError::Exhausted { attempts, last }) => {
+                assert_eq!(*attempts, n);
+                assert_eq!(last, &TaskError::ValidationRejected);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert_eq!(
+            calls.load(Ordering::SeqCst),
+            n,
+            "each rejected result must count as one attempt"
+        );
+    }
+
+    #[test]
+    fn mixed_errors_and_rejections_share_the_attempt_budget() {
+        // Attempts 1-2 throw, attempts 3-4 compute but fail validation:
+        // the budget is shared, and the *last* failure kind is reported.
+        let n = 4;
+        let rt = rt();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = async_replay_validate(
+            &rt,
+            n,
+            |_: &usize| false,
+            move || -> TaskResult<usize> {
+                let i = c.fetch_add(1, Ordering::SeqCst);
+                if i < 2 {
+                    Err("thrown".into())
+                } else {
+                    Ok(i)
+                }
+            },
+        );
+        match f.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::Exhausted { attempts, last }) => {
+                assert_eq!(*attempts, n);
+                assert_eq!(last, &TaskError::ValidationRejected);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), n);
     }
 
     #[test]

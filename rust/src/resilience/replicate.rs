@@ -346,22 +346,22 @@ where
             Err(e) => Err(e.clone()),
         };
         match collapsed {
-        Ok(values) => {
-            let values: Arc<Vec<T>> = Arc::new(values);
-            let f = Arc::new(f);
-            let base: Body<U> = Arc::new(move || {
-                let values = Arc::clone(&values);
-                let f = Arc::clone(&f);
-                run_task_body(move || f(&values))
-            });
-            let body = if replay_each > 1 {
-                with_retries(base, validate.clone(), replay_each)
-            } else {
-                base
-            };
-            replicate_impl(&rt2, n, p, body, validate, voter);
-        }
-        Err(e) => p.set_error(e),
+            Ok(values) => {
+                let values: Arc<Vec<T>> = Arc::new(values);
+                let f = Arc::new(f);
+                let base: Body<U> = Arc::new(move || {
+                    let values = Arc::clone(&values);
+                    let f = Arc::clone(&f);
+                    run_task_body(move || f(&values))
+                });
+                let body = if replay_each > 1 {
+                    with_retries(base, validate.clone(), replay_each)
+                } else {
+                    base
+                };
+                replicate_impl(&rt2, n, p, body, validate, voter);
+            }
+            Err(e) => p.set_error(e),
         }
     });
     fut

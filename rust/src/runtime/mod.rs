@@ -7,53 +7,37 @@
 //! reassigns ids). This module loads those artifacts and executes them
 //! through the PJRT CPU client of the `xla` crate.
 //!
-//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so each
-//! worker thread lazily creates its own client and compiles artifacts
-//! into a thread-local executable cache ([`ThreadEngine`]): compilation
-//! happens once per (thread, artifact) and the request path afterwards is
-//! a pure in-thread PJRT execute with no locks and no Python.
+//! The PJRT path is gated behind the `pjrt` cargo feature because the
+//! `xla` crate must be vendored into the build environment (it is not on
+//! crates.io and the default build is fully offline with zero external
+//! dependencies). Without the feature, [`execute_f64`] and [`warmup`]
+//! return a `TaskError::Runtime` describing the situation, and every
+//! PJRT-backed test, bench, and harness checks [`pjrt_available`] first
+//! and skips cleanly — tier-1 verification stays green on a bare
+//! checkout with no artifacts and no PJRT runtime.
+//!
+//! With the feature enabled, the `xla` crate's `PjRtClient` is
+//! `Rc`-based (not `Send`), so each worker thread lazily creates its own
+//! client and compiles artifacts into a thread-local executable cache:
+//! compilation happens once per (thread, artifact) and the request path
+//! afterwards is a pure in-thread PJRT execute with no locks and no
+//! Python.
 
 mod artifact;
 
 pub use artifact::ArtifactStore;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use crate::error::{TaskError, TaskResult};
+use crate::error::TaskResult;
 
-thread_local! {
-    static ENGINE: RefCell<Option<ThreadEngine>> = const { RefCell::new(None) };
-}
-
-struct ThreadEngine {
-    client: xla::PjRtClient,
-    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
-}
-
-impl ThreadEngine {
-    fn new() -> TaskResult<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| TaskError::Runtime(format!("PjRtClient::cpu: {e}")))?;
-        Ok(ThreadEngine { client, cache: HashMap::new() })
-    }
-
-    fn executable(&mut self, path: &Path) -> TaskResult<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(path) {
-            let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
-                TaskError::Runtime(format!("non-utf8 artifact path {path:?}"))
-            })?)
-            .map_err(|e| TaskError::Runtime(format!("parse {}: {e}", path.display())))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| TaskError::Runtime(format!("compile {}: {e}", path.display())))?;
-            self.cache.insert(path.to_path_buf(), exe);
-        }
-        Ok(self.cache.get(path).expect("just inserted"))
-    }
+/// True when this build carries a working PJRT execution engine.
+///
+/// Callers that depend on AOT artifacts (the `Backend::Pjrt` stencil
+/// path, `tests/integration_pjrt.rs`, ablation A5) must skip — not fail —
+/// when this returns `false`.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
 }
 
 /// Execute the artifact at `path` with 1-D `f64` inputs, returning the
@@ -62,48 +46,157 @@ impl ThreadEngine {
 /// Artifacts are lowered with `return_tuple=True`; multi-output kernels
 /// come back as a tuple whose leaves are returned in order.
 pub fn execute_f64(path: &Path, inputs: &[&[f64]]) -> TaskResult<Vec<Vec<f64>>> {
-    ENGINE.with(|cell| {
-        let mut slot = cell.borrow_mut();
-        if slot.is_none() {
-            *slot = Some(ThreadEngine::new()?);
-        }
-        let engine = slot.as_mut().expect("initialized above");
-        let exe = engine.executable(path)?;
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|x| xla::Literal::vec1(x)).collect();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| TaskError::Runtime(format!("execute {}: {e}", path.display())))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| TaskError::Runtime(format!("to_literal: {e}")))?;
-        let tuple = out
-            .to_tuple()
-            .map_err(|e| TaskError::Runtime(format!("to_tuple: {e}")))?;
-        let mut vecs = Vec::with_capacity(tuple.len());
-        for leaf in tuple {
-            vecs.push(
-                leaf.to_vec::<f64>()
-                    .map_err(|e| TaskError::Runtime(format!("to_vec<f64>: {e}")))?,
-            );
-        }
-        Ok(vecs)
-    })
+    engine::execute_f64(path, inputs)
 }
 
 /// Number of executables cached on the current thread (diagnostics).
 pub fn cached_executables() -> usize {
-    ENGINE.with(|cell| cell.borrow().as_ref().map_or(0, |e| e.cache.len()))
+    engine::cached_executables()
 }
 
 /// Pre-compile an artifact on the current thread so first-task latency
 /// doesn't include compilation (benchmark warmup).
 pub fn warmup(path: &Path) -> TaskResult<()> {
-    ENGINE.with(|cell| {
-        let mut slot = cell.borrow_mut();
-        if slot.is_none() {
-            *slot = Some(ThreadEngine::new()?);
+    engine::warmup(path)
+}
+
+/// The error every PJRT entry point returns when the engine is not
+/// compiled in.
+#[cfg(not(feature = "pjrt"))]
+fn unavailable(path: &Path) -> crate::error::TaskError {
+    crate::error::TaskError::Runtime(format!(
+        "PJRT engine not compiled in (requires a vendored `xla` dependency plus \
+         `--features pjrt`; see rust/Cargo.toml) — cannot execute {}; \
+         use Backend::Native or skip",
+        path.display()
+    ))
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod engine {
+    //! Stub engine: every call reports PJRT as unavailable.
+
+    use std::path::Path;
+
+    use crate::error::TaskResult;
+
+    pub fn execute_f64(path: &Path, _inputs: &[&[f64]]) -> TaskResult<Vec<Vec<f64>>> {
+        Err(super::unavailable(path))
+    }
+
+    pub fn cached_executables() -> usize {
+        0
+    }
+
+    pub fn warmup(path: &Path) -> TaskResult<()> {
+        Err(super::unavailable(path))
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod engine {
+    //! Real engine: thread-local PJRT CPU client + executable cache.
+
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use crate::error::{TaskError, TaskResult};
+
+    thread_local! {
+        static ENGINE: RefCell<Option<ThreadEngine>> = const { RefCell::new(None) };
+    }
+
+    struct ThreadEngine {
+        client: xla::PjRtClient,
+        cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    }
+
+    impl ThreadEngine {
+        fn new() -> TaskResult<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| TaskError::Runtime(format!("PjRtClient::cpu: {e}")))?;
+            Ok(ThreadEngine { client, cache: HashMap::new() })
         }
-        slot.as_mut().expect("initialized").executable(path).map(|_| ())
-    })
+
+        fn executable(&mut self, path: &Path) -> TaskResult<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(path) {
+                let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(
+                    || TaskError::Runtime(format!("non-utf8 artifact path {path:?}")),
+                )?)
+                .map_err(|e| TaskError::Runtime(format!("parse {}: {e}", path.display())))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| TaskError::Runtime(format!("compile {}: {e}", path.display())))?;
+                self.cache.insert(path.to_path_buf(), exe);
+            }
+            Ok(self.cache.get(path).expect("just inserted"))
+        }
+    }
+
+    pub fn execute_f64(path: &Path, inputs: &[&[f64]]) -> TaskResult<Vec<Vec<f64>>> {
+        ENGINE.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(ThreadEngine::new()?);
+            }
+            let engine = slot.as_mut().expect("initialized above");
+            let exe = engine.executable(path)?;
+            let literals: Vec<xla::Literal> =
+                inputs.iter().map(|x| xla::Literal::vec1(x)).collect();
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| TaskError::Runtime(format!("execute {}: {e}", path.display())))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| TaskError::Runtime(format!("to_literal: {e}")))?;
+            let tuple = out
+                .to_tuple()
+                .map_err(|e| TaskError::Runtime(format!("to_tuple: {e}")))?;
+            let mut vecs = Vec::with_capacity(tuple.len());
+            for leaf in tuple {
+                vecs.push(
+                    leaf.to_vec::<f64>()
+                        .map_err(|e| TaskError::Runtime(format!("to_vec<f64>: {e}")))?,
+                );
+            }
+            Ok(vecs)
+        })
+    }
+
+    pub fn cached_executables() -> usize {
+        ENGINE.with(|cell| cell.borrow().as_ref().map_or(0, |e| e.cache.len()))
+    }
+
+    pub fn warmup(path: &Path) -> TaskResult<()> {
+        ENGINE.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(ThreadEngine::new()?);
+            }
+            slot.as_mut().expect("initialized").executable(path).map(|_| ())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::TaskError;
+
+    #[test]
+    fn stub_reports_unavailable_without_feature() {
+        if pjrt_available() {
+            return; // real engine compiled in; covered by integration_pjrt
+        }
+        let err = execute_f64(Path::new("artifacts/none.hlo.txt"), &[&[1.0]]).unwrap_err();
+        match err {
+            TaskError::Runtime(m) => assert!(m.contains("PJRT"), "{m}"),
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert!(warmup(Path::new("artifacts/none.hlo.txt")).is_err());
+        assert_eq!(cached_executables(), 0);
+    }
 }

@@ -2,23 +2,36 @@
 //! Rust must agree with the native Rust kernel — the cross-layer
 //! correctness contract (L1/L2 ↔ L3).
 //!
-//! Requires `make artifacts` to have run (the Makefile `test` target
-//! guarantees ordering).
+//! Requires the `pjrt` cargo feature (vendored `xla` crate) *and*
+//! `make artifacts` to have run. On a bare checkout — no PJRT engine, no
+//! `artifacts/` — every test here skips cleanly (early return with a
+//! note on stderr) so tier-1 `cargo test -q` stays green without Python.
 
 use std::path::Path;
 
-use rhpx::runtime::{execute_f64, warmup, ArtifactStore};
+use rhpx::runtime::{execute_f64, pjrt_available, warmup, ArtifactStore};
 use rhpx::stencil::{kernel, Backend, Mode, StencilParams};
 use rhpx::Runtime;
 
-fn store() -> ArtifactStore {
-    ArtifactStore::open(Path::new("artifacts"))
-        .expect("artifacts/ missing — run `make artifacts` first")
+/// The artifact store, or `None` (with a skip note) when this build or
+/// checkout cannot execute PJRT artifacts.
+fn store() -> Option<ArtifactStore> {
+    if !pjrt_available() {
+        eprintln!("skipping PJRT test: engine not compiled in (see rust/Cargo.toml)");
+        return None;
+    }
+    match ArtifactStore::open(Path::new("artifacts")) {
+        Ok(s) if !s.is_empty() => Some(s),
+        _ => {
+            eprintln!("skipping PJRT test: artifacts/ missing — run `make artifacts` first");
+            None
+        }
+    }
 }
 
 #[test]
 fn artifact_store_finds_default_configs() {
-    let s = store();
+    let Some(s) = store() else { return };
     assert!(s.stencil_path(64, 4).is_ok());
     assert!(s.stencil_path(1000, 16).is_ok());
     assert!(s.stencil_path(16000, 128).is_ok());
@@ -27,7 +40,7 @@ fn artifact_store_finds_default_configs() {
 
 #[test]
 fn pjrt_matches_native_kernel_tiny() {
-    let s = store();
+    let Some(s) = store() else { return };
     let path = s.stencil_path(64, 4).unwrap();
     let nx = 64;
     let steps = 4;
@@ -50,7 +63,7 @@ fn pjrt_matches_native_kernel_tiny() {
 
 #[test]
 fn pjrt_executable_cache_reuses_compilation() {
-    let s = store();
+    let Some(s) = store() else { return };
     let path = s.stencil_path(64, 4).unwrap();
     warmup(path).unwrap();
     let n_before = rhpx::runtime::cached_executables();
@@ -63,7 +76,7 @@ fn pjrt_executable_cache_reuses_compilation() {
 
 #[test]
 fn stencil_run_on_pjrt_backend_matches_native() {
-    let s = store();
+    let Some(s) = store() else { return };
     let rt = Runtime::builder().workers(2).build();
     let base = StencilParams {
         n_sub: 4,
@@ -88,7 +101,7 @@ fn stencil_run_on_pjrt_backend_matches_native() {
 
 #[test]
 fn stencil_resilient_pjrt_run_with_failures() {
-    let s = store();
+    let Some(s) = store() else { return };
     let rt = Runtime::builder().workers(2).build();
     let params = StencilParams {
         n_sub: 4,
@@ -104,4 +117,17 @@ fn stencil_resilient_pjrt_run_with_failures() {
     let (_, rep) = rhpx::stencil::run(&rt, &params).unwrap();
     assert!(rep.failures_injected > 0);
     assert_eq!(rep.launch_errors, 0, "replay must absorb failures");
+}
+
+#[test]
+fn bare_checkout_skips_cleanly_without_engine() {
+    // The inverse contract: when PJRT is NOT available, the probe used by
+    // every test above must say so instead of panicking.
+    if pjrt_available() {
+        return;
+    }
+    assert!(store().is_none());
+    // And direct execution reports a descriptive runtime error.
+    let err = execute_f64(Path::new("artifacts/whatever.hlo.txt"), &[&[0.0]]).unwrap_err();
+    assert!(err.to_string().contains("PJRT"), "{err}");
 }
