@@ -8,7 +8,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 BENCHES := perf_micro table1_async_overheads fig2_error_rates table2_stencil fig3_stencil_errors ablations
 
-.PHONY: all build test bench bench-smoke artifacts fmt fmt-check clippy clean help
+.PHONY: all build test docs bench bench-smoke artifacts fmt fmt-check clippy clean help
 
 all: build
 
@@ -16,6 +16,7 @@ help:
 	@echo "targets:"
 	@echo "  build       cargo build --release (lib, rhpx CLI, bench binaries)"
 	@echo "  test        cargo test -q (tier-1 verify; green on a bare checkout)"
+	@echo "  docs        cargo doc -D warnings + cargo test --doc (what CI's docs job runs)"
 	@echo "  bench       run every bench binary, writing BENCH_<name>.json"
 	@echo "  bench-smoke same, at smoke scale (seconds, what CI runs)"
 	@echo "  artifacts   AOT-lower the JAX/Pallas kernels to artifacts/*.hlo.txt"
@@ -29,6 +30,11 @@ build:
 
 test:
 	$(CARGO) test -q
+
+# Docs gate: broken intra-doc links and stale examples fail the build.
+docs:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+	$(CARGO) test --doc
 
 # Full-scale benches: one BENCH_<name>.json per harness.
 bench: build

@@ -1,5 +1,7 @@
 //! Bench: regenerate Table I (amortized per-task overhead of resilient
-//! async variants vs core count, 200µs grain, no failures).
+//! async variants vs core count, 200µs grain, no failures) plus the
+//! executor-path comparison table (decorator-routed launches vs the free
+//! functions, including the adaptive-budget executor).
 //!
 //!   cargo run --release --bin table1_async_overheads -- [--smoke] [--json PATH]
 //!   cargo bench --bench table1_async_overheads
@@ -7,9 +9,13 @@
 //! Env: RHPX_BENCH_SCALE (default 0.01 of the paper's 1M tasks),
 //!      RHPX_BENCH_REPEATS (default 3). `--smoke` overrides both down to
 //!      a seconds-scale run.
+//!
+//! JSON shape: `results.free_functions` is the paper's Table I;
+//! `results.executor_path` pairs each free-function variant with its
+//! decorator twin so the decorator tax is visible in CI artifacts.
 
 use rhpx::harness::{emit, table1, HarnessOpts};
-use rhpx::metrics::BenchCli;
+use rhpx::metrics::{BenchCli, JsonValue};
 
 fn main() {
     let cli = BenchCli::parse();
@@ -26,5 +32,14 @@ fn main() {
     };
     let t = table1::run_table1(&opts, &cores, 3);
     emit(&t, &opts);
-    cli.emit("table1_async_overheads", t.to_json());
+    let exec_opts = HarnessOpts { csv: Some("bench_table1_executor.csv".into()), ..opts.clone() };
+    let te = table1::run_table1_executor(&exec_opts, &cores, 3);
+    emit(&te, &exec_opts);
+    cli.emit(
+        "table1_async_overheads",
+        JsonValue::obj([
+            ("free_functions".to_string(), t.to_json()),
+            ("executor_path".to_string(), te.to_json()),
+        ]),
+    );
 }

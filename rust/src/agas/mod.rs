@@ -7,6 +7,9 @@
 //! another locality. The distributed layer (see [`crate::distributed`])
 //! uses this registry to route active messages to wherever an object
 //! currently lives.
+//!
+//! Paper mapping: HPX runtime substrate (no table/figure of its own);
+//! exercised by the §Future-Work distributed scenarios.
 
 use std::any::Any;
 use std::collections::HashMap;

@@ -3,6 +3,9 @@
 //! `for_each` / `transform` / `reduce`), made resilient by executor
 //! choice: run them on a [`ReplayExecutor`](crate::executor::ReplayExecutor)
 //! and every chunk transparently replays on failure.
+//!
+//! Paper mapping: §Future-Work "higher-level parallelization facilities"
+//! over the resilient executors (no table/figure of its own).
 
 use std::sync::Arc;
 

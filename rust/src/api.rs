@@ -137,6 +137,56 @@ where
     fut
 }
 
+/// `hpx::async(exec, f)` — launch `f` through an executor: the call site
+/// carries no policy; resiliency (replay, replication, validation,
+/// adaptive budgets) comes entirely from the executor passed in. See
+/// [`crate::resilience::executor`] for the available decorators.
+///
+/// ```
+/// use rhpx::resilience::executor::ReplayExecutor;
+/// use rhpx::{async_on, Runtime};
+///
+/// let rt = Runtime::builder().workers(2).build();
+/// let exec = ReplayExecutor::new(rt.executor(), 3);
+/// let f = async_on(&exec, || 5i32);
+/// assert_eq!(f.get(), Ok(5));
+/// ```
+pub fn async_on<EX, T, R, F>(exec: &EX, f: F) -> Future<T>
+where
+    EX: crate::resilience::executor::ResilientExecutor,
+    T: Clone + Send + 'static,
+    R: IntoTaskResult<T>,
+    F: Fn() -> R + Send + Sync + 'static,
+{
+    exec.spawn(f)
+}
+
+/// `hpx::dataflow(exec, f, deps)` — dataflow through an executor: runs
+/// `f` over the dependency values once all of `deps` are ready, with the
+/// body launched under the executor's policy.
+///
+/// ```
+/// use rhpx::resilience::executor::ReplayExecutor;
+/// use rhpx::{async_on, dataflow_on, Runtime};
+///
+/// let rt = Runtime::builder().workers(2).build();
+/// let exec = ReplayExecutor::new(rt.executor(), 3);
+/// let a = async_on(&exec, || 2i64);
+/// let b = async_on(&exec, || 3i64);
+/// let sum = dataflow_on(&exec, |v: &[i64]| v.iter().sum::<i64>(), vec![a, b]);
+/// assert_eq!(sum.get(), Ok(5));
+/// ```
+pub fn dataflow_on<EX, T, U, R, F>(exec: &EX, f: F, deps: Vec<Future<T>>) -> Future<U>
+where
+    EX: crate::resilience::executor::ResilientExecutor,
+    T: Clone + Send + Sync + 'static,
+    U: Clone + Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+{
+    exec.dataflow(f, deps)
+}
+
 /// Fire-and-forget spawn (`hpx::apply`): no future is returned.
 pub fn apply<F>(rt: &Runtime, f: F)
 where

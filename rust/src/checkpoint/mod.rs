@@ -1,5 +1,6 @@
 //! Coordinated Checkpoint/Restart — the baseline the paper argues
-//! against (§I).
+//! against (§I). Reproduced here so the ablation bench can put numbers
+//! on the comparison (no paper table of its own).
 //!
 //! "Generating snapshots involves global communication and coordination
 //! and is achieved by synchronizing all running processes … On failure

@@ -5,21 +5,26 @@
 //!
 //! ```text
 //! rhpx info
-//! rhpx bench <table1|fig2|table2|fig3|all> [--scale F] [--repeats N]
+//! rhpx bench <table1|table1_exec|fig2|table2|fig3|all> [--scale F] [--repeats N]
 //!            [--workers N] [--csv PATH] [--backend native|pjrt]
 //! rhpx stencil [--case a|b|tiny] [--mode MODE] [--backend native|pjrt]
+//!              [--resilience replay:N|replicate:N|adaptive[:CEIL]] [--json PATH]
 //!              [--scale F] [--error-prob PCT] [--silent-prob PCT] [--workers N]
 //! rhpx workload [--tasks N] [--grain-us N] [--variant V] [--error-prob PCT]
 //! rhpx distributed [--localities N] [--kill IDX] [--tasks N]
 //! ```
+//!
+//! Paper mapping: `bench` regenerates Table I / Table II / Fig 2 / Fig 3
+//! (`table1_exec` is this repo's executor-path comparison); `stencil` is
+//! the §V-B application, `workload` the §V-A benchmark.
 
 use std::collections::HashMap;
 
 use crate::config::RuntimeConfig;
 use crate::harness::{emit, fig2, fig3, table1, table2, HarnessOpts, KernelBackend};
-use crate::metrics::Table;
+use crate::metrics::{BenchCli, JsonValue, Table};
 use crate::runtime_handle::Runtime;
-use crate::stencil::{self, Backend, Mode, StencilParams};
+use crate::stencil::{self, Backend, ExecPolicy, Mode, StencilParams};
 use crate::workload::{self, Variant, WorkloadParams};
 
 /// Parsed flags: `--key value` pairs plus positional args.
@@ -104,17 +109,23 @@ const HELP: &str = r#"rhpx — resilient AMT runtime (reproduction of SAND2020-3
 
 USAGE:
   rhpx info
-  rhpx bench <table1|fig2|table2|fig3|all>
+  rhpx bench <table1|table1_exec|fig2|table2|fig3|all>
        [--scale F] [--repeats N] [--workers N] [--csv PATH]
        [--backend native|pjrt] [--replicas N]
   rhpx stencil [--case a|b|tiny] [--mode pure|replay|replay_checksum|
                replicate|replicate_checksum|replicate_vote|replicate_replay]
-               [--backend native|pjrt] [--scale F] [--n N]
+               [--resilience replay:N|replicate:N|adaptive[:CEIL]]
+               [--backend native|pjrt] [--scale F] [--n N] [--json PATH]
                [--error-prob PCT] [--silent-prob PCT] [--workers N]
   rhpx workload [--tasks N] [--grain-us N] [--error-prob PCT] [--workers N]
        [--variant plain|replay|replay_validate|replicate|replicate_validate|
                  replicate_vote|replicate_vote_validate] [--n N]
   rhpx distributed [--localities N] [--kill IDX] [--tasks N] [--latency-us N]
+
+`--resilience` routes every stencil task through the executor decorators
+(rhpx::resilience::executor) instead of per-call resilient functions;
+`adaptive` tunes the replay budget online from the observed error rate.
+It is mutually exclusive with `--mode`.
 "#;
 
 fn cmd_info() -> Result<(), String> {
@@ -209,11 +220,19 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
 
     match what {
         "table1" => emit(&table1::run_table1(&opts, &table1::default_cores(), replicas), &opts),
+        "table1_exec" => emit(
+            &table1::run_table1_executor(&opts, &table1::default_cores(), replicas),
+            &opts,
+        ),
         "fig2" => emit(&fig2::run_fig2(&opts, &fig2::default_probabilities()), &opts),
         "table2" => run_table2_fig3("table2")?,
         "fig3" => run_table2_fig3("fig3")?,
         "all" => {
             emit(&table1::run_table1(&opts, &table1::default_cores(), replicas), &opts);
+            emit(
+                &table1::run_table1_executor(&opts, &table1::default_cores(), replicas),
+                &opts,
+            );
             emit(&fig2::run_fig2(&opts, &fig2::default_probabilities()), &opts);
             run_table2_fig3("table2")?;
             run_table2_fig3("fig3")?;
@@ -221,6 +240,31 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown bench {other:?}")),
     }
     Ok(())
+}
+
+/// Parse `--resilience replay:N|replicate:N|adaptive[:CEIL]`.
+fn parse_resilience(s: &str) -> Result<ExecPolicy, String> {
+    if s == "adaptive" {
+        return Ok(ExecPolicy::Adaptive { ceiling: 10 });
+    }
+    let parse_n = |v: &str, what: &str| -> Result<usize, String> {
+        v.parse()
+            .ok()
+            .filter(|n| *n >= 1)
+            .ok_or_else(|| format!("--resilience {what}: bad count {v:?}"))
+    };
+    if let Some(v) = s.strip_prefix("adaptive:") {
+        return Ok(ExecPolicy::Adaptive { ceiling: parse_n(v, "adaptive")? });
+    }
+    if let Some(v) = s.strip_prefix("replay:") {
+        return Ok(ExecPolicy::Replay { n: parse_n(v, "replay")? });
+    }
+    if let Some(v) = s.strip_prefix("replicate:") {
+        return Ok(ExecPolicy::Replicate { n: parse_n(v, "replicate")? });
+    }
+    Err(format!(
+        "unknown --resilience {s:?} (expected replay:N, replicate:N, or adaptive[:CEIL])"
+    ))
 }
 
 fn parse_mode(s: &str, n: usize) -> Result<Mode, String> {
@@ -250,6 +294,17 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown case {other:?}")),
     };
     params.mode = parse_mode(&args.get_str("mode", "pure"), n)?;
+    if let Some(spec) = args.flags.get("resilience") {
+        if args.flags.contains_key("mode") {
+            return Err(
+                "--mode and --resilience are mutually exclusive: --mode picks a resilient \
+                 call per task, --resilience routes every task through an executor \
+                 decorator; drop one of them"
+                    .to_string(),
+            );
+        }
+        params.resilience = Some(parse_resilience(spec)?);
+    }
     let p_err = args.get_f64("error-prob", 0.0)? / 100.0;
     if p_err > 0.0 {
         params.error_rate = Some(-p_err.ln());
@@ -274,7 +329,10 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
         params.nx,
         params.iterations,
         params.steps,
-        params.mode.label(),
+        params
+            .resilience
+            .map(|p| p.label())
+            .unwrap_or_else(|| params.mode.label()),
         params.total_tasks()
     );
     let (_, rep) = stencil::run(&rt, &params).map_err(|e| e.to_string())?;
@@ -293,6 +351,45 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
         format!("{:.6e}", rep.final_checksum),
     ]);
     print!("{}", t.render());
+
+    // The executor path publishes its policy state as perfcounters; show
+    // them (and fold them into the JSON payload) when it was active.
+    let resilience_counters: Vec<(String, u64)> = crate::perfcounters::global()
+        .snapshot()
+        .into_iter()
+        .filter(|(k, _)| k.starts_with("/resilience/stencil/"))
+        .collect();
+    if params.resilience.is_some() && !resilience_counters.is_empty() {
+        println!("\nresilience counters:");
+        for (k, v) in &resilience_counters {
+            println!("{k}  {v}");
+        }
+    }
+
+    if let Some(path) = args.flags.get("json") {
+        let mut results: Vec<(String, JsonValue)> = vec![
+            ("mode".to_string(), JsonValue::from(rep.mode.clone())),
+            ("wall_secs".to_string(), JsonValue::from(rep.wall_secs)),
+            ("tasks".to_string(), JsonValue::from(rep.tasks)),
+            ("failures_injected".to_string(), JsonValue::from(rep.failures_injected)),
+            ("silent_corruptions".to_string(), JsonValue::from(rep.silent_corruptions)),
+            ("launch_errors".to_string(), JsonValue::from(rep.launch_errors)),
+            ("final_checksum".to_string(), JsonValue::from(rep.final_checksum)),
+        ];
+        results.push((
+            "resilience_counters".to_string(),
+            JsonValue::obj(
+                resilience_counters
+                    .into_iter()
+                    .map(|(k, v)| (k, JsonValue::from(v))),
+            ),
+        ));
+        // Reuse the bench binaries' envelope (bench/smoke/schema_version/
+        // results) so every JSON artifact shares one schema authority.
+        let sink = BenchCli { smoke: false, json: Some(path.clone()) };
+        sink.try_emit("stencil", JsonValue::obj(results))
+            .map_err(|e| format!("failed to write {path}: {e}"))?;
+    }
     Ok(())
 }
 
@@ -454,6 +551,64 @@ mod tests {
             "2",
         ]));
         assert!(r.is_ok(), "{r:?}");
+    }
+
+    #[test]
+    fn stencil_mode_and_resilience_conflict() {
+        let r = dispatch(&argv(&[
+            "stencil",
+            "--case",
+            "tiny",
+            "--mode",
+            "replay",
+            "--resilience",
+            "replay:3",
+            "--workers",
+            "2",
+        ]));
+        assert!(r.is_err(), "conflicting flags must be rejected");
+    }
+
+    #[test]
+    fn resilience_flag_parsing() {
+        assert_eq!(parse_resilience("replay:4").unwrap(), ExecPolicy::Replay { n: 4 });
+        assert_eq!(
+            parse_resilience("replicate:3").unwrap(),
+            ExecPolicy::Replicate { n: 3 }
+        );
+        assert_eq!(
+            parse_resilience("adaptive").unwrap(),
+            ExecPolicy::Adaptive { ceiling: 10 }
+        );
+        assert_eq!(
+            parse_resilience("adaptive:6").unwrap(),
+            ExecPolicy::Adaptive { ceiling: 6 }
+        );
+        assert!(parse_resilience("bogus").is_err());
+        assert!(parse_resilience("replay:0").is_err());
+        assert!(parse_resilience("replicate:x").is_err());
+    }
+
+    #[test]
+    fn stencil_resilience_adaptive_smoke_emits_json() {
+        let path = std::env::temp_dir()
+            .join(format!("rhpx_stencil_adaptive_{}.json", std::process::id()));
+        let r = dispatch(&argv(&[
+            "stencil",
+            "--case",
+            "tiny",
+            "--resilience",
+            "adaptive",
+            "--workers",
+            "2",
+            "--json",
+            path.to_str().unwrap(),
+        ]));
+        assert!(r.is_ok(), "{r:?}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""mode":"exec_adaptive(max 10)""#), "{text}");
+        assert!(text.contains(r#""schema_version":1"#), "{text}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -2,6 +2,9 @@
 //!
 //! Sources, lowest to highest precedence: built-in defaults → TOML file
 //! (`--config path.toml`) → `RHPX_*` environment variables → CLI flags.
+//!
+//! Paper mapping: runtime plumbing (no table/figure of its own); sizes
+//! the worker pools every benchmark harness runs on.
 
 pub mod toml;
 

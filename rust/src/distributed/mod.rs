@@ -20,6 +20,13 @@
 //! * [`async_replicate_distributed`] — replicas fan out to distinct
 //!   localities so a dead node cannot take out more than one replica.
 //!
+//! The same routing is available through the decorator subsystem:
+//! [`ClusterExecutor`] is a [`crate::resilience::executor::TaskLauncher`]
+//! over the cluster, so wrapping it in a `ReplayExecutor` or
+//! `ReplicateExecutor` gives executor-routed distributed resilience —
+//! replay walks the localities, replicate fans replicas out across them
+//! (this is how [`crate::executor::DistributedReplayExecutor`] is built).
+//!
 //! Values crossing localities require `Clone` (the in-process stand-in
 //! for serializability over a real wire).
 
@@ -40,6 +47,62 @@ use crate::resilience::Voter;
 /// to; receives that locality so it can interact with local services
 /// (AGAS, local spawns, …).
 pub type DistBody<T> = Arc<dyn Fn(&Locality) -> TaskResult<T> + Send + Sync>;
+
+/// A [`TaskLauncher`](crate::resilience::executor::TaskLauncher) over
+/// the cluster — the cluster-backed base the resilience decorators wrap.
+/// Standalone submissions are routed round-robin; decorated launches use
+/// the placement-token protocol, so each launch's attempts/replicas land
+/// on *successive* localities (`token + seq`): a retry is guaranteed to
+/// leave the locality that just failed, and `n ≤ len` replicas occupy
+/// `n` distinct localities, even when many launches interleave on the
+/// shared round-robin counter.
+#[derive(Clone)]
+pub struct ClusterExecutor {
+    cluster: Cluster,
+}
+
+impl ClusterExecutor {
+    pub fn new(cluster: &Cluster) -> Self {
+        ClusterExecutor { cluster: cluster.clone() }
+    }
+
+    /// The cluster submissions are routed over.
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+}
+
+impl crate::resilience::executor::TaskLauncher for ClusterExecutor {
+    fn submit<T: Send + 'static>(
+        &self,
+        body: crate::resilience::executor::TaskFn<T>,
+    ) -> Future<T> {
+        let target = self.cluster.next_target();
+        self.cluster.run_on(target, move |_loc| body())
+    }
+
+    fn placement_token(&self) -> usize {
+        self.cluster.next_target().0
+    }
+
+    fn submit_seq<T: Send + 'static>(
+        &self,
+        body: crate::resilience::executor::TaskFn<T>,
+        token: usize,
+        seq: usize,
+    ) -> Future<T> {
+        let target = LocalityId((token + seq) % self.cluster.len());
+        self.cluster.run_on(target, move |_loc| body())
+    }
+
+    fn parallelism(&self) -> usize {
+        self.cluster.len()
+    }
+
+    fn base_label(&self) -> String {
+        format!("cluster({})", self.cluster.len())
+    }
+}
 
 /// Replay across localities: up to `n` total attempts, each retry routed
 /// to the next locality in the ring (skipping nothing — a retry landing
@@ -212,6 +275,48 @@ mod tests {
         let mut ids: Vec<usize> = futs.into_iter().map(|f| f.get().unwrap()).collect();
         ids.sort();
         assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn replay_decorator_over_cluster_walks_past_dead_localities() {
+        use crate::resilience::executor::{ReplayExecutor, ResilientExecutor};
+        let cl = cluster(3);
+        cl.kill(LocalityId(0));
+        cl.kill(LocalityId(1));
+        // Fresh cluster: round-robin starts at 0, so the decorator's
+        // retries must walk 0 (dead) → 1 (dead) → 2 (alive).
+        let ex = ReplayExecutor::new(ClusterExecutor::new(&cl), 5);
+        assert_eq!(ex.spawn(|| 7u8).get(), Ok(7));
+        assert_eq!(ex.concurrency(), 3);
+    }
+
+    #[test]
+    fn replay_decorator_concurrent_launches_each_walk_distinct_localities() {
+        use crate::resilience::executor::{ReplayExecutor, ResilientExecutor};
+        let cl = cluster(2);
+        cl.kill(LocalityId(0));
+        let ex = ReplayExecutor::new(ClusterExecutor::new(&cl), 2);
+        // Many interleaved launches pop the shared round-robin counter
+        // concurrently, but each launch's two attempts are placed at
+        // token and token+1, so every launch covers both localities and
+        // is guaranteed to reach the live one.
+        let futs: Vec<_> = (0..16).map(|_| ex.spawn(|| 1u8)).collect();
+        for f in futs {
+            assert_eq!(f.get(), Ok(1));
+        }
+    }
+
+    #[test]
+    fn replicate_decorator_over_cluster_fans_out_and_votes() {
+        use crate::resilience::executor::{ReplicateExecutor, ResilientExecutor};
+        let cl = cluster(3);
+        cl.kill(LocalityId(1));
+        // Three replicas land on three distinct localities; the dead one
+        // loses exactly one replica and the majority still agrees.
+        let ex = ReplicateExecutor::new(ClusterExecutor::new(&cl), 3);
+        let f = ex.spawn_vote(vote_majority, || 42i64);
+        assert_eq!(f.get(), Ok(42));
+        assert_eq!(ex.concurrency(), 3);
     }
 
     #[test]

@@ -1,19 +1,35 @@
-//! Executors — pluggable launch policies.
+//! Executors — pluggable launch policies for the parallel algorithms.
 //!
 //! The paper's future work anticipates "special executors that will
 //! manage the aspects of resiliency and task distribution across nodes".
-//! This module generalizes that idea: an [`Executor`] turns a task body
-//! into a future under some policy, so generic code (e.g. the
-//! [`crate::algorithms`] parallel algorithms) is written once and gains
-//! resiliency — local replay, replication with voting, or distributed
-//! replay across localities — by swapping the executor.
+//! The [`Executor`] trait here is the *algorithm-facing* face of that
+//! idea: [`crate::algorithms`] is written once against it and gains
+//! resiliency by executor choice. Since the decorator subsystem landed
+//! ([`crate::resilience::executor`]), every resilient executor in this
+//! module is a thin delegate over those decorators — [`ReplayExecutor`]
+//! wraps `ReplayExecutor<PoolExecutor>`, [`DistributedReplayExecutor`]
+//! wraps `ReplayExecutor<ClusterExecutor>` — so the replay/replicate
+//! semantics live in exactly one place.
+//!
+//! ```
+//! use rhpx::executor::{Executor, ReplayExecutor};
+//! use rhpx::Runtime;
+//!
+//! let rt = Runtime::builder().workers(2).build();
+//! let ex = ReplayExecutor::new(&rt, 3);
+//! assert_eq!(ex.execute(|| Ok(5i32)).get(), Ok(5));
+//! ```
 
 use std::sync::Arc;
 
-use crate::distributed::Cluster;
+use crate::distributed::{Cluster, ClusterExecutor};
 use crate::error::TaskResult;
 use crate::future::Future;
-use crate::resilience::{self, Voter};
+use crate::resilience::executor::{
+    PoolExecutor, ReplayExecutor as ReplayDecorator, ReplicateExecutor as ReplicateDecorator,
+    ResilientExecutor,
+};
+use crate::resilience::Voter;
 use crate::runtime_handle::Runtime;
 
 /// A launch policy. Bodies are `Fn` (re-runnable) because resilient
@@ -55,16 +71,17 @@ impl Executor for PlainExecutor {
     }
 }
 
-/// Every launch is an `async_replay(n, …)` (§IV-A as a policy).
+/// Every launch is an `async_replay(n, …)` (§IV-A as a policy); delegates
+/// to the [`crate::resilience::executor`] replay decorator over the
+/// runtime's pool.
 #[derive(Clone)]
 pub struct ReplayExecutor {
-    rt: Runtime,
-    n: usize,
+    inner: ReplayDecorator<PoolExecutor>,
 }
 
 impl ReplayExecutor {
     pub fn new(rt: &Runtime, n: usize) -> Self {
-        ReplayExecutor { rt: rt.clone(), n: n.max(1) }
+        ReplayExecutor { inner: ReplayDecorator::new(PoolExecutor::new(rt), n) }
     }
 }
 
@@ -74,30 +91,36 @@ impl Executor for ReplayExecutor {
         T: Clone + Send + 'static,
         F: Fn() -> TaskResult<T> + Send + Sync + 'static,
     {
-        resilience::async_replay(&self.rt, self.n, f)
+        self.inner.spawn(f)
     }
 
     fn concurrency(&self) -> usize {
-        self.rt.workers()
+        self.inner.concurrency()
     }
 }
 
 /// Every launch is replicated `n`× (§IV-B as a policy), with an optional
-/// voting function for consensus over the replicas.
+/// voting function for consensus over the replicas; delegates to the
+/// replicate decorator.
 #[derive(Clone)]
 pub struct ReplicateExecutor<T: Clone + Send + 'static> {
-    rt: Runtime,
-    n: usize,
+    inner: ReplicateDecorator<PoolExecutor>,
     voter: Option<Voter<T>>,
 }
 
 impl<T: Clone + Send + 'static> ReplicateExecutor<T> {
     pub fn new(rt: &Runtime, n: usize) -> Self {
-        ReplicateExecutor { rt: rt.clone(), n: n.max(1), voter: None }
+        ReplicateExecutor {
+            inner: ReplicateDecorator::new(PoolExecutor::new(rt), n),
+            voter: None,
+        }
     }
 
     pub fn with_vote(rt: &Runtime, n: usize, voter: Voter<T>) -> Self {
-        ReplicateExecutor { rt: rt.clone(), n: n.max(1), voter: Some(voter) }
+        ReplicateExecutor {
+            inner: ReplicateDecorator::new(PoolExecutor::new(rt), n),
+            voter: Some(voter),
+        }
     }
 
     /// Launch under this policy (typed executor: `T` is fixed by the
@@ -107,30 +130,33 @@ impl<T: Clone + Send + 'static> ReplicateExecutor<T> {
         F: Fn() -> TaskResult<T> + Send + Sync + 'static,
     {
         match &self.voter {
-            None => resilience::async_replicate(&self.rt, self.n, f),
+            None => self.inner.spawn(f),
             Some(v) => {
                 let v = Arc::clone(v);
-                resilience::async_replicate_vote(&self.rt, self.n, move |b: &[T]| v(b), f)
+                self.inner.spawn_vote(move |b: &[T]| v(b), f)
             }
         }
     }
 
     pub fn concurrency(&self) -> usize {
-        self.rt.workers()
+        ResilientExecutor::concurrency(&self.inner)
     }
 }
 
-/// Launches are replayed *across localities* of a cluster: the
-/// distributed executor of the paper's future work.
+/// Launches are replayed *across localities* of a cluster — the
+/// distributed executor of the paper's future work, realized as the
+/// replay decorator over a [`ClusterExecutor`] (each retry routes to the
+/// next locality).
 #[derive(Clone)]
 pub struct DistributedReplayExecutor {
-    cluster: Cluster,
-    n: usize,
+    inner: ReplayDecorator<ClusterExecutor>,
 }
 
 impl DistributedReplayExecutor {
     pub fn new(cluster: &Cluster, n: usize) -> Self {
-        DistributedReplayExecutor { cluster: cluster.clone(), n: n.max(1) }
+        DistributedReplayExecutor {
+            inner: ReplayDecorator::new(ClusterExecutor::new(cluster), n),
+        }
     }
 }
 
@@ -140,16 +166,11 @@ impl Executor for DistributedReplayExecutor {
         T: Clone + Send + 'static,
         F: Fn() -> TaskResult<T> + Send + Sync + 'static,
     {
-        let f = Arc::new(f);
-        crate::distributed::async_replay_distributed(
-            &self.cluster,
-            self.n,
-            Arc::new(move |_loc| f()),
-        )
+        self.inner.spawn(f)
     }
 
     fn concurrency(&self) -> usize {
-        self.cluster.len()
+        self.inner.concurrency()
     }
 }
 

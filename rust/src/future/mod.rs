@@ -8,6 +8,9 @@
 //! soon as the value is set, and [`Future::get`] blocks — cooperatively
 //! helping the pool run other tasks when called from a worker thread, so
 //! waiting inside a task can never deadlock the pool.
+//!
+//! Paper mapping: HPX runtime substrate; `when_all` is the
+//! synchronization under every §V-B stencil dataflow task.
 
 mod channel;
 mod when_all;

@@ -5,10 +5,16 @@
 //! Validate, Replicate Vote, Replicate Vote Validate} (×3 replicas),
 //! rows = 1/4/8/16/32 cores. The paper reports amortized overhead per
 //! task in µs against the plain-`async` baseline at the same core count.
+//!
+//! [`run_table1_executor`] is this repo's extension of the same
+//! methodology: the same workload routed through the
+//! [`crate::resilience::executor`] decorators, side by side with the
+//! free-function path, so the decorator tax (and the adaptive policy's
+//! bookkeeping) is measured rather than assumed.
 
 use crate::metrics::{fmt_micros, Stats, Table};
 use crate::runtime_handle::Runtime;
-use crate::workload::{run, Variant, WorkloadParams};
+use crate::workload::{run, run_executor, ExecVariant, Variant, WorkloadParams};
 
 use super::HarnessOpts;
 
@@ -16,6 +22,30 @@ use super::HarnessOpts;
 /// Haswell node; on smaller testbeds pass fewer.
 pub fn default_cores() -> Vec<usize> {
     vec![1, 2, 4]
+}
+
+/// Measure the plain-`async` per-task baseline at this core count.
+/// Shared by both Table I variants; each table re-measures rather than
+/// caching a baseline, so machine drift between tables shows up as
+/// baseline noise instead of phantom overhead.
+fn plain_baseline_us(rt: &Runtime, opts: &HarnessOpts, params: &WorkloadParams) -> f64 {
+    let mut base = Stats::new();
+    for _ in 0..opts.repeats {
+        base.push(run(rt, Variant::Plain, params).per_task_us);
+    }
+    base.mean()
+}
+
+/// Amortized overhead vs. the baseline, exactly as the paper computes it:
+/// per-task time minus baseline, additionally discounting the ideal cost
+/// of a `mult`× duplicated grain over the parallelism that can *actually*
+/// run (worker threads beyond the physical core count don't speed up
+/// duplicated work — on the paper's 32-core node effective == requested,
+/// on a CI container it is capped by the hardware).
+fn overhead_us(per_task_us: f64, base_us: f64, mult: f64, n_cores: usize, grain_ns: u64) -> f64 {
+    let physical = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let effective = n_cores.min(physical) as f64;
+    per_task_us - base_us - (mult - 1.0) * grain_ns as f64 / 1e3 / effective
 }
 
 /// Run Table I and return it.
@@ -47,21 +77,7 @@ pub fn run_table1(opts: &HarnessOpts, cores: &[usize], replicas: usize) -> Table
     for &n_cores in cores {
         let rt = Runtime::builder().workers(n_cores).build();
         let params = WorkloadParams { tasks, grain_ns, ..Default::default() };
-
-        // Baseline: plain async per-task time at this core count.
-        let mut base = Stats::new();
-        for _ in 0..opts.repeats {
-            base.push(run(&rt, Variant::Plain, &params).per_task_us);
-        }
-        let base_us = base.mean();
-
-        // Packing discount for replicate's inherent n× compute: divide by
-        // the parallelism that can *actually* run (worker threads beyond
-        // the physical core count don't speed up duplicated work — on the
-        // paper's 32-core node effective == requested, on a CI container
-        // it is capped by the hardware).
-        let physical = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        let effective = n_cores.min(physical) as f64;
+        let base_us = plain_baseline_us(&rt, opts, &params);
 
         let mut cells = vec![n_cores.to_string()];
         for v in Variant::table1_variants(replicas) {
@@ -69,8 +85,7 @@ pub fn run_table1(opts: &HarnessOpts, cores: &[usize], replicas: usize) -> Table
             for _ in 0..opts.repeats {
                 let rep = run(&rt, v, &params);
                 let mult = if v.is_replicate() { replicas as f64 } else { 1.0 };
-                let ideal_extra = (mult - 1.0) * grain_ns as f64 / 1e3 / effective;
-                s.push(rep.per_task_us - base_us - ideal_extra);
+                s.push(overhead_us(rep.per_task_us, base_us, mult, n_cores, grain_ns));
             }
             cells.push(fmt_micros(s.mean()));
         }
@@ -79,9 +94,86 @@ pub fn run_table1(opts: &HarnessOpts, cores: &[usize], replicas: usize) -> Table
     table
 }
 
+/// The executor-path bench mode (`rhpx bench table1_exec`): amortized
+/// per-task overhead of the decorator-routed launches vs. the resilient
+/// free functions, against the same plain-`async` baseline. Columns pair
+/// each free-function variant with its executor twin; `adaptive_exec` has
+/// no free-function twin (budget tuning exists only on the executor
+/// path).
+pub fn run_table1_executor(opts: &HarnessOpts, cores: &[usize], replicas: usize) -> Table {
+    let tasks = ((1_000_000.0 * opts.scale) as usize).max(1_000);
+    let grain_ns = 200_000;
+
+    let mut table = Table::new(
+        &format!(
+            "Table I-E: executor path vs free functions — amortized overhead per task (µs), \
+             grain 200µs, {tasks} tasks, no failures"
+        ),
+        &[
+            "cores",
+            "replay_free",
+            "replay_exec",
+            "replicate_free",
+            "replicate_exec",
+            "adaptive_exec",
+        ],
+    );
+
+    for &n_cores in cores {
+        let rt = Runtime::builder().workers(n_cores).build();
+        let params = WorkloadParams { tasks, grain_ns, ..Default::default() };
+        let base_us = plain_baseline_us(&rt, opts, &params);
+
+        let mult = replicas as f64;
+        let mut cells = vec![n_cores.to_string()];
+        let cell = |per_task: &mut dyn FnMut() -> f64, m: f64| {
+            let mut s = Stats::new();
+            for _ in 0..opts.repeats {
+                s.push(overhead_us(per_task(), base_us, m, n_cores, grain_ns));
+            }
+            fmt_micros(s.mean())
+        };
+        cells.push(cell(
+            &mut || run(&rt, Variant::Replay { n: replicas }, &params).per_task_us,
+            1.0,
+        ));
+        cells.push(cell(
+            &mut || run_executor(&rt, ExecVariant::Replay { n: replicas }, &params).per_task_us,
+            1.0,
+        ));
+        cells.push(cell(
+            &mut || run(&rt, Variant::Replicate { n: replicas }, &params).per_task_us,
+            mult,
+        ));
+        cells.push(cell(
+            &mut || run_executor(&rt, ExecVariant::Replicate { n: replicas }, &params).per_task_us,
+            mult,
+        ));
+        cells.push(cell(
+            &mut || {
+                run_executor(&rt, ExecVariant::Adaptive { ceiling: replicas.max(2) }, &params)
+                    .per_task_us
+            },
+            1.0,
+        ));
+        table.add_row(&cells);
+    }
+    table
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn table1_executor_smoke() {
+        let opts = HarnessOpts { scale: 0.002, repeats: 1, ..Default::default() };
+        let t = run_table1_executor(&opts, &[1], 3);
+        assert!(!t.is_empty());
+        let csv = t.to_csv();
+        assert!(csv.starts_with("cores,replay_free,replay_exec"));
+        assert_eq!(csv.lines().count(), 2);
+    }
 
     #[test]
     fn table1_smoke() {

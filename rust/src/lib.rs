@@ -9,14 +9,36 @@
 //! and simulated multi-locality distribution ([`distributed`]) — plus the
 //! paper's contribution as [`resilience`]: **task replay** and **task
 //! replicate** in every variant of Listings 1 and 2, implemented as
-//! drop-in extensions of [`async_`](api::async_)/[`dataflow`](api::dataflow).
+//! drop-in extensions of [`async_`](api::async_)/[`dataflow`](api::dataflow),
+//! and as transparent *executor decorators* ([`resilience::executor`])
+//! that make whole launch paths resilient without call-site changes.
 //!
 //! The 1D Lax-Wendroff stencil application of §V-B lives in [`stencil`];
 //! its numeric kernel is authored in JAX/Pallas, AOT-lowered to HLO at
 //! build time (`make artifacts`), and executed from Rust through PJRT by
 //! [`runtime`]. Python never runs on the task path.
 //!
-//! ```no_run
+//! ## Paper → module map
+//!
+//! | Paper section | Reproduced by |
+//! |---|---|
+//! | §I motivation: C/R rollback vs localized recovery | [`checkpoint`] (the coordinated-C/R baseline the ablation bench compares against) |
+//! | §II/§III HPX runtime components (scheduler, futures, AGAS, networking) | [`scheduler`], [`future`], [`agas`], [`distributed`] (active-message layer), [`config`], [`perfcounters`] |
+//! | §III-B failure definition (thrown errors, rejected validations) | [`error`] ([`TaskError`], [`ResilienceError`]) |
+//! | §IV-A task replay (Listing 1) | [`resilience`] `async_replay*`/`dataflow_replay*` |
+//! | §IV-B task replicate (Listing 2), voting, validation | [`resilience`] `async_replicate*`, [`resilience::vote`] |
+//! | §V-A artificial workload (Listing 3), Table I, Fig 2 | [`workload`], [`harness::table1`], [`harness::fig2`] |
+//! | §V-B dataflow stencil, Table II, Fig 3 | [`stencil`], [`harness::table2`], [`harness::fig3`] |
+//! | §V-C failure injection | [`failure`] |
+//! | §Future-Work: distributed resiliency, "special executors", replay-in-replicate | [`distributed`], [`resilience::executor`] (decorators + adaptive budgets), [`executor`] (algorithm-facing policies), `*_replicate_replay` |
+//!
+//! Each harness module's header states exactly which table/figure it
+//! regenerates; the bench binaries under `rust/benches/` emit the same
+//! data as machine-readable `BENCH_*.json` (see [`metrics::bench_json`]).
+//!
+//! ## Quickstart
+//!
+//! ```
 //! use rhpx::{Runtime, resilience};
 //!
 //! let rt = Runtime::builder().workers(4).build();
@@ -26,6 +48,24 @@
 //! });
 //! assert_eq!(f.get().unwrap(), 42);
 //! ```
+//!
+//! The same task through the executor surface — the call site no longer
+//! names a policy; swapping the executor swaps the resiliency:
+//!
+//! ```
+//! use rhpx::resilience::executor::ReplayExecutor;
+//! use rhpx::{async_on, Runtime};
+//!
+//! let rt = Runtime::builder().workers(4).build();
+//! let exec = ReplayExecutor::new(rt.executor(), 3);
+//! let f = async_on(&exec, || 42i32);
+//! assert_eq!(f.get().unwrap(), 42);
+//! ```
+//!
+//! See `docs/ARCHITECTURE.md` in the repository for the full task
+//! lifecycle (submit → decorator → scheduler → validate/vote → result)
+//! and a worked example of swapping resilient executors into the stencil
+//! driver.
 
 pub mod agas;
 pub mod algorithms;
@@ -49,7 +89,7 @@ pub mod stencil;
 pub mod testing;
 pub mod workload;
 
-pub use api::{apply, async_, dataflow, dataflow_results};
+pub use api::{apply, async_, async_on, dataflow, dataflow_on, dataflow_results};
 pub use error::{ResilienceError, TaskError, TaskResult};
 pub use future::{channel, when_all, when_all_results, Future, Promise};
 pub use runtime_handle::{Runtime, RuntimeBuilder};

@@ -224,16 +224,27 @@ impl BenchCli {
     /// payload. Panics on I/O failure: a bench that silently drops its
     /// results must fail the CI job.
     pub fn emit(&self, name: &str, value: JsonValue) {
-        let Some(path) = &self.json else { return };
+        if let Err(e) = self.try_emit(name, value) {
+            let path = self.json.as_deref().unwrap_or("<none>");
+            panic!("failed to write {path}: {e}");
+        }
+    }
+
+    /// Fallible variant of [`BenchCli::emit`] for callers that have a
+    /// proper error channel (e.g. the `rhpx` CLI): same payload envelope
+    /// (`bench`/`smoke`/`schema_version`/`results`), error returned
+    /// instead of panicking.
+    pub fn try_emit(&self, name: &str, value: JsonValue) -> std::io::Result<()> {
+        let Some(path) = &self.json else { return Ok(()) };
         let payload = JsonValue::obj([
             ("bench".to_string(), JsonValue::from(name)),
             ("smoke".to_string(), JsonValue::from(self.smoke)),
             ("schema_version".to_string(), JsonValue::from(1u64)),
             ("results".to_string(), value),
         ]);
-        std::fs::write(path, payload.render() + "\n")
-            .unwrap_or_else(|e| panic!("failed to write {path}: {e}"));
+        std::fs::write(path, payload.render() + "\n")?;
         println!("(json written to {path})");
+        Ok(())
     }
 }
 

@@ -1,5 +1,9 @@
 //! Timers, streaming statistics, and table/CSV rendering for the
 //! benchmark harnesses.
+//!
+//! Paper mapping: measurement substrate for every table/figure —
+//! [`busy_wait_ns`] is Listing 3's grain control, [`Table`] renders the
+//! paper-shaped rows, and [`bench_json`] carries the CI contract.
 
 pub mod bench_json;
 mod stats;

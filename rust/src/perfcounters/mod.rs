@@ -5,6 +5,12 @@
 //! registry of named monotonic counters and gauges, sampled on demand
 //! (`rhpx info`), plus interval snapshots for before/after deltas in the
 //! benchmark harnesses.
+//!
+//! Paper mapping: observability substrate (no table/figure of its own).
+//! Besides `/scheduler/...`, the adaptive resilience policies publish
+//! `/resilience/<name>/count/{attempts,failures}` and
+//! `/resilience/<name>/gauge/{budget,error_rate_ppm}` (see
+//! [`crate::resilience::executor::AdaptivePolicy`]).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

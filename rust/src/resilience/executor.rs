@@ -1,0 +1,1350 @@
+//! Resilient executor decorators + adaptive budget policy (§IV as an
+//! executor surface; implements the paper's future-work "special
+//! executors that will manage the aspects of resiliency").
+//!
+//! The free functions of [`crate::resilience`] make one *call site*
+//! resilient. This module makes a whole *launch path* resilient: a
+//! [`TaskLauncher`] says where attempts physically run (a scheduler pool,
+//! a simulated cluster), and the decorators [`ReplayExecutor`] /
+//! [`ReplicateExecutor`] wrap any launcher so that every task submitted
+//! through them transparently gains replay or replication semantics —
+//! validated and voting variants included. Call sites written against
+//! [`ResilientExecutor`] (or the [`crate::async_on`] /
+//! [`crate::dataflow_on`] free functions) never change; the policy is
+//! swapped by swapping the executor, exactly like TeaMPI decorates the
+//! MPI launch path.
+//!
+//! On top of the fixed-budget decorators, [`AdaptivePolicy`] tunes the
+//! replay/replication budget *n* online from the observed per-executor
+//! error rate (an EWMA over recent attempts), published through
+//! [`crate::perfcounters`] under `/resilience/<name>/...`.
+//!
+//! ```
+//! use rhpx::resilience::executor::{PoolExecutor, ReplayExecutor, ResilientExecutor};
+//! use rhpx::Runtime;
+//!
+//! let rt = Runtime::builder().workers(2).build();
+//! // Swap this executor — not the call sites — to change the policy.
+//! let exec = ReplayExecutor::new(PoolExecutor::new(&rt), 3);
+//! let f = exec.spawn(|| 21i32 * 2);
+//! assert_eq!(f.get(), Ok(42));
+//! ```
+
+use std::sync::{Arc, Mutex};
+
+use crate::api::{run_task_body, IntoTaskResult};
+use crate::error::{ResilienceError, TaskError, TaskResult};
+use crate::future::{when_all_results, Future, Promise};
+use crate::perfcounters::{global, Instrument};
+use crate::runtime_handle::Runtime;
+
+use super::replicate::{with_retries, ReplicateState};
+use super::Voter;
+
+/// A re-runnable task body, shared across attempts and replicas.
+pub type TaskFn<T> = Arc<dyn Fn() -> TaskResult<T> + Send + Sync>;
+
+/// A shared validation predicate over a computed result.
+pub type TaskValidator<T> = Arc<dyn Fn(&T) -> bool + Send + Sync>;
+
+// ---------------------------------------------------------------------
+// Base launchers
+// ---------------------------------------------------------------------
+
+/// Where task attempts physically run.
+///
+/// A launcher submits *one* execution of a body and resolves the returned
+/// future with its outcome; the resilience decorators call it once per
+/// attempt (replay) or once per replica (replicate). Implementors:
+/// [`PoolExecutor`] (a [`Runtime`]'s scheduler pool) and
+/// [`crate::distributed::ClusterExecutor`] (round-robin over simulated
+/// localities).
+pub trait TaskLauncher: Clone + Send + Sync + 'static {
+    /// Submit one execution of `body`.
+    fn submit<T: Send + 'static>(&self, body: TaskFn<T>) -> Future<T>;
+
+    /// Sample a placement token for one resilient launch. Decorators
+    /// call this once per launch and pass it, with each attempt/replica
+    /// index, to [`TaskLauncher::submit_seq`] — so a launcher with a
+    /// placement notion can guarantee deterministic spread per launch
+    /// (the cluster launcher maps `token + seq` onto successive
+    /// localities: every retry lands on the *next* locality and replicas
+    /// fan out to distinct ones, even when many launches interleave).
+    /// Launchers with no placement notion return 0.
+    fn placement_token(&self) -> usize {
+        0
+    }
+
+    /// Submit attempt/replica number `seq` (0-based) of the launch that
+    /// sampled `token`. The default ignores placement.
+    fn submit_seq<T: Send + 'static>(
+        &self,
+        body: TaskFn<T>,
+        token: usize,
+        seq: usize,
+    ) -> Future<T> {
+        let _ = (token, seq);
+        self.submit(body)
+    }
+
+    /// How many attempts can make progress concurrently.
+    fn parallelism(&self) -> usize;
+
+    /// Human-readable description of the substrate (for reports).
+    fn base_label(&self) -> String;
+}
+
+/// The scheduler-backed base launcher: every submission is a fresh job on
+/// the [`Runtime`]'s work-stealing pool (so a replayed attempt yields to
+/// other runnable work, exactly like the free-function replay).
+#[derive(Clone)]
+pub struct PoolExecutor {
+    rt: Runtime,
+}
+
+impl PoolExecutor {
+    pub fn new(rt: &Runtime) -> Self {
+        PoolExecutor { rt: rt.clone() }
+    }
+
+    /// The runtime this launcher submits to.
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl TaskLauncher for PoolExecutor {
+    fn submit<T: Send + 'static>(&self, body: TaskFn<T>) -> Future<T> {
+        let (p, fut) = Promise::new();
+        self.rt.pool().spawn_job(Box::new(move || {
+            p.set_result(run_task_body(move || body()));
+        }));
+        fut
+    }
+
+    fn parallelism(&self) -> usize {
+        self.rt.workers()
+    }
+
+    fn base_label(&self) -> String {
+        format!("pool({})", self.rt.workers())
+    }
+}
+
+// ---------------------------------------------------------------------
+// The executor surface
+// ---------------------------------------------------------------------
+
+/// The executor-routed launch surface: `async_(exec, f)` call sites are
+/// written once against this trait, and gain (or lose) resiliency by
+/// swapping the executor instance — never the call.
+///
+/// [`PoolExecutor`] implements it with single-attempt semantics (the
+/// baseline); [`ReplayExecutor`] and [`ReplicateExecutor`] decorate any
+/// [`TaskLauncher`] with the paper's replay/replicate policies.
+pub trait ResilientExecutor: Clone + Send + Sync + 'static {
+    /// Core launch: drive `body` (checked by `validate` when present)
+    /// into `promise` under this executor's policy. The provided
+    /// convenience methods below all funnel through here.
+    fn spawn_into<T>(
+        &self,
+        promise: Promise<T>,
+        body: TaskFn<T>,
+        validate: Option<TaskValidator<T>>,
+    ) where
+        T: Clone + Send + 'static;
+
+    /// Parallelism hint (used by algorithms for chunking).
+    fn concurrency(&self) -> usize;
+
+    /// Policy description, e.g. `replay(3) over pool(4)`.
+    fn label(&self) -> String;
+
+    /// Launch `f` under this executor's policy.
+    fn spawn<T, R, F>(&self, f: F) -> Future<T>
+    where
+        T: Clone + Send + 'static,
+        R: IntoTaskResult<T>,
+        F: Fn() -> R + Send + Sync + 'static,
+    {
+        let (p, fut) = Promise::new();
+        self.spawn_into(p, Arc::new(move || run_task_body(&f)), None);
+        fut
+    }
+
+    /// Launch `f`; a result is acceptable only if `val_f` returns `true`
+    /// (a rejected result counts as a failed attempt, as in the
+    /// `*_validate` free functions).
+    fn spawn_validate<T, R, F, V>(&self, val_f: V, f: F) -> Future<T>
+    where
+        T: Clone + Send + 'static,
+        R: IntoTaskResult<T>,
+        F: Fn() -> R + Send + Sync + 'static,
+        V: Fn(&T) -> bool + Send + Sync + 'static,
+    {
+        let (p, fut) = Promise::new();
+        self.spawn_into(p, Arc::new(move || run_task_body(&f)), Some(Arc::new(val_f)));
+        fut
+    }
+
+    /// Dataflow through this executor: run `f` over the dependency values
+    /// once all of `deps` are ready. Failed dependencies are not retried
+    /// (the dependency carries its own resilient launch if desired); the
+    /// body itself runs under this executor's policy.
+    fn dataflow<T, U, R, F>(&self, f: F, deps: Vec<Future<T>>) -> Future<U>
+    where
+        T: Clone + Send + Sync + 'static,
+        U: Clone + Send + 'static,
+        R: IntoTaskResult<U>,
+        F: Fn(&[T]) -> R + Send + Sync + 'static,
+    {
+        dataflow_into(self, f, deps, None)
+    }
+
+    /// As [`ResilientExecutor::dataflow`], with a validation predicate on
+    /// the body's result.
+    fn dataflow_validate<T, U, R, F, V>(&self, val_f: V, f: F, deps: Vec<Future<T>>) -> Future<U>
+    where
+        T: Clone + Send + Sync + 'static,
+        U: Clone + Send + 'static,
+        R: IntoTaskResult<U>,
+        F: Fn(&[T]) -> R + Send + Sync + 'static,
+        V: Fn(&U) -> bool + Send + Sync + 'static,
+    {
+        dataflow_into(self, f, deps, Some(Arc::new(val_f)))
+    }
+}
+
+/// Resolve `deps`, build the shared re-runnable body over the collapsed
+/// values, and hand it — with the outer promise — to `sink` (no
+/// intermediate future, mirroring the free-function dataflow variants).
+/// Failed dependencies skip `sink` and poison the promise directly.
+fn with_resolved_deps<T, U, R, F, G>(f: F, deps: Vec<Future<T>>, sink: G) -> Future<U>
+where
+    T: Clone + Send + Sync + 'static,
+    U: Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+    G: FnOnce(Promise<U>, TaskFn<U>) + Send + 'static,
+{
+    let (p, fut) = Promise::new();
+    when_all_results(deps).on_ready(move |r| {
+        let collapsed = match r {
+            Ok(results) => crate::future::collapse_results(results),
+            Err(e) => Err(e.clone()),
+        };
+        match collapsed {
+            Ok(values) => {
+                let values: Arc<Vec<T>> = Arc::new(values);
+                let f = Arc::new(f);
+                let body: TaskFn<U> = Arc::new(move || {
+                    let values = Arc::clone(&values);
+                    let f = Arc::clone(&f);
+                    run_task_body(move || f(&values))
+                });
+                sink(p, body);
+            }
+            Err(e) => p.set_error(e),
+        }
+    });
+    fut
+}
+
+/// Resolve `deps`, then drive the body into the outer promise through the
+/// executor's policy.
+fn dataflow_into<EX, T, U, R, F>(
+    ex: &EX,
+    f: F,
+    deps: Vec<Future<T>>,
+    validate: Option<TaskValidator<U>>,
+) -> Future<U>
+where
+    EX: ResilientExecutor,
+    T: Clone + Send + Sync + 'static,
+    U: Clone + Send + 'static,
+    R: IntoTaskResult<U>,
+    F: Fn(&[T]) -> R + Send + Sync + 'static,
+{
+    let ex = ex.clone();
+    with_resolved_deps(f, deps, move |p, body| ex.spawn_into(p, body, validate))
+}
+
+/// Single-attempt `spawn_into` shared by the base (undecorated)
+/// executors: run once; a validation rejection surfaces as
+/// [`TaskError::ValidationRejected`] with no retry.
+pub(crate) fn base_spawn_into<E, T>(
+    base: &E,
+    promise: Promise<T>,
+    body: TaskFn<T>,
+    validate: Option<TaskValidator<T>>,
+) where
+    E: TaskLauncher,
+    T: Clone + Send + 'static,
+{
+    base.submit(body).on_ready(move |r| match r {
+        Ok(v) => match &validate {
+            Some(check) if !check(v) => promise.set_error(TaskError::ValidationRejected),
+            _ => promise.set_value(v.clone()),
+        },
+        Err(e) => promise.set_error(e.clone()),
+    });
+}
+
+impl ResilientExecutor for PoolExecutor {
+    fn spawn_into<T>(
+        &self,
+        promise: Promise<T>,
+        body: TaskFn<T>,
+        validate: Option<TaskValidator<T>>,
+    ) where
+        T: Clone + Send + 'static,
+    {
+        base_spawn_into(self, promise, body, validate);
+    }
+
+    fn concurrency(&self) -> usize {
+        self.parallelism()
+    }
+
+    fn label(&self) -> String {
+        self.base_label()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Budget: fixed n, or adaptively tuned
+// ---------------------------------------------------------------------
+
+/// The attempt/replica budget of a decorator: a fixed `n`, or one tuned
+/// online by an [`AdaptivePolicy`].
+#[derive(Clone)]
+pub enum Budget {
+    /// A fixed budget, as in the paper's `async_replay(n, …)`.
+    Fixed(usize),
+    /// Budget sampled from the policy at each launch.
+    Adaptive(Arc<AdaptivePolicy>),
+}
+
+impl Budget {
+    /// The budget to use for a launch starting now.
+    pub fn n(&self) -> usize {
+        match self {
+            Budget::Fixed(n) => (*n).max(1),
+            Budget::Adaptive(p) => p.budget(),
+        }
+    }
+
+    /// Feed one attempt outcome back into the policy (no-op when fixed).
+    fn record(&self, failed: bool) {
+        if let Budget::Adaptive(p) = self {
+            p.record(failed);
+        }
+    }
+
+    fn label(&self) -> String {
+        match self {
+            Budget::Fixed(n) => n.to_string(),
+            Budget::Adaptive(p) => format!("adaptive(max {})", p.ceiling()),
+        }
+    }
+}
+
+/// Configuration for an [`AdaptivePolicy`].
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// EWMA weight of the newest observation, in `(0, 1]`.
+    pub alpha: f64,
+    /// Minimum budget (used while the observed error rate is ~0).
+    pub floor: usize,
+    /// Hard ceiling the budget never exceeds.
+    pub ceiling: usize,
+    /// Desired probability that a launch still fails after `n` attempts:
+    /// the policy picks the smallest `n` with `p^n <= target` (clamped to
+    /// `[floor, ceiling]`), where `p` is the EWMA error rate.
+    pub target: f64,
+    /// Perfcounter namespace: instruments are registered under
+    /// `/resilience/<name>/...` in the global registry.
+    pub name: String,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            alpha: 0.1,
+            floor: 2,
+            ceiling: 8,
+            target: 1e-4,
+            name: "default".to_string(),
+        }
+    }
+}
+
+/// Online tuner for the replay/replication budget `n`.
+///
+/// Every attempt outcome is folded into an exponentially weighted moving
+/// average of the per-attempt error rate; [`AdaptivePolicy::budget`]
+/// translates that rate into the smallest `n` meeting the configured
+/// residual-failure target, clamped to `[floor, ceiling]`. The observed
+/// rate and current budget are published as performance counters
+/// (`/resilience/<name>/gauge/error_rate_ppm`, `.../gauge/budget`) plus
+/// monotonic attempt/failure counts.
+///
+/// ```
+/// use rhpx::resilience::executor::{AdaptiveConfig, AdaptivePolicy};
+///
+/// let policy = AdaptivePolicy::new(AdaptiveConfig {
+///     alpha: 0.5,
+///     floor: 1,
+///     ceiling: 6,
+///     target: 0.01,
+///     name: "doc".to_string(),
+/// });
+/// assert_eq!(policy.budget(), 1); // quiet: the floor
+/// for _ in 0..8 {
+///     policy.record(true); // failure spike
+/// }
+/// assert_eq!(policy.budget(), 6); // clamped at the ceiling
+/// for _ in 0..12 {
+///     policy.record(false); // quiet period
+/// }
+/// assert_eq!(policy.budget(), 1); // decays back to the floor
+/// ```
+pub struct AdaptivePolicy {
+    cfg: AdaptiveConfig,
+    ewma: Mutex<f64>,
+    attempts: Arc<Instrument>,
+    failures: Arc<Instrument>,
+    budget_gauge: Arc<Instrument>,
+    rate_gauge: Arc<Instrument>,
+}
+
+impl AdaptivePolicy {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        let reg = global();
+        let base = format!("/resilience/{}", cfg.name);
+        let policy = AdaptivePolicy {
+            attempts: reg.counter(&format!("{base}/count/attempts")),
+            failures: reg.counter(&format!("{base}/count/failures")),
+            budget_gauge: reg.gauge(&format!("{base}/gauge/budget")),
+            rate_gauge: reg.gauge(&format!("{base}/gauge/error_rate_ppm")),
+            ewma: Mutex::new(0.0),
+            cfg,
+        };
+        policy.budget_gauge.set(policy.budget() as u64);
+        policy
+    }
+
+    /// A policy with default tuning under the given counter namespace.
+    pub fn named(name: &str) -> Self {
+        AdaptivePolicy::new(AdaptiveConfig { name: name.to_string(), ..Default::default() })
+    }
+
+    /// Fold one attempt outcome into the error-rate estimate.
+    pub fn record(&self, failed: bool) {
+        self.attempts.increment(1);
+        if failed {
+            self.failures.increment(1);
+        }
+        let p = {
+            let mut g = self.ewma.lock().unwrap();
+            let x = if failed { 1.0 } else { 0.0 };
+            *g = self.cfg.alpha * x + (1.0 - self.cfg.alpha) * *g;
+            *g
+        };
+        self.rate_gauge.set((p * 1e6) as u64);
+        self.budget_gauge.set(self.budget_for(p) as u64);
+    }
+
+    /// The current EWMA per-attempt error-rate estimate, in `[0, 1]`.
+    pub fn error_rate(&self) -> f64 {
+        *self.ewma.lock().unwrap()
+    }
+
+    /// The budget `n` a launch starting now should use.
+    pub fn budget(&self) -> usize {
+        self.budget_for(self.error_rate())
+    }
+
+    /// The configured hard ceiling.
+    pub fn ceiling(&self) -> usize {
+        self.cfg.ceiling.max(self.cfg.floor.max(1))
+    }
+
+    /// Total attempts observed (from the perfcounter).
+    pub fn attempts(&self) -> u64 {
+        self.attempts.get()
+    }
+
+    /// Total failed attempts observed (from the perfcounter).
+    pub fn failures(&self) -> u64 {
+        self.failures.get()
+    }
+
+    fn budget_for(&self, p: f64) -> usize {
+        let floor = self.cfg.floor.max(1);
+        let ceiling = self.cfg.ceiling.max(floor);
+        if !(p > 0.0) {
+            return floor;
+        }
+        if p >= 1.0 {
+            return ceiling;
+        }
+        let target = self.cfg.target.clamp(1e-12, 0.5);
+        let raw = (target.ln() / p.ln()).ceil();
+        if !raw.is_finite() || raw <= floor as f64 {
+            floor
+        } else {
+            (raw as usize).min(ceiling)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ReplayExecutor<E>
+// ---------------------------------------------------------------------
+
+/// Decorator: every task spawned through it is replayed up to the budget
+/// on failure (error, panic, or rejected validation), each retry being a
+/// fresh submission on the wrapped launcher — §IV-A (task replay) as a
+/// launch policy instead of a call-site change.
+///
+/// ```
+/// use std::sync::atomic::{AtomicUsize, Ordering};
+/// use std::sync::Arc;
+///
+/// use rhpx::resilience::executor::{ReplayExecutor, ResilientExecutor};
+/// use rhpx::{Runtime, TaskResult};
+///
+/// let rt = Runtime::builder().workers(2).build();
+/// let exec = ReplayExecutor::new(rt.executor(), 5);
+/// let calls = Arc::new(AtomicUsize::new(0));
+/// let c = Arc::clone(&calls);
+/// let f = exec.spawn(move || -> TaskResult<i32> {
+///     if c.fetch_add(1, Ordering::SeqCst) < 2 {
+///         Err("transient".into())
+///     } else {
+///         Ok(99)
+///     }
+/// });
+/// assert_eq!(f.get(), Ok(99));
+/// assert_eq!(calls.load(Ordering::SeqCst), 3);
+/// ```
+#[derive(Clone)]
+pub struct ReplayExecutor<E: TaskLauncher> {
+    base: E,
+    budget: Budget,
+}
+
+impl<E: TaskLauncher> ReplayExecutor<E> {
+    /// Replay up to `n` total attempts per launch.
+    pub fn new(base: E, n: usize) -> Self {
+        ReplayExecutor { base, budget: Budget::Fixed(n.max(1)) }
+    }
+
+    /// Replay with the budget tuned online by `policy`.
+    pub fn adaptive(base: E, policy: Arc<AdaptivePolicy>) -> Self {
+        ReplayExecutor { base, budget: Budget::Adaptive(policy) }
+    }
+
+    /// The budget a launch starting now would receive.
+    pub fn current_budget(&self) -> usize {
+        self.budget.n()
+    }
+
+    /// The adaptive policy, when this executor uses one.
+    pub fn policy(&self) -> Option<&Arc<AdaptivePolicy>> {
+        match &self.budget {
+            Budget::Adaptive(p) => Some(p),
+            Budget::Fixed(_) => None,
+        }
+    }
+}
+
+fn replay_attempt<E, T>(
+    base: E,
+    budget: Budget,
+    promise: Promise<T>,
+    body: TaskFn<T>,
+    validate: Option<TaskValidator<T>>,
+    token: usize,
+    n: usize,
+    attempt: usize,
+) where
+    E: TaskLauncher,
+    T: Clone + Send + 'static,
+{
+    let fut = base.submit_seq(Arc::clone(&body), token, attempt - 1);
+    fut.on_ready(move |r| {
+        let outcome = match r {
+            Ok(v) => match &validate {
+                Some(check) if !check(v) => Err(TaskError::ValidationRejected),
+                _ => Ok(v.clone()),
+            },
+            Err(e) => Err(e.clone()),
+        };
+        match outcome {
+            Ok(v) => {
+                budget.record(false);
+                promise.set_value(v);
+            }
+            Err(_) if attempt < n => {
+                budget.record(true);
+                replay_attempt(base, budget, promise, body, validate, token, n, attempt + 1);
+            }
+            Err(e) => {
+                budget.record(true);
+                promise.set_error(
+                    ResilienceError::Exhausted { attempts: attempt, last: e }.into(),
+                );
+            }
+        }
+    });
+}
+
+impl<E: TaskLauncher> ResilientExecutor for ReplayExecutor<E> {
+    fn spawn_into<T>(
+        &self,
+        promise: Promise<T>,
+        body: TaskFn<T>,
+        validate: Option<TaskValidator<T>>,
+    ) where
+        T: Clone + Send + 'static,
+    {
+        let n = self.budget.n();
+        let token = self.base.placement_token();
+        replay_attempt(
+            self.base.clone(),
+            self.budget.clone(),
+            promise,
+            body,
+            validate,
+            token,
+            n,
+            1,
+        );
+    }
+
+    fn concurrency(&self) -> usize {
+        self.base.parallelism()
+    }
+
+    fn label(&self) -> String {
+        format!("replay({}) over {}", self.budget.label(), self.base.base_label())
+    }
+}
+
+// ---------------------------------------------------------------------
+// ReplicateExecutor<E>
+// ---------------------------------------------------------------------
+
+/// Decorator: every task spawned through it is launched as `n` eager
+/// replicas on the wrapped launcher — §IV-B (task replicate) as a launch
+/// policy. Consensus is the same machinery as the free functions
+/// ([`ReplicateState`](crate::resilience) internals, shared code): first
+/// acceptable result wins, or — via [`ReplicateExecutor::spawn_vote`] —
+/// all replicas are awaited and a voting function picks the winner.
+///
+/// ```
+/// use rhpx::resilience::executor::{PoolExecutor, ReplicateExecutor};
+/// use rhpx::resilience::vote_majority;
+/// use rhpx::Runtime;
+///
+/// let rt = Runtime::builder().workers(2).build();
+/// let exec = ReplicateExecutor::new(PoolExecutor::new(&rt), 3);
+/// let f = exec.spawn_vote(vote_majority, || 7i64);
+/// assert_eq!(f.get(), Ok(7));
+/// ```
+#[derive(Clone)]
+pub struct ReplicateExecutor<E: TaskLauncher> {
+    base: E,
+    budget: Budget,
+    /// Per-replica private replay attempts (the paper's future-work
+    /// replicate-of-replays refinement); 1 = off.
+    replay_each: usize,
+}
+
+impl<E: TaskLauncher> ReplicateExecutor<E> {
+    /// Launch `n` eager replicas per task.
+    pub fn new(base: E, n: usize) -> Self {
+        ReplicateExecutor { base, budget: Budget::Fixed(n.max(1)), replay_each: 1 }
+    }
+
+    /// Replicate with the width tuned online by `policy`.
+    pub fn adaptive(base: E, policy: Arc<AdaptivePolicy>) -> Self {
+        ReplicateExecutor { base, budget: Budget::Adaptive(policy), replay_each: 1 }
+    }
+
+    /// Let each replica privately retry up to `attempts` times before it
+    /// reports (replicate-of-replays, §Future-Work). With an adaptive
+    /// budget, the policy sees one outcome per *replica* (the retried
+    /// aggregate), not one per inner attempt.
+    pub fn with_replay(mut self, attempts: usize) -> Self {
+        self.replay_each = attempts.max(1);
+        self
+    }
+
+    /// The replica count a launch starting now would receive.
+    pub fn current_budget(&self) -> usize {
+        self.budget.n()
+    }
+
+    fn replicate_into<T>(
+        &self,
+        promise: Promise<T>,
+        body: TaskFn<T>,
+        validate: Option<TaskValidator<T>>,
+        voter: Option<Voter<T>>,
+    ) where
+        T: Clone + Send + 'static,
+    {
+        let n = self.budget.n();
+        // With per-replica retries, `with_retries` already validates each
+        // inner attempt — an `Ok` coming out of it is validated, so the
+        // consensus layer must not re-run (and re-price) the predicate.
+        let (body, validate) = if self.replay_each > 1 {
+            (with_retries(body, validate, self.replay_each), None)
+        } else {
+            (body, validate)
+        };
+        let state = ReplicateState::new(promise, n, voter);
+        let token = self.base.placement_token();
+        for i in 0..n {
+            let state = Arc::clone(&state);
+            let validate = validate.clone();
+            let budget = self.budget.clone();
+            self.base.submit_seq(Arc::clone(&body), token, i).on_ready(move |r| match r {
+                Ok(v) => {
+                    let validated = validate.as_ref().map(|check| check(v));
+                    budget.record(validated == Some(false));
+                    state.on_replica_done(Ok(v.clone()), validated);
+                }
+                Err(e) => {
+                    budget.record(true);
+                    state.on_replica_done(Err(e.clone()), None);
+                }
+            });
+        }
+    }
+
+    /// Replicated launch with consensus by vote: wait for all replicas,
+    /// then `vote_f` picks the winner over every computed result (the
+    /// silent-error defence of the `*_vote` free functions).
+    pub fn spawn_vote<T, R, F, W>(&self, vote_f: W, f: F) -> Future<T>
+    where
+        T: Clone + Send + 'static,
+        R: IntoTaskResult<T>,
+        F: Fn() -> R + Send + Sync + 'static,
+        W: Fn(&[T]) -> Option<T> + Send + Sync + 'static,
+    {
+        let (p, fut) = Promise::new();
+        self.replicate_into(
+            p,
+            Arc::new(move || run_task_body(&f)),
+            None,
+            Some(Arc::new(vote_f)),
+        );
+        fut
+    }
+
+    /// As [`ReplicateExecutor::spawn_vote`], voting only over the
+    /// positively validated subset of results.
+    pub fn spawn_vote_validate<T, R, F, V, W>(&self, vote_f: W, val_f: V, f: F) -> Future<T>
+    where
+        T: Clone + Send + 'static,
+        R: IntoTaskResult<T>,
+        F: Fn() -> R + Send + Sync + 'static,
+        V: Fn(&T) -> bool + Send + Sync + 'static,
+        W: Fn(&[T]) -> Option<T> + Send + Sync + 'static,
+    {
+        let (p, fut) = Promise::new();
+        self.replicate_into(
+            p,
+            Arc::new(move || run_task_body(&f)),
+            Some(Arc::new(val_f)),
+            Some(Arc::new(vote_f)),
+        );
+        fut
+    }
+
+    /// Voting dataflow through this executor (all replicas awaited, then
+    /// `vote_f` decides), for call sites that also carry dependencies.
+    pub fn dataflow_vote<T, U, R, F, W>(
+        &self,
+        vote_f: W,
+        f: F,
+        deps: Vec<Future<T>>,
+    ) -> Future<U>
+    where
+        T: Clone + Send + Sync + 'static,
+        U: Clone + Send + 'static,
+        R: IntoTaskResult<U>,
+        F: Fn(&[T]) -> R + Send + Sync + 'static,
+        W: Fn(&[U]) -> Option<U> + Send + Sync + 'static,
+    {
+        let ex = self.clone();
+        let voter: Voter<U> = Arc::new(vote_f);
+        with_resolved_deps(f, deps, move |p, body| {
+            ex.replicate_into(p, body, None, Some(voter))
+        })
+    }
+}
+
+impl<E: TaskLauncher> ResilientExecutor for ReplicateExecutor<E> {
+    fn spawn_into<T>(
+        &self,
+        promise: Promise<T>,
+        body: TaskFn<T>,
+        validate: Option<TaskValidator<T>>,
+    ) where
+        T: Clone + Send + 'static,
+    {
+        self.replicate_into(promise, body, validate, None);
+    }
+
+    fn concurrency(&self) -> usize {
+        self.base.parallelism()
+    }
+
+    fn label(&self) -> String {
+        format!("replicate({}) over {}", self.budget.label(), self.base.base_label())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Declarative policy selection (shared by the CLI-facing layers)
+// ---------------------------------------------------------------------
+
+/// Declarative decorator selection shared by the CLI-facing layers (the
+/// stencil driver's `--resilience` route re-exports this as
+/// `stencil::ExecPolicy`; the workload bench path as
+/// `workload::ExecVariant`), so the labels and the construction logic
+/// live in exactly one place.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicySpec {
+    /// `ReplayExecutor(n)` over the runtime's pool.
+    Replay { n: usize },
+    /// `ReplicateExecutor(n)` over the runtime's pool (first validated
+    /// replica wins).
+    Replicate { n: usize },
+    /// Adaptive replay: the budget is tuned online by an
+    /// [`AdaptivePolicy`] and never exceeds `ceiling`.
+    Adaptive { ceiling: usize },
+}
+
+impl PolicySpec {
+    pub fn label(&self) -> String {
+        match self {
+            PolicySpec::Replay { n } => format!("exec_replay({n})"),
+            PolicySpec::Replicate { n } => format!("exec_replicate({n})"),
+            PolicySpec::Adaptive { ceiling } => format!("exec_adaptive(max {ceiling})"),
+        }
+    }
+
+    /// Eager-compute multiplier: replicate runs the body `n` times even
+    /// without failures; replay (fixed or adaptive) runs it once.
+    pub fn compute_multiplier(&self) -> usize {
+        match self {
+            PolicySpec::Replicate { n } => *n,
+            _ => 1,
+        }
+    }
+
+    /// Build the decorator over `rt`'s pool. `name` namespaces the
+    /// adaptive perfcounters; `floor` is the adaptive minimum budget,
+    /// clamped so the requested ceiling is always honored exactly.
+    pub fn build(&self, rt: &Runtime, name: &str, floor: usize) -> BuiltExecutor {
+        let pool = PoolExecutor::new(rt);
+        match *self {
+            PolicySpec::Replay { n } => BuiltExecutor::Replay(ReplayExecutor::new(pool, n)),
+            PolicySpec::Replicate { n } => {
+                BuiltExecutor::Replicate(ReplicateExecutor::new(pool, n))
+            }
+            PolicySpec::Adaptive { ceiling } => {
+                let ceiling = ceiling.max(1);
+                let policy = Arc::new(AdaptivePolicy::new(AdaptiveConfig {
+                    floor: floor.clamp(1, ceiling),
+                    ceiling,
+                    name: name.to_string(),
+                    ..AdaptiveConfig::default()
+                }));
+                BuiltExecutor::Replay(ReplayExecutor::adaptive(pool, policy))
+            }
+        }
+    }
+}
+
+/// A pool-backed decorator built from a [`PolicySpec`] — a small
+/// dispatch facade so call sites need not be generic over the concrete
+/// decorator type.
+#[derive(Clone)]
+pub enum BuiltExecutor {
+    Replay(ReplayExecutor<PoolExecutor>),
+    Replicate(ReplicateExecutor<PoolExecutor>),
+}
+
+impl BuiltExecutor {
+    /// Launch `f` under the built policy.
+    pub fn spawn<T, R, F>(&self, f: F) -> Future<T>
+    where
+        T: Clone + Send + 'static,
+        R: IntoTaskResult<T>,
+        F: Fn() -> R + Send + Sync + 'static,
+    {
+        match self {
+            BuiltExecutor::Replay(ex) => ex.spawn(f),
+            BuiltExecutor::Replicate(ex) => ex.spawn(f),
+        }
+    }
+
+    /// Validated dataflow under the built policy.
+    pub fn dataflow_validate<T, U, R, F, V>(
+        &self,
+        val_f: V,
+        f: F,
+        deps: Vec<Future<T>>,
+    ) -> Future<U>
+    where
+        T: Clone + Send + Sync + 'static,
+        U: Clone + Send + 'static,
+        R: IntoTaskResult<U>,
+        F: Fn(&[T]) -> R + Send + Sync + 'static,
+        V: Fn(&U) -> bool + Send + Sync + 'static,
+    {
+        match self {
+            BuiltExecutor::Replay(ex) => ex.dataflow_validate(val_f, f, deps),
+            BuiltExecutor::Replicate(ex) => ex.dataflow_validate(val_f, f, deps),
+        }
+    }
+
+    /// Policy description of the underlying decorator.
+    pub fn label(&self) -> String {
+        match self {
+            BuiltExecutor::Replay(ex) => ex.label(),
+            BuiltExecutor::Replicate(ex) => ex.label(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resilience::vote_majority;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn rt() -> Runtime {
+        Runtime::builder().workers(2).build()
+    }
+
+    fn replay(n: usize) -> ReplayExecutor<PoolExecutor> {
+        ReplayExecutor::new(PoolExecutor::new(&rt()), n)
+    }
+
+    fn replicate(n: usize) -> ReplicateExecutor<PoolExecutor> {
+        ReplicateExecutor::new(PoolExecutor::new(&rt()), n)
+    }
+
+    // -- the existing replay-exhaustion suite, through the decorator ----
+
+    #[test]
+    fn replay_decorator_succeeds_first_try() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = replay(3).spawn(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+            7i32
+        });
+        assert_eq!(f.get(), Ok(7));
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn replay_decorator_retries_until_success() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = replay(5).spawn(move || -> TaskResult<i32> {
+            if c.fetch_add(1, Ordering::SeqCst) < 2 {
+                Err("transient".into())
+            } else {
+                Ok(99)
+            }
+        });
+        assert_eq!(f.get(), Ok(99));
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn replay_decorator_exhaustion_runs_exactly_n_attempts_for_each_n() {
+        for n in 1..=6usize {
+            let calls = Arc::new(AtomicUsize::new(0));
+            let c = Arc::clone(&calls);
+            let f = replay(n).spawn(move || -> TaskResult<i32> {
+                c.fetch_add(1, Ordering::SeqCst);
+                Err("always".into())
+            });
+            let err = f.get().unwrap_err();
+            match err.as_resilience() {
+                Some(ResilienceError::Exhausted { attempts, last }) => {
+                    assert_eq!(*attempts, n, "n={n}");
+                    assert_eq!(last, &TaskError::App("always".to_string()));
+                }
+                other => panic!("n={n}: unexpected {other:?}"),
+            }
+            assert_eq!(calls.load(Ordering::SeqCst), n, "exactly n bodies must run");
+        }
+    }
+
+    #[test]
+    fn replay_decorator_never_exceeds_n_attempts_on_panic() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f: Future<i32> = replay(4).spawn(move || -> i32 {
+            c.fetch_add(1, Ordering::SeqCst);
+            panic!("always")
+        });
+        assert!(f.get().is_err());
+        assert_eq!(calls.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn replay_decorator_validation_rejection_counts_as_failed_attempt() {
+        let n = 4;
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = replay(n).spawn_validate(
+            |_: &i32| false,
+            move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                1i32
+            },
+        );
+        match f.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::Exhausted { attempts, last }) => {
+                assert_eq!(*attempts, n);
+                assert_eq!(last, &TaskError::ValidationRejected);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), n);
+    }
+
+    #[test]
+    fn replay_decorator_validate_rejects_then_accepts() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = replay(5).spawn_validate(
+            |v: &usize| *v >= 2,
+            move || c.fetch_add(1, Ordering::SeqCst),
+        );
+        assert_eq!(f.get(), Ok(2));
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn replay_decorator_dataflow_matches_free_function_semantics() {
+        let rt = rt();
+        let ex = ReplayExecutor::new(PoolExecutor::new(&rt), 4);
+        let a = crate::api::async_(&rt, || 10i64);
+        let b = crate::api::async_(&rt, || 20i64);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = ex.dataflow(
+            move |vals: &[i64]| -> TaskResult<i64> {
+                if c.fetch_add(1, Ordering::SeqCst) < 2 {
+                    Err("flaky".into())
+                } else {
+                    Ok(vals.iter().sum())
+                }
+            },
+            vec![a, b],
+        );
+        assert_eq!(f.get(), Ok(30));
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn replay_decorator_dataflow_does_not_replay_failed_deps() {
+        let rt = rt();
+        let ex = ReplayExecutor::new(PoolExecutor::new(&rt), 3);
+        let bad: Future<i64> =
+            crate::api::async_(&rt, || -> TaskResult<i64> { Err("dep dead".into()) });
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = ex.dataflow(
+            move |_: &[i64]| -> i64 {
+                c.fetch_add(1, Ordering::SeqCst);
+                0
+            },
+            vec![bad],
+        );
+        match f.get() {
+            Err(TaskError::DependencyFailed(_)) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 0, "body must never run");
+    }
+
+    // -- the existing replicate/validation suite, through the decorator -
+
+    #[test]
+    fn replicate_decorator_launches_all_replicas_eagerly() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let rt = rt();
+        let ex = ReplicateExecutor::new(PoolExecutor::new(&rt), 4);
+        let f = ex.spawn(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+            1i32
+        });
+        assert_eq!(f.get(), Ok(1));
+        rt.wait_idle();
+        assert_eq!(calls.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn replicate_decorator_all_fail_reports_last_error() {
+        let f: Future<i32> =
+            replicate(3).spawn(|| -> TaskResult<i32> { Err("dead".into()) });
+        match f.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::AllReplicasFailed { replicas: 3, last }) => {
+                assert_eq!(last, &TaskError::App("dead".to_string()));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn replicate_decorator_validate_none_validates() {
+        let f = replicate(3).spawn_validate(|_: &i32| false, || 5i32);
+        match f.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::ValidationFailed { replicas: 3 }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn replicate_decorator_vote_defeats_silent_minority_corruption() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = replicate(3).spawn_vote(vote_majority, move || {
+            if c.fetch_add(1, Ordering::SeqCst) == 0 {
+                666i64
+            } else {
+                42i64
+            }
+        });
+        assert_eq!(f.get(), Ok(42));
+    }
+
+    #[test]
+    fn replicate_decorator_vote_no_consensus() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = replicate(3).spawn_vote(vote_majority, move || {
+            c.fetch_add(1, Ordering::SeqCst) as i64
+        });
+        match f.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::NoConsensus { candidates: 3 }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn replicate_decorator_vote_validate_combines_filters() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = replicate(4).spawn_vote_validate(
+            vote_majority,
+            |v: &i64| *v < 100,
+            move || {
+                let i = c.fetch_add(1, Ordering::SeqCst);
+                if i == 0 {
+                    666i64
+                } else {
+                    7i64
+                }
+            },
+        );
+        assert_eq!(f.get(), Ok(7));
+    }
+
+    #[test]
+    fn replicate_decorator_dataflow_vote_end_to_end() {
+        let rt = rt();
+        let ex = ReplicateExecutor::new(PoolExecutor::new(&rt), 3);
+        let a = crate::api::async_(&rt, || 10i64);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = ex.dataflow_vote(
+            vote_majority,
+            move |vals: &[i64]| {
+                // One replica silently corrupts its result.
+                if c.fetch_add(1, Ordering::SeqCst) == 0 {
+                    -1i64
+                } else {
+                    vals[0] * 2
+                }
+            },
+            vec![a],
+        );
+        assert_eq!(f.get(), Ok(20));
+    }
+
+    #[test]
+    fn replicate_decorator_with_replay_recovers_flaky_replicas() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = replicate(2).with_replay(3).spawn(move || -> TaskResult<i64> {
+            let i = c.fetch_add(1, Ordering::SeqCst);
+            if i % 2 == 0 {
+                Err("flaky".into())
+            } else {
+                Ok(5)
+            }
+        });
+        assert_eq!(f.get(), Ok(5));
+    }
+
+    #[test]
+    fn pool_executor_is_the_plain_baseline() {
+        let rt = rt();
+        let ex = PoolExecutor::new(&rt);
+        assert_eq!(ex.spawn(|| 5i32).get(), Ok(5));
+        // single attempt: a rejected validation surfaces with no retry
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = ex.spawn_validate(|_: &i32| false, move || {
+            c.fetch_add(1, Ordering::SeqCst);
+            1i32
+        });
+        assert_eq!(f.get(), Err(TaskError::ValidationRejected));
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        assert_eq!(ResilientExecutor::concurrency(&ex), 2);
+    }
+
+    // -- adaptive policy ------------------------------------------------
+
+    fn policy(name: &str) -> AdaptivePolicy {
+        AdaptivePolicy::new(AdaptiveConfig {
+            alpha: 0.5,
+            floor: 1,
+            ceiling: 6,
+            target: 0.01,
+            name: name.to_string(),
+        })
+    }
+
+    #[test]
+    fn adaptive_error_spike_raises_budget() {
+        let p = policy("test_spike");
+        assert_eq!(p.budget(), 1, "quiet policy sits at the floor");
+        let mut raised = false;
+        for _ in 0..10 {
+            p.record(true);
+            raised |= p.budget() > 1;
+        }
+        assert!(raised, "a failure spike must raise the budget");
+        assert_eq!(p.budget(), 6, "sustained failures saturate at the ceiling");
+        assert_eq!(p.failures(), 10);
+        assert_eq!(p.attempts(), 10);
+    }
+
+    #[test]
+    fn adaptive_quiet_period_decays_budget_back() {
+        let p = policy("test_decay");
+        for _ in 0..10 {
+            p.record(true);
+        }
+        assert_eq!(p.budget(), 6);
+        for _ in 0..20 {
+            p.record(false);
+        }
+        assert_eq!(p.budget(), 1, "quiet period must decay back to the floor");
+        assert!(p.error_rate() < 0.01);
+    }
+
+    #[test]
+    fn adaptive_budget_never_exceeds_ceiling() {
+        let p = policy("test_ceiling");
+        for i in 0..200 {
+            p.record(i % 7 != 0); // heavy but mixed failure pattern
+            assert!(p.budget() <= 6, "budget exceeded the ceiling");
+            assert!(p.budget() >= 1, "budget fell below the floor");
+        }
+    }
+
+    #[test]
+    fn adaptive_policy_publishes_perfcounters() {
+        let p = policy("test_counters");
+        p.record(true);
+        p.record(false);
+        let snap = global().snapshot();
+        assert!(snap["/resilience/test_counters/count/attempts"] >= 2);
+        assert!(snap["/resilience/test_counters/count/failures"] >= 1);
+        assert!(snap.contains_key("/resilience/test_counters/gauge/budget"));
+        assert!(snap.contains_key("/resilience/test_counters/gauge/error_rate_ppm"));
+    }
+
+    #[test]
+    fn adaptive_replay_executor_survives_error_burst() {
+        let rt = rt();
+        let policy = Arc::new(AdaptivePolicy::new(AdaptiveConfig {
+            alpha: 0.5,
+            floor: 4,
+            ceiling: 8,
+            target: 1e-4,
+            name: "test_exec".to_string(),
+        }));
+        let ex = ReplayExecutor::adaptive(PoolExecutor::new(&rt), Arc::clone(&policy));
+        assert_eq!(ex.current_budget(), 4);
+        // Fail twice then succeed, repeatedly: every launch recovers, and
+        // the policy observes a high error rate and raises the budget.
+        for _ in 0..10 {
+            let calls = Arc::new(AtomicUsize::new(0));
+            let c = Arc::clone(&calls);
+            let f = ex.spawn(move || -> TaskResult<i32> {
+                if c.fetch_add(1, Ordering::SeqCst) < 2 {
+                    Err("burst".into())
+                } else {
+                    Ok(1)
+                }
+            });
+            assert_eq!(f.get(), Ok(1));
+        }
+        assert!(policy.failures() >= 20);
+        assert!(policy.error_rate() > 0.1);
+        assert!(ex.current_budget() > 4, "observed errors must raise the budget");
+        assert!(ex.current_budget() <= 8);
+        assert!(ex.policy().is_some());
+    }
+
+    #[test]
+    fn policy_spec_builds_and_honors_ceiling() {
+        let rt = rt();
+        assert_eq!(PolicySpec::Replay { n: 3 }.label(), "exec_replay(3)");
+        assert_eq!(PolicySpec::Replicate { n: 2 }.compute_multiplier(), 2);
+        assert_eq!(PolicySpec::Adaptive { ceiling: 9 }.compute_multiplier(), 1);
+        // A requested ceiling below the suggested floor wins: the built
+        // adaptive policy never exceeds what the user asked for.
+        let built = PolicySpec::Adaptive { ceiling: 2 }.build(&rt, "test_spec", 5);
+        match &built {
+            BuiltExecutor::Replay(ex) => {
+                assert_eq!(ex.current_budget(), 2);
+                assert_eq!(ex.policy().unwrap().ceiling(), 2);
+            }
+            BuiltExecutor::Replicate(_) => panic!("adaptive builds a replay decorator"),
+        }
+        assert_eq!(built.spawn(|| 1i32).get(), Ok(1));
+        assert_eq!(built.label(), "replay(adaptive(max 2)) over pool(2)");
+    }
+
+    #[test]
+    fn labels_describe_policy_and_substrate() {
+        assert_eq!(replay(3).label(), "replay(3) over pool(2)");
+        let rt = rt();
+        let ad = ReplicateExecutor::adaptive(
+            PoolExecutor::new(&rt),
+            Arc::new(AdaptivePolicy::named("test_label")),
+        );
+        assert_eq!(ad.label(), "replicate(adaptive(max 8)) over pool(2)");
+    }
+}

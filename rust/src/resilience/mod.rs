@@ -17,7 +17,13 @@
 //! nested inside replicate (`*_replicate_replay`) so each replica
 //! individually retries before the consensus step ("finer consensus in
 //! case of soft failures").
+//!
+//! The second surface over the same machinery lives in [`executor`]:
+//! resilient executor *decorators* that make whole launch paths (instead
+//! of single call sites) resilient, with an optional adaptive budget
+//! tuned from the observed error rate.
 
+pub mod executor;
 mod replay;
 mod replicate;
 pub mod vote;

@@ -40,6 +40,8 @@ enum Policy<T> {
 /// Mutable consensus state, all under one lock (hot path: one lock
 /// round-trip per replica completion).
 struct ReplicateInner<T> {
+    // NB: shared with the decorator layer (`resilience::executor`), which
+    // drives `on_replica_done` from launcher futures instead of pool jobs.
     promise: Option<Promise<T>>,
     /// Results that completed without error (and passed validation when a
     /// validator is present); only collected under the vote policy.
@@ -51,16 +53,39 @@ struct ReplicateInner<T> {
     remaining: usize,
 }
 
-struct ReplicateState<T> {
+pub(crate) struct ReplicateState<T> {
     inner: Mutex<ReplicateInner<T>>,
     policy: Policy<T>,
     replicas: usize,
 }
 
 impl<T: Send + 'static> ReplicateState<T> {
+    /// Fresh consensus state for `replicas` launches resolving `promise`;
+    /// `voter` selects the vote policy, `None` first-acceptable.
+    pub(crate) fn new(
+        promise: Promise<T>,
+        replicas: usize,
+        voter: Option<Voter<T>>,
+    ) -> Arc<Self> {
+        Arc::new(ReplicateState {
+            inner: Mutex::new(ReplicateInner {
+                promise: Some(promise),
+                accepted: Vec::with_capacity(replicas),
+                finite_results: 0,
+                last_error: None,
+                remaining: replicas,
+            }),
+            policy: match voter {
+                Some(v) => Policy::Vote(v),
+                None => Policy::FirstAcceptable,
+            },
+            replicas,
+        })
+    }
+
     /// Record one replica's outcome; resolve the launch when the policy
     /// allows (first acceptable result, or all replicas accounted for).
-    fn on_replica_done(&self, outcome: TaskResult<T>, validated: Option<bool>) {
+    pub(crate) fn on_replica_done(&self, outcome: TaskResult<T>, validated: Option<bool>) {
         enum Action<T> {
             None,
             Resolve(Promise<T>, T),
@@ -159,20 +184,7 @@ pub(crate) fn replicate_impl<T: Send + 'static>(
     policy_vote: Option<Voter<T>>,
 ) {
     let n = n.max(1);
-    let state = Arc::new(ReplicateState {
-        inner: Mutex::new(ReplicateInner {
-            promise: Some(promise),
-            accepted: Vec::with_capacity(n),
-            finite_results: 0,
-            last_error: None,
-            remaining: n,
-        }),
-        policy: match policy_vote {
-            Some(v) => Policy::Vote(v),
-            None => Policy::FirstAcceptable,
-        },
-        replicas: n,
-    });
+    let state = ReplicateState::new(promise, n, policy_vote);
 
     for _ in 0..n {
         let state = Arc::clone(&state);

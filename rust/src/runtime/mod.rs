@@ -1,5 +1,8 @@
 //! PJRT execution of AOT-compiled artifacts — the L3↔L1/L2 bridge.
 //!
+//! Paper mapping: the `--backend pjrt` kernel path of the §V-B stencil
+//! (Table II / Fig 3); the resilience layers above are backend-agnostic.
+//!
 //! `make artifacts` runs `python/compile/aot.py` once at build time,
 //! lowering the JAX/Pallas stencil kernel to **HLO text** under
 //! `artifacts/` (text, not serialized proto: jax ≥ 0.5 emits 64-bit

@@ -35,6 +35,15 @@ impl Runtime {
         self.inner.scheduler.pool()
     }
 
+    /// The scheduler-backed base executor for this runtime — the launcher
+    /// the resilience decorators wrap (see
+    /// [`crate::resilience::executor`]): wrap the return value in a
+    /// `ReplayExecutor`/`ReplicateExecutor` and pass it to
+    /// [`crate::async_on`] to make a launch path resilient.
+    pub fn executor(&self) -> crate::resilience::executor::PoolExecutor {
+        crate::resilience::executor::PoolExecutor::new(self)
+    }
+
     /// Runtime configuration in effect.
     pub fn config(&self) -> &RuntimeConfig {
         &self.inner.config

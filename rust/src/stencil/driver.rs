@@ -17,6 +17,7 @@ use crate::error::{TaskError, TaskResult};
 use crate::failure::{FaultInjector, Rng};
 use crate::future::Future;
 use crate::metrics::Timer;
+use crate::resilience::executor::BuiltExecutor;
 use crate::resilience::{
     dataflow_replay, dataflow_replay_validate, dataflow_replicate, dataflow_replicate_replay,
     dataflow_replicate_validate, dataflow_replicate_vote, vote_majority,
@@ -60,6 +61,21 @@ impl Mode {
     }
 }
 
+/// Executor-routed resilience for the whole driver (CLI `--resilience`):
+/// instead of selecting a resilient *call* per task ([`Mode`]), the
+/// driver swaps in a resilient executor decorator and every task launch
+/// goes through it unchanged — checksum validation included, so the
+/// executor observes both thrown and silent errors. The adaptive
+/// variant publishes perfcounters under `/resilience/stencil/...`.
+pub use crate::resilience::executor::PolicySpec as ExecPolicy;
+
+/// The adaptive route's minimum replay budget. Generous on purpose:
+/// replay attempts cost nothing unless a task actually fails, and a low
+/// floor would let early tasks exhaust before the policy has observed
+/// anything. A user-requested ceiling below this still wins (the floor
+/// is clamped to the ceiling in [`ExecPolicy::build`]).
+const ADAPTIVE_FLOOR: usize = 5;
+
 /// Which kernel executes the math.
 #[derive(Clone)]
 pub enum Backend {
@@ -90,6 +106,9 @@ pub struct StencilParams {
     /// Courant number (c = 1 makes Lax-Wendroff an exact shift).
     pub courant: f64,
     pub mode: Mode,
+    /// When set, every task is routed through the corresponding executor
+    /// decorator instead of the per-call [`Mode`] free functions.
+    pub resilience: Option<ExecPolicy>,
     pub backend: Backend,
     /// Exception-style failures: error-rate factor x, P = e^{-x}.
     pub error_rate: Option<f64>,
@@ -112,6 +131,7 @@ impl StencilParams {
             steps: 128,
             courant: 0.9,
             mode: Mode::Pure,
+            resilience: None,
             backend: Backend::Native,
             error_rate: None,
             silent_rate: None,
@@ -142,6 +162,7 @@ impl StencilParams {
             steps: 4,
             courant: 1.0,
             mode: Mode::Pure,
+            resilience: None,
             backend: Backend::Native,
             error_rate: None,
             silent_rate: None,
@@ -176,6 +197,8 @@ pub fn run(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, Stenci
     let injector = FaultInjector::new(params.error_rate.unwrap_or(0.0), params.seed);
     let corruptor = SilentCorruptor::new(params.silent_rate, params.seed ^ 0xDEAD);
     let domain = Domain::sine(params.n_sub, params.nx);
+    let route: Option<BuiltExecutor> =
+        params.resilience.map(|p| p.build(rt, "stencil", ADAPTIVE_FLOOR));
 
     let timer = Timer::start();
     let mut futs: Vec<Future<Chunk>> = domain
@@ -193,7 +216,7 @@ pub fn run(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, Stenci
                 futs[j].clone(),
                 futs[(j + 1) % n_sub].clone(),
             ];
-            next.push(launch_task(rt, params, &injector, &corruptor, deps));
+            next.push(launch_task(rt, params, &route, &injector, &corruptor, deps));
         }
         futs = next;
         if params.window > 0 && (iter + 1) % params.window == 0 {
@@ -224,7 +247,10 @@ pub fn run(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, Stenci
     let wall = timer.elapsed_secs();
 
     let report = StencilReport {
-        mode: params.mode.label(),
+        mode: params
+            .resilience
+            .map(|p| p.label())
+            .unwrap_or_else(|| params.mode.label()),
         wall_secs: wall,
         tasks: params.total_tasks(),
         failures_injected: injector.counters().injected(),
@@ -238,10 +264,12 @@ pub fn run(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, Stenci
     }
 }
 
-/// Launch one stencil task through the configured API variant.
+/// Launch one stencil task through the configured API variant (or the
+/// executor route, when one is active).
 fn launch_task(
     rt: &Runtime,
     params: &StencilParams,
+    route: &Option<BuiltExecutor>,
     injector: &FaultInjector,
     corruptor: &SilentCorruptor,
     deps: Vec<Future<Chunk>>,
@@ -280,6 +308,12 @@ fn launch_task(
     };
 
     let validate = move |c: &Chunk| c.verify(tol);
+
+    // Executor-routed launches: the call is always the same dataflow;
+    // the policy lives entirely in the executor.
+    if let Some(ex) = route {
+        return ex.dataflow_validate(validate, move |v: &[Chunk]| body(v), deps);
+    }
 
     match params.mode {
         Mode::Pure => dataflow(rt, move |v: Vec<Chunk>| body(&v), deps),
@@ -378,6 +412,71 @@ mod tests {
             let (out, rep) = run(&rt, &params).unwrap();
             assert_eq!(rep.launch_errors, 0, "{mode:?}");
             assert_eq!(out, ref_out, "mode {mode:?} diverged");
+        }
+    }
+
+    #[test]
+    fn executor_routes_match_free_functions() {
+        let rt = rt();
+        let base = StencilParams::tiny();
+        let (ref_out, _) = run(&rt, &base).unwrap();
+        for policy in [
+            ExecPolicy::Replay { n: 3 },
+            ExecPolicy::Replicate { n: 2 },
+            ExecPolicy::Adaptive { ceiling: 8 },
+        ] {
+            let params = StencilParams { resilience: Some(policy), ..base.clone() };
+            let (out, rep) = run(&rt, &params).unwrap();
+            assert_eq!(rep.launch_errors, 0, "{policy:?}");
+            assert_eq!(rep.mode, policy.label());
+            assert_eq!(out, ref_out, "policy {policy:?} diverged");
+        }
+    }
+
+    #[test]
+    fn adaptive_executor_recovers_from_injected_exceptions() {
+        let rt = rt();
+        let params = StencilParams {
+            resilience: Some(ExecPolicy::Adaptive { ceiling: 10 }),
+            error_rate: Some(2.0), // P ≈ 0.135 per task
+            ..StencilParams::tiny()
+        };
+        let domain = Domain::sine(params.n_sub, params.nx);
+        let (out, rep) = run(&rt, &params).unwrap();
+        assert!(rep.failures_injected > 0);
+        // P(floor consecutive fails) ≈ 0.135^5 per task leaves a tiny
+        // exhaustion tail over 80 tasks; tolerate one poisoned cone and
+        // only pin exactness on the (overwhelmingly common) clean runs.
+        assert!(rep.launch_errors <= 1, "got {}", rep.launch_errors);
+        if rep.launch_errors == 0 {
+            let shift = (params.iterations * params.steps) as f64;
+            let exact = domain.exact_sine_shifted(shift);
+            for (a, b) in out.iter().zip(exact.iter()) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+        // The policy observed the failures through its perfcounters.
+        let snap = crate::perfcounters::global().snapshot();
+        assert!(snap["/resilience/stencil/count/failures"] > 0);
+        assert!(snap["/resilience/stencil/gauge/budget"] >= 5);
+    }
+
+    #[test]
+    fn replicate_executor_route_catches_silent_corruption() {
+        let rt = rt();
+        let params = StencilParams {
+            resilience: Some(ExecPolicy::Replicate { n: 8 }),
+            silent_rate: Some(0.2),
+            ..StencilParams::tiny()
+        };
+        let domain = Domain::sine(params.n_sub, params.nx);
+        let (out, rep) = run(&rt, &params).unwrap();
+        assert!(rep.silent_corruptions > 0, "corruptor must fire");
+        assert_eq!(rep.launch_errors, 0);
+        let shift = (params.iterations * params.steps) as f64;
+        let exact = domain.exact_sine_shifted(shift);
+        for (a, b) in out.iter().zip(exact.iter()) {
+            assert!((a - b).abs() < 1e-9, "corruption leaked into result");
         }
     }
 

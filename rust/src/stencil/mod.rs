@@ -16,4 +16,6 @@ pub mod driver;
 pub mod kernel;
 
 pub use domain::{build_extended, Chunk, Domain};
-pub use driver::{run, Backend, Mode, SilentCorruptor, StencilParams, StencilReport};
+pub use driver::{
+    run, Backend, ExecPolicy, Mode, SilentCorruptor, StencilParams, StencilReport,
+};

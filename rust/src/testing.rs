@@ -5,6 +5,9 @@
 //! (deterministic → reproducible failures), run the property, and on
 //! failure report the case number and seed so the exact case can be
 //! replayed.
+//!
+//! Paper mapping: verification substrate only (no table/figure); backs
+//! the property suites in `rust/tests/properties.rs`.
 
 use crate::failure::Rng;
 

@@ -166,10 +166,69 @@ pub fn launch(
 /// most `params.window` futures are outstanding; reports amortized
 /// per-task time and overhead vs. the ideal grain.
 pub fn run(rt: &Runtime, variant: Variant, params: &WorkloadParams) -> WorkloadReport {
-    let injector = match params.error_rate {
+    let injector = make_injector(params);
+    // Ideal packed time per task across the pool, accounting for the n×
+    // duplicated compute of replicate variants.
+    let multiplier = match variant {
+        Variant::Replicate { n }
+        | Variant::ReplicateValidate { n }
+        | Variant::ReplicateVote { n }
+        | Variant::ReplicateVoteValidate { n } => n as f64,
+        _ => 1.0,
+    };
+    let inj = injector.clone();
+    run_windowed(rt, variant.label(), multiplier, params, &injector, move |rt| {
+        launch(rt, variant, params.grain_ns, &inj)
+    })
+}
+
+/// Executor-routed launches: the same workload, but every task goes
+/// through a [`crate::resilience::executor`] decorator instead of a
+/// resilient free-function call. The `table1_exec` harness measures this
+/// path against the free functions. (Shared declarative spec — the
+/// stencil driver's `--resilience` route uses the same type.)
+pub use crate::resilience::executor::PolicySpec as ExecVariant;
+
+/// Run the workload through an executor decorator (see [`ExecVariant`]).
+pub fn run_executor(rt: &Runtime, variant: ExecVariant, params: &WorkloadParams) -> WorkloadReport {
+    let exec = variant.build(rt, "workload", 2);
+    let injector = make_injector(params);
+    let inj = injector.clone();
+    let grain_ns = params.grain_ns;
+    run_windowed(
+        rt,
+        variant.label(),
+        variant.compute_multiplier() as f64,
+        params,
+        &injector,
+        move |_rt| {
+            let inj = inj.clone();
+            exec.spawn(move || universal_ans(grain_ns, &inj))
+        },
+    )
+}
+
+fn make_injector(params: &WorkloadParams) -> FaultInjector {
+    match params.error_rate {
         Some(x) => FaultInjector::new(x, params.seed),
         None => FaultInjector::new(0.0, params.seed),
-    };
+    }
+}
+
+/// The shared windowed measurement loop: launch `params.tasks` futures
+/// through `launch_one`, keeping at most `params.window` outstanding, and
+/// amortize the wall time into the report.
+fn run_windowed<L>(
+    rt: &Runtime,
+    label: String,
+    multiplier: f64,
+    params: &WorkloadParams,
+    injector: &FaultInjector,
+    mut launch_one: L,
+) -> WorkloadReport
+where
+    L: FnMut(&Runtime) -> Future<i32>,
+{
     let mut launch_errors = 0u64;
     let timer = Timer::start();
     let mut inflight: std::collections::VecDeque<Future<i32>> =
@@ -181,7 +240,7 @@ pub fn run(rt: &Runtime, variant: Variant, params: &WorkloadParams) -> WorkloadR
                 launch_errors += 1;
             }
         }
-        inflight.push_back(launch(rt, variant, params.grain_ns, &injector));
+        inflight.push_back(launch_one(rt));
     }
     for f in inflight {
         if f.get().is_err() {
@@ -192,23 +251,11 @@ pub fn run(rt: &Runtime, variant: Variant, params: &WorkloadParams) -> WorkloadR
 
     let per_task_us = wall * 1e6 / params.tasks as f64;
     let grain_us = params.grain_ns as f64 / 1e3;
-    // Ideal packed time per task across the pool, accounting for the n×
-    // duplicated compute of replicate variants.
-    let multiplier = match variant {
-        v if v.is_replicate() => match variant {
-            Variant::Replicate { n }
-            | Variant::ReplicateValidate { n }
-            | Variant::ReplicateVote { n }
-            | Variant::ReplicateVoteValidate { n } => n as f64,
-            _ => unreachable!(),
-        },
-        _ => 1.0,
-    };
     let ideal_us = grain_us * multiplier / rt.workers() as f64;
     let overhead_us = per_task_us - ideal_us;
     let overhead_pct = 100.0 * overhead_us / grain_us;
     WorkloadReport {
-        variant: variant.label(),
+        variant: label,
         tasks: params.tasks,
         wall_secs: wall,
         per_task_us,
@@ -286,6 +333,35 @@ mod tests {
         // All-three-replicas-fail has p ≈ 1.25e-4 per launch; over 100
         // launches failures are unlikely but not impossible — accept <= 1.
         assert!(rep.launch_errors <= 1, "got {}", rep.launch_errors);
+    }
+
+    #[test]
+    fn executor_replay_run_with_failures_all_recover() {
+        let rt = rt();
+        let params = WorkloadParams {
+            tasks: 300,
+            grain_ns: 5_000,
+            error_rate: Some(1.0), // P(fail) ≈ 0.37 per attempt
+            ..Default::default()
+        };
+        let rep = run_executor(&rt, ExecVariant::Replay { n: 10 }, &params);
+        assert!(rep.failures_injected > 0, "injector must fire");
+        // P(10 consecutive fails) ≈ 0.37^10 per launch: a sub-percent
+        // exhaustion tail exists over 300 launches, so tolerate <= 1.
+        assert!(rep.launch_errors <= 1, "got {}", rep.launch_errors);
+        assert_eq!(rep.variant, "exec_replay(10)");
+    }
+
+    #[test]
+    fn executor_replicate_and_adaptive_run_clean() {
+        let rt = rt();
+        let params = WorkloadParams { tasks: 100, grain_ns: 5_000, ..Default::default() };
+        let rep = run_executor(&rt, ExecVariant::Replicate { n: 3 }, &params);
+        assert_eq!(rep.launch_errors, 0);
+        assert_eq!(rep.variant, "exec_replicate(3)");
+        let rep = run_executor(&rt, ExecVariant::Adaptive { ceiling: 6 }, &params);
+        assert_eq!(rep.launch_errors, 0);
+        assert_eq!(rep.variant, "exec_adaptive(max 6)");
     }
 
     #[test]
