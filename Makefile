@@ -6,7 +6,7 @@
 
 CARGO ?= cargo
 PYTHON ?= python3
-BENCHES := perf_micro table1_async_overheads fig2_error_rates table2_stencil fig3_stencil_errors ablations
+BENCHES := perf_micro table1_async_overheads fig2_error_rates table2_stencil fig3_stencil_errors ablations table_dist
 
 .PHONY: all build test docs bench bench-smoke artifacts fmt fmt-check clippy clean help
 
@@ -33,7 +33,7 @@ test:
 
 # Docs gate: broken intra-doc links and stale examples fail the build.
 docs:
-	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+	RUSTDOCFLAGS="-D warnings -D rustdoc::broken-intra-doc-links" $(CARGO) doc --no-deps
 	$(CARGO) test --doc
 
 # Full-scale benches: one BENCH_<name>.json per harness.

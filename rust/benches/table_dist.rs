@@ -1,0 +1,27 @@
+//! Bench: the distributed fault-surviving stencil (§V-B over simulated
+//! localities, the Fig 4–5 scenario) — survival rate, recovery latency,
+//! and distribution overhead vs. the single-runtime run, across five
+//! arms (pool reference, fault-free cluster, unrecovered kill, replay
+//! recovery, adaptive-replicate recovery).
+//!
+//!   cargo run --release --bin table_dist -- [--smoke] [--json PATH]
+//!   cargo bench --bench table_dist
+//!
+//! Env: RHPX_BENCH_SCALE (default 0.01 → 10 iterations, the floor),
+//!      RHPX_BENCH_REPEATS (default 3).
+
+use rhpx::harness::{emit, table_dist, HarnessOpts};
+use rhpx::metrics::BenchCli;
+
+fn main() {
+    let cli = BenchCli::parse();
+    let opts = HarnessOpts {
+        scale: cli.scale_from_env(0.01),
+        repeats: cli.repeats_from_env(3),
+        csv: Some("bench_table_dist.csv".into()),
+        ..Default::default()
+    };
+    let rows = table_dist::run_table_dist(&opts);
+    emit(&table_dist::to_table(&rows), &opts);
+    cli.emit("table_dist", table_dist::to_json(&rows));
+}

@@ -5,26 +5,32 @@
 //!
 //! ```text
 //! rhpx info
-//! rhpx bench <table1|table1_exec|fig2|table2|fig3|all> [--scale F] [--repeats N]
-//!            [--workers N] [--csv PATH] [--backend native|pjrt]
+//! rhpx bench <table1|table1_exec|fig2|table2|fig3|table_dist|all>
+//!            [--scale F] [--repeats N] [--workers N] [--csv PATH]
+//!            [--backend native|pjrt]
 //! rhpx stencil [--case a|b|tiny] [--mode MODE] [--backend native|pjrt]
-//!              [--resilience replay:N|replicate:N|adaptive[:CEIL]] [--json PATH]
+//!              [--resilience replay:N|replicate:N|adaptive[:CEIL]|
+//!                            adaptive_replicate[:CEIL]]
+//!              [--cluster LOCALITIES[:kill=STEP@LOC,...]] [--json PATH]
 //!              [--scale F] [--error-prob PCT] [--silent-prob PCT] [--workers N]
 //! rhpx workload [--tasks N] [--grain-us N] [--variant V] [--error-prob PCT]
 //! rhpx distributed [--localities N] [--kill IDX] [--tasks N]
 //! ```
 //!
 //! Paper mapping: `bench` regenerates Table I / Table II / Fig 2 / Fig 3
-//! (`table1_exec` is this repo's executor-path comparison); `stencil` is
-//! the §V-B application, `workload` the §V-A benchmark.
+//! (`table1_exec` is this repo's executor-path comparison, `table_dist`
+//! the distributed survival experiment); `stencil` is the §V-B
+//! application — with `--cluster` it runs distributed over simulated
+//! localities with a deterministic kill schedule (the Fig 4–5 scenario;
+//! see `docs/FAULT_MODEL.md`), `workload` the §V-A benchmark.
 
 use std::collections::HashMap;
 
 use crate::config::RuntimeConfig;
-use crate::harness::{emit, fig2, fig3, table1, table2, HarnessOpts, KernelBackend};
+use crate::harness::{emit, fig2, fig3, table1, table2, table_dist, HarnessOpts, KernelBackend};
 use crate::metrics::{BenchCli, JsonValue, Table};
 use crate::runtime_handle::Runtime;
-use crate::stencil::{self, Backend, ExecPolicy, Mode, StencilParams};
+use crate::stencil::{self, Backend, ClusterSpec, ExecPolicy, Mode, StencilParams};
 use crate::workload::{self, Variant, WorkloadParams};
 
 /// Parsed flags: `--key value` pairs plus positional args.
@@ -109,12 +115,15 @@ const HELP: &str = r#"rhpx — resilient AMT runtime (reproduction of SAND2020-3
 
 USAGE:
   rhpx info
-  rhpx bench <table1|table1_exec|fig2|table2|fig3|all>
+  rhpx bench <table1|table1_exec|fig2|table2|fig3|table_dist|all>
        [--scale F] [--repeats N] [--workers N] [--csv PATH]
        [--backend native|pjrt] [--replicas N]
   rhpx stencil [--case a|b|tiny] [--mode pure|replay|replay_checksum|
                replicate|replicate_checksum|replicate_vote|replicate_replay]
-               [--resilience replay:N|replicate:N|adaptive[:CEIL]]
+               [--resilience replay:N|replicate:N|adaptive[:CEIL]|
+                             adaptive_replicate[:CEIL]]
+               [--cluster LOCALITIES[:kill=STEP@LOC,...]]
+               [--latency-us N] [--loc-workers N]
                [--backend native|pjrt] [--scale F] [--n N] [--json PATH]
                [--error-prob PCT] [--silent-prob PCT] [--workers N]
   rhpx workload [--tasks N] [--grain-us N] [--error-prob PCT] [--workers N]
@@ -124,8 +133,21 @@ USAGE:
 
 `--resilience` routes every stencil task through the executor decorators
 (rhpx::resilience::executor) instead of per-call resilient functions;
-`adaptive` tunes the replay budget online from the observed error rate.
-It is mutually exclusive with `--mode`.
+`adaptive` tunes the *replay budget* online from the observed error
+rate, `adaptive_replicate` tunes the eager *replication width* the same
+way. It is mutually exclusive with `--mode`.
+
+`--cluster` runs the stencil distributed: tasks are placed round-robin
+across N simulated localities and each `kill=STEP@LOC` event kills
+locality LOC just before global task launch STEP (0-based). The
+localities' own scheduler pools do the work: `--loc-workers` sizes them
+(default: --workers / LOCALITIES rounded down, min 1 — exact parity
+with a pool run needs --workers divisible by the locality count).
+Without `--resilience` the failure cone reaches the final
+wavefront as poisoned subdomains (survival < 1); with it the decorators
+recover every subdomain (see docs/FAULT_MODEL.md). Example:
+
+  rhpx stencil --cluster 4:kill=10@2 --resilience replay:3 --json out.json
 "#;
 
 fn cmd_info() -> Result<(), String> {
@@ -227,6 +249,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         "fig2" => emit(&fig2::run_fig2(&opts, &fig2::default_probabilities()), &opts),
         "table2" => run_table2_fig3("table2")?,
         "fig3" => run_table2_fig3("fig3")?,
+        "table_dist" => {
+            emit(&table_dist::to_table(&table_dist::run_table_dist(&opts)), &opts)
+        }
         "all" => {
             emit(&table1::run_table1(&opts, &table1::default_cores(), replicas), &opts);
             emit(
@@ -236,16 +261,21 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             emit(&fig2::run_fig2(&opts, &fig2::default_probabilities()), &opts);
             run_table2_fig3("table2")?;
             run_table2_fig3("fig3")?;
+            emit(&table_dist::to_table(&table_dist::run_table_dist(&opts)), &opts);
         }
         other => return Err(format!("unknown bench {other:?}")),
     }
     Ok(())
 }
 
-/// Parse `--resilience replay:N|replicate:N|adaptive[:CEIL]`.
+/// Parse `--resilience replay:N|replicate:N|adaptive[:CEIL]|
+/// adaptive_replicate[:CEIL]`.
 fn parse_resilience(s: &str) -> Result<ExecPolicy, String> {
     if s == "adaptive" {
         return Ok(ExecPolicy::Adaptive { ceiling: 10 });
+    }
+    if s == "adaptive_replicate" {
+        return Ok(ExecPolicy::AdaptiveReplicate { ceiling: 4 });
     }
     let parse_n = |v: &str, what: &str| -> Result<usize, String> {
         v.parse()
@@ -253,6 +283,11 @@ fn parse_resilience(s: &str) -> Result<ExecPolicy, String> {
             .filter(|n| *n >= 1)
             .ok_or_else(|| format!("--resilience {what}: bad count {v:?}"))
     };
+    if let Some(v) = s.strip_prefix("adaptive_replicate:") {
+        return Ok(ExecPolicy::AdaptiveReplicate {
+            ceiling: parse_n(v, "adaptive_replicate")?,
+        });
+    }
     if let Some(v) = s.strip_prefix("adaptive:") {
         return Ok(ExecPolicy::Adaptive { ceiling: parse_n(v, "adaptive")? });
     }
@@ -263,7 +298,8 @@ fn parse_resilience(s: &str) -> Result<ExecPolicy, String> {
         return Ok(ExecPolicy::Replicate { n: parse_n(v, "replicate")? });
     }
     Err(format!(
-        "unknown --resilience {s:?} (expected replay:N, replicate:N, or adaptive[:CEIL])"
+        "unknown --resilience {s:?} (expected replay:N, replicate:N, adaptive[:CEIL], \
+         or adaptive_replicate[:CEIL])"
     ))
 }
 
@@ -305,6 +341,29 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
         }
         params.resilience = Some(parse_resilience(spec)?);
     }
+    if let Some(spec) = args.flags.get("cluster") {
+        if args.flags.contains_key("mode") {
+            return Err(
+                "--mode and --cluster are mutually exclusive: the cluster route launches \
+                 every task through the cluster executor (per-call resilient functions \
+                 are bound to a single runtime); select the policy with --resilience"
+                    .to_string(),
+            );
+        }
+        let mut cluster = ClusterSpec::parse(spec).map_err(|e| format!("--cluster: {e}"))?;
+        cluster.latency_us = args.get_usize("latency-us", 0)? as u64;
+        // Worker parity: on the cluster route the localities' own pools
+        // do the work (the single runtime is idle), so by default spread
+        // --workers across them. Floor division: parity with a pool run
+        // is exact only when --workers divides evenly (the help text
+        // states this; --loc-workers overrides).
+        cluster.workers_per_locality = args
+            .get_usize("loc-workers", (workers / cluster.localities).max(1))?
+            .max(1);
+        params.cluster = Some(cluster);
+    } else if args.flags.contains_key("loc-workers") || args.flags.contains_key("latency-us") {
+        return Err("--loc-workers/--latency-us only apply to --cluster runs".to_string());
+    }
     let p_err = args.get_f64("error-prob", 0.0)? / 100.0;
     if p_err > 0.0 {
         params.error_rate = Some(-p_err.ln());
@@ -322,9 +381,14 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
         params.backend = Backend::pjrt(&store, params.nx, params.steps).map_err(|e| e.to_string())?;
     }
 
-    let rt = Runtime::builder().workers(workers).build();
+    // On the cluster route the localities' own pools execute the tasks
+    // and this runtime sits idle — keep it minimal instead of spawning
+    // available_parallelism worth of unused threads.
+    let rt = Runtime::builder()
+        .workers(if params.cluster.is_some() { 1 } else { workers })
+        .build();
     println!(
-        "stencil: {} subdomains x {} points, {} iterations x {} steps, mode {}, {} tasks",
+        "stencil: {} subdomains x {} points, {} iterations x {} steps, mode {}, {} tasks{}",
         params.n_sub,
         params.nx,
         params.iterations,
@@ -333,24 +397,55 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
             .resilience
             .map(|p| p.label())
             .unwrap_or_else(|| params.mode.label()),
-        params.total_tasks()
+        params.total_tasks(),
+        params
+            .cluster
+            .as_ref()
+            .map(|c| format!(", {} localities ({} scheduled kills)", c.localities, c.schedule.events().len()))
+            .unwrap_or_default()
     );
     let (_, rep) = stencil::run(&rt, &params).map_err(|e| e.to_string())?;
     let mut t = Table::new(
         "stencil result",
-        &["mode", "wall_s", "tasks", "task/s", "injected", "silent", "launch_errors", "checksum"],
+        &[
+            "mode", "launcher", "wall_s", "tasks", "task/s", "injected", "silent",
+            "launch_errors", "survival_pct", "checksum",
+        ],
     );
     t.add([
         rep.mode.clone(),
+        rep.launcher.clone(),
         format!("{:.3}", rep.wall_secs),
         rep.tasks.to_string(),
         format!("{:.0}", rep.tasks as f64 / rep.wall_secs),
         rep.failures_injected.to_string(),
         rep.silent_corruptions.to_string(),
         rep.launch_errors.to_string(),
+        format!("{:.1}", 100.0 * rep.survival_rate()),
         format!("{:.6e}", rep.final_checksum),
     ]);
     print!("{}", t.render());
+
+    // Cluster runs: per-locality placement/survival breakdown.
+    if !rep.localities.is_empty() {
+        let mut lt = Table::new(
+            "cluster placement",
+            &["locality", "executed", "rejected", "alive_at_end", "killed_at_task"],
+        );
+        for loc in &rep.localities {
+            lt.add([
+                loc.id.to_string(),
+                loc.tasks_executed.to_string(),
+                loc.tasks_rejected.to_string(),
+                loc.alive_at_end.to_string(),
+                loc.killed_at_task.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        print!("{}", lt.render());
+        if let Some(lat) = rep.recovery_latency_secs {
+            println!("mean recovery latency: {lat:.4}s (kill -> next window barrier)");
+        }
+    }
 
     // The executor path publishes its policy state as perfcounters; show
     // them (and fold them into the JSON payload) when it was active.
@@ -369,11 +464,41 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
     if let Some(path) = args.flags.get("json") {
         let mut results: Vec<(String, JsonValue)> = vec![
             ("mode".to_string(), JsonValue::from(rep.mode.clone())),
+            ("launcher".to_string(), JsonValue::from(rep.launcher.clone())),
             ("wall_secs".to_string(), JsonValue::from(rep.wall_secs)),
             ("tasks".to_string(), JsonValue::from(rep.tasks)),
+            ("subdomains".to_string(), JsonValue::from(rep.subdomains)),
             ("failures_injected".to_string(), JsonValue::from(rep.failures_injected)),
             ("silent_corruptions".to_string(), JsonValue::from(rep.silent_corruptions)),
             ("launch_errors".to_string(), JsonValue::from(rep.launch_errors)),
+            ("survival_rate".to_string(), JsonValue::from(rep.survival_rate())),
+            ("kills_applied".to_string(), JsonValue::from(rep.kills_applied)),
+            (
+                "recovery_latency_secs".to_string(),
+                rep.recovery_latency_secs.map(JsonValue::from).unwrap_or(JsonValue::Null),
+            ),
+            (
+                "localities".to_string(),
+                JsonValue::Arr(
+                    rep.localities
+                        .iter()
+                        .map(|l| {
+                            JsonValue::obj([
+                                ("id".to_string(), JsonValue::from(l.id)),
+                                ("executed".to_string(), JsonValue::from(l.tasks_executed)),
+                                ("rejected".to_string(), JsonValue::from(l.tasks_rejected)),
+                                ("alive_at_end".to_string(), JsonValue::from(l.alive_at_end)),
+                                (
+                                    "killed_at_task".to_string(),
+                                    l.killed_at_task
+                                        .map(JsonValue::from)
+                                        .unwrap_or(JsonValue::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("final_checksum".to_string(), JsonValue::from(rep.final_checksum)),
         ];
         results.push((
@@ -584,9 +709,70 @@ mod tests {
             parse_resilience("adaptive:6").unwrap(),
             ExecPolicy::Adaptive { ceiling: 6 }
         );
+        assert_eq!(
+            parse_resilience("adaptive_replicate").unwrap(),
+            ExecPolicy::AdaptiveReplicate { ceiling: 4 }
+        );
+        assert_eq!(
+            parse_resilience("adaptive_replicate:6").unwrap(),
+            ExecPolicy::AdaptiveReplicate { ceiling: 6 }
+        );
         assert!(parse_resilience("bogus").is_err());
         assert!(parse_resilience("replay:0").is_err());
         assert!(parse_resilience("replicate:x").is_err());
+        assert!(parse_resilience("adaptive_replicate:0").is_err());
+    }
+
+    #[test]
+    fn stencil_cluster_command_smoke() {
+        let r = dispatch(&argv(&[
+            "stencil",
+            "--cluster",
+            "4:kill=10@2",
+            "--resilience",
+            "replay:3",
+            "--workers",
+            "2",
+        ]));
+        assert!(r.is_ok(), "{r:?}");
+    }
+
+    #[test]
+    fn stencil_cluster_rejects_mode_and_bad_specs() {
+        let r = dispatch(&argv(&[
+            "stencil", "--cluster", "4", "--mode", "replay", "--workers", "2",
+        ]));
+        assert!(r.is_err(), "--mode on the cluster route must be rejected");
+        let r = dispatch(&argv(&["stencil", "--cluster", "4:kill=1@9", "--workers", "2"]));
+        assert!(r.is_err(), "out-of-range kill locality must be rejected");
+        let r = dispatch(&argv(&["stencil", "--cluster", "0", "--workers", "2"]));
+        assert!(r.is_err(), "zero localities must be rejected");
+        let r = dispatch(&argv(&["stencil", "--loc-workers", "2", "--workers", "2"]));
+        assert!(r.is_err(), "--loc-workers without --cluster must be rejected");
+    }
+
+    #[test]
+    fn stencil_cluster_survival_json_round_trip() {
+        let path = std::env::temp_dir()
+            .join(format!("rhpx_stencil_cluster_{}.json", std::process::id()));
+        let r = dispatch(&argv(&[
+            "stencil",
+            "--cluster",
+            "4:kill=10@2",
+            "--resilience",
+            "replay:3",
+            "--workers",
+            "2",
+            "--json",
+            path.to_str().unwrap(),
+        ]));
+        assert!(r.is_ok(), "{r:?}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""launcher":"cluster(4)""#), "{text}");
+        assert!(text.contains(r#""survival_rate":1"#), "{text}");
+        assert!(text.contains(r#""kills_applied":1"#), "{text}");
+        assert!(text.contains(r#""killed_at_task":10"#), "{text}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

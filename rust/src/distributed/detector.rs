@@ -37,10 +37,15 @@ pub struct MembershipView {
     pub rounds: u64,
 }
 
+/// A recovery hook: runs on the detector thread for every membership
+/// transition.
+type EventHook = Arc<dyn Fn(MembershipEvent) + Send + Sync>;
+
 struct DetectorState {
     alive: HashMap<LocalityId, bool>,
     rounds: u64,
     subscribers: Vec<Sender<MembershipEvent>>,
+    hooks: Vec<EventHook>,
 }
 
 /// Heartbeat-based failure detector for a [`Cluster`].
@@ -57,6 +62,7 @@ impl FailureDetector {
             alive: (0..cluster.len()).map(|i| (LocalityId(i), true)).collect(),
             rounds: 0,
             subscribers: Vec::new(),
+            hooks: Vec::new(),
         }));
         let stop = Arc::new(AtomicBool::new(false));
         let cluster = cluster.clone();
@@ -85,13 +91,22 @@ impl FailureDetector {
                             });
                         }
                     }
-                    {
+                    let hooks: Vec<EventHook> = {
                         let mut g = st.lock().unwrap();
                         g.rounds += 1;
                         for ev in &events {
                             for sub in &g.subscribers {
                                 sub.send(*ev);
                             }
+                        }
+                        g.hooks.clone()
+                    };
+                    // Hooks run outside the state lock so a recovery
+                    // action may call back into the detector (or the
+                    // cluster) without deadlocking.
+                    for ev in &events {
+                        for hook in &hooks {
+                            hook(*ev);
                         }
                     }
                     std::thread::sleep(period);
@@ -123,6 +138,20 @@ impl FailureDetector {
         let (tx, rx) = channel();
         self.state.lock().unwrap().subscribers.push(tx);
         rx
+    }
+
+    /// Register a recovery hook: `f` runs on the detector thread for
+    /// every membership transition (the ORNL resilience-pattern split —
+    /// this detector *detects*, the hook is where a *recovery* action
+    /// such as re-provisioning or draining a locality attaches). Hooks
+    /// run outside the detector's state lock, so they may inspect the
+    /// view or act on the cluster; heartbeating pauses until they
+    /// return, so keep them short.
+    pub fn on_event<F>(&self, f: F)
+    where
+        F: Fn(MembershipEvent) + Send + Sync + 'static,
+    {
+        self.state.lock().unwrap().hooks.push(Arc::new(f));
     }
 
     /// Block until at least `n` heartbeat rounds have completed.
@@ -171,6 +200,31 @@ mod tests {
             events.recv().get(),
             Ok(MembershipEvent::Rejoined(LocalityId(1)))
         );
+    }
+
+    #[test]
+    fn recovery_hook_can_heal_the_cluster() {
+        // A hook that revives any locality the detector declares dead:
+        // the detector must subsequently observe the rejoin — the
+        // smallest possible detector → recovery → rejoin loop.
+        let cl = Cluster::new(2, 1, NetworkConfig::default());
+        let det = FailureDetector::start(&cl, Duration::from_millis(1));
+        det.wait_rounds(1);
+        let healer = cl.clone();
+        det.on_event(move |ev| {
+            if let MembershipEvent::Died(id) = ev {
+                healer.revive(id);
+            }
+        });
+        let events = det.subscribe();
+        cl.kill(LocalityId(0));
+        assert_eq!(events.recv().get(), Ok(MembershipEvent::Died(LocalityId(0))));
+        assert_eq!(
+            events.recv().get(),
+            Ok(MembershipEvent::Rejoined(LocalityId(0))),
+            "the hook's revive must be observed as a rejoin"
+        );
+        assert!(cl.locality(LocalityId(0)).is_alive());
     }
 
     #[test]

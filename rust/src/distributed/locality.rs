@@ -31,6 +31,8 @@ struct LocalityInner {
     alive: AtomicBool,
     agas: Agas,
     sent: AtomicUsize,
+    executed: AtomicUsize,
+    rejected: AtomicUsize,
 }
 
 /// One simulated HPX locality: a private scheduler pool plus an
@@ -63,6 +65,20 @@ impl Locality {
     pub fn messages_received(&self) -> usize {
         self.inner.sent.load(Ordering::Relaxed)
     }
+
+    /// Task bodies this locality actually ran (placement introspection:
+    /// where work physically executed, as opposed to where it was merely
+    /// routed).
+    pub fn tasks_executed(&self) -> usize {
+        self.inner.executed.load(Ordering::Relaxed)
+    }
+
+    /// Tasks routed here that were rejected because the locality was
+    /// dead — each one is a failed attempt some resilience layer had to
+    /// absorb.
+    pub fn tasks_rejected(&self) -> usize {
+        self.inner.rejected.load(Ordering::Relaxed)
+    }
 }
 
 struct ClusterInner {
@@ -94,6 +110,8 @@ impl Cluster {
                     alive: AtomicBool::new(true),
                     agas: agas.clone(),
                     sent: AtomicUsize::new(0),
+                    executed: AtomicUsize::new(0),
+                    rejected: AtomicUsize::new(0),
                 }),
             };
             let (tx, rx) = mpsc::channel::<Message>();
@@ -170,6 +188,16 @@ impl Cluster {
         LocalityId((id.0 + 1) % self.len())
     }
 
+    /// Ids of the localities currently alive (ascending).
+    pub fn alive_ids(&self) -> Vec<LocalityId> {
+        self.inner
+            .localities
+            .iter()
+            .filter(|l| l.is_alive())
+            .map(|l| l.id())
+            .collect()
+    }
+
     /// Ship `f` to locality `target` as an active message; the returned
     /// future resolves with the task's result. Tasks on dead localities
     /// fail with a `locality dead` error (the failure-detector signal the
@@ -182,15 +210,18 @@ impl Cluster {
         let (p, fut) = Promise::new();
         let msg: Message = Box::new(move |loc: &Locality| {
             if !loc.is_alive() {
+                loc.inner.rejected.fetch_add(1, Ordering::Relaxed);
                 p.set_error(TaskError::App(format!("locality {} dead", loc.id().0)));
                 return;
             }
             let loc2 = loc.clone();
             loc.runtime().pool().spawn_job(Box::new(move || {
                 if !loc2.is_alive() {
+                    loc2.inner.rejected.fetch_add(1, Ordering::Relaxed);
                     p.set_error(TaskError::App(format!("locality {} dead", loc2.id().0)));
                     return;
                 }
+                loc2.inner.executed.fetch_add(1, Ordering::Relaxed);
                 p.set_result(run_task_body(|| f(&loc2)));
             }));
         });
@@ -271,5 +302,24 @@ mod tests {
             cl.run_on(LocalityId(0), |_| Ok::<_, TaskError>(0)).get().unwrap();
         }
         assert_eq!(cl.locality(LocalityId(0)).messages_received(), 5);
+    }
+
+    #[test]
+    fn execution_and_rejection_counters_track_placement() {
+        let cl = Cluster::new(2, 1, NetworkConfig::default());
+        for _ in 0..4 {
+            cl.run_on(LocalityId(0), |_| Ok::<_, TaskError>(0)).get().unwrap();
+        }
+        cl.kill(LocalityId(1));
+        for _ in 0..3 {
+            assert!(cl.run_on(LocalityId(1), |_| Ok::<_, TaskError>(0)).get().is_err());
+        }
+        assert_eq!(cl.locality(LocalityId(0)).tasks_executed(), 4);
+        assert_eq!(cl.locality(LocalityId(0)).tasks_rejected(), 0);
+        assert_eq!(cl.locality(LocalityId(1)).tasks_executed(), 0);
+        assert_eq!(cl.locality(LocalityId(1)).tasks_rejected(), 3);
+        assert_eq!(cl.alive_ids(), vec![LocalityId(0)]);
+        cl.revive(LocalityId(1));
+        assert_eq!(cl.alive_ids(), vec![LocalityId(0), LocalityId(1)]);
     }
 }

@@ -25,7 +25,17 @@
 //! over the cluster, so wrapping it in a `ReplayExecutor` or
 //! `ReplicateExecutor` gives executor-routed distributed resilience —
 //! replay walks the localities, replicate fans replicas out across them
-//! (this is how [`crate::executor::DistributedReplayExecutor`] is built).
+//! (this is how [`crate::executor::DistributedReplayExecutor`] is built,
+//! and how the §V-B stencil driver runs distributed: see
+//! [`crate::stencil::StencilParams::cluster`]).
+//!
+//! Fault injection is scripted, not sampled: a [`FaultSchedule`] (parsed
+//! from `kill=STEP@LOC,…`) kills localities at deterministic points of a
+//! driver's step counter, so the recovered-vs-poisoned outcome of a
+//! survival experiment replays run over run. An
+//! out-of-band [`FailureDetector`] heartbeats the cluster and exposes
+//! membership transitions to channels ([`FailureDetector::subscribe`])
+//! and recovery hooks ([`FailureDetector::on_event`]).
 //!
 //! Values crossing localities require `Clone` (the in-process stand-in
 //! for serializability over a real wire).
@@ -42,6 +52,176 @@ use crate::agas::LocalityId;
 use crate::error::{ResilienceError, TaskError, TaskResult};
 use crate::future::{when_all_results, Future, Promise};
 use crate::resilience::Voter;
+
+// ---------------------------------------------------------------------
+// Deterministic fault schedules (scripted locality kills)
+// ---------------------------------------------------------------------
+
+/// One scheduled locality kill: at global step `step` (the interpretation
+/// of "step" belongs to the driver running the schedule — the stencil
+/// driver counts task launches), locality `loc` dies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillEvent {
+    /// 0-based step at which the kill fires (inclusive: the kill is
+    /// applied *before* the work of that step is issued).
+    pub step: usize,
+    pub loc: LocalityId,
+}
+
+/// A scripted fault schedule: a sorted list of [`KillEvent`]s applied
+/// to a [`Cluster`] as a driver advances through its steps. Parsed from
+/// the CLI's `kill=STEP@LOC[,kill=STEP@LOC…]` syntax. Each kill fires
+/// at the same driver step every run, so the *outcome* of a survival
+/// experiment (recovered vs. poisoned, which locality died and when) is
+/// replayable and regression-testable; the exact set of attempts that
+/// observe the dead locality still depends on execution timing, since
+/// tasks issued before the kill execute asynchronously.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSchedule {
+    /// Sorted by `step`.
+    events: Vec<KillEvent>,
+    /// Index of the first event not yet applied.
+    fired: usize,
+}
+
+impl FaultSchedule {
+    /// A schedule from explicit events (sorted internally).
+    pub fn new(mut events: Vec<KillEvent>) -> Self {
+        events.sort_by_key(|e| e.step);
+        FaultSchedule { events, fired: 0 }
+    }
+
+    /// Parse `kill=STEP@LOC[,kill=STEP@LOC…]`. Every event must name a
+    /// locality below `localities`; a locality may die at most once (a
+    /// second kill of a dead locality can never be observed, so it is
+    /// rejected as a schedule typo rather than silently ignored).
+    ///
+    /// ```
+    /// use rhpx::distributed::FaultSchedule;
+    ///
+    /// let s = FaultSchedule::parse("kill=10@2,kill=3@1", 4).unwrap();
+    /// assert_eq!(s.events().len(), 2);
+    /// assert_eq!(s.events()[0].step, 3); // sorted by step
+    /// assert!(FaultSchedule::parse("kill=10@9", 4).is_err()); // out of range
+    /// ```
+    pub fn parse(spec: &str, localities: usize) -> Result<FaultSchedule, String> {
+        let mut events: Vec<KillEvent> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            let rest = part.strip_prefix("kill=").ok_or_else(|| {
+                format!("bad fault event {part:?} (expected kill=STEP@LOC)")
+            })?;
+            let (step, loc) = rest.split_once('@').ok_or_else(|| {
+                format!("bad fault event {part:?} (expected kill=STEP@LOC)")
+            })?;
+            let step: usize = step
+                .parse()
+                .map_err(|_| format!("kill step {step:?} is not a number"))?;
+            let loc: usize = loc
+                .parse()
+                .map_err(|_| format!("kill locality {loc:?} is not a number"))?;
+            if loc >= localities {
+                return Err(format!(
+                    "kill locality {loc} out of range (localities={localities})"
+                ));
+            }
+            if events.iter().any(|e| e.loc.0 == loc) {
+                return Err(format!("duplicate kill for locality {loc}"));
+            }
+            events.push(KillEvent { step, loc: LocalityId(loc) });
+        }
+        Ok(FaultSchedule::new(events))
+    }
+
+    /// The scheduled events, sorted by step.
+    pub fn events(&self) -> &[KillEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Apply every not-yet-fired event with `event.step <= step` to
+    /// `cluster`; returns the events fired now (in step order). Called
+    /// once per driver step; events whose step is never reached simply
+    /// never fire.
+    pub fn advance(&mut self, step: usize, cluster: &Cluster) -> Vec<KillEvent> {
+        let mut fired = Vec::new();
+        while self.fired < self.events.len() && self.events[self.fired].step <= step {
+            let ev = self.events[self.fired];
+            cluster.kill(ev.loc);
+            fired.push(ev);
+            self.fired += 1;
+        }
+        fired
+    }
+}
+
+/// Declarative description of a simulated cluster plus its fault
+/// schedule — what `rhpx stencil --cluster LOCALITIES[:kill=STEP@LOC,…]`
+/// parses into, and what [`ClusterSpec::build`] turns into a live
+/// [`Cluster`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterSpec {
+    pub localities: usize,
+    /// Scheduler threads per locality.
+    pub workers_per_locality: usize,
+    /// One-way active-message latency in microseconds.
+    pub latency_us: u64,
+    pub schedule: FaultSchedule,
+}
+
+impl ClusterSpec {
+    /// A fault-free spec with 1 worker per locality and loopback latency.
+    pub fn new(localities: usize) -> Self {
+        ClusterSpec {
+            localities: localities.max(1),
+            workers_per_locality: 1,
+            latency_us: 0,
+            schedule: FaultSchedule::default(),
+        }
+    }
+
+    /// Parse `LOCALITIES[:kill=STEP@LOC,…]`.
+    ///
+    /// ```
+    /// use rhpx::distributed::ClusterSpec;
+    ///
+    /// let spec = ClusterSpec::parse("4:kill=10@2").unwrap();
+    /// assert_eq!(spec.localities, 4);
+    /// assert_eq!(spec.schedule.events()[0].step, 10);
+    /// assert!(ClusterSpec::parse("0").is_err());
+    /// assert!(ClusterSpec::parse("4:").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<ClusterSpec, String> {
+        let (count, sched) = match s.split_once(':') {
+            Some((c, rest)) => (c, Some(rest)),
+            None => (s, None),
+        };
+        let localities: usize = count
+            .parse()
+            .ok()
+            .filter(|n| *n >= 1)
+            .ok_or_else(|| format!("bad locality count {count:?} (expected >= 1)"))?;
+        let schedule = match sched {
+            Some(rest) => FaultSchedule::parse(rest, localities)?,
+            None => FaultSchedule::default(),
+        };
+        Ok(ClusterSpec { schedule, ..ClusterSpec::new(localities) })
+    }
+
+    /// Spin up the described cluster (schedule not yet applied — drivers
+    /// advance it themselves so kills land at deterministic points of
+    /// *their* step counter).
+    pub fn build(&self) -> Cluster {
+        Cluster::new(
+            self.localities,
+            self.workers_per_locality,
+            NetworkConfig { latency_us: self.latency_us },
+        )
+    }
+}
 
 /// A distributable task body: runs on whichever locality it is routed
 /// to; receives that locality so it can interact with local services
@@ -317,6 +497,68 @@ mod tests {
         let f = ex.spawn_vote(vote_majority, || 42i64);
         assert_eq!(f.get(), Ok(42));
         assert_eq!(ex.concurrency(), 3);
+    }
+
+    #[test]
+    fn fault_schedule_parses_sorts_and_validates() {
+        let s = FaultSchedule::parse("kill=10@2,kill=3@1", 4).unwrap();
+        assert_eq!(
+            s.events(),
+            &[
+                KillEvent { step: 3, loc: LocalityId(1) },
+                KillEvent { step: 10, loc: LocalityId(2) },
+            ]
+        );
+        assert!(!s.is_empty());
+        assert!(FaultSchedule::parse("", 4).is_err(), "empty event list");
+        assert!(FaultSchedule::parse("kill=", 4).is_err(), "missing STEP@LOC");
+        assert!(FaultSchedule::parse("kill=5", 4).is_err(), "missing @LOC");
+        assert!(FaultSchedule::parse("kill=x@1", 4).is_err(), "non-numeric step");
+        assert!(FaultSchedule::parse("kill=1@y", 4).is_err(), "non-numeric locality");
+        assert!(FaultSchedule::parse("kill=1@4", 4).is_err(), "locality out of range");
+        assert!(FaultSchedule::parse("die=1@0", 4).is_err(), "unknown event kind");
+        assert!(
+            FaultSchedule::parse("kill=1@0,kill=2@0", 4).is_err(),
+            "duplicate locality"
+        );
+        assert!(
+            FaultSchedule::parse("kill=1@0,", 4).is_err(),
+            "trailing comma is a malformed (empty) event"
+        );
+    }
+
+    #[test]
+    fn cluster_spec_parses_count_and_schedule() {
+        assert_eq!(ClusterSpec::parse("4").unwrap(), ClusterSpec::new(4));
+        let spec = ClusterSpec::parse("4:kill=10@2").unwrap();
+        assert_eq!(spec.localities, 4);
+        assert_eq!(
+            spec.schedule.events(),
+            &[KillEvent { step: 10, loc: LocalityId(2) }]
+        );
+        assert!(ClusterSpec::parse("0").is_err(), "zero localities");
+        assert!(ClusterSpec::parse("").is_err());
+        assert!(ClusterSpec::parse("x").is_err());
+        assert!(ClusterSpec::parse("4:").is_err(), "colon with no events");
+        assert!(ClusterSpec::parse("4:kill=1@7").is_err(), "event out of range");
+        assert_eq!(ClusterSpec::parse("2").unwrap().build().len(), 2);
+    }
+
+    #[test]
+    fn fault_schedule_advance_fires_due_events_once() {
+        let cl = cluster(3);
+        let mut s = FaultSchedule::parse("kill=5@1,kill=2@0", 3).unwrap();
+        assert!(s.advance(1, &cl).is_empty());
+        assert_eq!(cl.alive_ids().len(), 3);
+        // Step 2 fires the first kill…
+        let fired = s.advance(2, &cl);
+        assert_eq!(fired, vec![KillEvent { step: 2, loc: LocalityId(0) }]);
+        assert!(!cl.locality(LocalityId(0)).is_alive());
+        // …and does not re-fire it when the driver skips ahead.
+        let fired = s.advance(9, &cl);
+        assert_eq!(fired, vec![KillEvent { step: 5, loc: LocalityId(1) }]);
+        assert_eq!(cl.alive_ids(), vec![LocalityId(2)]);
+        assert!(s.advance(100, &cl).is_empty(), "schedule is exhausted");
     }
 
     #[test]

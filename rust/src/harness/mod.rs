@@ -9,6 +9,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod table1;
 pub mod table2;
+pub mod table_dist;
 
 use crate::error::TaskResult;
 use crate::metrics::Table;

@@ -1,0 +1,257 @@
+//! Bench harness: the distributed fault-surviving stencil (the paper's
+//! §V-B headline scenario, Fig 4–5 — "task survives locality death").
+//!
+//! One stencil geometry is run through five arms that differ only in
+//! substrate, fault schedule, and resilience policy:
+//!
+//! 1. single-runtime pool, fault-free — the wall-time and checksum
+//!    reference every other arm is compared against;
+//! 2. cluster, fault-free, no resilience — the pure cost of
+//!    distribution (active messages + per-locality pools);
+//! 3. cluster, one scheduled kill, no resilience — the negative
+//!    control: the failure cone must reach the final wavefront
+//!    (survival < 1);
+//! 4. cluster, same kill, `replay:3` — retries walk the locality ring
+//!    off the corpse (survival = 1, checksum matches the reference);
+//! 5. cluster, same kill, `adaptive_replicate:4` — eager fan-out masks
+//!    the death and widens under the observed failures (survival = 1).
+//!
+//! Emitted per arm: wall time, poisoned subdomains, survival rate, mean
+//! recovery latency (kill → next window barrier), overhead vs. the
+//! single-runtime reference, and whether the checksum matched it. The
+//! bench binary (`cargo run --release --bin table_dist`) wraps this as
+//! `BENCH_table_dist.json`.
+
+use crate::metrics::{JsonValue, Stats, Table};
+use crate::runtime_handle::Runtime;
+use crate::stencil::{run, ClusterSpec, ExecPolicy, StencilParams};
+
+use super::HarnessOpts;
+
+/// Localities in the cluster arms.
+const LOCALITIES: usize = 4;
+/// Which locality the schedule kills.
+const KILL_LOC: usize = 2;
+
+/// One measured arm of the survival experiment.
+#[derive(Debug, Clone)]
+pub struct DistRow {
+    /// Substrate: `pool(N)` or `cluster(N)`.
+    pub route: String,
+    /// Resilience policy label (`none` for the undecorated arms).
+    pub policy: String,
+    /// Scheduled kills that fired.
+    pub kills: usize,
+    pub wall_secs: f64,
+    /// Poisoned final-wavefront subdomains.
+    pub poisoned: u64,
+    /// `1 - poisoned / subdomains`.
+    pub survival_rate: f64,
+    /// Mean kill → next-window-barrier drain time, when kills fired.
+    pub recovery_latency_secs: Option<f64>,
+    /// Percent extra wall time vs. the single-runtime reference arm.
+    pub overhead_pct_vs_pool: f64,
+    /// Final checksum bit-matches the fault-free single-runtime run.
+    pub checksum_matches_pool: bool,
+}
+
+/// The geometry shared by every arm: tiny subdomain shape, iteration
+/// count scaled from the harness scale (`opts.scale` 0.01 → 10
+/// iterations, the floor).
+fn params(opts: &HarnessOpts) -> StencilParams {
+    StencilParams {
+        iterations: ((1000.0 * opts.scale) as usize).max(10),
+        ..StencilParams::tiny()
+    }
+}
+
+/// The kill schedule shared by the faulty arms: locality [`KILL_LOC`]
+/// dies an eighth of the way through the task stream — early enough
+/// that most of the run executes degraded, late enough that the
+/// round-robin has warmed every locality.
+fn kill_spec(p: &StencilParams) -> String {
+    format!("{LOCALITIES}:kill={}@{KILL_LOC}", (p.total_tasks() / 8).max(1))
+}
+
+/// Run the five-arm experiment. Each arm repeats `opts.repeats` times;
+/// wall time is the mean, survival/checksum come from the last repeat.
+/// The recovered-vs-poisoned outcome of every arm is deterministic; the
+/// control arm's exact poisoned *count* varies with execution timing
+/// (tasks in flight when the kill fires execute asynchronously), which
+/// is why the row records the survival story, not a poisoned-count
+/// baseline to diff against.
+///
+/// Worker parity: the cluster arms get `opts.workers` spread across the
+/// localities, and the pool reference runs on that same total
+/// (`localities × workers_per_locality`), so `overhead_pct_vs_pool`
+/// measures distribution cost (active messages, per-locality pools) at
+/// equal parallelism rather than a thread-count drop.
+pub fn run_table_dist(opts: &HarnessOpts) -> Vec<DistRow> {
+    let wpl = (opts.workers / LOCALITIES).max(1);
+    let rt = Runtime::builder().workers(LOCALITIES * wpl).build();
+    let base = params(opts);
+    let faulty = kill_spec(&base);
+    let fault_free = format!("{LOCALITIES}");
+
+    // Arm 1 is the reference: measure it first, remember its checksum.
+    let mut reference_wall = 0.0f64;
+    let mut reference_checksum = 0.0f64;
+
+    let arms: Vec<(Option<&str>, Option<ExecPolicy>)> = vec![
+        (None, None),
+        (Some(&fault_free), None),
+        (Some(&faulty), None),
+        (Some(&faulty), Some(ExecPolicy::Replay { n: 3 })),
+        (Some(&faulty), Some(ExecPolicy::AdaptiveReplicate { ceiling: 4 })),
+    ];
+
+    let mut rows = Vec::with_capacity(arms.len());
+    for (cluster, resilience) in arms {
+        let p = StencilParams {
+            cluster: cluster.map(|s| {
+                let mut spec = ClusterSpec::parse(s).expect("arm spec parses");
+                spec.workers_per_locality = wpl;
+                spec
+            }),
+            resilience,
+            ..base.clone()
+        };
+        let mut wall = Stats::new();
+        let mut last = None;
+        for _ in 0..opts.repeats.max(1) {
+            let (_, rep) = run(&rt, &p).expect("table_dist arm failed to run");
+            wall.push(rep.wall_secs);
+            last = Some(rep);
+        }
+        let rep = last.expect("at least one repeat");
+        if rows.is_empty() {
+            reference_wall = wall.mean();
+            reference_checksum = rep.final_checksum;
+        }
+        rows.push(DistRow {
+            route: rep.launcher.clone(),
+            policy: resilience.map(|r| r.label()).unwrap_or_else(|| "none".into()),
+            kills: rep.kills_applied,
+            wall_secs: wall.mean(),
+            poisoned: rep.launch_errors,
+            survival_rate: rep.survival_rate(),
+            recovery_latency_secs: rep.recovery_latency_secs,
+            overhead_pct_vs_pool: 100.0 * (wall.mean() - reference_wall)
+                / reference_wall.max(f64::MIN_POSITIVE),
+            checksum_matches_pool: rep.final_checksum == reference_checksum,
+        });
+    }
+    rows
+}
+
+/// Render the rows as the printable harness table.
+pub fn to_table(rows: &[DistRow]) -> Table {
+    let mut t = Table::new(
+        "Table-Dist: stencil survival under locality death",
+        &[
+            "route", "policy", "kills", "wall_s", "poisoned", "survival_pct",
+            "recovery_ms", "overhead_pct", "checksum_ok",
+        ],
+    );
+    for r in rows {
+        t.add([
+            r.route.clone(),
+            r.policy.clone(),
+            r.kills.to_string(),
+            format!("{:.3}", r.wall_secs),
+            r.poisoned.to_string(),
+            format!("{:.1}", 100.0 * r.survival_rate),
+            r.recovery_latency_secs
+                .map(|s| format!("{:.2}", s * 1e3))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:+.1}", r.overhead_pct_vs_pool),
+            r.checksum_matches_pool.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The machine-readable payload for `BENCH_table_dist.json`: explicit
+/// typed fields per arm (survival rate, recovery latency, overhead)
+/// plus the rendered table for human diffing.
+pub fn to_json(rows: &[DistRow]) -> JsonValue {
+    JsonValue::obj([
+        (
+            "rows".to_string(),
+            JsonValue::Arr(
+                rows.iter()
+                    .map(|r| {
+                        JsonValue::obj([
+                            ("route".to_string(), JsonValue::from(r.route.clone())),
+                            ("policy".to_string(), JsonValue::from(r.policy.clone())),
+                            ("kills".to_string(), JsonValue::from(r.kills)),
+                            ("wall_secs".to_string(), JsonValue::from(r.wall_secs)),
+                            ("poisoned".to_string(), JsonValue::from(r.poisoned)),
+                            (
+                                "survival_rate".to_string(),
+                                JsonValue::from(r.survival_rate),
+                            ),
+                            (
+                                "recovery_latency_secs".to_string(),
+                                r.recovery_latency_secs
+                                    .map(JsonValue::from)
+                                    .unwrap_or(JsonValue::Null),
+                            ),
+                            (
+                                "overhead_pct_vs_pool".to_string(),
+                                JsonValue::from(r.overhead_pct_vs_pool),
+                            ),
+                            (
+                                "checksum_matches_pool".to_string(),
+                                JsonValue::from(r.checksum_matches_pool),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("table".to_string(), to_table(rows).to_json()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_dist_smoke_demonstrates_the_survival_story() {
+        let opts = HarnessOpts { scale: 0.01, repeats: 1, workers: 2, ..Default::default() };
+        let rows = run_table_dist(&opts);
+        assert_eq!(rows.len(), 5);
+
+        // Reference and fault-free cluster arms: everything survives and
+        // matches.
+        assert!(rows[0].route.starts_with("pool("));
+        assert_eq!(rows[0].survival_rate, 1.0);
+        assert!(rows[1].route.starts_with("cluster("));
+        assert_eq!(rows[1].poisoned, 0);
+        assert!(rows[1].checksum_matches_pool, "fault-free cluster must match pool");
+
+        // Negative control: the kill with no resilience poisons
+        // subdomains.
+        assert_eq!(rows[2].kills, 1);
+        assert!(rows[2].poisoned > 0, "unrecovered kill must poison subdomains");
+        assert!(rows[2].survival_rate < 1.0);
+
+        // Both resilient arms fully recover and reproduce the reference
+        // checksum.
+        for r in &rows[3..] {
+            assert_eq!(r.kills, 1, "{}", r.policy);
+            assert_eq!(r.poisoned, 0, "{} must recover every subdomain", r.policy);
+            assert_eq!(r.survival_rate, 1.0);
+            assert!(r.checksum_matches_pool, "{} diverged from reference", r.policy);
+            assert!(r.recovery_latency_secs.is_some());
+        }
+
+        let json = to_json(&rows).render();
+        assert!(json.contains(r#""survival_rate":1"#), "{json}");
+        assert!(json.contains(r#""policy":"exec_replay(3)""#), "{json}");
+        let t = to_table(&rows);
+        assert_eq!(t.to_csv().lines().count(), 6, "header + 5 arms");
+    }
+}

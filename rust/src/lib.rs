@@ -29,8 +29,9 @@
 //! | §IV-B task replicate (Listing 2), voting, validation | [`resilience`] `async_replicate*`, [`resilience::vote`] |
 //! | §V-A artificial workload (Listing 3), Table I, Fig 2 | [`workload`], [`harness::table1`], [`harness::fig2`] |
 //! | §V-B dataflow stencil, Table II, Fig 3 | [`stencil`], [`harness::table2`], [`harness::fig3`] |
-//! | §V-C failure injection | [`failure`] |
-//! | §Future-Work: distributed resiliency, "special executors", replay-in-replicate | [`distributed`], [`resilience::executor`] (decorators + adaptive budgets), [`executor`] (algorithm-facing policies), `*_replicate_replay` |
+//! | §V-B distributed: tasks surviving locality death (Fig 4–5 scenario) | [`stencil`] cluster route ([`stencil::StencilParams::cluster`], [`distributed::ClusterSpec`]), [`harness::table_dist`], [`fault_model`] |
+//! | §V-C failure injection | [`failure`] (transient errors), [`stencil::SilentCorruptor`] (silent corruption), [`distributed::FaultSchedule`] (scheduled locality kills) |
+//! | §Future-Work: distributed resiliency, "special executors", replay-in-replicate | [`distributed`], [`resilience::executor`] (decorators + adaptive budgets/width), [`executor`] (algorithm-facing policies), `*_replicate_replay` |
 //!
 //! Each harness module's header states exactly which table/figure it
 //! regenerates; the bench binaries under `rust/benches/` emit the same
@@ -65,7 +66,8 @@
 //! See `docs/ARCHITECTURE.md` in the repository for the full task
 //! lifecycle (submit → decorator → scheduler → validate/vote → result)
 //! and a worked example of swapping resilient executors into the stencil
-//! driver.
+//! driver, and [`fault_model`] (also `docs/FAULT_MODEL.md`) for the
+//! detect → contain → recover walkthrough of every injectable fault.
 
 pub mod agas;
 pub mod algorithms;
@@ -77,6 +79,8 @@ pub mod distributed;
 pub mod error;
 pub mod executor;
 pub mod failure;
+#[doc = include_str!("../../docs/FAULT_MODEL.md")]
+pub mod fault_model {}
 pub mod future;
 pub mod harness;
 pub mod metrics;

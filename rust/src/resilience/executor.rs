@@ -17,7 +17,13 @@
 //! On top of the fixed-budget decorators, [`AdaptivePolicy`] tunes the
 //! replay/replication budget *n* online from the observed per-executor
 //! error rate (an EWMA over recent attempts), published through
-//! [`crate::perfcounters`] under `/resilience/<name>/...`.
+//! [`crate::perfcounters`] under `/resilience/<name>/...`. Both knobs
+//! are selectable declaratively through [`PolicySpec`]: `Adaptive` tunes
+//! the *retry* budget of a replay decorator, `AdaptiveReplicate` tunes
+//! the eager *fan-out width* of a replicate decorator — and
+//! [`PolicySpec::build_over`] constructs either one over any launcher,
+//! pool or cluster, which is how the distributed stencil route
+//! (`rhpx stencil --cluster …`) gets its resilience.
 //!
 //! ```
 //! use rhpx::resilience::executor::{PoolExecutor, ReplayExecutor, ResilientExecutor};
@@ -558,6 +564,11 @@ impl<E: TaskLauncher> ReplayExecutor<E> {
             Budget::Fixed(_) => None,
         }
     }
+
+    /// The wrapped launcher (the substrate attempts run on).
+    pub fn base(&self) -> &E {
+        &self.base
+    }
 }
 
 fn replay_attempt<E, T>(
@@ -688,6 +699,19 @@ impl<E: TaskLauncher> ReplicateExecutor<E> {
         self.budget.n()
     }
 
+    /// The adaptive policy, when this executor uses one.
+    pub fn policy(&self) -> Option<&Arc<AdaptivePolicy>> {
+        match &self.budget {
+            Budget::Adaptive(p) => Some(p),
+            Budget::Fixed(_) => None,
+        }
+    }
+
+    /// The wrapped launcher (the substrate replicas run on).
+    pub fn base(&self) -> &E {
+        &self.base
+    }
+
     fn replicate_into<T>(
         &self,
         promise: Promise<T>,
@@ -814,21 +838,44 @@ impl<E: TaskLauncher> ResilientExecutor for ReplicateExecutor<E> {
 // Declarative policy selection (shared by the CLI-facing layers)
 // ---------------------------------------------------------------------
 
+/// Quiet-state width of the [`PolicySpec::AdaptiveReplicate`] policy.
+/// Replicas are *eager* compute — unlike replay attempts they cost a full
+/// body execution even when nothing fails — so the floor stays at the
+/// smallest width that still tolerates one loss at launch time (a
+/// replicated launch cannot retro-widen once its replicas are in
+/// flight). The policy widens toward the ceiling as failures are
+/// observed.
+pub const ADAPTIVE_REPLICATE_FLOOR: usize = 2;
+
 /// Declarative decorator selection shared by the CLI-facing layers (the
 /// stencil driver's `--resilience` route re-exports this as
 /// `stencil::ExecPolicy`; the workload bench path as
 /// `workload::ExecVariant`), so the labels and the construction logic
 /// live in exactly one place.
+///
+/// The two adaptive arms share one [`AdaptivePolicy`] mechanism but tune
+/// different knobs: [`PolicySpec::Adaptive`] maps to
+/// [`ReplayExecutor::adaptive`] (the budget is *retries*, cheap while
+/// quiet), while [`PolicySpec::AdaptiveReplicate`] maps to
+/// [`ReplicateExecutor::adaptive`] (the budget is eager *fan-out width*,
+/// which can mask failures without adding retry latency — the right
+/// trade when the substrate is a cluster and a dead locality would
+/// otherwise stall every retry chain routed through it).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicySpec {
-    /// `ReplayExecutor(n)` over the runtime's pool.
+    /// `ReplayExecutor(n)` over the base launcher.
     Replay { n: usize },
-    /// `ReplicateExecutor(n)` over the runtime's pool (first validated
+    /// `ReplicateExecutor(n)` over the base launcher (first validated
     /// replica wins).
     Replicate { n: usize },
-    /// Adaptive replay: the budget is tuned online by an
+    /// Adaptive replay: the retry budget is tuned online by an
     /// [`AdaptivePolicy`] and never exceeds `ceiling`.
     Adaptive { ceiling: usize },
+    /// Adaptive replication *width*: the eager fan-out is tuned online
+    /// by an [`AdaptivePolicy`] between [`ADAPTIVE_REPLICATE_FLOOR`] and
+    /// `ceiling`, so sustained failures widen the replica set instead of
+    /// lengthening retry chains.
+    AdaptiveReplicate { ceiling: usize },
 }
 
 impl PolicySpec {
@@ -837,14 +884,22 @@ impl PolicySpec {
             PolicySpec::Replay { n } => format!("exec_replay({n})"),
             PolicySpec::Replicate { n } => format!("exec_replicate({n})"),
             PolicySpec::Adaptive { ceiling } => format!("exec_adaptive(max {ceiling})"),
+            PolicySpec::AdaptiveReplicate { ceiling } => {
+                format!("exec_adaptive_replicate(max {ceiling})")
+            }
         }
     }
 
     /// Eager-compute multiplier: replicate runs the body `n` times even
-    /// without failures; replay (fixed or adaptive) runs it once.
+    /// without failures; replay (fixed or adaptive) runs it once. The
+    /// adaptive-replicate arm reports its quiet-state width (the floor) —
+    /// the actual width grows with the observed error rate.
     pub fn compute_multiplier(&self) -> usize {
         match self {
             PolicySpec::Replicate { n } => *n,
+            PolicySpec::AdaptiveReplicate { ceiling } => {
+                ADAPTIVE_REPLICATE_FLOOR.min((*ceiling).max(1))
+            }
             _ => 1,
         }
     }
@@ -853,11 +908,28 @@ impl PolicySpec {
     /// adaptive perfcounters; `floor` is the adaptive minimum budget,
     /// clamped so the requested ceiling is always honored exactly.
     pub fn build(&self, rt: &Runtime, name: &str, floor: usize) -> BuiltExecutor {
-        let pool = PoolExecutor::new(rt);
+        self.build_over(PoolExecutor::new(rt), name, floor)
+    }
+
+    /// Build the decorator over any [`TaskLauncher`] — the seam the
+    /// distributed stencil route goes through: the same spec that builds
+    /// a pool decorator builds a cluster decorator, so swapping the
+    /// substrate never changes the policy selection logic.
+    ///
+    /// `floor` applies to the adaptive *replay* arm only; the
+    /// adaptive-replicate arm pins its floor at
+    /// [`ADAPTIVE_REPLICATE_FLOOR`] because every quiet-state replica is
+    /// paid in eager compute (see the constant's docs).
+    pub fn build_over<E: TaskLauncher>(
+        &self,
+        base: E,
+        name: &str,
+        floor: usize,
+    ) -> BuiltExecutor<E> {
         match *self {
-            PolicySpec::Replay { n } => BuiltExecutor::Replay(ReplayExecutor::new(pool, n)),
+            PolicySpec::Replay { n } => BuiltExecutor::Replay(ReplayExecutor::new(base, n)),
             PolicySpec::Replicate { n } => {
-                BuiltExecutor::Replicate(ReplicateExecutor::new(pool, n))
+                BuiltExecutor::Replicate(ReplicateExecutor::new(base, n))
             }
             PolicySpec::Adaptive { ceiling } => {
                 let ceiling = ceiling.max(1);
@@ -867,22 +939,39 @@ impl PolicySpec {
                     name: name.to_string(),
                     ..AdaptiveConfig::default()
                 }));
-                BuiltExecutor::Replay(ReplayExecutor::adaptive(pool, policy))
+                BuiltExecutor::Replay(ReplayExecutor::adaptive(base, policy))
+            }
+            PolicySpec::AdaptiveReplicate { ceiling } => {
+                let ceiling = ceiling.max(1);
+                let policy = Arc::new(AdaptivePolicy::new(AdaptiveConfig {
+                    floor: ADAPTIVE_REPLICATE_FLOOR.clamp(1, ceiling),
+                    ceiling,
+                    name: name.to_string(),
+                    ..AdaptiveConfig::default()
+                }));
+                BuiltExecutor::Replicate(ReplicateExecutor::adaptive(base, policy))
             }
         }
     }
 }
 
-/// A pool-backed decorator built from a [`PolicySpec`] — a small
+/// A decorator built from a [`PolicySpec`] over some launcher — a small
 /// dispatch facade so call sites need not be generic over the concrete
-/// decorator type.
+/// decorator type. The [`BuiltExecutor::Single`] variant is the
+/// undecorated baseline (one attempt per task, no retries): it is what
+/// the cluster stencil route runs *without* `--resilience`, so the
+/// failure experiment has a control arm that shares every other code
+/// path with the resilient runs.
 #[derive(Clone)]
-pub enum BuiltExecutor {
-    Replay(ReplayExecutor<PoolExecutor>),
-    Replicate(ReplicateExecutor<PoolExecutor>),
+pub enum BuiltExecutor<E: TaskLauncher = PoolExecutor> {
+    /// No decoration: one attempt per task straight through the base
+    /// launcher (a rejected validation surfaces with no retry).
+    Single(E),
+    Replay(ReplayExecutor<E>),
+    Replicate(ReplicateExecutor<E>),
 }
 
-impl BuiltExecutor {
+impl<E: TaskLauncher> BuiltExecutor<E> {
     /// Launch `f` under the built policy.
     pub fn spawn<T, R, F>(&self, f: F) -> Future<T>
     where
@@ -891,6 +980,11 @@ impl BuiltExecutor {
         F: Fn() -> R + Send + Sync + 'static,
     {
         match self {
+            BuiltExecutor::Single(base) => {
+                let (p, fut) = Promise::new();
+                base_spawn_into(base, p, Arc::new(move || run_task_body(&f)), None);
+                fut
+            }
             BuiltExecutor::Replay(ex) => ex.spawn(f),
             BuiltExecutor::Replicate(ex) => ex.spawn(f),
         }
@@ -911,6 +1005,13 @@ impl BuiltExecutor {
         V: Fn(&U) -> bool + Send + Sync + 'static,
     {
         match self {
+            BuiltExecutor::Single(base) => {
+                let base = base.clone();
+                let validate: TaskValidator<U> = Arc::new(val_f);
+                with_resolved_deps(f, deps, move |p, body| {
+                    base_spawn_into(&base, p, body, Some(validate))
+                })
+            }
             BuiltExecutor::Replay(ex) => ex.dataflow_validate(val_f, f, deps),
             BuiltExecutor::Replicate(ex) => ex.dataflow_validate(val_f, f, deps),
         }
@@ -919,8 +1020,19 @@ impl BuiltExecutor {
     /// Policy description of the underlying decorator.
     pub fn label(&self) -> String {
         match self {
+            BuiltExecutor::Single(base) => format!("single over {}", base.base_label()),
             BuiltExecutor::Replay(ex) => ex.label(),
             BuiltExecutor::Replicate(ex) => ex.label(),
+        }
+    }
+
+    /// Description of the substrate attempts run on (e.g. `pool(4)`,
+    /// `cluster(4)`), independent of the policy wrapped around it.
+    pub fn base_label(&self) -> String {
+        match self {
+            BuiltExecutor::Single(base) => base.base_label(),
+            BuiltExecutor::Replay(ex) => ex.base().base_label(),
+            BuiltExecutor::Replicate(ex) => ex.base().base_label(),
         }
     }
 }
@@ -1335,6 +1447,77 @@ mod tests {
         }
         assert_eq!(built.spawn(|| 1i32).get(), Ok(1));
         assert_eq!(built.label(), "replay(adaptive(max 2)) over pool(2)");
+    }
+
+    #[test]
+    fn policy_spec_adaptive_replicate_builds_replicate_decorator() {
+        let rt = rt();
+        assert_eq!(
+            PolicySpec::AdaptiveReplicate { ceiling: 4 }.label(),
+            "exec_adaptive_replicate(max 4)"
+        );
+        // Quiet-state eager compute is the floor width, not 1.
+        assert_eq!(
+            PolicySpec::AdaptiveReplicate { ceiling: 4 }.compute_multiplier(),
+            ADAPTIVE_REPLICATE_FLOOR
+        );
+        // A ceiling below the floor wins (degenerates to width 1).
+        assert_eq!(PolicySpec::AdaptiveReplicate { ceiling: 1 }.compute_multiplier(), 1);
+        let built = PolicySpec::AdaptiveReplicate { ceiling: 4 }.build(&rt, "test_adrep", 5);
+        match &built {
+            BuiltExecutor::Replicate(ex) => {
+                assert_eq!(ex.current_budget(), ADAPTIVE_REPLICATE_FLOOR);
+                assert_eq!(ex.policy().unwrap().ceiling(), 4);
+            }
+            _ => panic!("adaptive_replicate must build a replicate decorator"),
+        }
+        assert_eq!(built.spawn(|| 9i32).get(), Ok(9));
+        assert_eq!(built.label(), "replicate(adaptive(max 4)) over pool(2)");
+        assert_eq!(built.base_label(), "pool(2)");
+    }
+
+    #[test]
+    fn adaptive_replicate_widens_under_observed_failure() {
+        let rt = rt();
+        let built = PolicySpec::AdaptiveReplicate { ceiling: 6 }.build(&rt, "test_adrep_w", 5);
+        let BuiltExecutor::Replicate(ex) = &built else { panic!("wrong decorator") };
+        let policy = Arc::clone(ex.policy().unwrap());
+        assert_eq!(ex.current_budget(), ADAPTIVE_REPLICATE_FLOOR);
+        // A failure burst (fed through the same record path the replicas
+        // use) must widen the next launch's fan-out toward the ceiling.
+        for _ in 0..20 {
+            policy.record(true);
+        }
+        assert!(ex.current_budget() > ADAPTIVE_REPLICATE_FLOOR);
+        assert!(ex.current_budget() <= 6);
+        // And a quiet period must narrow it back to the floor.
+        for _ in 0..50 {
+            policy.record(false);
+        }
+        assert_eq!(ex.current_budget(), ADAPTIVE_REPLICATE_FLOOR);
+    }
+
+    #[test]
+    fn single_built_executor_is_the_undecorated_baseline() {
+        let rt = rt();
+        let built: BuiltExecutor = BuiltExecutor::Single(PoolExecutor::new(&rt));
+        assert_eq!(built.spawn(|| 3i32).get(), Ok(3));
+        assert_eq!(built.label(), "single over pool(2)");
+        assert_eq!(built.base_label(), "pool(2)");
+        // One attempt only: a rejected validation surfaces with no retry.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let a = crate::api::async_(&rt, || 1i64);
+        let f = built.dataflow_validate(
+            |_: &i64| false,
+            move |vals: &[i64]| {
+                c.fetch_add(1, Ordering::SeqCst);
+                vals[0]
+            },
+            vec![a],
+        );
+        assert_eq!(f.get(), Err(TaskError::ValidationRejected));
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
     }
 
     #[test]

@@ -7,17 +7,30 @@
 //! per task is selected by [`Mode`] — the exact configurations of
 //! Table II and Fig 3 (pure dataflow / replay without and with checksums
 //! / replicate), plus this repo's extensions.
+//!
+//! The driver is generic over *where* tasks run: the same DAG launches on
+//! a single runtime's pool (the default) or, with
+//! [`StencilParams::cluster`] set, round-robin across the localities of a
+//! simulated [`Cluster`](crate::distributed::Cluster) — with a
+//! deterministic [`FaultSchedule`](crate::distributed::FaultSchedule)
+//! killing localities mid-run and the `--resilience` executor decorators
+//! recovering the affected subdomains. That is the paper's extreme-scale
+//! scenario (Fig 4–5): subdomain tasks surviving locality death. See
+//! `docs/FAULT_MODEL.md` for which fault each knob injects and which API
+//! recovers it.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::agas::LocalityId;
 use crate::api::dataflow;
+use crate::distributed::{ClusterExecutor, ClusterSpec, KillEvent};
 use crate::error::{TaskError, TaskResult};
 use crate::failure::{FaultInjector, Rng};
 use crate::future::Future;
 use crate::metrics::Timer;
-use crate::resilience::executor::BuiltExecutor;
+use crate::resilience::executor::{BuiltExecutor, TaskLauncher};
 use crate::resilience::{
     dataflow_replay, dataflow_replay_validate, dataflow_replicate, dataflow_replicate_replay,
     dataflow_replicate_validate, dataflow_replicate_vote, vote_majority,
@@ -66,14 +79,19 @@ impl Mode {
 /// driver swaps in a resilient executor decorator and every task launch
 /// goes through it unchanged — checksum validation included, so the
 /// executor observes both thrown and silent errors. The adaptive
-/// variant publishes perfcounters under `/resilience/stencil/...`.
+/// variants publish perfcounters under `/resilience/stencil/...`:
+/// `Adaptive` tunes a replay budget, `AdaptiveReplicate` tunes the eager
+/// replication width (CLI `adaptive_replicate[:CEIL]`).
 pub use crate::resilience::executor::PolicySpec as ExecPolicy;
 
-/// The adaptive route's minimum replay budget. Generous on purpose:
+/// The adaptive *replay* route's minimum budget. Generous on purpose:
 /// replay attempts cost nothing unless a task actually fails, and a low
 /// floor would let early tasks exhaust before the policy has observed
 /// anything. A user-requested ceiling below this still wins (the floor
-/// is clamped to the ceiling in [`ExecPolicy::build`]).
+/// is clamped to the ceiling in [`ExecPolicy::build`]). The adaptive
+/// *replicate* route ignores this and pins its floor at
+/// [`crate::resilience::executor::ADAPTIVE_REPLICATE_FLOOR`], since
+/// replicas are eager compute.
 const ADAPTIVE_FLOOR: usize = 5;
 
 /// Which kernel executes the math.
@@ -109,6 +127,14 @@ pub struct StencilParams {
     /// When set, every task is routed through the corresponding executor
     /// decorator instead of the per-call [`Mode`] free functions.
     pub resilience: Option<ExecPolicy>,
+    /// When set, the DAG runs distributed: tasks are placed round-robin
+    /// across the localities of a simulated cluster, the spec's fault
+    /// schedule kills localities at deterministic task indices, and
+    /// [`StencilParams::resilience`] (built over the cluster launcher)
+    /// is what recovers the affected subdomains. [`Mode`] must be
+    /// [`Mode::Pure`] on this route — per-call resilient functions are
+    /// bound to a single runtime.
+    pub cluster: Option<ClusterSpec>,
     pub backend: Backend,
     /// Exception-style failures: error-rate factor x, P = e^{-x}.
     pub error_rate: Option<f64>,
@@ -132,6 +158,7 @@ impl StencilParams {
             courant: 0.9,
             mode: Mode::Pure,
             resilience: None,
+            cluster: None,
             backend: Backend::Native,
             error_rate: None,
             silent_rate: None,
@@ -163,6 +190,7 @@ impl StencilParams {
             courant: 1.0,
             mode: Mode::Pure,
             resilience: None,
+            cluster: None,
             backend: Backend::Native,
             error_rate: None,
             silent_rate: None,
@@ -178,22 +206,72 @@ impl StencilParams {
     }
 }
 
+/// Per-locality placement/survival introspection for cluster runs.
+#[derive(Debug, Clone)]
+pub struct LocalityReport {
+    pub id: usize,
+    /// Task bodies this locality actually ran.
+    pub tasks_executed: usize,
+    /// Attempts rejected because the locality was dead.
+    pub tasks_rejected: usize,
+    pub alive_at_end: bool,
+    /// The global task index at which the fault schedule killed it.
+    pub killed_at_task: Option<usize>,
+}
+
 /// Outcome of a stencil run.
 #[derive(Debug, Clone)]
 pub struct StencilReport {
     pub mode: String,
+    /// The substrate tasks ran on: `pool(N)` or `cluster(N)`.
+    pub launcher: String,
     pub wall_secs: f64,
     pub tasks: usize,
+    /// Subdomains in the final wavefront (the survival denominator).
+    pub subdomains: usize,
     pub failures_injected: u64,
     pub silent_corruptions: u64,
     /// Tasks whose resilient launch ultimately failed (DAG poisoned).
     pub launch_errors: u64,
+    /// Scheduled locality kills that actually fired.
+    pub kills_applied: usize,
+    /// Mean time from a kill firing to the next window barrier draining
+    /// (the DAG has provably flowed past the fault), when kills fired.
+    pub recovery_latency_secs: Option<f64>,
+    /// One entry per locality on the cluster route; empty on the pool
+    /// route.
+    pub localities: Vec<LocalityReport>,
     pub final_checksum: f64,
 }
 
+impl StencilReport {
+    /// Fraction of final-wavefront subdomains that survived (1.0 = no
+    /// poisoned subdomains).
+    pub fn survival_rate(&self) -> f64 {
+        if self.subdomains == 0 {
+            return 1.0;
+        }
+        (self.subdomains as u64).saturating_sub(self.launch_errors) as f64
+            / self.subdomains as f64
+    }
+}
+
 /// Run the stencil; returns the final global state and the report.
+///
+/// Single-runtime route: a run where *every* subdomain is poisoned
+/// returns the first error (the run itself is broken). Cluster route:
+/// total poisoning is a legitimate measured outcome of the fault
+/// experiment (survival rate 0), so the report is always returned.
 pub fn run(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, StencilReport)> {
     assert!(params.steps <= params.nx, "ghost region larger than subdomain");
+    match &params.cluster {
+        None => run_pool(rt, params),
+        Some(spec) => run_cluster(params, spec),
+    }
+}
+
+/// The single-runtime route (today's Table II / Fig 3 path).
+fn run_pool(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, StencilReport)> {
     let injector = FaultInjector::new(params.error_rate.unwrap_or(0.0), params.seed);
     let corruptor = SilentCorruptor::new(params.silent_rate, params.seed ^ 0xDEAD);
     let domain = Domain::sine(params.n_sub, params.nx);
@@ -201,22 +279,169 @@ pub fn run(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, Stenci
         params.resilience.map(|p| p.build(rt, "stencil", ADAPTIVE_FLOOR));
 
     let timer = Timer::start();
+    let (final_domain, launch_errors, first_error) = run_dag(
+        params,
+        &domain,
+        |_task_idx| {},
+        |deps| launch_task(rt, params, &route, &injector, &corruptor, deps),
+        || {},
+    );
+    let wall = timer.elapsed_secs();
+
+    let report = StencilReport {
+        mode: params
+            .resilience
+            .map(|p| p.label())
+            .unwrap_or_else(|| params.mode.label()),
+        launcher: route
+            .as_ref()
+            .map(|ex| ex.base_label())
+            .unwrap_or_else(|| format!("pool({})", rt.workers())),
+        wall_secs: wall,
+        tasks: params.total_tasks(),
+        subdomains: params.n_sub,
+        failures_injected: injector.counters().injected(),
+        silent_corruptions: corruptor.count(),
+        launch_errors,
+        kills_applied: 0,
+        recovery_latency_secs: None,
+        localities: Vec::new(),
+        final_checksum: final_domain.global_checksum(),
+    };
+    match first_error {
+        Some(e) if launch_errors as usize == params.n_sub => Err(e),
+        _ => Ok((final_domain.gather(), report)),
+    }
+}
+
+/// The distributed route: the same DAG, every task launched through a
+/// cluster-backed executor, with the spec's fault schedule applied at
+/// deterministic task indices.
+fn run_cluster(
+    params: &StencilParams,
+    spec: &ClusterSpec,
+) -> TaskResult<(Vec<f64>, StencilReport)> {
+    if params.mode != Mode::Pure {
+        return Err(TaskError::Runtime(
+            "cluster route ignores per-call modes: per-call resilient functions are bound \
+             to a single runtime; select the policy with `resilience` instead"
+                .into(),
+        ));
+    }
+    let injector = FaultInjector::new(params.error_rate.unwrap_or(0.0), params.seed);
+    let corruptor = SilentCorruptor::new(params.silent_rate, params.seed ^ 0xDEAD);
+    let domain = Domain::sine(params.n_sub, params.nx);
+    let cluster = spec.build();
+    let exec = ClusterExecutor::new(&cluster);
+    let route: BuiltExecutor<ClusterExecutor> = match params.resilience {
+        Some(p) => p.build_over(exec, "stencil", ADAPTIVE_FLOOR),
+        None => BuiltExecutor::Single(exec),
+    };
+
+    let mut schedule = spec.schedule.clone();
+    let mut kills_applied: Vec<KillEvent> = Vec::new();
+    // Kills awaiting their recovery-latency measurement (taken at the
+    // next window barrier, when the wavefront containing the fault has
+    // provably drained). RefCell: both the per-task hook and the barrier
+    // hook touch it.
+    let pending: std::cell::RefCell<Vec<Timer>> = std::cell::RefCell::new(Vec::new());
+    let mut latencies: Vec<f64> = Vec::new();
+
+    let timer = Timer::start();
+    let (final_domain, launch_errors, _first_error) = run_dag(
+        params,
+        &domain,
+        |task_idx| {
+            for ev in schedule.advance(task_idx, &cluster) {
+                kills_applied.push(ev);
+                pending.borrow_mut().push(Timer::start());
+            }
+        },
+        |deps| launch_via(&route, params, &injector, &corruptor, deps),
+        || {
+            for t in pending.borrow_mut().drain(..) {
+                latencies.push(t.elapsed_secs());
+            }
+        },
+    );
+    // Kills in the final (un-barriered) window recover by the gather.
+    for t in pending.borrow_mut().drain(..) {
+        latencies.push(t.elapsed_secs());
+    }
+    let wall = timer.elapsed_secs();
+
+    let localities = (0..cluster.len())
+        .map(|i| {
+            let loc = cluster.locality(LocalityId(i));
+            LocalityReport {
+                id: i,
+                tasks_executed: loc.tasks_executed(),
+                tasks_rejected: loc.tasks_rejected(),
+                alive_at_end: loc.is_alive(),
+                killed_at_task: kills_applied.iter().find(|e| e.loc.0 == i).map(|e| e.step),
+            }
+        })
+        .collect();
+
+    let report = StencilReport {
+        mode: params
+            .resilience
+            .map(|p| p.label())
+            .unwrap_or_else(|| params.mode.label()),
+        launcher: route.base_label(),
+        wall_secs: wall,
+        tasks: params.total_tasks(),
+        subdomains: params.n_sub,
+        failures_injected: injector.counters().injected(),
+        silent_corruptions: corruptor.count(),
+        launch_errors,
+        kills_applied: kills_applied.len(),
+        recovery_latency_secs: if latencies.is_empty() {
+            None
+        } else {
+            Some(latencies.iter().sum::<f64>() / latencies.len() as f64)
+        },
+        localities,
+        final_checksum: final_domain.global_checksum(),
+    };
+    Ok((final_domain.gather(), report))
+}
+
+/// The shared DAG loop: build the (subdomain, iteration) dataflow with
+/// `launch` (called once per task), invoking `before_task` with the
+/// global task index before each launch (the fault schedule's clock) and
+/// `after_barrier` after each window barrier drains. Returns the final
+/// domain (poisoned subdomains as zero placeholders), the poisoned
+/// count, and the first error observed.
+fn run_dag<S, L, B>(
+    params: &StencilParams,
+    domain: &Domain,
+    mut before_task: S,
+    mut launch: L,
+    mut after_barrier: B,
+) -> (Domain, u64, Option<TaskError>)
+where
+    S: FnMut(usize),
+    L: FnMut(Vec<Future<Chunk>>) -> Future<Chunk>,
+    B: FnMut(),
+{
+    let n_sub = params.n_sub;
     let mut futs: Vec<Future<Chunk>> = domain
         .subdomains
         .iter()
         .map(|c| Future::ready(Ok(c.clone())))
         .collect();
 
-    let n_sub = params.n_sub;
     for iter in 0..params.iterations {
         let mut next: Vec<Future<Chunk>> = Vec::with_capacity(n_sub);
         for j in 0..n_sub {
+            before_task(iter * n_sub + j);
             let deps = vec![
                 futs[(j + n_sub - 1) % n_sub].clone(),
                 futs[j].clone(),
                 futs[(j + 1) % n_sub].clone(),
             ];
-            next.push(launch_task(rt, params, &route, &injector, &corruptor, deps));
+            next.push(launch(deps));
         }
         futs = next;
         if params.window > 0 && (iter + 1) % params.window == 0 {
@@ -224,6 +449,7 @@ pub fn run(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, Stenci
             for f in &futs {
                 f.wait();
             }
+            after_barrier();
         }
     }
 
@@ -244,44 +470,23 @@ pub fn run(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, Stenci
             }
         }
     }
-    let wall = timer.elapsed_secs();
-
-    let report = StencilReport {
-        mode: params
-            .resilience
-            .map(|p| p.label())
-            .unwrap_or_else(|| params.mode.label()),
-        wall_secs: wall,
-        tasks: params.total_tasks(),
-        failures_injected: injector.counters().injected(),
-        silent_corruptions: corruptor.count(),
-        launch_errors,
-        final_checksum: final_domain.global_checksum(),
-    };
-    match first_error {
-        Some(e) if launch_errors as usize == params.n_sub => Err(e),
-        _ => Ok((final_domain.gather(), report)),
-    }
+    (final_domain, launch_errors, first_error)
 }
 
-/// Launch one stencil task through the configured API variant (or the
-/// executor route, when one is active).
-fn launch_task(
-    rt: &Runtime,
+/// The shared per-task kernel body: draw the fault injector, advance the
+/// ghost-extended subdomain through the backend kernel, maybe corrupt
+/// the output silently, and attach the checksum.
+fn task_body(
     params: &StencilParams,
-    route: &Option<BuiltExecutor>,
     injector: &FaultInjector,
     corruptor: &SilentCorruptor,
-    deps: Vec<Future<Chunk>>,
-) -> Future<Chunk> {
+) -> impl Fn(&[Chunk]) -> TaskResult<Chunk> + Send + Sync + 'static {
     let steps = params.steps;
     let courant = params.courant;
     let backend = params.backend.clone();
     let injector = injector.clone();
     let corruptor = corruptor.clone();
-    let tol = params.tol;
-
-    let body = move |vals: &[Chunk]| -> TaskResult<Chunk> {
+    move |vals: &[Chunk]| -> TaskResult<Chunk> {
         injector.draw("stencil-task")?;
         let ext = build_extended(&vals[0], &vals[1], &vals[2], steps);
         let (mut out, cksum) = match &backend {
@@ -305,15 +510,43 @@ fn launch_task(
         };
         corruptor.maybe_corrupt(&mut out);
         Ok(Chunk::with_checksum(out, cksum))
-    };
+    }
+}
 
-    let validate = move |c: &Chunk| c.verify(tol);
+/// Launch one task through an executor route over any launcher — the
+/// seam that makes the driver substrate-generic: the same call serves
+/// the pool decorators and the cluster decorators.
+fn launch_via<E: TaskLauncher>(
+    route: &BuiltExecutor<E>,
+    params: &StencilParams,
+    injector: &FaultInjector,
+    corruptor: &SilentCorruptor,
+    deps: Vec<Future<Chunk>>,
+) -> Future<Chunk> {
+    let body = task_body(params, injector, corruptor);
+    let tol = params.tol;
+    route.dataflow_validate(move |c: &Chunk| c.verify(tol), move |v: &[Chunk]| body(v), deps)
+}
 
+/// Launch one stencil task on the single runtime through the configured
+/// API variant (or the executor route, when one is active).
+fn launch_task(
+    rt: &Runtime,
+    params: &StencilParams,
+    route: &Option<BuiltExecutor>,
+    injector: &FaultInjector,
+    corruptor: &SilentCorruptor,
+    deps: Vec<Future<Chunk>>,
+) -> Future<Chunk> {
     // Executor-routed launches: the call is always the same dataflow;
     // the policy lives entirely in the executor.
     if let Some(ex) = route {
-        return ex.dataflow_validate(validate, move |v: &[Chunk]| body(v), deps);
+        return launch_via(ex, params, injector, corruptor, deps);
     }
+
+    let body = task_body(params, injector, corruptor);
+    let tol = params.tol;
+    let validate = move |c: &Chunk| c.verify(tol);
 
     match params.mode {
         Mode::Pure => dataflow(rt, move |v: Vec<Chunk>| body(&v), deps),
@@ -379,6 +612,13 @@ mod tests {
         Runtime::builder().workers(2).build()
     }
 
+    fn clustered(spec: &str) -> StencilParams {
+        StencilParams {
+            cluster: Some(ClusterSpec::parse(spec).unwrap()),
+            ..StencilParams::tiny()
+        }
+    }
+
     #[test]
     fn pure_run_is_exact_shift_at_unit_courant() {
         let rt = rt();
@@ -387,6 +627,9 @@ mod tests {
         let (out, rep) = run(&rt, &params).unwrap();
         assert_eq!(rep.launch_errors, 0);
         assert_eq!(rep.tasks, 80);
+        assert_eq!(rep.subdomains, 8);
+        assert_eq!(rep.survival_rate(), 1.0);
+        assert_eq!(rep.launcher, "pool(2)");
         // total shift = iterations * steps cells
         let shift = (params.iterations * params.steps) as f64;
         let exact = domain.exact_sine_shifted(shift);
@@ -424,6 +667,7 @@ mod tests {
             ExecPolicy::Replay { n: 3 },
             ExecPolicy::Replicate { n: 2 },
             ExecPolicy::Adaptive { ceiling: 8 },
+            ExecPolicy::AdaptiveReplicate { ceiling: 4 },
         ] {
             let params = StencilParams { resilience: Some(policy), ..base.clone() };
             let (out, rep) = run(&rt, &params).unwrap();
@@ -431,6 +675,111 @@ mod tests {
             assert_eq!(rep.mode, policy.label());
             assert_eq!(out, ref_out, "policy {policy:?} diverged");
         }
+    }
+
+    #[test]
+    fn cluster_route_matches_pool_route_when_no_locality_dies() {
+        // The distributed DAG is the same math: with no faults the
+        // cluster gather must be bit-identical to the single-runtime
+        // run, for the bare route and every decorator.
+        let rt = rt();
+        let base = StencilParams::tiny();
+        let (ref_out, ref_rep) = run(&rt, &base).unwrap();
+        for resilience in [
+            None,
+            Some(ExecPolicy::Replay { n: 3 }),
+            Some(ExecPolicy::Replicate { n: 2 }),
+            Some(ExecPolicy::AdaptiveReplicate { ceiling: 4 }),
+        ] {
+            let params = StencilParams { resilience, ..clustered("4") };
+            let (out, rep) = run(&rt, &params).unwrap();
+            assert_eq!(rep.launch_errors, 0, "{resilience:?}");
+            assert_eq!(rep.launcher, "cluster(4)");
+            assert_eq!(rep.kills_applied, 0);
+            assert_eq!(rep.recovery_latency_secs, None);
+            assert_eq!(rep.localities.len(), 4);
+            assert!(rep.localities.iter().all(|l| l.alive_at_end));
+            assert_eq!(out, ref_out, "cluster route diverged under {resilience:?}");
+            assert_eq!(rep.final_checksum, ref_rep.final_checksum);
+        }
+    }
+
+    #[test]
+    fn cluster_task_placement_is_spread_across_localities() {
+        let rt = rt();
+        let (_, rep) = run(&rt, &clustered("4")).unwrap();
+        // 80 tasks round-robin over 4 localities: every locality worked.
+        let executed: Vec<usize> = rep.localities.iter().map(|l| l.tasks_executed).collect();
+        assert_eq!(executed.iter().sum::<usize>(), 80);
+        assert!(executed.iter().all(|&n| n > 0), "idle locality: {executed:?}");
+    }
+
+    #[test]
+    fn cluster_kill_without_resilience_poisons_subdomains() {
+        // The acceptance negative control: a locality dies at task 10
+        // and nothing recovers — the failure cone must reach the final
+        // wavefront as poisoned subdomains, and the run still reports
+        // (total poisoning is a measured outcome, not a driver error).
+        let rt = rt();
+        let (_, rep) = run(&rt, &clustered("4:kill=10@2")).unwrap();
+        assert_eq!(rep.kills_applied, 1);
+        assert!(rep.launch_errors > 0, "dead locality must poison subdomains");
+        assert!(rep.survival_rate() < 1.0);
+        let dead = &rep.localities[2];
+        assert!(!dead.alive_at_end);
+        assert_eq!(dead.killed_at_task, Some(10));
+        assert!(dead.tasks_rejected > 0, "routed tasks must have been rejected");
+    }
+
+    #[test]
+    fn cluster_kill_with_replay_survives_locality_death() {
+        // The acceptance scenario: same fault, replay(3) over the
+        // 4-locality cluster — every retry leaves the locality that just
+        // failed, so one death can never exhaust the budget and the
+        // result is bit-identical to the single-runtime run.
+        let rt = rt();
+        let base = StencilParams::tiny();
+        let (ref_out, _) = run(&rt, &base).unwrap();
+        let params = StencilParams {
+            resilience: Some(ExecPolicy::Replay { n: 3 }),
+            ..clustered("4:kill=10@2")
+        };
+        let (out, rep) = run(&rt, &params).unwrap();
+        assert_eq!(rep.kills_applied, 1);
+        assert_eq!(rep.launch_errors, 0, "replay must recover every subdomain");
+        assert_eq!(rep.survival_rate(), 1.0);
+        assert!(rep.recovery_latency_secs.is_some());
+        assert_eq!(out, ref_out, "recovered run diverged from the fault-free run");
+        assert!(!rep.localities[2].alive_at_end);
+    }
+
+    #[test]
+    fn cluster_kill_with_adaptive_replicate_survives_locality_death() {
+        // Adaptive replication width: the quiet-state width (2) already
+        // places replicas on distinct localities, so one death never
+        // takes out a whole launch; observed failures then widen later
+        // launches instead of replaying them.
+        let rt = rt();
+        let base = StencilParams::tiny();
+        let (ref_out, _) = run(&rt, &base).unwrap();
+        let params = StencilParams {
+            resilience: Some(ExecPolicy::AdaptiveReplicate { ceiling: 4 }),
+            ..clustered("4:kill=10@2")
+        };
+        let (out, rep) = run(&rt, &params).unwrap();
+        assert_eq!(rep.launch_errors, 0, "replication must mask the dead locality");
+        assert_eq!(rep.mode, "exec_adaptive_replicate(max 4)");
+        assert_eq!(out, ref_out);
+        // The policy observed the dead-locality failures.
+        let snap = crate::perfcounters::global().snapshot();
+        assert!(snap["/resilience/stencil/count/failures"] > 0);
+    }
+
+    #[test]
+    fn cluster_route_rejects_per_call_modes() {
+        let rt = rt();
+        let params = StencilParams { mode: Mode::Replay { n: 3 }, ..clustered("2") };
+        assert!(run(&rt, &params).is_err(), "per-call modes are pool-only");
     }
 
     #[test]

@@ -9,13 +9,19 @@
 //! * [`kernel`] — the native Rust reference kernel (validated against the
 //!   JAX/Pallas oracle and the PJRT artifact);
 //! * [`domain`] — decomposition, chunks-with-checksums, exact solutions;
-//! * [`driver`] — the dataflow driver with per-task resiliency modes.
+//! * [`driver`] — the dataflow driver with per-task resiliency modes,
+//!   executor-routed resilience ([`ExecPolicy`]), and the distributed
+//!   route ([`StencilParams::cluster`]): the same DAG over a simulated
+//!   cluster with a deterministic locality-kill schedule — the paper's
+//!   "task survives locality death" scenario (Fig 4–5).
 
 pub mod domain;
 pub mod driver;
 pub mod kernel;
 
+pub use crate::distributed::{ClusterSpec, FaultSchedule, KillEvent};
 pub use domain::{build_extended, Chunk, Domain};
 pub use driver::{
-    run, Backend, ExecPolicy, Mode, SilentCorruptor, StencilParams, StencilReport,
+    run, Backend, ExecPolicy, LocalityReport, Mode, SilentCorruptor, StencilParams,
+    StencilReport,
 };

@@ -365,6 +365,26 @@ mod tests {
     }
 
     #[test]
+    fn executor_adaptive_replicate_recovers_under_failures() {
+        let rt = rt();
+        let params = WorkloadParams {
+            tasks: 300,
+            grain_ns: 5_000,
+            error_rate: Some(4.0), // P(fail) ≈ 0.018 per replica
+            ..Default::default()
+        };
+        let rep = run_executor(&rt, ExecVariant::AdaptiveReplicate { ceiling: 4 }, &params);
+        assert_eq!(rep.variant, "exec_adaptive_replicate(max 4)");
+        assert!(rep.failures_injected > 0, "injector must fire");
+        // All launches may sample the quiet-state width (2) before any
+        // outcome feeds back (the launch window far exceeds the task
+        // count), so a launch fails iff both replicas fail: p ≈ 3.4e-4,
+        // an expected 0.1 failures over 300 launches — tolerate a ≤2
+        // tail (P ≈ 1.5e-4).
+        assert!(rep.launch_errors <= 2, "got {}", rep.launch_errors);
+    }
+
+    #[test]
     fn variant_labels() {
         assert_eq!(Variant::Plain.label(), "async");
         assert_eq!(Variant::Replay { n: 3 }.label(), "async_replay(3)");

@@ -1,4 +1,7 @@
-//! Integration: distributed resiliency over simulated localities.
+//! Integration: distributed resiliency over simulated localities,
+//! including the §V-B acceptance scenario — the dataflow stencil
+//! surviving a scheduled locality death with zero poisoned subdomains
+//! and a checksum identical to the single-runtime run.
 
 use std::sync::Arc;
 
@@ -7,7 +10,8 @@ use rhpx::distributed::{
     async_replay_distributed, async_replicate_distributed, Cluster, DistBody, NetworkConfig,
 };
 use rhpx::resilience::vote_majority;
-use rhpx::{TaskError, TaskResult};
+use rhpx::stencil::{self, ClusterSpec, ExecPolicy, StencilParams};
+use rhpx::{Runtime, TaskError, TaskResult};
 
 #[test]
 fn cluster_with_latency_completes_many_tasks() {
@@ -91,6 +95,81 @@ fn distributed_state_via_agas() {
     // Migrate the object and keep using it.
     cl.agas().migrate(gid, LocalityId(1));
     assert_eq!(cl.agas().locate(gid), Some(LocalityId(1)));
+}
+
+/// The acceptance scenario end-to-end: `rhpx stencil --cluster
+/// 4:kill=10@2 --resilience replay:3` completes with zero poisoned
+/// subdomains and the single-runtime checksum, while the same
+/// configuration without `--resilience` reports poisoned subdomains.
+#[test]
+fn cluster_stencil_survives_scheduled_locality_death() {
+    let rt = Runtime::builder().workers(2).build();
+    let base = StencilParams::tiny();
+    let (pool_out, pool_rep) = stencil::run(&rt, &base).unwrap();
+
+    // Recovered arm: replay(3) over the 4-locality cluster.
+    let recovered = StencilParams {
+        cluster: Some(ClusterSpec::parse("4:kill=10@2").unwrap()),
+        resilience: Some(ExecPolicy::Replay { n: 3 }),
+        ..base.clone()
+    };
+    let (out, rep) = stencil::run(&rt, &recovered).unwrap();
+    assert_eq!(rep.kills_applied, 1, "the scheduled kill must fire");
+    assert!(!rep.localities[2].alive_at_end, "locality 2 must stay dead");
+    assert_eq!(rep.launch_errors, 0, "zero poisoned subdomains");
+    assert_eq!(rep.survival_rate(), 1.0);
+    assert_eq!(out, pool_out, "recovered run must match the single-runtime gather");
+    assert_eq!(rep.final_checksum, pool_rep.final_checksum);
+
+    // Control arm: same fault, no resilience — the failure cone must
+    // reach the final wavefront.
+    let control = StencilParams {
+        cluster: Some(ClusterSpec::parse("4:kill=10@2").unwrap()),
+        ..base.clone()
+    };
+    let (_, rep) = stencil::run(&rt, &control).unwrap();
+    assert!(rep.launch_errors > 0, "unrecovered kill must poison subdomains");
+    assert!(rep.survival_rate() < 1.0);
+    assert!(rep.localities[2].tasks_rejected > 0);
+}
+
+/// Adaptive replication width over the cluster: the quiet-state fan-out
+/// already spans two distinct localities, so the scheduled death is
+/// masked without any retry, and the observed failures drive the policy.
+#[test]
+fn cluster_stencil_adaptive_replicate_masks_locality_death() {
+    let rt = Runtime::builder().workers(2).build();
+    let base = StencilParams::tiny();
+    let (pool_out, _) = stencil::run(&rt, &base).unwrap();
+    let params = StencilParams {
+        cluster: Some(ClusterSpec::parse("4:kill=10@2").unwrap()),
+        resilience: Some(ExecPolicy::AdaptiveReplicate { ceiling: 4 }),
+        ..base
+    };
+    let (out, rep) = stencil::run(&rt, &params).unwrap();
+    assert_eq!(rep.launch_errors, 0);
+    assert_eq!(rep.mode, "exec_adaptive_replicate(max 4)");
+    assert_eq!(out, pool_out);
+}
+
+/// With no fault schedule, the cluster route is numerically transparent:
+/// same checksum as the pool route, every locality did work.
+#[test]
+fn cluster_stencil_equivalent_to_pool_without_faults() {
+    let rt = Runtime::builder().workers(2).build();
+    let base = StencilParams::tiny();
+    let (pool_out, pool_rep) = stencil::run(&rt, &base).unwrap();
+    let params = StencilParams {
+        cluster: Some(ClusterSpec::parse("3").unwrap()),
+        ..base
+    };
+    let (out, rep) = stencil::run(&rt, &params).unwrap();
+    assert_eq!(out, pool_out);
+    assert_eq!(rep.final_checksum, pool_rep.final_checksum);
+    assert_eq!(rep.launch_errors, 0);
+    assert_eq!(rep.kills_applied, 0);
+    assert_eq!(rep.localities.len(), 3);
+    assert!(rep.localities.iter().all(|l| l.tasks_executed > 0));
 }
 
 #[test]
