@@ -8,7 +8,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 BENCHES := perf_micro table1_async_overheads fig2_error_rates table2_stencil fig3_stencil_errors ablations table_dist
 
-.PHONY: all build test docs bench bench-smoke artifacts fmt fmt-check clippy clean help
+.PHONY: all build test docs bench bench-smoke bench-baseline bench-diff artifacts fmt fmt-check clippy clean help
 
 all: build
 
@@ -19,6 +19,8 @@ help:
 	@echo "  docs        cargo doc -D warnings + cargo test --doc (what CI's docs job runs)"
 	@echo "  bench       run every bench binary, writing BENCH_<name>.json"
 	@echo "  bench-smoke same, at smoke scale (seconds, what CI runs)"
+	@echo "  bench-baseline capture BENCH_baseline/BENCH_perf_micro.json (full scale)"
+	@echo "  bench-diff  print per-metric deltas of BENCH_*.json vs BENCH_baseline/"
 	@echo "  artifacts   AOT-lower the JAX/Pallas kernels to artifacts/*.hlo.txt"
 	@echo "  fmt         cargo fmt"
 	@echo "  fmt-check   cargo fmt --check"
@@ -49,6 +51,16 @@ bench-smoke: build
 		echo "== $$b (smoke) =="; \
 		$(CARGO) run --release --bin $$b -- --smoke --json BENCH_$$b.json; \
 	done
+
+# Capture the perf baseline the bench trajectory is diffed against.
+# Run on the commit *before* an optimization for a true before/after.
+bench-baseline: build
+	mkdir -p BENCH_baseline
+	$(CARGO) run --release --bin perf_micro -- --json BENCH_baseline/BENCH_perf_micro.json
+
+# Per-metric deltas vs the committed baseline (report only, never fails).
+bench-diff:
+	$(CARGO) run --release --bin bench_diff -- BENCH_perf_micro.json
 
 # AOT-lower the L1/L2 kernels to HLO text artifacts for the PJRT path.
 # Requires the Python toolchain (jax); the Rust build never does.

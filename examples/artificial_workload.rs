@@ -49,6 +49,7 @@ fn main() {
     }
     print!("{}", table.render());
     println!(
-        "\nNote: replay absorbs failures at ~p x grain extra cost; replicate pays ~n x grain\nunconditionally but also masks silent errors (vote variants)."
+        "\nNote: replay absorbs failures at ~p x grain extra cost; replicate pays ~n x \
+         grain\nunconditionally but also masks silent errors (vote variants)."
     );
 }

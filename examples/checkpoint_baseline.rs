@@ -44,7 +44,8 @@ fn main() {
     let init: Vec<Vec<f64>> = domain0.subdomains.iter().map(|c| c.data.to_vec()).collect();
 
     println!(
-        "workload: {N_SUB} subdomains x {NX} pts, {ITERATIONS} iterations, P(task failure) = {p_fail}\n"
+        "workload: {N_SUB} subdomains x {NX} pts, {ITERATIONS} iterations, \
+         P(task failure) = {p_fail}\n"
     );
 
     // ---------- coordinated C/R (disk-backed snapshots) ----------

@@ -69,7 +69,8 @@ fn main() {
         ..StencilParams::tiny()
     };
     println!(
-        "1D stencil (Lax-Wendroff): {} subdomains x {} points, {} iterations x {} steps ({} tasks) on {} workers\n",
+        "1D stencil (Lax-Wendroff): {} subdomains x {} points, {} iterations x {} steps \
+         ({} tasks) on {} workers\n",
         base.n_sub,
         base.nx,
         base.iterations,

@@ -29,7 +29,11 @@ fn a1_replication_factor(rt: &Runtime, scale: f64) -> Table {
     );
     for n in [1, 2, 3, 4, 6, 8] {
         let rep = run(rt, Variant::Replicate { n }, &params);
-        t.add([n.to_string(), format!("{:.3}", rep.per_task_us), format!("{:.3}", rep.overhead_us)]);
+        t.add([
+            n.to_string(),
+            format!("{:.3}", rep.per_task_us),
+            format!("{:.3}", rep.overhead_us),
+        ]);
     }
     print!("{}", t.render());
     t
@@ -75,7 +79,12 @@ fn a3_replicate_replay(rt: &Runtime, scale: f64) -> Table {
                 Ok(1)
             };
             let f = if nested {
-                resilience::async_replicate_replay::<i32, TaskResult<i32>, _, fn(&[i32]) -> Option<i32>>(
+                resilience::async_replicate_replay::<
+                    i32,
+                    TaskResult<i32>,
+                    _,
+                    fn(&[i32]) -> Option<i32>,
+                >(
                     rt, 3, 3, None, body,
                 )
             } else {

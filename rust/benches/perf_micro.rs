@@ -2,16 +2,23 @@
 //! EXPERIMENTS.md): per-launch cost of each API with no task work,
 //! isolating pure runtime overhead.
 //!
-//!   cargo run --release --bin perf_micro -- [--smoke] [--json PATH]
+//!   cargo run --release --bin perf_micro -- [--smoke] [--million] [--json PATH]
 //!   cargo bench --bench perf_micro -- --smoke --json BENCH_perf_micro.json
 //!
+//! `--million` runs the paper-scale 1M-task loop (the grain-size claim of
+//! the paper is about per-launch cost at exactly this scale); the default
+//! full run uses 200k launches, `--smoke` 20k.
+//!
 //! Emits one `ns_per_launch` number per API (`async_`, `async_replay`,
-//! `async_replicate`, `dataflow`, `stencil_task`) — the baseline every
-//! future scheduler/future/resilience optimization is diffed against.
+//! `async_replicate`, `dataflow`, `stencil_task`) plus a `when_all`
+//! join-width sweep (`when_all_8/64/512/4096`: amortized ns per
+//! dependency through the atomic-countdown join) — the baseline every
+//! scheduler/future/resilience optimization is diffed against (see
+//! `BENCH_baseline/` and `make bench-diff`).
 
 use rhpx::metrics::{BenchCli, JsonValue, Timer};
 use rhpx::resilience::{async_replay, async_replicate};
-use rhpx::{async_, Runtime};
+use rhpx::{async_, Promise, Runtime};
 
 /// Launch `n` zero-work tasks through `launch`, retiring in windows of
 /// 1024 to bound memory; returns amortized ns per launch.
@@ -32,24 +39,54 @@ fn measure<F: FnMut(&Runtime) -> rhpx::Future<i32>>(rt: &Runtime, n: usize, mut 
     t.elapsed_secs() * 1e9 / n as f64
 }
 
+/// Amortized ns per dependency of a `when_all_results` join of `width`
+/// inputs: promises resolve *after* the join is built, so every
+/// dependency takes the countdown path (no all-ready shortcut).
+fn measure_when_all(width: usize, rounds: usize) -> f64 {
+    let t = Timer::start();
+    for _ in 0..rounds {
+        let mut promises = Vec::with_capacity(width);
+        let mut futs = Vec::with_capacity(width);
+        for _ in 0..width {
+            let (p, f) = Promise::new();
+            promises.push(p);
+            futs.push(f);
+        }
+        let all = rhpx::when_all_results(futs);
+        for p in promises {
+            p.set_value(1i32);
+        }
+        let r = all.get().expect("join never fails");
+        assert_eq!(r.len(), width);
+    }
+    t.elapsed_secs() * 1e9 / (rounds * width) as f64
+}
+
 fn main() {
     let cli = BenchCli::parse();
+    let million = std::env::args().any(|a| a == "--million");
     let rt = Runtime::builder().workers(1).build();
-    let n = if cli.smoke { 20_000 } else { 200_000 };
+    let n = if million {
+        1_000_000
+    } else if cli.smoke {
+        20_000
+    } else {
+        200_000
+    };
 
-    let mut results: Vec<(&str, f64)> = Vec::new();
+    let mut results: Vec<(String, f64)> = Vec::new();
 
     let ns = measure(&rt, n, |rt| async_(rt, || 1i32));
     println!("async_         : {ns:.0} ns/launch");
-    results.push(("async_", ns));
+    results.push(("async_".into(), ns));
 
     let ns = measure(&rt, n, |rt| async_replay(rt, 3, || 1i32));
     println!("async_replay   : {ns:.0} ns/launch");
-    results.push(("async_replay", ns));
+    results.push(("async_replay".into(), ns));
 
     let ns = measure(&rt, n / 3, |rt| async_replicate(rt, 3, || 1i32));
     println!("async_replicate: {ns:.0} ns/launch");
-    results.push(("async_replicate", ns));
+    results.push(("async_replicate".into(), ns));
 
     // dataflow chain: per-link cost of dependency tracking.
     let links = n / 4;
@@ -61,7 +98,17 @@ fn main() {
     let _ = f.get();
     let ns = t.elapsed_secs() * 1e9 / links as f64;
     println!("dataflow       : {ns:.0} ns/link");
-    results.push(("dataflow", ns));
+    results.push(("dataflow".into(), ns));
+
+    // when_all join-width sweep: the dependency-completion path at the
+    // fan-in widths a real DAG sees (stencil = 3, reductions = wide).
+    for &width in &[8usize, 64, 512, 4096] {
+        // ~n total dependency completions per width, at least 8 rounds.
+        let rounds = (n / width).max(8);
+        let ns = measure_when_all(width, rounds);
+        println!("when_all_{width:<6}: {ns:.0} ns/dep ({rounds} rounds)");
+        results.push((format!("when_all_{width}"), ns));
+    }
 
     // stencil-shaped dataflow (3 deps, Chunk-sized payload clones)
     let iterations = if cli.smoke { 100 } else { 500 };
@@ -78,7 +125,7 @@ fn main() {
     let (_, rep) = rhpx::stencil::run(&rt, &params).unwrap();
     let ns = t.elapsed_secs() * 1e9 / rep.tasks as f64;
     println!("stencil task   : {ns:.0} ns/task ({} tasks)", rep.tasks);
-    results.push(("stencil_task", ns));
+    results.push(("stencil_task".into(), ns));
 
     cli.emit(
         "perf_micro",

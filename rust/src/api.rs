@@ -89,6 +89,12 @@ where
 /// `hpx::dataflow` — schedule `f(values)` once every future in `deps`
 /// holds a value. If any dependency failed, `f` does not run and the
 /// result carries [`TaskError::DependencyFailed`].
+///
+/// Dependency tracking is lock-free end to end: the underlying
+/// [`when_all_results`](crate::future::when_all_results) join costs one
+/// atomic decrement per completing dependency, and attaching to /
+/// resolving the futures involved takes no mutex (see
+/// `docs/ARCHITECTURE.md`, "Hot paths").
 pub fn dataflow<T, U, R, F>(rt: &Runtime, f: F, deps: Vec<Future<T>>) -> Future<U>
 where
     T: Clone + Send + 'static,

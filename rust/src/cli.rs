@@ -401,7 +401,13 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
         params
             .cluster
             .as_ref()
-            .map(|c| format!(", {} localities ({} scheduled kills)", c.localities, c.schedule.events().len()))
+            .map(|c| {
+                format!(
+                    ", {} localities ({} scheduled kills)",
+                    c.localities,
+                    c.schedule.events().len()
+                )
+            })
             .unwrap_or_default()
     );
     let (_, rep) = stencil::run(&rt, &params).map_err(|e| e.to_string())?;

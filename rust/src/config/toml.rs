@@ -119,7 +119,10 @@ pub fn parse(input: &str) -> Result<Document, ParseError> {
                     .chars()
                     .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-')
             {
-                return Err(ParseError { line: lineno, message: format!("bad section name {name:?}") });
+                return Err(ParseError {
+                    line: lineno,
+                    message: format!("bad section name {name:?}"),
+                });
             }
             section = name.to_string();
             continue;

@@ -99,7 +99,10 @@ impl FailureDetector {
                                 sub.send(*ev);
                             }
                         }
-                        g.hooks.clone()
+                        // Clone the hook list only when something fired:
+                        // the steady (no-event) heartbeat allocates
+                        // nothing.
+                        if events.is_empty() { Vec::new() } else { g.hooks.clone() }
                     };
                     // Hooks run outside the state lock so a recovery
                     // action may call back into the detector (or the

@@ -106,7 +106,8 @@ impl FaultInjector {
             });
             if entry.0 != self.seed {
                 let tid = THREAD_COUNTER.fetch_add(1, Ordering::Relaxed);
-                *entry = (self.seed, Rng::seeded(self.seed ^ tid.wrapping_mul(0xa076_1d64_78bd_642f)));
+                let mixed = self.seed ^ tid.wrapping_mul(0xa076_1d64_78bd_642f);
+                *entry = (self.seed, Rng::seeded(mixed));
             }
             entry.1.exponential(self.error_rate) > 1.0
         });

@@ -9,6 +9,31 @@
 //! helping the pool run other tasks when called from a worker thread, so
 //! waiting inside a task can never deadlock the pool.
 //!
+//! The shared state is a lock-free atomic state machine — no
+//! `Mutex`/`Condvar` pair, one allocation per future:
+//!
+//! ```text
+//!             attach: CAS node onto list            set(): swap
+//!   EMPTY ──────────────────────────► (cont list) ─────────────┐
+//!     │ set(): swap                                            ▼
+//!     └───────────────────────────────────────────────────► NOTIFY
+//!        value written; continuations fire (no lock held)      │
+//!                                              store(READY) ◄──┘
+//!   READY ──CAS──► BUSY ──► TAKEN          (value readable; new
+//!     (take/`into_result` in flight)        continuations run inline)
+//! ```
+//!
+//! The single `state` word is either a small tag (`EMPTY`/`READY`/
+//! `TAKEN`/`BUSY`/`NOTIFY`) or a pointer to the head of the pending
+//! continuation list (nodes are 8-byte aligned, so tags and pointers
+//! never collide). Continuations *always* fire outside any critical
+//! section — a continuation may freely attach further continuations to
+//! the same future (the old mutex implementation self-deadlocked here;
+//! see the `on_ready_inline_can_attach_more_continuations` regression
+//! test). Blocking waiters materialize lazily: a blocked `get` attaches a
+//! park/unpark continuation for its own thread — futures that are never
+//! blocked on never pay for a condvar.
+//!
 //! Paper mapping: HPX runtime substrate; `when_all` is the
 //! synchronization under every §V-B stencil dataflow task.
 
@@ -18,92 +43,289 @@ mod when_all;
 pub use channel::{channel, Receiver, Sender};
 pub use when_all::{collapse_results, when_all, when_all_results};
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::cell::UnsafeCell;
+use std::mem::ManuallyDrop;
+use std::ptr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use crate::error::{TaskError, TaskResult};
 use crate::scheduler::{current_worker, Pool};
 
-type Continuation<T> = Box<dyn FnOnce(&TaskResult<T>) + Send + 'static>;
+/// Pending, no value, no continuations.
+const EMPTY: usize = 0;
+/// Value present and consumable.
+const READY: usize = 1;
+/// Value consumed by `into_result`/`try_take`.
+const TAKEN: usize = 2;
+/// Transient: a taker holds exclusive access to the value.
+const BUSY: usize = 3;
+/// Transient: value written, the setter is still firing the pending
+/// continuation list. Readable (readers protocol) but not yet takeable.
+const NOTIFY: usize = 4;
+/// Values >= this are continuation-list head pointers (nodes are
+/// 8-byte aligned).
+const PTR_MIN: usize = 8;
 
-/// Continuation storage tuned for the common case: almost every future
-/// gets zero or one continuation, so avoid a `Vec` allocation for those.
-enum Conts<T> {
-    None,
-    One(Continuation<T>),
-    Many(Vec<Continuation<T>>),
+/// Type-erased continuation node: a single allocation holding the
+/// closure inline, dispatched through one fn pointer (no nested
+/// `Box<dyn FnOnce>`).
+#[repr(C, align(8))]
+struct Node<T> {
+    next: *mut Node<T>,
+    /// `Some(v)`: consume the node and run the closure with the value.
+    /// `None`: consume the node and drop the closure unrun.
+    run: unsafe fn(*mut Node<T>, Option<&TaskResult<T>>),
 }
 
-impl<T> Conts<T> {
-    fn push(&mut self, c: Continuation<T>) {
-        match std::mem::replace(self, Conts::None) {
-            Conts::None => *self = Conts::One(c),
-            Conts::One(first) => *self = Conts::Many(vec![first, c]),
-            Conts::Many(mut v) => {
-                v.push(c);
-                *self = Conts::Many(v);
-            }
-        }
-    }
+#[repr(C)]
+struct FullNode<T, F> {
+    base: Node<T>,
+    f: ManuallyDrop<F>,
+}
 
-    fn is_empty(&self) -> bool {
-        matches!(self, Conts::None)
-    }
-
-    fn fire(self, v: &TaskResult<T>) {
-        match self {
-            Conts::None => {}
-            Conts::One(c) => c(v),
-            Conts::Many(cs) => {
-                for c in cs {
-                    c(v);
-                }
-            }
-        }
+unsafe fn run_node<T, F: FnOnce(&TaskResult<T>)>(n: *mut Node<T>, v: Option<&TaskResult<T>>) {
+    let mut boxed = Box::from_raw(n as *mut FullNode<T, F>);
+    let f = ManuallyDrop::take(&mut boxed.f);
+    drop(boxed);
+    if let Some(v) = v {
+        f(v);
     }
 }
 
-enum State<T> {
-    /// Value not yet produced; holds continuations to fire on set.
-    Pending(Conts<T>),
-    /// Value produced (taken by at most one `get`/`try_take`).
-    Ready(TaskResult<T>),
-    /// Value produced and consumed by `into_result`.
-    Taken,
+fn new_node<T, F: FnOnce(&TaskResult<T>)>(f: F) -> *mut Node<T> {
+    Box::into_raw(Box::new(FullNode {
+        base: Node { next: ptr::null_mut(), run: run_node::<T, F> },
+        f: ManuallyDrop::new(f),
+    })) as *mut Node<T>
+}
+
+/// Reclaim a node whose CAS never published it, recovering the closure
+/// (the caller still knows the concrete `F`).
+unsafe fn unpublish_node<T, F: FnOnce(&TaskResult<T>)>(n: *mut Node<T>) -> F {
+    let mut boxed = Box::from_raw(n as *mut FullNode<T, F>);
+    ManuallyDrop::take(&mut boxed.f)
+}
+
+/// Bounded spin, then yield: the transient states waited on (`NOTIFY`
+/// while a setter fires arbitrary continuations, `BUSY` while a taker
+/// moves the value) can run user code, so pure `spin_loop` would burn a
+/// whole scheduling quantum on a single-vCPU host while starving the
+/// only thread able to make progress.
+#[inline]
+fn spin_or_yield(spins: &mut u32) {
+    if *spins < 64 {
+        *spins += 1;
+        std::hint::spin_loop();
+    } else {
+        std::thread::yield_now();
+    }
 }
 
 struct Shared<T> {
-    state: Mutex<State<T>>,
-    cv: Condvar,
+    /// Tag or continuation-list head (see module docs).
+    state: AtomicUsize,
+    /// Threads currently borrowing `value` (inline continuations,
+    /// `get_copy`). Takers wait for this to drain after claiming `BUSY`.
+    readers: AtomicUsize,
+    value: UnsafeCell<Option<TaskResult<T>>>,
 }
+
+// SAFETY: `value` is only written by the single setter (before
+// publication) and moved out by the single CAS-winning taker after
+// `readers` drains; shared reads hold a `readers` registration that
+// takers wait on. Continuation closures are `Send`.
+unsafe impl<T: Send> Send for Shared<T> {}
+unsafe impl<T: Send> Sync for Shared<T> {}
 
 impl<T> Shared<T> {
     fn new() -> Arc<Self> {
-        Arc::new(Shared { state: Mutex::new(State::Pending(Conts::None)), cv: Condvar::new() })
+        Arc::new(Shared {
+            state: AtomicUsize::new(EMPTY),
+            readers: AtomicUsize::new(0),
+            value: UnsafeCell::new(None),
+        })
     }
 
-    /// Publish the value: drain and fire continuations (without holding
-    /// the state lock, so continuations may freely attach further
-    /// continuations), then store the value and wake blocked waiters.
-    /// Loops because a firing continuation may attach new continuations.
+    fn new_ready(value: TaskResult<T>) -> Arc<Self> {
+        Arc::new(Shared {
+            state: AtomicUsize::new(READY),
+            readers: AtomicUsize::new(0),
+            value: UnsafeCell::new(Some(value)),
+        })
+    }
+
+    /// True once a value (or error) has been published for consumption.
+    /// `NOTIFY` counts: the value exists and blocked waiters woken by a
+    /// firing continuation must be able to proceed into `take`/`clone`
+    /// (which serialize against the `NOTIFY`→`READY` hand-off).
+    fn produced(&self) -> bool {
+        // Acquire: whoever sees a produced tag also sees the value write
+        // (published by the setter's AcqRel swap / release store).
+        matches!(self.state.load(Ordering::Acquire), READY | TAKEN | BUSY | NOTIFY)
+    }
+
+    /// Publish the value: write it, swap the pending continuation list
+    /// out, fire every continuation *outside any critical section*, then
+    /// open the state for consumption. Continuations that attach while we
+    /// fire observe `NOTIFY` and run inline (the value is already
+    /// readable), so no continuation is ever lost or deferred.
     fn set(&self, value: TaskResult<T>) {
-        let mut value = Some(value);
+        // Double-set guard. Not atomic w.r.t. a racing second setter, but
+        // the Promise API makes a second setter unreachable (set_* consume
+        // the promise); this catches internal misuse deterministically.
+        if matches!(self.state.load(Ordering::Relaxed), READY | TAKEN | BUSY | NOTIFY) {
+            panic!("promise value set twice");
+        }
+        // SAFETY: single setter, and no reader can observe the value
+        // until the swap below publishes a produced tag.
+        unsafe { *self.value.get() = Some(value) };
+        // AcqRel: releases the value write to anyone who loads the tag;
+        // acquires the attachers' node publications so we can walk them.
+        let prev = self.state.swap(NOTIFY, Ordering::AcqRel);
+        if prev >= PTR_MIN {
+            unsafe { self.fire_list(prev as *mut Node<T>) };
+        } else {
+            debug_assert_eq!(prev, EMPTY, "produced tags are guarded above");
+        }
+        // Release: opens take/clone; the value write is already visible
+        // through the swap, this orders the end of the firing phase.
+        self.state.store(READY, Ordering::Release);
+    }
+
+    /// Fire a detached continuation list in attach (FIFO) order. Runs
+    /// with state == `NOTIFY`: the value cannot be taken while we hold
+    /// this borrow (takers spin until `READY`), and concurrent inline
+    /// readers are fine (shared borrows).
+    unsafe fn fire_list(&self, head: *mut Node<T>) {
+        // The list is LIFO (CAS pushes); reverse to fire in attach order.
+        let mut prev: *mut Node<T> = ptr::null_mut();
+        let mut cur = head;
+        while !cur.is_null() {
+            let next = (*cur).next;
+            (*cur).next = prev;
+            prev = cur;
+            cur = next;
+        }
+        let v = (*self.value.get()).as_ref().expect("value written before NOTIFY");
+        let mut cur = prev;
+        while !cur.is_null() {
+            let next = (*cur).next;
+            ((*cur).run)(cur, Some(v));
+            cur = next;
+        }
+    }
+
+    /// Attach `f`: push onto the pending list, or — if the value is
+    /// already produced — run inline under the readers protocol, outside
+    /// any critical section.
+    fn attach<F: FnOnce(&TaskResult<T>) + Send + 'static>(&self, f: F) {
+        let mut cur = self.state.load(Ordering::Acquire);
+        // Fast inline path before paying for a node allocation.
+        if matches!(cur, READY | NOTIFY | BUSY | TAKEN) {
+            return self.run_inline(f);
+        }
+        let node = new_node(f);
         loop {
-            let mut g = self.state.lock().unwrap();
-            match &mut *g {
-                State::Pending(conts) if !conts.is_empty() => {
-                    let cs = std::mem::replace(conts, Conts::None);
-                    drop(g);
-                    let v = value.as_ref().expect("value present until stored");
-                    cs.fire(v);
+            match cur {
+                EMPTY => unsafe { (*node).next = ptr::null_mut() },
+                p if p >= PTR_MIN => unsafe { (*node).next = p as *mut Node<T> },
+                _ => {
+                    // Value landed while we were allocating: recover the
+                    // closure and run it inline.
+                    let f = unsafe { unpublish_node::<T, F>(node) };
+                    return self.run_inline(f);
                 }
-                State::Pending(_) => {
-                    *g = State::Ready(value.take().expect("single store"));
-                    drop(g);
-                    self.cv.notify_all();
-                    return;
+            }
+            match self.state.compare_exchange_weak(
+                cur,
+                node as usize,
+                // Release: publish the node (and closure) to the setter.
+                Ordering::Release,
+                // Acquire: on failure we may go inline and read the value.
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Run a continuation inline with a shared borrow of the value.
+    fn run_inline<F: FnOnce(&TaskResult<T>)>(&self, f: F) {
+        let mut spins = 0u32;
+        loop {
+            // SeqCst RMW + SeqCst state load: Dekker with the taker (it
+            // claims BUSY, then reads `readers`; we register, then read
+            // the tag) — at least one side observes the other, so we
+            // never borrow a value that is being moved out.
+            self.readers.fetch_add(1, Ordering::SeqCst);
+            match self.state.load(Ordering::SeqCst) {
+                READY | NOTIFY => break,
+                other => {
+                    // Deregister *before* spinning: a taker that claimed
+                    // BUSY waits for `readers` to drain, so holding the
+                    // registration here would livelock against it.
+                    self.readers.fetch_sub(1, Ordering::SeqCst);
+                    match other {
+                        TAKEN => panic!("future value already consumed"),
+                        BUSY => spin_or_yield(&mut spins),
+                        _ => unreachable!("run_inline called before value production"),
+                    }
                 }
-                // Double-set is a programming error in this crate.
-                _ => panic!("promise value set twice"),
+            }
+        }
+        // SAFETY: registration + tag check above exclude concurrent moves.
+        let v = unsafe { (*self.value.get()).as_ref().expect("produced tag implies value") };
+        f(v);
+        // Release the borrow: a waiting taker may proceed.
+        self.readers.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Move the value out. Caller must have observed `produced()`.
+    fn take_value(&self) -> TaskResult<T> {
+        let mut spins = 0u32;
+        loop {
+            // SeqCst: Dekker with `run_inline` registration (see there).
+            match self.state.compare_exchange(READY, BUSY, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => {
+                    // Wait for in-flight shared borrows to drain.
+                    let mut drain_spins = 0u32;
+                    while self.readers.load(Ordering::SeqCst) != 0 {
+                        spin_or_yield(&mut drain_spins);
+                    }
+                    // SAFETY: BUSY + drained readers = exclusive access.
+                    let v = unsafe { (*self.value.get()).take().expect("READY implies value") };
+                    // Release: publishes the move before the terminal tag.
+                    self.state.store(TAKEN, Ordering::Release);
+                    return v;
+                }
+                Err(TAKEN) => panic!("future value already consumed"),
+                Err(NOTIFY) | Err(BUSY) => {
+                    // Setter still firing continuations, or a racing
+                    // taker about to reach TAKEN: both transient, but
+                    // NOTIFY runs user code — yield once spun out.
+                    spin_or_yield(&mut spins);
+                }
+                Err(_) => unreachable!("take_value called before value production"),
+            }
+        }
+    }
+}
+
+impl<T> Drop for Shared<T> {
+    fn drop(&mut self) {
+        // Defensive: a leaked, never-set promise leaves unfired nodes.
+        let s = *self.state.get_mut();
+        if s >= PTR_MIN {
+            let mut cur = s as *mut Node<T>;
+            while !cur.is_null() {
+                unsafe {
+                    let next = (*cur).next;
+                    ((*cur).run)(cur, None);
+                    cur = next;
+                }
             }
         }
     }
@@ -167,53 +389,58 @@ impl<T> Clone for Future<T> {
 }
 
 impl<T: Send + 'static> Future<T> {
-    /// A future that is already resolved.
+    /// A future that is already resolved. One allocation, no promise
+    /// round-trip, no wakeup machinery.
     pub fn ready(value: TaskResult<T>) -> Self {
-        let (p, f) = Promise::new();
-        p.set_result(value);
-        f
+        Future { shared: Shared::new_ready(value) }
     }
 
     /// True once a value (or error) is available.
     pub fn is_ready(&self) -> bool {
-        !matches!(*self.shared.state.lock().unwrap(), State::Pending(_))
+        self.shared.produced()
     }
 
     /// Block until the value is available.
     ///
     /// On a worker thread this *helps*: it runs queued tasks while
     /// waiting, so nested `get` calls keep the pool making progress (the
-    /// HPX "suspend the hpx-thread" analogue).
+    /// HPX "suspend the hpx-thread" analogue). Off-worker threads park
+    /// and are unparked by a lazily-attached wakeup continuation — no
+    /// condvar lives in the future itself.
     pub fn wait(&self) {
         if self.is_ready() {
             return;
         }
-        if let Some((pool, idx)) = current_worker() {
-            self.wait_helping(&pool, idx);
-        } else {
-            let mut g = self.shared.state.lock().unwrap();
-            while matches!(*g, State::Pending(_)) {
-                g = self.shared.cv.wait(g).unwrap();
-            }
+        match current_worker() {
+            Some((pool, idx)) => self.wait_helping(&pool, idx),
+            None => self.wait_parked(),
+        }
+    }
+
+    fn wait_parked(&self) {
+        let me = std::thread::current();
+        self.shared.attach(move |_| me.unpark());
+        while !self.is_ready() {
+            // The continuation's unpark token guarantees wakeup even if
+            // it fired between our check and the park; spurious wakeups
+            // re-check.
+            std::thread::park();
         }
     }
 
     fn wait_helping(&self, pool: &Arc<Pool>, idx: usize) {
+        let me = std::thread::current();
+        self.shared.attach(move |_| me.unpark());
         loop {
             if self.is_ready() {
                 return;
             }
             if !pool.try_run_one(idx) {
-                // No runnable work; sleep briefly on the future's condvar.
-                let g = self.shared.state.lock().unwrap();
-                if !matches!(*g, State::Pending(_)) {
-                    return;
-                }
-                let _ = self
-                    .shared
-                    .cv
-                    .wait_timeout(g, std::time::Duration::from_micros(50))
-                    .unwrap();
+                // No runnable work: park briefly. The continuation
+                // unparks us the instant the value lands; the timeout
+                // only bounds waiting for work that arrives on *other*
+                // workers' queues, which has no wakeup edge to us.
+                std::thread::park_timeout(Duration::from_micros(50));
             }
         }
     }
@@ -224,12 +451,7 @@ impl<T: Send + 'static> Future<T> {
     /// `into_result`/`get` through a clone of this future.
     pub fn into_result(self) -> TaskResult<T> {
         self.wait();
-        let mut g = self.shared.state.lock().unwrap();
-        match std::mem::replace(&mut *g, State::Taken) {
-            State::Ready(v) => v,
-            State::Taken => panic!("future value already consumed"),
-            State::Pending(_) => unreachable!("wait() returned while pending"),
-        }
+        self.shared.take_value()
     }
 
     /// Alias for [`Future::into_result`], matching `future::get()`.
@@ -239,14 +461,18 @@ impl<T: Send + 'static> Future<T> {
 
     /// Non-blocking: consume the value if it is ready.
     pub fn try_take(&self) -> Option<TaskResult<T>> {
-        let mut g = self.shared.state.lock().unwrap();
-        match &*g {
-            State::Pending(_) => None,
-            State::Taken => panic!("future value already consumed"),
-            State::Ready(_) => match std::mem::replace(&mut *g, State::Taken) {
-                State::Ready(v) => Some(v),
-                _ => unreachable!(),
-            },
+        let mut spins = 0u32;
+        loop {
+            match self.shared.state.load(Ordering::Acquire) {
+                EMPTY | NOTIFY => return None, // NOTIFY: not yet published for takers
+                TAKEN => panic!("future value already consumed"),
+                READY => return Some(self.shared.take_value()),
+                BUSY => spin_or_yield(&mut spins), // racing taker: about to be TAKEN
+                p => {
+                    debug_assert!(p >= PTR_MIN);
+                    return None;
+                }
+            }
         }
     }
 
@@ -264,21 +490,14 @@ impl<T: Send + 'static> Future<T> {
     }
 
     /// Lower-level hook: run `f` with the result as soon as it is set.
-    /// If the value is already available, `f` runs inline.
+    /// If the value is already available, `f` runs inline — *without*
+    /// holding any lock, so `f` may itself attach further continuations
+    /// to this future (or inspect it) freely.
     pub fn on_ready<F>(&self, f: F)
     where
         F: FnOnce(&TaskResult<T>) + Send + 'static,
     {
-        let mut g = self.shared.state.lock().unwrap();
-        match &mut *g {
-            State::Pending(conts) => conts.push(Box::new(f)),
-            State::Ready(v) => {
-                // Fire inline while holding the lock: cheap (no job is
-                // scheduled) and consistent with the set() path.
-                f(v);
-            }
-            State::Taken => panic!("future value already consumed"),
-        }
+        self.shared.attach(f);
     }
 }
 
@@ -287,18 +506,16 @@ impl<T: Clone + Send + 'static> Future<T> {
     /// other holders of this (cloned) future can also read it.
     pub fn get_copy(&self) -> TaskResult<T> {
         self.wait();
-        let g = self.shared.state.lock().unwrap();
-        match &*g {
-            State::Ready(v) => v.clone(),
-            State::Taken => panic!("future value already consumed"),
-            State::Pending(_) => unreachable!(),
-        }
+        let mut out = None;
+        self.shared.run_inline(|v| out = Some(v.clone()));
+        out.expect("run_inline always invokes the closure")
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn promise_future_roundtrip() {
@@ -363,5 +580,69 @@ mod tests {
         let shared = Shared::new();
         shared.set(Ok(1));
         shared.set(Ok(2));
+    }
+
+    /// Regression (the old mutex implementation deadlocked here): a
+    /// continuation attached to an already-ready future runs inline; if
+    /// it attaches *another* continuation to the same future, that must
+    /// run too instead of deadlocking on a held state lock.
+    #[test]
+    fn on_ready_inline_can_attach_more_continuations() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let f = Future::ready(Ok(1i32));
+        let f2 = f.clone();
+        let h = Arc::clone(&hits);
+        f.on_ready(move |_| {
+            let h2 = Arc::clone(&h);
+            f2.on_ready(move |r| {
+                assert_eq!(*r, Ok(1));
+                h2.fetch_add(1, Ordering::SeqCst);
+            });
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    /// A continuation firing from `set` (the NOTIFY phase) can also
+    /// attach further continuations to the same future.
+    #[test]
+    fn continuation_during_set_can_attach_more_continuations() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let (p, f) = Promise::new();
+        let f2 = f.clone();
+        let h = Arc::clone(&hits);
+        f.on_ready(move |_| {
+            let h2 = Arc::clone(&h);
+            f2.on_ready(move |r| {
+                assert_eq!(*r, Ok(3));
+                h2.fetch_add(1, Ordering::SeqCst);
+            });
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        p.set_value(3i32);
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        assert_eq!(f.get(), Ok(3));
+    }
+
+    #[test]
+    fn continuations_fire_in_attach_order() {
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let (p, f) = Promise::new();
+        for i in 0..4 {
+            let order = Arc::clone(&order);
+            f.on_ready(move |_| order.lock().unwrap().push(i));
+        }
+        p.set_value(0i32);
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn try_take_consumes_once() {
+        let f = Future::ready(Ok(9i32));
+        assert_eq!(f.try_take(), Some(Ok(9)));
+        let (p, g) = Promise::<i32>::new();
+        assert_eq!(g.try_take(), None);
+        p.set_value(1);
+        assert_eq!(g.try_take(), Some(Ok(1)));
     }
 }

@@ -3,10 +3,22 @@
 //! A dataflow task "waits for all provided futures to become ready, and
 //! then executes the specified function" (paper §V-B). `when_all` is the
 //! waiting half: it completes when every input future holds a value,
-//! without blocking any thread (a shared atomic countdown fired from each
-//! input's continuation).
+//! without blocking any thread.
+//!
+//! The join is lock-free: one shared allocation holds an atomic
+//! countdown plus one value slot per dependency. Each slot is written by
+//! exactly one dependency's continuation (per-slot once-only writes need
+//! no synchronization of their own), and the continuation that brings
+//! the countdown to zero — having *acquired* every other slot write via
+//! the `AcqRel` decrement — collects the slots and resolves the output
+//! promise. An N-dependency join therefore costs N atomic decrements,
+//! zero mutex acquisitions, on the dependency-completion path. Inputs
+//! that are all already resolved short-circuit into a ready future with
+//! no join state at all.
 
-use std::sync::{Arc, Mutex};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::error::{TaskError, TaskResult};
 
@@ -36,52 +48,66 @@ pub fn collapse_results<T: Clone>(results: &[TaskResult<T>]) -> Result<Vec<T>, T
         .collect())
 }
 
+/// Lock-free join state: slot `i` is owned by dependency `i`'s
+/// continuation until the final decrement hands all slots to the
+/// finishing thread.
+struct Join<T> {
+    slots: Box<[UnsafeCell<Option<TaskResult<T>>>]>,
+    remaining: AtomicUsize,
+    promise: UnsafeCell<Option<Promise<Vec<TaskResult<T>>>>>,
+}
+
+// SAFETY: each `slots[i]` has exactly one writer (dependency i's sole
+// continuation); the promise cell is touched only by the thread whose
+// decrement observed `remaining == 1`, after acquiring every slot write.
+unsafe impl<T: Send> Send for Join<T> {}
+unsafe impl<T: Send> Sync for Join<T> {}
+
 /// Resolve with every input's `TaskResult` (never fails itself): the
 /// error-tolerant variant used by the resiliency layer, which must see
 /// *which* dependencies failed rather than a collapsed error.
 ///
-/// Hot path of every dataflow task: a *single* shared allocation (one
-/// `Arc<Mutex<…>>` holding slots + countdown + promise) and one lock per
-/// dependency completion.
+/// Hot path of every dataflow task: a *single* shared allocation and one
+/// atomic decrement per dependency completion — no locks anywhere.
 pub fn when_all_results<T: Clone + Send + 'static>(
     futs: Vec<Future<T>>,
 ) -> Future<Vec<TaskResult<T>>> {
     if futs.is_empty() {
         return Future::ready(Ok(Vec::new()));
     }
+    // Fast path: every input already resolved (common behind the stencil
+    // window barrier) — clone the values straight out, no join state, no
+    // countdown, no continuation nodes.
+    if futs.iter().all(|f| f.is_ready()) {
+        let results: Vec<TaskResult<T>> = futs.iter().map(|f| f.get_copy()).collect();
+        return Future::ready(Ok(results));
+    }
     let n = futs.len();
     let (promise, out) = Promise::new();
-
-    struct JoinState<T> {
-        slots: Vec<Option<TaskResult<T>>>,
-        remaining: usize,
-        promise: Option<Promise<Vec<TaskResult<T>>>>,
-    }
-    let state = Arc::new(Mutex::new(JoinState {
-        slots: (0..n).map(|_| None).collect(),
-        remaining: n,
-        promise: Some(promise),
-    }));
+    let join: Arc<Join<T>> = Arc::new(Join {
+        slots: (0..n).map(|_| UnsafeCell::new(None)).collect(),
+        remaining: AtomicUsize::new(n),
+        promise: UnsafeCell::new(Some(promise)),
+    });
 
     for (i, f) in futs.iter().enumerate() {
-        let state = Arc::clone(&state);
+        let join = Arc::clone(&join);
         f.on_ready(move |r| {
-            let finish = {
-                let mut g = state.lock().unwrap();
-                g.slots[i] = Some(r.clone());
-                g.remaining -= 1;
-                if g.remaining == 0 {
-                    let results: Vec<TaskResult<T>> = g
-                        .slots
-                        .drain(..)
-                        .map(|s| s.expect("all slots filled"))
-                        .collect();
-                    g.promise.take().map(|p| (p, results))
-                } else {
-                    None
-                }
-            };
-            if let Some((p, results)) = finish {
+            // SAFETY: sole writer of slot i (once-only by construction).
+            unsafe { *join.slots[i].get() = Some(r.clone()) };
+            // AcqRel: releases our slot write to the finishing thread and
+            // (on the final decrement) acquires every other slot write.
+            if join.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                // SAFETY: all dependencies have written their slots and
+                // the countdown hands us exclusive access to all of them.
+                let results: Vec<TaskResult<T>> = join
+                    .slots
+                    .iter()
+                    .map(|s| unsafe { (*s.get()).take().expect("all slots filled") })
+                    .collect();
+                let p = unsafe {
+                    (*join.promise.get()).take().expect("final decrement happens once")
+                };
                 p.set_value(results);
             }
         });
@@ -137,5 +163,27 @@ mod tests {
         let r = when_all_results(futs).get().unwrap();
         assert_eq!(r[0], Ok(1));
         assert!(r[1].is_err());
+    }
+
+    #[test]
+    fn when_all_results_mixed_ready_and_pending() {
+        // Exercises the slow path with some slots filled inline at
+        // attach time and some by a later set.
+        let (p, pending) = Promise::new();
+        let futs = vec![Future::ready(Ok(1)), pending, Future::ready(Ok(3))];
+        let all = when_all_results(futs);
+        assert!(!all.is_ready());
+        p.set_value(2);
+        assert_eq!(all.get().unwrap(), vec![Ok(1), Ok(2), Ok(3)]);
+    }
+
+    #[test]
+    fn when_all_duplicate_input_future() {
+        // The same shared state appearing under several indices must fill
+        // every one of its slots.
+        let (p, f) = Promise::new();
+        let all = when_all(vec![f.clone(), f.clone(), f]);
+        p.set_value(7);
+        assert_eq!(all.get(), Ok(vec![7, 7, 7]));
     }
 }

@@ -46,7 +46,13 @@ pub fn run_fig2(opts: &HarnessOpts, probs_pct: &[f64]) -> Table {
         &format!(
             "Fig 2: extra time per task (µs) vs error probability, grain 200µs, {tasks} tasks"
         ),
-        &["error_prob_pct", "replay3_extra_us", "replicate3_extra_us", "injected_replay", "injected_replicate"],
+        &[
+            "error_prob_pct",
+            "replay3_extra_us",
+            "replicate3_extra_us",
+            "injected_replay",
+            "injected_replicate",
+        ],
     );
 
     for &p_pct in probs_pct {

@@ -19,7 +19,12 @@ pub fn default_probabilities() -> Vec<f64> {
 
 /// Run Fig 3 for both cases; overhead is % extra wall time over the
 /// pure-dataflow zero-error baseline of the same case.
-pub fn run_fig3(opts: &HarnessOpts, backend: &KernelBackend, probs_pct: &[f64], replays: usize) -> Table {
+pub fn run_fig3(
+    opts: &HarnessOpts,
+    backend: &KernelBackend,
+    probs_pct: &[f64],
+    replays: usize,
+) -> Table {
     let rt = Runtime::builder().workers(opts.workers).build();
     let mut table = Table::new(
         "Fig 3: stencil % extra execution time vs error probability",
@@ -34,8 +39,8 @@ pub fn run_fig3(opts: &HarnessOpts, backend: &KernelBackend, probs_pct: &[f64], 
         // Zero-error pure baseline for this case.
         let mut b = Stats::new();
         for _ in 0..opts.repeats {
-            let (_, rep) = run(&rt, &StencilParams { backend: case_backend.clone(), ..base.clone() })
-                .expect("baseline run failed");
+            let params = StencilParams { backend: case_backend.clone(), ..base.clone() };
+            let (_, rep) = run(&rt, &params).expect("baseline run failed");
             b.push(rep.wall_secs);
         }
         let base_secs = b.mean();

@@ -15,7 +15,14 @@ pub struct Stats {
 
 impl Stats {
     pub fn new() -> Self {
-        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY, samples: Vec::new() }
+        Stats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            samples: Vec::new(),
+        }
     }
 
     pub fn push(&mut self, x: f64) {

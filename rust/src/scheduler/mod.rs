@@ -4,12 +4,23 @@
 //! enables finer-grained parallelization and synchronization". This module
 //! provides the thread pool the whole crate schedules onto:
 //!
-//! * one [`WorkQueue`] per worker (LIFO pop / FIFO steal) plus a global
-//!   injector queue for submissions from non-worker threads,
-//! * condvar-based parking with a lost-wakeup-safe idle protocol,
+//! * one lock-free Chase–Lev [`WorkQueue`] per worker (LIFO pop / FIFO
+//!   steal) plus a lock-free [`Injector`] for submissions from non-worker
+//!   threads (batch-consumed into a worker's local deque),
+//! * a wake-counter idle protocol: submitters never take a lock — they
+//!   bump an epoch and poke the condvar only when a worker is actually
+//!   parked; workers re-check the epoch around parking,
+//! * event-driven idle detection: [`Pool::wait_idle`] registers interest
+//!   and sleeps on a condvar that job completion notifies only when a
+//!   waiter is present and the counts balance — no polling timeout,
 //! * cooperative helping: a worker blocked on a future runs queued tasks
 //!   while it waits (see [`crate::future`]), so `Future::get` inside a
 //!   task cannot deadlock the pool.
+//!
+//! Every atomic ordering below the default `SeqCst` carries a one-line
+//! justification; the remaining `SeqCst` operations implement two Dekker
+//! (store-load) patterns — submission vs. worker parking, and completion
+//! vs. idle-waiter registration — that genuinely need the total order.
 //!
 //! Paper mapping: the substrate under every measurement — Table I/Fig 2
 //! overheads are amortized against plain `async_` launches on this pool.
@@ -17,7 +28,7 @@
 mod queue;
 mod worker;
 
-pub use queue::WorkQueue;
+pub use queue::{Injector, InjectorBatch, WorkQueue};
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -38,32 +49,41 @@ thread_local! {
 /// Shared state of the scheduler.
 pub struct Pool {
     queues: Vec<Arc<WorkQueue>>,
-    injector: WorkQueue,
+    injector: Injector,
     sleep_lock: Mutex<()>,
     sleep_cv: Condvar,
-    idle: AtomicUsize,
+    /// Workers currently parked (or committing to park) on `sleep_cv`.
+    sleepers: AtomicUsize,
+    /// Bumped once per submission: a parking worker that observes a bump
+    /// since it scanned the queues aborts the park (see `worker_loop`).
+    wake_epoch: AtomicU64,
     shutdown: AtomicBool,
     spawned: AtomicU64,
     completed: AtomicU64,
     stolen: AtomicU64,
     idle_lock: Mutex<()>,
     idle_cv: Condvar,
+    /// `wait_idle` callers currently registered; completions only touch
+    /// `idle_lock` when this is non-zero.
+    idle_interest: AtomicUsize,
 }
 
 impl Pool {
     fn new(workers: usize) -> Arc<Self> {
         Arc::new(Pool {
             queues: (0..workers).map(|_| Arc::new(WorkQueue::new())).collect(),
-            injector: WorkQueue::new(),
+            injector: Injector::new(),
             sleep_lock: Mutex::new(()),
             sleep_cv: Condvar::new(),
-            idle: AtomicUsize::new(0),
+            sleepers: AtomicUsize::new(0),
+            wake_epoch: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             spawned: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             stolen: AtomicU64::new(0),
             idle_lock: Mutex::new(()),
             idle_cv: Condvar::new(),
+            idle_interest: AtomicUsize::new(0),
         })
     }
 
@@ -87,26 +107,52 @@ impl Pool {
         self.queues.iter().any(|q| !q.is_empty())
     }
 
-    /// Wake one parked worker if any are parked.
+    /// Post-submission wake: lock-free. The epoch bump lets a worker that
+    /// is *about to* park detect the submission and abort; the condvar
+    /// poke (no lock held — allowed, and racing a parking worker is
+    /// covered by the epoch re-check plus the bounded timed wait in
+    /// `worker_loop`) wakes a worker that is already parked.
     fn notify_one(&self) {
-        if self.idle.load(Ordering::SeqCst) > 0 {
-            let _g = self.sleep_lock.lock().unwrap();
+        // SeqCst: Dekker with the parking worker — it increments
+        // `sleepers` and *then* scans the queues; we publish the job and
+        // *then* read `sleepers`. The total order guarantees at least one
+        // side observes the other.
+        self.wake_epoch.fetch_add(1, Ordering::SeqCst);
+        if self.sleepers.load(Ordering::SeqCst) != 0 {
             self.sleep_cv.notify_one();
         }
     }
 
-    fn notify_all(&self) {
+    fn notify_all_for_shutdown(&self) {
+        // Cold path: take the lock so the wake cannot slip between a
+        // worker's shutdown re-check and its wait.
+        self.wake_epoch.fetch_add(1, Ordering::SeqCst);
         let _g = self.sleep_lock.lock().unwrap();
         self.sleep_cv.notify_all();
     }
 
-    /// Find a job for worker `idx`: local LIFO, then injector, then steal.
+    /// Find a job for worker `idx`: local LIFO, then the injector batch,
+    /// then steal. Must only be called on worker `idx`'s own thread (the
+    /// owner-side deque contract); `worker_loop` and the guarded
+    /// [`Pool::try_run_one`] are the only callers.
     fn find_job(&self, idx: usize, rng_state: &mut u64) -> Option<Job> {
-        if let Some(j) = self.queues[idx].pop() {
+        // SAFETY (all owner-side calls below): this is worker idx's
+        // thread, the sole owner of queues[idx].
+        if let Some(j) = unsafe { self.queues[idx].pop() } {
             return Some(j);
         }
-        if let Some(j) = self.injector.steal() {
-            return Some(j);
+        // Move every pending external submission into the local deque in
+        // one swap; LIFO pop then consumes them in submission order (and
+        // other workers can steal the overflow).
+        let mut moved = false;
+        for job in self.injector.take_all() {
+            unsafe { self.queues[idx].push(job) };
+            moved = true;
+        }
+        if moved {
+            if let Some(j) = unsafe { self.queues[idx].pop() } {
+                return Some(j);
+            }
         }
         let n = self.queues.len();
         if n > 1 {
@@ -120,6 +166,7 @@ impl Pool {
                     continue;
                 }
                 if let Some(j) = self.queues[v].steal() {
+                    // Relaxed: statistics only.
                     self.stolen.fetch_add(1, Ordering::Relaxed);
                     return Some(j);
                 }
@@ -130,7 +177,18 @@ impl Pool {
 
     /// Run a single queued job if one is available. Used both by the
     /// worker loop and by cooperative helping in `Future::get`.
+    ///
+    /// Sound for any caller: the owner-side deque access inside is only
+    /// performed when the calling thread actually *is* worker `idx` of
+    /// this pool (checked against the thread-local registration);
+    /// otherwise this returns `false` without touching the queues.
     pub fn try_run_one(self: &Arc<Self>, idx: usize) -> bool {
+        let on_owner_thread = CURRENT.with(|c| {
+            matches!(c.borrow().as_ref(), Some((p, i)) if Arc::ptr_eq(p, self) && *i == idx)
+        });
+        if !on_owner_thread {
+            return false;
+        }
         let mut rng = 0x9e3779b97f4a7c15u64 ^ (idx as u64);
         if let Some(job) = self.find_job(idx, &mut rng) {
             self.run_job(job);
@@ -142,33 +200,62 @@ impl Pool {
 
     fn run_job(self: &Arc<Self>, job: Job) {
         job();
+        // SeqCst RMW: (a) Dekker with `wait_idle`'s interest registration
+        // (we bump `completed` then read `idle_interest`; the waiter
+        // registers interest then reads `completed`), and (b) each
+        // completion synchronizes with every earlier completion's release
+        // sequence, so whoever observes `completed == spawned` also
+        // observes every spawn increment (spawns happen-before the
+        // completion of the job they belong to).
         let done = self.completed.fetch_add(1, Ordering::SeqCst) + 1;
-        if done == self.spawned.load(Ordering::SeqCst) {
+        if self.idle_interest.load(Ordering::SeqCst) != 0
+            // Relaxed: can only under-read `spawned` relative to *other*
+            // threads' in-flight spawns, making the equality a false
+            // negative (no notify) — and those spawns' own completions
+            // will re-run this check.
+            && done == self.spawned.load(Ordering::Relaxed)
+        {
             let _g = self.idle_lock.lock().unwrap();
             self.idle_cv.notify_all();
         }
     }
 
-    /// Block until every spawned job has completed.
+    /// True when every job spawned so far has completed. Reading
+    /// `completed` first is deliberate: a stale `spawned` read can only
+    /// overshoot via concurrent spawners (an inherent caller race), never
+    /// report idle while tracked work is in flight — sub-spawns inside a
+    /// running job happen-before that job's completion increment.
+    fn all_done(&self) -> bool {
+        // SeqCst: synchronizes with the completion RMWs so the subsequent
+        // `spawned` read (Relaxed suffices, see above) is current.
+        let done = self.completed.load(Ordering::SeqCst);
+        done == self.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Block until every spawned job has completed. Event-driven: no
+    /// polling — job completion notifies `idle_cv` when (and only when) a
+    /// waiter is registered and the counts balance.
     pub fn wait_idle(&self) {
-        let mut g = self.idle_lock.lock().unwrap();
-        loop {
-            if self.completed.load(Ordering::SeqCst) == self.spawned.load(Ordering::SeqCst) {
-                return;
-            }
-            let (ng, _t) = self
-                .idle_cv
-                .wait_timeout(g, std::time::Duration::from_millis(1))
-                .unwrap();
-            g = ng;
+        if self.all_done() {
+            return;
         }
+        let mut g = self.idle_lock.lock().unwrap();
+        // SeqCst: Dekker with `run_job` (see there). Registered *under*
+        // the lock, so a completion that observes our interest serializes
+        // its notify against our wait.
+        self.idle_interest.fetch_add(1, Ordering::SeqCst);
+        while !self.all_done() {
+            g = self.idle_cv.wait(g).unwrap();
+        }
+        self.idle_interest.fetch_sub(1, Ordering::SeqCst);
     }
 
     /// Scheduler statistics snapshot.
     pub fn stats(&self) -> SchedulerStats {
         SchedulerStats {
-            spawned: self.spawned.load(Ordering::SeqCst),
-            completed: self.completed.load(Ordering::SeqCst),
+            // Acquire-free snapshot: counters are monotonic and advisory.
+            spawned: self.spawned.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
             stolen: self.stolen.load(Ordering::Relaxed),
             workers: self.queues.len(),
         }
@@ -224,31 +311,43 @@ impl Scheduler {
 
 impl Drop for Scheduler {
     fn drop(&mut self) {
+        // Release not required: `notify_all_for_shutdown`'s SeqCst epoch
+        // bump orders the flag for parked workers; running workers load
+        // it with Acquire.
         self.pool.shutdown.store(true, Ordering::SeqCst);
-        self.pool.notify_all();
+        self.pool.notify_all_for_shutdown();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
         // Drop any jobs that never ran (only possible if the user dropped
         // the scheduler without `wait_idle`); their futures resolve to a
         // broken-promise error via `Promise::drop`.
+        // SAFETY: every worker has been joined above — this thread is the
+        // sole owner of every queue now.
         for q in &self.pool.queues {
-            drop(q.drain());
+            drop(unsafe { q.drain() });
         }
-        drop(self.pool.injector.drain());
+        drop(self.pool.injector.take_all());
     }
 }
 
 /// Submit `job` to `pool`, preferring the current worker's local queue.
 pub fn spawn_on(pool: &Arc<Pool>, job: Job) {
-    pool.spawned.fetch_add(1, Ordering::SeqCst);
+    // Relaxed: the spawn count is published to whoever needs it by
+    // stronger edges — the queue push (release) hands it to the worker
+    // that runs the job, and that worker's completion RMW (SeqCst)
+    // hands it to idle waiters. No one reads `spawned` expecting this
+    // increment without first crossing one of those edges.
+    pool.spawned.fetch_add(1, Ordering::Relaxed);
     let local = CURRENT.with(|c| {
         c.borrow()
             .as_ref()
             .and_then(|(p, idx)| Arc::ptr_eq(p, pool).then_some(*idx))
     });
     match local {
-        Some(idx) => pool.queues[idx].push(job),
+        // SAFETY: `local` is only Some when the current thread is worker
+        // idx of *this* pool — the queue's one owner.
+        Some(idx) => unsafe { pool.queues[idx].push(job) },
         None => pool.injector.push(job),
     }
     pool.notify_one();

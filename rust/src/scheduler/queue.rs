@@ -1,56 +1,267 @@
-//! Per-worker task queues.
+//! Per-worker task queues — lock-free hot paths.
 //!
-//! HPX uses lock-free Chase–Lev deques; on this single-vCPU testbed a
-//! mutex-guarded deque with LIFO local pop and FIFO steal has the same
-//! scheduling semantics (depth-first local execution, breadth-first
-//! stealing) with negligible contention cost relative to the paper's
-//! 200 µs task grains. The queue API mirrors the classic work-stealing
-//! deque so a lock-free implementation can be dropped in behind it.
+//! [`WorkQueue`] is a real Chase–Lev work-stealing deque (atomic
+//! `top`/`bottom` indices over a growable circular buffer): the owning
+//! worker pushes and pops at the bottom with no atomic RMW on the common
+//! path, thieves steal at the top with a single CAS. The memory orderings
+//! follow Lê, Pop, Cohen & Nardelli, *Correct and Efficient Work-Stealing
+//! for Weak Memory Models* (PPoPP'13) — each non-`SeqCst` ordering below
+//! carries a one-line justification, and the two `SeqCst` fences are
+//! exactly the store-load barriers of that paper.
+//!
+//! [`Injector`] is the multi-producer submission queue for jobs spawned
+//! from *non-worker* threads: a Treiber stack (one CAS per push, no
+//! lock), consumed in whole batches by a single `swap` — the consumer
+//! moves the batch into its local deque, whose LIFO pop then yields the
+//! batch in submission (FIFO) order. Taking the whole chain at once
+//! sidesteps the ABA and reclamation hazards of lock-free multi-consumer
+//! pops entirely: the taker owns every node it walks.
+//!
+//! Retired deque buffers (outgrown by `grow`) are kept alive until the
+//! deque drops, so a thief holding a stale buffer pointer always reads
+//! valid memory; a stale read is discarded when its `top` CAS fails.
 
-use std::collections::VecDeque;
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::ptr;
+use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, Ordering};
 use std::sync::Mutex;
 
 use super::Job;
 
-/// A work-stealing deque: the owning worker pushes/pops at the back
-/// (LIFO, cache-friendly); thieves steal from the front (FIFO, oldest
-/// and typically largest subtree of work).
-pub struct WorkQueue {
-    inner: Mutex<VecDeque<Job>>,
+/// Initial deque capacity (doubles on overflow; must be a power of two).
+const INITIAL_CAP: usize = 64;
+
+/// Growable circular buffer of jobs. Slots are `MaybeUninit`: liveness is
+/// tracked entirely by the `top`/`bottom` indices of the owning deque, so
+/// retiring a buffer after `grow` never double-drops a job.
+struct Buffer {
+    cap: usize,
+    slots: Box<[UnsafeCell<MaybeUninit<Job>>]>,
 }
+
+impl Buffer {
+    fn alloc(cap: usize) -> *mut Buffer {
+        debug_assert!(cap.is_power_of_two());
+        let slots = (0..cap)
+            .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+            .collect();
+        Box::into_raw(Box::new(Buffer { cap, slots }))
+    }
+
+    /// # Safety
+    /// The caller must hold the owner-side right to write slot `idx`
+    /// (Chase–Lev invariant: only the owner writes, only between
+    /// `top`..`bottom` wraparounds that the indices rule out).
+    #[inline]
+    unsafe fn write(&self, idx: isize, job: Job) {
+        self.write_raw(idx, MaybeUninit::new(job));
+    }
+
+    #[inline]
+    unsafe fn write_raw(&self, idx: isize, val: MaybeUninit<Job>) {
+        let slot = &self.slots[idx as usize & (self.cap - 1)];
+        ptr::write(slot.get(), val);
+    }
+
+    /// Copy a slot's raw bits. Deliberately returns `MaybeUninit`: a
+    /// thief may read a slot that is stale (already consumed, or never
+    /// copied into a grown buffer), so materializing a `Job` (a `Box`,
+    /// with validity invariants) here would be UB. Callers
+    /// `assume_init` only *after* winning the index via the `top` CAS /
+    /// `bottom` arbitration; losers just discard the bits (no-op drop).
+    ///
+    /// # Safety
+    /// `idx` must be in-bounds of the ring (any value is — it is
+    /// masked); the bits are only meaningful once the index is won.
+    #[inline]
+    unsafe fn read(&self, idx: isize) -> MaybeUninit<Job> {
+        let slot = &self.slots[idx as usize & (self.cap - 1)];
+        ptr::read(slot.get())
+    }
+}
+
+/// A Chase–Lev work-stealing deque: the owning worker pushes/pops at the
+/// bottom (LIFO, cache-friendly, no CAS off the contended path); thieves
+/// steal from the top (FIFO, oldest and typically largest subtree of
+/// work) with one CAS.
+///
+/// The owner-side calls (`push`, `pop`, `drain`) are `unsafe`: the
+/// algorithm requires that at most one thread at a time acts as the
+/// owner (the scheduler guarantees it — each queue's owner methods are
+/// only invoked from its worker's thread, or from the single-threaded
+/// shutdown path). `steal`/`len`/`is_empty` are safe from any thread.
+pub struct WorkQueue {
+    /// Next index a thief will steal (grows monotonically).
+    top: AtomicIsize,
+    /// Next index the owner will push (owner-written).
+    bottom: AtomicIsize,
+    buf: AtomicPtr<Buffer>,
+    /// Buffers outgrown by `grow`, kept alive so concurrent thieves with
+    /// stale buffer pointers never touch freed memory. Cold path: locked
+    /// only while growing and at drop.
+    retired: Mutex<Vec<*mut Buffer>>,
+}
+
+// SAFETY: the Chase–Lev protocol (indices + CAS arbitration) guarantees
+// each job is handed to exactly one thread; `Job` is `Send`.
+unsafe impl Send for WorkQueue {}
+unsafe impl Sync for WorkQueue {}
 
 impl WorkQueue {
     pub fn new() -> Self {
-        WorkQueue { inner: Mutex::new(VecDeque::new()) }
+        WorkQueue {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: AtomicPtr::new(Buffer::alloc(INITIAL_CAP)),
+            retired: Mutex::new(Vec::new()),
+        }
     }
 
-    /// Owner-side push (back).
-    pub fn push(&self, job: Job) {
-        self.inner.lock().unwrap().push_back(job);
+    /// Owner-side push (bottom). No RMW: one release store publishes the
+    /// job to thieves.
+    ///
+    /// # Safety
+    /// Must not run concurrently with any other owner-side call
+    /// (`push`/`pop`/`drain`) on this queue; concurrent `steal` is fine.
+    pub unsafe fn push(&self, job: Job) {
+        // Relaxed: `bottom` is only written by this (owner) thread.
+        let b = self.bottom.load(Ordering::Relaxed);
+        // Acquire: pairs with thieves' top CAS so the owner observes how
+        // far stealing has advanced before deciding whether to grow.
+        let t = self.top.load(Ordering::Acquire);
+        let mut buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        if b - t >= buf.cap as isize {
+            self.grow(t, b);
+            buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        }
+        unsafe { buf.write(b, job) };
+        // Release: publishes the slot write (and everything the spawner
+        // did before it) to any thief that acquires `bottom`.
+        self.bottom.store(b + 1, Ordering::Release);
     }
 
-    /// Owner-side pop (back, LIFO).
-    pub fn pop(&self) -> Option<Job> {
-        self.inner.lock().unwrap().pop_back()
+    /// Owner-side pop (bottom, LIFO).
+    ///
+    /// # Safety
+    /// Must not run concurrently with any other owner-side call
+    /// (`push`/`pop`/`drain`) on this queue; concurrent `steal` is fine.
+    pub unsafe fn pop(&self) -> Option<Job> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        let buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        // Relaxed store + SeqCst fence: the fence is the store-load
+        // barrier between our `bottom` write and the `top` read (Lê et
+        // al. Fig. 1); the store itself needs no release because thieves
+        // re-check `bottom` after their own fence.
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            // Non-empty. Raw-copy before the potential CAS; the bits
+            // only become a `Job` once we have won index `b`.
+            let job = unsafe { buf.read(b) };
+            if t == b {
+                // Single element left: race thieves via CAS on top.
+                // SeqCst success: total order with the thief's CAS
+                // decides who owns the final job.
+                if self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_err()
+                {
+                    // Lost: the thief owns the job; our copy is just
+                    // uninteresting bits (MaybeUninit drop is a no-op).
+                    self.bottom.store(b + 1, Ordering::Relaxed);
+                    return None;
+                }
+                self.bottom.store(b + 1, Ordering::Relaxed);
+            }
+            // Won (by bottom decrement, or by the CAS above).
+            Some(unsafe { job.assume_init() })
+        } else {
+            // Empty: restore bottom.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
     }
 
-    /// Thief-side steal (front, FIFO).
+    /// Thief-side steal (top, FIFO). Any thread.
     pub fn steal(&self) -> Option<Job> {
-        self.inner.lock().unwrap().pop_front()
+        loop {
+            // Acquire: see the owner's writes up to the top we read.
+            let t = self.top.load(Ordering::Acquire);
+            // SeqCst fence: store-load barrier ordering our top read
+            // before the bottom read (mirror of pop's fence).
+            fence(Ordering::SeqCst);
+            // Acquire: pairs with push's release store so the slot write
+            // is visible before we read it.
+            let b = self.bottom.load(Ordering::Acquire);
+            if t >= b {
+                return None;
+            }
+            // Acquire: pairs with grow's release store of the new buffer
+            // pointer, so we never read through a partially-copied buffer.
+            let buf = unsafe { &*self.buf.load(Ordering::Acquire) };
+            // Raw bits only — this slot may be stale if we are racing a
+            // grow or other thieves; the CAS below decides ownership.
+            let job = unsafe { buf.read(t) };
+            // SeqCst: arbitration with the owner's last-element CAS and
+            // competing thieves; only the winner keeps the bits read.
+            if self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(unsafe { job.assume_init() });
+            }
+            // Lost the race: the bits belong to whoever advanced top;
+            // dropping the MaybeUninit copy is a no-op.
+        }
+    }
+
+    /// Double the buffer (owner-side). The old buffer is retired, not
+    /// freed: thieves that loaded it before the swap still read valid
+    /// slots, and their `top` CAS discards any job the copy superseded.
+    fn grow(&self, t: isize, b: isize) {
+        let old_ptr = self.buf.load(Ordering::Relaxed);
+        let old = unsafe { &*old_ptr };
+        let new_ptr = Buffer::alloc(old.cap * 2);
+        let new = unsafe { &*new_ptr };
+        for i in t..b {
+            // Raw bit-copy (never materialized as `Job`s): some of
+            // t..b may already have been stolen — their bits are stale
+            // and must not be treated as live boxes; liveness stays
+            // with the indices.
+            unsafe { new.write_raw(i, old.read(i)) };
+        }
+        // Release: a thief acquiring this pointer sees every copied slot.
+        self.buf.store(new_ptr, Ordering::Release);
+        self.retired.lock().unwrap().push(old_ptr);
     }
 
     /// Number of queued jobs (approximate under concurrency).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        // Relaxed pair: the result is advisory (idle heuristics only).
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Drain every queued job (used at shutdown).
-    pub fn drain(&self) -> Vec<Job> {
-        self.inner.lock().unwrap().drain(..).collect()
+    /// Drain every queued job. Owner-side (used at shutdown, after the
+    /// worker threads have been joined).
+    ///
+    /// # Safety
+    /// As [`WorkQueue::pop`]: no concurrent owner-side calls.
+    pub unsafe fn drain(&self) -> Vec<Job> {
+        let mut out = Vec::new();
+        while let Some(j) = self.pop() {
+            out.push(j);
+        }
+        out
     }
 }
 
@@ -60,11 +271,135 @@ impl Default for WorkQueue {
     }
 }
 
+impl Drop for WorkQueue {
+    fn drop(&mut self) {
+        // Drop any jobs that never ran (their promises resolve to
+        // broken-promise errors as the closures drop).
+        // SAFETY: `&mut self` — no concurrent access of any kind.
+        while let Some(job) = unsafe { self.pop() } {
+            drop(job);
+        }
+        unsafe {
+            drop(Box::from_raw(self.buf.load(Ordering::Relaxed)));
+            for p in self.retired.lock().unwrap().drain(..) {
+                drop(Box::from_raw(p));
+            }
+        }
+    }
+}
+
+/// One queued external submission.
+struct InjectorNode {
+    job: Job,
+    next: *mut InjectorNode,
+}
+
+/// Lock-free multi-producer submission queue for spawns from non-worker
+/// threads: pushes are a single CAS on the head of a Treiber stack;
+/// consumption takes the *entire* chain with one `swap` (see
+/// [`Injector::take_all`]), which makes reclamation trivial (the taker
+/// owns every node) and rules out ABA by construction.
+pub struct Injector {
+    head: AtomicPtr<InjectorNode>,
+}
+
+// SAFETY: nodes are owned by exactly one side at any time (producers
+// until the CAS succeeds, the taking consumer afterwards); `Job` is Send.
+unsafe impl Send for Injector {}
+unsafe impl Sync for Injector {}
+
+impl Injector {
+    pub fn new() -> Self {
+        Injector { head: AtomicPtr::new(ptr::null_mut()) }
+    }
+
+    /// Submit a job. Lock-free; any thread.
+    pub fn push(&self, job: Job) {
+        let node = Box::into_raw(Box::new(InjectorNode { job, next: ptr::null_mut() }));
+        // Relaxed load + Release CAS: the CAS publishes the node (and the
+        // job it carries); failure retries with the fresher head.
+        let mut head = self.head.load(Ordering::Relaxed);
+        loop {
+            unsafe { (*node).next = head };
+            match self.head.compare_exchange_weak(
+                head,
+                node,
+                Ordering::Release,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(h) => head = h,
+            }
+        }
+    }
+
+    /// True when no submission is pending. Advisory (idle heuristics).
+    pub fn is_empty(&self) -> bool {
+        self.head.load(Ordering::Relaxed).is_null()
+    }
+
+    /// Take every queued submission in one swap. The returned batch
+    /// yields jobs newest-first (stack order); pushing them into a
+    /// [`WorkQueue`] in that order makes the owner's LIFO `pop` consume
+    /// them oldest-first, i.e. in submission order.
+    pub fn take_all(&self) -> InjectorBatch {
+        // Acquire: pairs with push's release CAS so every job in the
+        // chain is fully visible to the taker.
+        InjectorBatch { head: self.head.swap(ptr::null_mut(), Ordering::Acquire) }
+    }
+}
+
+impl Default for Injector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for Injector {
+    fn drop(&mut self) {
+        drop(self.take_all());
+    }
+}
+
+/// An owned chain of submissions taken from an [`Injector`]; iterating
+/// frees each node as its job is handed out.
+pub struct InjectorBatch {
+    head: *mut InjectorNode,
+}
+
+// SAFETY: the batch exclusively owns its chain.
+unsafe impl Send for InjectorBatch {}
+
+impl Iterator for InjectorBatch {
+    type Item = Job;
+
+    fn next(&mut self) -> Option<Job> {
+        if self.head.is_null() {
+            return None;
+        }
+        let node = unsafe { Box::from_raw(self.head) };
+        self.head = node.next;
+        Some(node.job)
+    }
+}
+
+impl Drop for InjectorBatch {
+    fn drop(&mut self) {
+        // Drop any jobs not handed out (shutdown path).
+        for job in self.by_ref() {
+            drop(job);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
+
+    // All owner-side calls below run single-threaded (or from the one
+    // designated owner thread), satisfying the unsafe contract.
 
     fn job(counter: &Arc<AtomicUsize>, v: usize) -> Job {
         let c = Arc::clone(counter);
@@ -77,21 +412,23 @@ mod tests {
     fn lifo_pop_fifo_steal() {
         let q = WorkQueue::new();
         let c = Arc::new(AtomicUsize::new(0));
-        q.push(job(&c, 1));
-        q.push(job(&c, 10));
-        q.push(job(&c, 100));
+        unsafe {
+            q.push(job(&c, 1));
+            q.push(job(&c, 10));
+            q.push(job(&c, 100));
+        }
         assert_eq!(q.len(), 3);
         // Owner pop gets the newest (100); thief steal gets the oldest (1).
-        let newest = q.pop().unwrap();
+        let newest = unsafe { q.pop() }.unwrap();
         let oldest = q.steal().unwrap();
         newest();
         assert_eq!(c.load(Ordering::SeqCst), 100);
         oldest();
         assert_eq!(c.load(Ordering::SeqCst), 101);
-        q.pop().unwrap()(); // remaining middle job
+        unsafe { q.pop() }.unwrap()(); // remaining middle job
         assert_eq!(c.load(Ordering::SeqCst), 111);
         assert!(q.is_empty());
-        assert!(q.pop().is_none());
+        assert!(unsafe { q.pop() }.is_none());
         assert!(q.steal().is_none());
     }
 
@@ -100,10 +437,91 @@ mod tests {
         let q = WorkQueue::new();
         let c = Arc::new(AtomicUsize::new(0));
         for _ in 0..5 {
-            q.push(job(&c, 1));
+            unsafe { q.push(job(&c, 1)) };
         }
-        let jobs = q.drain();
+        let jobs = unsafe { q.drain() };
         assert_eq!(jobs.len(), 5);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn growth_past_initial_capacity_preserves_every_job() {
+        let q = WorkQueue::new();
+        let c = Arc::new(AtomicUsize::new(0));
+        let n = INITIAL_CAP * 4 + 3; // force two grows
+        for _ in 0..n {
+            unsafe { q.push(job(&c, 1)) };
+        }
+        assert_eq!(q.len(), n);
+        let mut ran = 0;
+        while let Some(j) = unsafe { q.pop() } {
+            j();
+            ran += 1;
+        }
+        assert_eq!(ran, n);
+        assert_eq!(c.load(Ordering::SeqCst), n);
+    }
+
+    #[test]
+    fn interleaved_push_pop_steal_single_thread() {
+        let q = WorkQueue::new();
+        let c = Arc::new(AtomicUsize::new(0));
+        let mut queued = 0usize;
+        let mut handed = 0usize;
+        for round in 0..1000usize {
+            unsafe { q.push(job(&c, 1)) };
+            queued += 1;
+            if round % 3 == 0 && q.steal().is_some() {
+                handed += 1;
+            } else if round % 3 != 0 && round % 7 == 0 && unsafe { q.pop() }.is_some() {
+                handed += 1;
+            }
+        }
+        while unsafe { q.pop() }.is_some() {
+            handed += 1;
+        }
+        assert_eq!(handed, queued);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn injector_batches_in_submission_order_via_lifo_pop() {
+        let inj = Injector::new();
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+        for i in 0..5 {
+            let order = Arc::clone(&order);
+            inj.push(Box::new(move || order.lock().unwrap().push(i)));
+        }
+        assert!(!inj.is_empty());
+        // Consume the way the scheduler does: batch -> local deque -> pop.
+        let q = WorkQueue::new();
+        for j in inj.take_all() {
+            unsafe { q.push(j) };
+        }
+        assert!(inj.is_empty());
+        while let Some(j) = unsafe { q.pop() } {
+            j();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn injector_drop_releases_pending_jobs() {
+        let c = Arc::new(AtomicUsize::new(0));
+        struct Probe(Arc<AtomicUsize>);
+        impl Drop for Probe {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let inj = Injector::new();
+        for _ in 0..3 {
+            let p = Probe(Arc::clone(&c));
+            inj.push(Box::new(move || {
+                let _keep = &p;
+            }));
+        }
+        drop(inj);
+        assert_eq!(c.load(Ordering::SeqCst), 3, "unrun jobs must drop their closures");
     }
 }

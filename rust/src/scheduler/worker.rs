@@ -2,17 +2,22 @@
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::{clear_current, set_current, Pool};
 
 /// Body of each `rhpx-worker-N` thread.
 ///
 /// Loop: execute whatever [`Pool::find_job`] yields (local LIFO →
-/// injector → steal); when nothing is runnable, park on the pool condvar
-/// using the lost-wakeup-safe protocol (increment `idle` *under the sleep
-/// lock*, re-check the queues, then wait — submitters push first and only
-/// then read `idle`, so either they observe us idle and notify, or we
-/// observe their job on the re-check).
+/// injector batch → steal); when nothing is runnable, park on the pool
+/// condvar using the wake-counter protocol: increment `sleepers`, snap
+/// the wake epoch, re-scan the queues, and sleep only while the epoch is
+/// unchanged. Submitters bump the epoch *before* reading `sleepers`
+/// (both `SeqCst`), so either they observe us parked and notify, or we
+/// observe their bump (or their job) on the re-check. The submitter-side
+/// notify is issued without holding the sleep lock; the epoch re-check
+/// covers the unlocked race, and the timed wait merely bounds the cost
+/// of the theoretical residue — correctness does not depend on it.
 pub(super) fn worker_loop(pool: Arc<Pool>, idx: usize) {
     set_current(&pool, idx);
     // Per-worker steal-victim RNG state; seeded by index so the scan
@@ -20,33 +25,41 @@ pub(super) fn worker_loop(pool: Arc<Pool>, idx: usize) {
     let mut rng: u64 = 0x9e3779b97f4a7c15u64.wrapping_mul(idx as u64 + 1);
 
     loop {
-        if pool.shutdown.load(Ordering::SeqCst) {
+        // Acquire: pairs with the shutdown store + epoch bump.
+        if pool.shutdown.load(Ordering::Acquire) {
             break;
         }
         if let Some(job) = pool.find_job(idx, &mut rng) {
             pool.run_job(job);
             continue;
         }
-        // Nothing runnable: park.
-        let guard = pool.sleep_lock.lock().unwrap();
-        if pool.shutdown.load(Ordering::SeqCst) {
+        // Nothing runnable: commit to parking.
+        let mut guard = pool.sleep_lock.lock().unwrap();
+        if pool.shutdown.load(Ordering::Acquire) {
             break;
         }
-        pool.idle.fetch_add(1, Ordering::SeqCst);
+        // SeqCst: Dekker with `Pool::notify_one` (see scheduler docs).
+        pool.sleepers.fetch_add(1, Ordering::SeqCst);
+        let epoch = pool.wake_epoch.load(Ordering::SeqCst);
         if pool.has_work() {
-            // A job arrived between the failed scan and taking the lock.
-            pool.idle.fetch_sub(1, Ordering::SeqCst);
+            // A job arrived between the failed scan and committing.
+            pool.sleepers.fetch_sub(1, Ordering::SeqCst);
             drop(guard);
             continue;
         }
-        // Timed wait as a belt-and-braces guard: correctness does not
-        // depend on the timeout, it only bounds the cost of a missed
-        // wakeup under exotic schedulers.
-        let (guard, _timeout) = pool
-            .sleep_cv
-            .wait_timeout(guard, std::time::Duration::from_millis(10))
-            .unwrap();
-        pool.idle.fetch_sub(1, Ordering::SeqCst);
+        while pool.wake_epoch.load(Ordering::SeqCst) == epoch
+            && !pool.shutdown.load(Ordering::Relaxed)
+        {
+            let (g, timeout) = pool
+                .sleep_cv
+                .wait_timeout(guard, Duration::from_millis(10))
+                .unwrap();
+            guard = g;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        pool.sleepers.fetch_sub(1, Ordering::SeqCst);
         drop(guard);
     }
     clear_current();

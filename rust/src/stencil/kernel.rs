@@ -32,8 +32,16 @@ pub fn lax_wendroff_step(u: &[f64], c: f64, out: &mut [f64]) {
 /// Advance `steps` time levels over an extended subdomain of length
 /// `nx + 2*steps`; returns the `nx` interior points.
 pub fn lax_wendroff_multistep(extended: &[f64], steps: usize, c: f64) -> Vec<f64> {
+    lax_wendroff_multistep_owned(extended.to_vec(), steps, c)
+}
+
+/// As [`lax_wendroff_multistep`], consuming the extended array and
+/// reusing it as one of the ping-pong buffers — the stencil task body
+/// already owns its ghost-extended wavefront buffer, so taking it by
+/// value saves one full-array allocation + copy per task.
+pub fn lax_wendroff_multistep_owned(extended: Vec<f64>, steps: usize, c: f64) -> Vec<f64> {
     assert!(extended.len() > 2 * steps, "extended region too small");
-    let mut cur = extended.to_vec();
+    let mut cur = extended;
     let mut next = vec![0.0; cur.len().saturating_sub(2)];
     for _ in 0..steps {
         next.resize(cur.len() - 2, 0.0);

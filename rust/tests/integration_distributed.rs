@@ -62,7 +62,8 @@ fn distributed_vote_with_node_specific_corruption() {
         }
     });
     for _ in 0..6 {
-        let f = async_replicate_distributed(&cl, 3, Some(Arc::new(vote_majority)), Arc::clone(&body));
+        let f =
+            async_replicate_distributed(&cl, 3, Some(Arc::new(vote_majority)), Arc::clone(&body));
         assert_eq!(f.get(), Ok(42));
     }
 }

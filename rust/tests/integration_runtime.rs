@@ -142,21 +142,27 @@ fn resilience_error_taxonomy_end_to_end() {
     let rt = Runtime::builder().workers(2).build();
     // Exhausted
     let f = resilience::async_replay(&rt, 2, || -> TaskResult<i32> { Err("x".into()) });
+    let err = f.get().unwrap_err();
     assert!(matches!(
-        f.get().unwrap_err(),
-        TaskError::Resilience(e) if matches!(*e, rhpx::ResilienceError::Exhausted { attempts: 2, .. })
+        err,
+        TaskError::Resilience(e)
+            if matches!(*e, rhpx::ResilienceError::Exhausted { attempts: 2, .. })
     ));
     // AllReplicasFailed
     let f = resilience::async_replicate(&rt, 2, || -> TaskResult<i32> { Err("y".into()) });
+    let err = f.get().unwrap_err();
     assert!(matches!(
-        f.get().unwrap_err(),
-        TaskError::Resilience(e) if matches!(*e, rhpx::ResilienceError::AllReplicasFailed { replicas: 2, .. })
+        err,
+        TaskError::Resilience(e)
+            if matches!(*e, rhpx::ResilienceError::AllReplicasFailed { replicas: 2, .. })
     ));
     // ValidationFailed
     let f = resilience::async_replicate_validate(&rt, 2, |_: &i32| false, || 1i32);
+    let err = f.get().unwrap_err();
     assert!(matches!(
-        f.get().unwrap_err(),
-        TaskError::Resilience(e) if matches!(*e, rhpx::ResilienceError::ValidationFailed { replicas: 2 })
+        err,
+        TaskError::Resilience(e)
+            if matches!(*e, rhpx::ResilienceError::ValidationFailed { replicas: 2 })
     ));
 }
 

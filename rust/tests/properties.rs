@@ -64,7 +64,9 @@ fn prop_replay_attempt_bound() {
         let attempts = calls.load(Ordering::SeqCst);
         let expected = (fail_first + 1).min(n);
         if attempts != expected {
-            return Err(format!("n={n} fail_first={fail_first}: {attempts} attempts, expected {expected}"));
+            return Err(format!(
+                "n={n} fail_first={fail_first}: {attempts} attempts, expected {expected}"
+            ));
         }
         match result {
             Ok(_) if fail_first < n => Ok(()),

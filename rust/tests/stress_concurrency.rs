@@ -1,0 +1,224 @@
+//! Contended stress tests for the lock-free hot paths: the Chase–Lev
+//! deque under a steal storm, the atomic-countdown `when_all_results`
+//! join at 100k dependencies resolved from multiple threads, and the
+//! promise-set vs. continuation-attach race. All sized to stay well
+//! inside `cargo test -q` time budgets (each test is < ~2s on a laptop
+//! core).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use rhpx::scheduler::{Job, WorkQueue};
+use rhpx::{async_, when_all_results, Promise, Runtime, TaskResult};
+
+/// Steal storm directly on the deque: one owner thread pushes and pops,
+/// several thief threads steal concurrently, and every job must run
+/// exactly once (per-job once-flags catch both losses and duplicates).
+#[test]
+fn deque_steal_storm_runs_every_job_exactly_once() {
+    const JOBS: usize = 50_000;
+    const THIEVES: usize = 4;
+
+    let q = Arc::new(WorkQueue::new());
+    let ran: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..JOBS).map(|_| AtomicUsize::new(0)).collect());
+    let executed = Arc::new(AtomicUsize::new(0));
+    let done_pushing = Arc::new(AtomicBool::new(false));
+
+    let thieves: Vec<_> = (0..THIEVES)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            let executed = Arc::clone(&executed);
+            let done = Arc::clone(&done_pushing);
+            std::thread::spawn(move || {
+                loop {
+                    match q.steal() {
+                        Some(job) => {
+                            job();
+                            executed.fetch_add(1, Ordering::SeqCst);
+                        }
+                        None => {
+                            if done.load(Ordering::SeqCst) && q.is_empty() {
+                                break;
+                            }
+                            std::hint::spin_loop();
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // Owner: push everything, interleaving pops (LIFO side under fire).
+    // SAFETY (owner-side calls): this test thread is the deque's only
+    // owner; the spawned threads exclusively use the safe `steal` side.
+    for i in 0..JOBS {
+        let ran = Arc::clone(&ran);
+        let job: Job = Box::new(move || {
+            let prev = ran[i].fetch_add(1, Ordering::SeqCst);
+            assert_eq!(prev, 0, "job {i} ran twice");
+        });
+        unsafe { q.push(job) };
+        if i % 3 == 0 {
+            if let Some(job) = unsafe { q.pop() } {
+                job();
+                executed.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+    // Owner drains what the thieves leave behind.
+    while let Some(job) = unsafe { q.pop() } {
+        job();
+        executed.fetch_add(1, Ordering::SeqCst);
+    }
+    done_pushing.store(true, Ordering::SeqCst);
+    for t in thieves {
+        t.join().unwrap();
+    }
+    // Late arrivals between the owner's last pop and the flag: none can
+    // exist (owner pushed everything before the flag), but drain anyway.
+    while let Some(job) = unsafe { q.pop() } {
+        job();
+        executed.fetch_add(1, Ordering::SeqCst);
+    }
+
+    assert_eq!(executed.load(Ordering::SeqCst), JOBS);
+    for (i, flag) in ran.iter().enumerate() {
+        let times = flag.load(Ordering::SeqCst);
+        assert_eq!(times, 1, "job {i} ran {times} times");
+    }
+}
+
+/// The scheduler end-to-end under multi-threaded external submission:
+/// external threads hammer the lock-free injector while the workers
+/// drain through their deques; every task runs exactly once.
+#[test]
+fn pool_survives_multi_threaded_submission_storm() {
+    const SUBMITTERS: usize = 4;
+    const PER_THREAD: usize = 10_000;
+
+    let rt = Runtime::builder().workers(3).build();
+    let count = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..SUBMITTERS)
+        .map(|_| {
+            let rt = rt.clone();
+            let count = Arc::clone(&count);
+            std::thread::spawn(move || {
+                let futs: Vec<_> = (0..PER_THREAD)
+                    .map(|_| {
+                        let count = Arc::clone(&count);
+                        async_(&rt, move || {
+                            count.fetch_add(1, Ordering::Relaxed);
+                            1i32
+                        })
+                    })
+                    .collect();
+                for f in futs {
+                    assert_eq!(f.get(), Ok(1));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    rt.wait_idle();
+    assert_eq!(count.load(Ordering::Relaxed), SUBMITTERS * PER_THREAD);
+    let stats = rt.stats();
+    assert_eq!(stats.completed, stats.spawned);
+    assert!(stats.spawned >= (SUBMITTERS * PER_THREAD) as u64);
+}
+
+/// `when_all_results` with 100k dependencies resolved from multiple
+/// threads: the atomic countdown must deliver every slot exactly once,
+/// in index order, with the join firing exactly when the last dependency
+/// lands — and zero mutex acquisitions on the completion path.
+#[test]
+fn when_all_100k_dependencies_resolved_from_multiple_threads() {
+    const DEPS: usize = 100_000;
+    const SETTERS: usize = 4;
+
+    let mut promises = Vec::with_capacity(DEPS);
+    let mut futs = Vec::with_capacity(DEPS);
+    for _ in 0..DEPS {
+        let (p, f) = Promise::<usize>::new();
+        promises.push(p);
+        futs.push(f);
+    }
+    let all = when_all_results(futs);
+    assert!(!all.is_ready());
+
+    // Split the promises across setter threads; each resolves its slice
+    // with its dependency's index.
+    let mut slices: Vec<Vec<(usize, Promise<usize>)>> =
+        (0..SETTERS).map(|_| Vec::with_capacity(DEPS / SETTERS + 1)).collect();
+    for (i, p) in promises.into_iter().enumerate() {
+        slices[i % SETTERS].push((i, p));
+    }
+    let setters: Vec<_> = slices
+        .into_iter()
+        .map(|slice| {
+            std::thread::spawn(move || {
+                for (i, p) in slice {
+                    p.set_value(i);
+                }
+            })
+        })
+        .collect();
+    for s in setters {
+        s.join().unwrap();
+    }
+
+    let results: Vec<TaskResult<usize>> = all.get().expect("join never fails");
+    assert_eq!(results.len(), DEPS);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(*r, Ok(i), "slot {i} holds the wrong dependency");
+    }
+}
+
+/// Promise-set vs. continuation-attach race: one thread sets the value
+/// while another attaches a continuation. Whatever the interleaving
+/// (pending attach, inline attach during the NOTIFY phase, inline attach
+/// after READY), the continuation must fire exactly once with the value.
+#[test]
+fn promise_set_vs_continuation_attach_race() {
+    const ROUNDS: usize = 2_000;
+    let fired = Arc::new(AtomicUsize::new(0));
+    for round in 0..ROUNDS {
+        let (p, f) = Promise::<usize>::new();
+        let fired = Arc::clone(&fired);
+        let f2 = f.clone();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                p.set_value(round);
+            });
+            s.spawn(move || {
+                f2.on_ready(move |r| {
+                    assert_eq!(*r, Ok(round));
+                    fired.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+        });
+        assert_eq!(f.get_copy(), Ok(round));
+    }
+    assert_eq!(fired.load(Ordering::SeqCst), ROUNDS, "every continuation fires exactly once");
+}
+
+/// Concurrent `get` (helping/parking) against a setter thread, plus
+/// continuation chains racing the set — the end-to-end shape the
+/// dataflow hot path exercises.
+#[test]
+fn concurrent_get_and_then_chains_under_race() {
+    const ROUNDS: usize = 500;
+    for round in 0..ROUNDS {
+        let (p, f) = Promise::<i64>::new();
+        let chained = f.then(|r| r.clone().map(|v| v + 1));
+        let waiter = {
+            let f = f.clone();
+            std::thread::spawn(move || f.get_copy())
+        };
+        p.set_value(round as i64);
+        assert_eq!(waiter.join().unwrap(), Ok(round as i64));
+        assert_eq!(chained.get(), Ok(round as i64 + 1));
+    }
+}

@@ -1,0 +1,153 @@
+//! `bench_diff` — per-metric deltas of `BENCH_*.json` files against the
+//! committed `BENCH_baseline/` snapshot.
+//!
+//!   cargo run --release --bin bench_diff -- [--baseline DIR] [FILE...]
+//!
+//! Defaults: baseline dir `BENCH_baseline`, files `BENCH_perf_micro.json`.
+//! Dependency-free: reuses the crate's own `metrics::bench_json` parser.
+//! Always exits 0 — this is a *report* (CI runs it as a non-blocking
+//! step); regressions are surfaced, not enforced, so noisy runners never
+//! block a merge. Metrics are flattened to dotted paths; arrays of
+//! `{"name": …}` objects (the bench result convention) key by name.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use rhpx::metrics::JsonValue;
+
+/// Flatten a bench payload into `metric path → number`.
+fn flatten(v: &JsonValue, prefix: &str, out: &mut BTreeMap<String, f64>) {
+    let join = |p: &str, k: &str| {
+        if p.is_empty() {
+            k.to_string()
+        } else {
+            format!("{p}.{k}")
+        }
+    };
+    match v {
+        JsonValue::Num(x) => {
+            out.insert(prefix.to_string(), *x);
+        }
+        JsonValue::Obj(map) => {
+            for (k, val) in map {
+                // Envelope/metadata keys are not metrics.
+                if prefix.is_empty()
+                    && matches!(k.as_str(), "bench" | "smoke" | "schema_version" | "provisional")
+                {
+                    continue;
+                }
+                if k == "name" {
+                    continue; // already consumed as the path segment
+                }
+                flatten(val, &join(prefix, k), out);
+            }
+        }
+        JsonValue::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                let seg = item
+                    .get("name")
+                    .and_then(JsonValue::as_str)
+                    .map(str::to_string)
+                    .unwrap_or_else(|| i.to_string());
+                flatten(item, &join(prefix, &seg), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn load(path: &Path) -> Option<JsonValue> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("bench-diff: cannot read {}: {e}", path.display());
+            return None;
+        }
+    };
+    match JsonValue::parse(&text) {
+        Ok(v) => Some(v),
+        Err(e) => {
+            println!("bench-diff: cannot parse {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+fn diff_one(baseline_dir: &Path, file: &str) {
+    println!("== {file} vs {}/{file} ==", baseline_dir.display());
+    let Some(current) = load(Path::new(file)) else {
+        println!("   (run `make bench-smoke` or `make bench` first)");
+        return;
+    };
+    let base_path = baseline_dir.join(file);
+    let baseline = load(&base_path);
+    if baseline.is_none() {
+        println!("   no baseline snapshot — capture one with `make bench-baseline`");
+    }
+    if let Some(b) = &baseline {
+        if b.get("provisional").and_then(JsonValue::as_bool) == Some(true) {
+            println!(
+                "   WARNING: baseline is a provisional placeholder — regenerate it \
+                 with `make bench-baseline` on this machine for meaningful deltas"
+            );
+        }
+    }
+
+    let mut cur = BTreeMap::new();
+    flatten(&current, "", &mut cur);
+    let mut base = BTreeMap::new();
+    if let Some(b) = &baseline {
+        flatten(b, "", &mut base);
+    }
+
+    println!("   {:<44} {:>14} {:>14} {:>9}", "metric", "baseline", "current", "delta");
+    for (metric, now) in &cur {
+        match base.get(metric) {
+            Some(then) if *then != 0.0 => {
+                let pct = (now - then) / then * 100.0;
+                let marker = if pct <= -5.0 {
+                    " (improved)"
+                } else if pct >= 5.0 {
+                    " (regressed)"
+                } else {
+                    ""
+                };
+                println!(
+                    "   {metric:<44} {then:>14.1} {now:>14.1} {pct:>+8.1}%{marker}"
+                );
+            }
+            _ => {
+                println!("   {metric:<44} {:>14} {now:>14.1} {:>9}", "—", "n/a");
+            }
+        }
+    }
+    for metric in base.keys() {
+        if !cur.contains_key(metric) {
+            println!("   {metric:<44} dropped from current run");
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut baseline_dir = "BENCH_baseline".to_string();
+    let mut files: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--baseline" {
+            if let Some(d) = args.get(i + 1) {
+                baseline_dir = d.clone();
+                i += 1;
+            }
+        } else if !args[i].starts_with("--") {
+            files.push(args[i].clone());
+        }
+        i += 1;
+    }
+    if files.is_empty() {
+        files.push("BENCH_perf_micro.json".to_string());
+    }
+    for f in &files {
+        diff_one(Path::new(&baseline_dir), f);
+    }
+}
