@@ -1,0 +1,26 @@
+//! Bench: the resilience-strategy ablation around task-level
+//! checkpoint/restart — re-executed work, snapshot bytes, and recovery
+//! latency for replay vs checkpoint:K (AGAS and disk backends) vs the
+//! coordinated global-C/R strawman, under one scheduled locality kill.
+//!
+//!   cargo run --release --bin table_ckpt -- [--smoke] [--json PATH]
+//!   cargo bench --bench table_ckpt
+//!
+//! Env: RHPX_BENCH_SCALE (default 0.01 → 10 iterations, the floor),
+//!      RHPX_BENCH_REPEATS (default 3).
+
+use rhpx::harness::{emit, table_ckpt, HarnessOpts};
+use rhpx::metrics::BenchCli;
+
+fn main() {
+    let cli = BenchCli::parse();
+    let opts = HarnessOpts {
+        scale: cli.scale_from_env(0.01),
+        repeats: cli.repeats_from_env(3),
+        csv: Some("bench_table_ckpt.csv".into()),
+        ..Default::default()
+    };
+    let rows = table_ckpt::run_table_ckpt(&opts);
+    emit(&table_ckpt::to_table(&rows), &opts);
+    cli.emit("table_ckpt", table_ckpt::to_json(&rows));
+}

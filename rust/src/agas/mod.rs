@@ -6,7 +6,10 @@
 //! plus the object; [`Agas::migrate`] atomically re-homes an object to
 //! another locality. The distributed layer (see [`crate::distributed`])
 //! uses this registry to route active messages to wherever an object
-//! currently lives.
+//! currently lives, and the task-level checkpoint subsystem
+//! ([`crate::resilience::checkpoint`]) registers snapshot replicas here
+//! ([`Agas::register_replicated`]) so they survive the owning locality's
+//! death and can be re-homed via [`Agas::migrate`].
 //!
 //! Paper mapping: HPX runtime substrate (no table/figure of its own);
 //! exercised by the §Future-Work distributed scenarios.
@@ -72,6 +75,20 @@ impl Agas {
         gid
     }
 
+    /// Typed replicated registration: one clone of `object` per home in
+    /// `homes`, each under its own [`Gid`]. This is the replication
+    /// primitive of the AGAS-backed snapshot store
+    /// ([`crate::resilience::checkpoint::AgasSnapshotStore`]): with the
+    /// replicas homed on distinct localities, a single locality death
+    /// can touch at most one of them.
+    pub fn register_replicated<T: Any + Send + Sync + Clone>(
+        &self,
+        homes: &[LocalityId],
+        object: T,
+    ) -> Vec<Gid> {
+        homes.iter().map(|home| self.register(*home, object.clone())).collect()
+    }
+
     /// Drop a registration; returns true if it existed.
     pub fn unregister(&self, gid: Gid) -> bool {
         self.inner.entries.write().unwrap().remove(&gid).is_some()
@@ -131,6 +148,31 @@ impl Agas {
             .get(&gid)
             .map(|e| e.lock().unwrap().generation)
     }
+
+    /// Home and generation read *atomically* (one entry-lock critical
+    /// section). Separate [`Agas::locate`] + [`Agas::generation`] calls
+    /// can interleave with a concurrent [`Agas::migrate`] and pair a new
+    /// home with a stale generation; resolvers that cache by generation
+    /// (and the concurrency stress tests) need the consistent pair.
+    pub fn locate_with_generation(&self, gid: Gid) -> Option<(LocalityId, u64)> {
+        self.inner.entries.read().unwrap().get(&gid).map(|e| {
+            let g = e.lock().unwrap();
+            (g.home, g.generation)
+        })
+    }
+
+    /// Gids currently homed on `loc` (membership accounting: what a
+    /// locality death would take down if nothing re-homes it first).
+    pub fn gids_homed_on(&self, loc: LocalityId) -> Vec<Gid> {
+        self.inner
+            .entries
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|(_, e)| e.lock().unwrap().home == loc)
+            .map(|(gid, _)| *gid)
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -176,6 +218,31 @@ mod tests {
         assert_eq!(agas.migrations(), 1);
         // object still resolvable after migration
         assert_eq!(*agas.resolve::<Vec<i32>>(gid).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn register_replicated_places_one_copy_per_home() {
+        let agas = Agas::new();
+        let homes = [LocalityId(0), LocalityId(2), LocalityId(3)];
+        let gids = agas.register_replicated(&homes, vec![1.0f64, 2.0]);
+        assert_eq!(gids.len(), 3);
+        for (gid, home) in gids.iter().zip(homes.iter()) {
+            assert_eq!(agas.locate(*gid), Some(*home));
+            assert_eq!(*agas.resolve::<Vec<f64>>(*gid).unwrap(), vec![1.0, 2.0]);
+        }
+        assert_eq!(agas.gids_homed_on(LocalityId(2)), vec![gids[1]]);
+        assert!(agas.gids_homed_on(LocalityId(7)).is_empty());
+    }
+
+    #[test]
+    fn locate_with_generation_is_consistent_after_migrations() {
+        let agas = Agas::new();
+        let gid = agas.register(LocalityId(0), 0u8);
+        assert_eq!(agas.locate_with_generation(gid), Some((LocalityId(0), 0)));
+        agas.migrate(gid, LocalityId(5));
+        agas.migrate(gid, LocalityId(1));
+        assert_eq!(agas.locate_with_generation(gid), Some((LocalityId(1), 2)));
+        assert_eq!(agas.locate_with_generation(Gid(999)), None);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Coordinated Checkpoint/Restart — the baseline the paper argues
-//! against (§I). Reproduced here so the ablation bench can put numbers
+//! against (§I). Reproduced here so the ablation benches can put numbers
 //! on the comparison (no paper table of its own).
 //!
 //! "Generating snapshots involves global communication and coordination
@@ -8,17 +8,26 @@
 //! previously saved checkpoint," aborting and restarting everything.
 //!
 //! This module implements that scheme over the same task abstractions so
-//! the ablation bench (`cargo bench --bench ablations`) can measure
-//! task-replay vs. coordinated-C/R on identical workloads: a
-//! [`CheckpointStore`] holds serialized global snapshots (in memory or on
-//! disk, modeling the paper's "persistent storage" with its I/O cost),
-//! and [`run_with_checkpoints`] drives an iterative application with
-//! global barrier + snapshot every `interval` iterations and global
-//! rollback on failure.
+//! the ablation benches (`cargo bench --bench ablations`, `rhpx bench
+//! table_ckpt`) can measure task-replay and task-level
+//! checkpoint/restart against coordinated-C/R on identical workloads: a
+//! [`CheckpointStore`] holds serialized global snapshots, and
+//! [`run_with_checkpoints`] drives an iterative application with global
+//! barrier + snapshot every `interval` iterations and global rollback on
+//! failure.
+//!
+//! Persistence goes through the shared [`store::SnapshotStore`]
+//! abstraction — the same backends (memory, disk, AGAS-replicated) that
+//! power the *task-level* strategy in [`crate::resilience::checkpoint`],
+//! so the global-vs-task-level ablation differs only in checkpoint
+//! grain, never in storage machinery.
 
-use std::io::Write;
+pub mod store;
+
+pub use store::{DiskSnapshotStore, MemorySnapshotStore, SnapshotData, SnapshotStore};
+
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::error::{TaskError, TaskResult};
 
@@ -28,36 +37,57 @@ pub enum Storage {
     Memory,
     /// On-disk under the given directory (models global I/O cost).
     Disk(PathBuf),
+    /// Any shared snapshot backend (e.g. the AGAS-replicated store).
+    Backend(Arc<dyn SnapshotStore>),
 }
 
 /// A store of global snapshots of an application state `S`.
+///
+/// The latest snapshot is kept typed in memory (rollback never
+/// deserializes on the hot path); every snapshot is also persisted
+/// through the configured [`SnapshotStore`] backend, from which
+/// [`CheckpointStore::reload`] can round-trip any retained iteration.
 pub struct CheckpointStore<S: Clone> {
-    storage: Storage,
+    backend: Arc<dyn SnapshotStore>,
+    /// Drop the previous iteration's serialized bytes after each save
+    /// (the in-memory storage mode: rollback only ever needs the latest
+    /// snapshot, and a long run must not accumulate every past state).
+    prune_old: bool,
     latest: Mutex<Option<(u64, S)>>,
     written: Mutex<u64>,
 }
 
-impl<S: Clone + Snapshot> CheckpointStore<S> {
+fn iteration_key(iteration: u64) -> String {
+    format!("ckpt_{iteration:012}")
+}
+
+impl<S: Clone + SnapshotData> CheckpointStore<S> {
     pub fn new(storage: Storage) -> Self {
-        if let Storage::Disk(dir) = &storage {
-            let _ = std::fs::create_dir_all(dir);
-        }
-        CheckpointStore { storage, latest: Mutex::new(None), written: Mutex::new(0) }
+        let (backend, prune_old): (Arc<dyn SnapshotStore>, bool) = match storage {
+            Storage::Memory => (Arc::new(MemorySnapshotStore::new()), true),
+            Storage::Disk(dir) => (Arc::new(DiskSnapshotStore::new(dir)), false),
+            Storage::Backend(backend) => (backend, false),
+        };
+        CheckpointStore { backend, prune_old, latest: Mutex::new(None), written: Mutex::new(0) }
     }
 
-    /// Persist a coordinated snapshot taken at `iteration`.
+    /// Persist a coordinated snapshot taken at `iteration`. On a
+    /// persistence failure nothing is retained for `iteration` — the
+    /// disk backend removes partially written `ckpt_*.bin` files before
+    /// the error surfaces, and the typed rollback copy is only replaced
+    /// after the backend accepted the bytes. In-memory storage retains
+    /// only the latest snapshot's bytes; disk (and custom backends)
+    /// retain the full history for restart/inspection.
     pub fn save(&self, iteration: u64, state: &S) -> TaskResult<()> {
-        if let Storage::Disk(dir) = &self.storage {
-            let bytes = state.serialize();
-            let path = dir.join(format!("ckpt_{iteration:012}.bin"));
-            let mut f = std::fs::File::create(&path)
-                .map_err(|e| TaskError::Runtime(format!("checkpoint create: {e}")))?;
-            f.write_all(&bytes)
-                .map_err(|e| TaskError::Runtime(format!("checkpoint write: {e}")))?;
-            f.sync_all()
-                .map_err(|e| TaskError::Runtime(format!("checkpoint sync: {e}")))?;
+        self.backend.save(&iteration_key(iteration), &state.to_bytes())?;
+        let prev = self.latest.lock().unwrap().replace((iteration, state.clone()));
+        if self.prune_old {
+            if let Some((prev_iter, _)) = prev {
+                if prev_iter != iteration {
+                    self.backend.remove(&iteration_key(prev_iter));
+                }
+            }
         }
-        *self.latest.lock().unwrap() = Some((iteration, state.clone()));
         *self.written.lock().unwrap() += 1;
         Ok(())
     }
@@ -67,38 +97,20 @@ impl<S: Clone + Snapshot> CheckpointStore<S> {
         self.latest.lock().unwrap().clone()
     }
 
+    /// Round-trip a snapshot through the persistence backend (restart
+    /// path: a fresh process would have no typed copy).
+    pub fn reload(&self, iteration: u64) -> Option<S> {
+        S::from_bytes(&self.backend.load(&iteration_key(iteration))?)
+    }
+
     /// Number of snapshots persisted.
     pub fn count(&self) -> u64 {
         *self.written.lock().unwrap()
     }
-}
 
-/// State that can be serialized for disk persistence.
-pub trait Snapshot {
-    fn serialize(&self) -> Vec<u8>;
-}
-
-impl Snapshot for Vec<f64> {
-    fn serialize(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.len() * 8);
-        for v in self {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
-        out
-    }
-}
-
-impl Snapshot for Vec<Vec<f64>> {
-    fn serialize(&self) -> Vec<u8> {
-        let mut out = Vec::new();
-        out.extend_from_slice(&(self.len() as u64).to_le_bytes());
-        for row in self {
-            out.extend_from_slice(&(row.len() as u64).to_le_bytes());
-            for v in row {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-        }
-        out
+    /// The shared persistence backend.
+    pub fn backend(&self) -> &Arc<dyn SnapshotStore> {
+        &self.backend
     }
 }
 
@@ -131,7 +143,7 @@ pub fn run_with_checkpoints<S, F>(
     mut step: F,
 ) -> TaskResult<CrReport>
 where
-    S: Clone + Snapshot,
+    S: Clone + SnapshotData,
     F: FnMut(u64, &mut S) -> TaskResult<()>,
 {
     assert!(interval >= 1);
@@ -230,6 +242,49 @@ mod tests {
     }
 
     #[test]
+    fn memory_storage_retains_only_the_latest_snapshot_bytes() {
+        let store = CheckpointStore::new(Storage::Memory);
+        for i in 0..10u64 {
+            store.save(i, &vec![i as f64]).unwrap();
+        }
+        assert_eq!(store.backend().len(), 1, "memory mode must not accumulate history");
+        assert_eq!(store.reload(9), Some(vec![9.0]));
+        assert_eq!(store.reload(3), None, "older snapshots are pruned");
+        assert_eq!(store.count(), 10);
+        assert_eq!(store.restore(), Some((9, vec![9.0])));
+    }
+
+    #[test]
+    fn disk_snapshots_reload_bit_identically() {
+        let dir = std::env::temp_dir().join(format!("rhpx_ckpt_reload_{}", std::process::id()));
+        let store = CheckpointStore::new(Storage::Disk(dir.clone()));
+        let state = vec![vec![1.5f64, -2.0], vec![3.25]];
+        store.save(4, &state).unwrap();
+        assert_eq!(store.reload(4), Some(state), "restart path must round-trip");
+        assert_eq!(store.reload(5), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unwritable_disk_path_errors_and_keeps_no_rollback_state() {
+        // The store directory is a regular file: every snapshot create
+        // fails regardless of uid (see store.rs for why not chmod).
+        let blocker =
+            std::env::temp_dir().join(format!("rhpx_ckpt_unwritable_{}", std::process::id()));
+        std::fs::write(&blocker, b"not a directory").unwrap();
+        let store: CheckpointStore<Vec<f64>> =
+            CheckpointStore::new(Storage::Disk(blocker.join("ckpts")));
+        let err = store.save(3, &vec![1.0f64]);
+        assert!(err.is_err(), "save into an unwritable path must error");
+        assert_eq!(store.count(), 0);
+        assert!(
+            store.restore().is_none(),
+            "a failed persist must not install a rollback point"
+        );
+        let _ = std::fs::remove_file(&blocker);
+    }
+
+    #[test]
     fn injected_failures_still_reach_completion() {
         let store = CheckpointStore::new(Storage::Memory);
         let inj = FaultInjector::with_probability(0.10, 99);
@@ -248,8 +303,9 @@ mod tests {
     #[test]
     fn vec_vec_snapshot_roundtrip_format() {
         let v = vec![vec![1.0f64, 2.0], vec![3.0]];
-        let bytes = v.serialize();
+        let bytes = v.to_bytes();
         // 8 (outer len) + 8+16 (row 0) + 8+8 (row 1)
         assert_eq!(bytes.len(), 8 + 8 + 16 + 8 + 8);
+        assert_eq!(Vec::<Vec<f64>>::from_bytes(&bytes), Some(v));
     }
 }

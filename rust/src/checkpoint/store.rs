@@ -1,0 +1,462 @@
+//! `SnapshotStore` — the shared snapshot-persistence abstraction.
+//!
+//! Both checkpointing subsystems sit on this one abstraction so the
+//! ablation bench compares like-for-like:
+//!
+//! * the coordinated global-C/R baseline ([`crate::checkpoint`], the §I
+//!   strawman) persists whole-application snapshots through it;
+//! * the task-level checkpoint/restart strategy
+//!   ([`crate::resilience::checkpoint`]) persists per-task snapshots
+//!   through it — same bytes-in/bytes-out contract, different grain.
+//!
+//! Backends here: [`MemorySnapshotStore`] (lower bound on persistence
+//! cost) and [`DiskSnapshotStore`] (models the paper's "persistent
+//! storage" with its I/O cost, fsync included). The AGAS-replicated
+//! backend — snapshots registered under [`crate::agas::Gid`]s so they
+//! survive locality death — lives in
+//! [`crate::resilience::checkpoint::AgasSnapshotStore`], next to the
+//! cluster machinery it depends on.
+//!
+//! Paper mapping: §I (the cost model of checkpoint/restart) and the
+//! ORNL resilience-design-pattern "checkpoint-recovery" pattern at task
+//! scope.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::agas::LocalityId;
+use crate::error::{TaskError, TaskResult};
+
+/// State that round-trips through a snapshot store.
+///
+/// The two halves are inverses: `from_bytes(&x.to_bytes())` must
+/// reconstruct a value indistinguishable from `x` (the property test in
+/// `rust/tests/properties.rs` pins this for the stencil domain state,
+/// checksum included).
+pub trait SnapshotData: Sized {
+    /// Serialize for persistence.
+    fn to_bytes(&self) -> Vec<u8>;
+
+    /// Reconstruct from persisted bytes; `None` if the bytes are not a
+    /// valid encoding.
+    fn from_bytes(bytes: &[u8]) -> Option<Self>;
+}
+
+impl SnapshotData for Vec<f64> {
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() * 8);
+        for v in self {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Option<Self> {
+        if bytes.len() % 8 != 0 {
+            return None;
+        }
+        Some(
+            bytes
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+                .collect(),
+        )
+    }
+}
+
+impl SnapshotData for Vec<Vec<f64>> {
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.len() as u64).to_le_bytes());
+        for row in self {
+            out.extend_from_slice(&(row.len() as u64).to_le_bytes());
+            for v in row {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Option<Self> {
+        // Lengths come from untrusted persisted bytes: bound every count
+        // against the data actually present (and use checked arithmetic)
+        // so a corrupted snapshot decodes to `None`, never a panic or an
+        // absurd allocation.
+        let read_u64 = |at: usize| -> Option<u64> {
+            bytes.get(at..at.checked_add(8)?).map(|s| {
+                u64::from_le_bytes(s.try_into().expect("8 bytes"))
+            })
+        };
+        let rows = usize::try_from(read_u64(0)?).ok()?;
+        if rows > bytes.len() / 8 {
+            return None; // each row costs at least its 8-byte header
+        }
+        let mut out = Vec::with_capacity(rows);
+        let mut pos = 8usize;
+        for _ in 0..rows {
+            let len = usize::try_from(read_u64(pos)?).ok()?;
+            pos = pos.checked_add(8)?;
+            let end = pos.checked_add(len.checked_mul(8)?)?;
+            let row = bytes.get(pos..end)?;
+            out.push(Vec::<f64>::from_bytes(row)?);
+            pos = end;
+        }
+        if pos != bytes.len() {
+            return None;
+        }
+        Some(out)
+    }
+}
+
+/// A keyed store of snapshot bytes.
+///
+/// Implementations are thread-safe; keys are crate-generated and may
+/// contain `/`-free ASCII plus `-`/`_`/`.` (the disk backend sanitizes
+/// anything else). The membership hook and loss counter exist for
+/// backends with a durability notion tied to cluster membership (the
+/// AGAS backend); the local backends never lose anything.
+pub trait SnapshotStore: Send + Sync + 'static {
+    /// Persist `bytes` under `key`, replacing any previous snapshot.
+    fn save(&self, key: &str, bytes: &[u8]) -> TaskResult<()>;
+
+    /// Read a snapshot back; `None` if absent (or irrecoverably lost).
+    fn load(&self, key: &str) -> Option<Vec<u8>>;
+
+    /// Whether a readable snapshot exists under `key`.
+    fn contains(&self, key: &str) -> bool {
+        self.load(key).is_some()
+    }
+
+    /// Drop a snapshot; returns true if one existed.
+    fn remove(&self, key: &str) -> bool;
+
+    /// Number of stored snapshots.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshots irrecoverably lost so far (backends tied to cluster
+    /// membership; local backends return 0).
+    fn lost(&self) -> u64 {
+        0
+    }
+
+    /// Membership hook: `loc` was declared dead. Backends homing
+    /// replicas on localities react (drop or re-home); local backends
+    /// ignore it.
+    fn on_locality_killed(&self, loc: LocalityId) {
+        let _ = loc;
+    }
+
+    /// Human-readable backend description (for reports).
+    fn label(&self) -> String;
+}
+
+/// In-memory backend: the lower bound on persistence cost (no I/O, no
+/// serialization amortization — bytes are stored as handed in).
+#[derive(Default)]
+pub struct MemorySnapshotStore {
+    map: Mutex<HashMap<String, Arc<Vec<u8>>>>,
+}
+
+impl MemorySnapshotStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl SnapshotStore for MemorySnapshotStore {
+    fn save(&self, key: &str, bytes: &[u8]) -> TaskResult<()> {
+        self.map.lock().unwrap().insert(key.to_string(), Arc::new(bytes.to_vec()));
+        Ok(())
+    }
+
+    fn load(&self, key: &str) -> Option<Vec<u8>> {
+        self.map.lock().unwrap().get(key).map(|b| (**b).clone())
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.map.lock().unwrap().contains_key(key)
+    }
+
+    fn remove(&self, key: &str) -> bool {
+        self.map.lock().unwrap().remove(key).is_some()
+    }
+
+    fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    fn label(&self) -> String {
+        "mem".to_string()
+    }
+}
+
+#[cfg(test)]
+thread_local! {
+    /// Test hook: force the post-create write/sync path of
+    /// [`DiskSnapshotStore::save`] to fail, so the partial-file cleanup
+    /// is exercised deterministically (a real mid-write failure needs a
+    /// full disk, which a unit test cannot portably arrange).
+    pub(crate) static FAIL_DISK_WRITES: std::cell::Cell<bool> =
+        const { std::cell::Cell::new(false) };
+}
+
+/// A temp-dir path that is unique per call *within* this process (pid +
+/// sequence), for disk stores that must not collide across runs or
+/// executors in one process.
+pub fn unique_temp_dir(prefix: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "{prefix}_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// On-disk backend: one fsynced file per key under `dir`, modeling the
+/// global-I/O cost of persistent checkpoint storage.
+///
+/// An in-memory index caches key → path, but reads fall back to the
+/// directory itself, so a fresh process pointed at an existing store
+/// directory restores snapshots persisted by an earlier one (the
+/// restart path [`crate::checkpoint::CheckpointStore::reload`]
+/// documents). [`SnapshotStore::len`] counts only keys this instance
+/// has touched.
+pub struct DiskSnapshotStore {
+    dir: PathBuf,
+    index: Mutex<HashMap<String, PathBuf>>,
+}
+
+impl DiskSnapshotStore {
+    /// Store under `dir` (created if missing; creation failure surfaces
+    /// on the first [`DiskSnapshotStore::save`]).
+    pub fn new(dir: PathBuf) -> Self {
+        let _ = std::fs::create_dir_all(&dir);
+        DiskSnapshotStore { dir, index: Mutex::new(HashMap::new()) }
+    }
+
+    /// The backing directory.
+    pub fn dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    fn path_for(&self, key: &str) -> PathBuf {
+        let safe: String = key
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') {
+                    c
+                } else {
+                    '_'
+                }
+            })
+            .collect();
+        self.dir.join(format!("{safe}.bin"))
+    }
+}
+
+impl SnapshotStore for DiskSnapshotStore {
+    /// Write-then-fsync. A failure *after* the file was created removes
+    /// the partially written file before the error surfaces — a
+    /// truncated snapshot must never be mistaken for a valid restore
+    /// point by a later run scanning the directory.
+    fn save(&self, key: &str, bytes: &[u8]) -> TaskResult<()> {
+        let path = self.path_for(key);
+        let mut f = std::fs::File::create(&path)
+            .map_err(|e| TaskError::Runtime(format!("snapshot create {path:?}: {e}")))?;
+        let written: std::io::Result<()> = (|| {
+            #[cfg(test)]
+            if FAIL_DISK_WRITES.with(|h| h.get()) {
+                return Err(std::io::Error::other("injected write failure"));
+            }
+            f.write_all(bytes)?;
+            f.sync_all()
+        })();
+        if let Err(e) = written {
+            drop(f);
+            let _ = std::fs::remove_file(&path);
+            return Err(TaskError::Runtime(format!("snapshot write {path:?}: {e}")));
+        }
+        self.index.lock().unwrap().insert(key.to_string(), path);
+        Ok(())
+    }
+
+    fn load(&self, key: &str) -> Option<Vec<u8>> {
+        let indexed = self.index.lock().unwrap().get(key).cloned();
+        let path = match indexed {
+            Some(path) => path,
+            // Not written by this instance: probe the directory, so a
+            // restarted process restores what a previous one persisted.
+            None => self.path_for(key),
+        };
+        let bytes = std::fs::read(&path).ok()?;
+        self.index.lock().unwrap().insert(key.to_string(), path);
+        Some(bytes)
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.index.lock().unwrap().contains_key(key) || self.path_for(key).exists()
+    }
+
+    fn remove(&self, key: &str) -> bool {
+        let indexed = self.index.lock().unwrap().remove(key);
+        let path = indexed.unwrap_or_else(|| self.path_for(key));
+        std::fs::remove_file(path).is_ok()
+    }
+
+    fn len(&self) -> usize {
+        self.index.lock().unwrap().len()
+    }
+
+    fn label(&self) -> String {
+        "disk".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("rhpx_store_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn vec_f64_roundtrip() {
+        let v = vec![1.5f64, -2.25, 0.0, f64::MAX];
+        assert_eq!(Vec::<f64>::from_bytes(&v.to_bytes()), Some(v));
+        assert_eq!(Vec::<f64>::from_bytes(&[0u8; 7]), None, "ragged length rejected");
+    }
+
+    #[test]
+    fn vec_vec_f64_roundtrip() {
+        let v = vec![vec![1.0f64, 2.0], vec![], vec![3.5]];
+        assert_eq!(Vec::<Vec<f64>>::from_bytes(&v.to_bytes()), Some(v.clone()));
+        // 8 (outer len) + 8+16 (row 0) + 8 (row 1) + 8+8 (row 2)
+        assert_eq!(v.to_bytes().len(), 8 + 8 + 16 + 8 + 8 + 8);
+        let mut truncated = v.to_bytes();
+        truncated.pop();
+        assert_eq!(Vec::<Vec<f64>>::from_bytes(&truncated), None);
+        // Corrupted counts must decode to None, not panic or allocate:
+        // a huge row count…
+        assert_eq!(Vec::<Vec<f64>>::from_bytes(&[0xFF; 16]), None);
+        // …and a huge row length.
+        let mut bad_len = Vec::new();
+        bad_len.extend_from_slice(&1u64.to_le_bytes());
+        bad_len.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert_eq!(Vec::<Vec<f64>>::from_bytes(&bad_len), None);
+    }
+
+    #[test]
+    fn memory_store_save_load_remove() {
+        let s = MemorySnapshotStore::new();
+        assert!(s.is_empty());
+        s.save("a", &[1, 2, 3]).unwrap();
+        s.save("a", &[9]).unwrap(); // overwrite
+        assert_eq!(s.load("a"), Some(vec![9]));
+        assert!(s.contains("a"));
+        assert_eq!(s.len(), 1);
+        assert!(s.remove("a"));
+        assert!(!s.remove("a"));
+        assert_eq!(s.load("a"), None);
+        assert_eq!(s.lost(), 0);
+    }
+
+    #[test]
+    fn disk_store_roundtrips_and_sanitizes_keys() {
+        let dir = tmp("roundtrip");
+        let s = DiskSnapshotStore::new(dir.clone());
+        s.save("ckpt/0:1", &[7, 8]).unwrap();
+        assert_eq!(s.load("ckpt/0:1"), Some(vec![7, 8]));
+        assert_eq!(s.len(), 1);
+        // The file landed under the sanitized name.
+        assert!(dir.join("ckpt_0_1.bin").exists());
+        assert!(s.remove("ckpt/0:1"));
+        assert!(!dir.join("ckpt_0_1.bin").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_store_restores_across_instances_like_a_restart() {
+        let dir = tmp("restart");
+        let first = DiskSnapshotStore::new(dir.clone());
+        first.save("survivor", &[4, 5, 6]).unwrap();
+        drop(first);
+        // A fresh instance (fresh process, in the restart story) must
+        // find the fsynced snapshot on disk.
+        let second = DiskSnapshotStore::new(dir.clone());
+        assert!(second.contains("survivor"));
+        assert_eq!(second.load("survivor"), Some(vec![4, 5, 6]));
+        assert!(second.remove("survivor"));
+        assert_eq!(second.load("survivor"), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unique_temp_dirs_do_not_collide_within_a_process() {
+        let a = unique_temp_dir("rhpx_store_unique");
+        let b = unique_temp_dir("rhpx_store_unique");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn disk_store_cleans_up_partial_file_on_write_failure() {
+        let dir = tmp("partial");
+        let s = DiskSnapshotStore::new(dir.clone());
+        FAIL_DISK_WRITES.with(|h| h.set(true));
+        let err = s.save("half", &[1; 64]);
+        FAIL_DISK_WRITES.with(|h| h.set(false));
+        assert!(err.is_err(), "injected write failure must surface");
+        assert!(
+            !dir.join("half.bin").exists(),
+            "partially written snapshot file must be removed"
+        );
+        assert!(!s.contains("half"), "a failed save must not be indexed");
+        // The store still works after the failure.
+        s.save("half", &[2, 2]).unwrap();
+        assert_eq!(s.load("half"), Some(vec![2, 2]));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_store_unwritable_directory_errors_without_stray_files() {
+        // A *file* where the store directory should be: every create
+        // fails with NotADirectory, for any uid (chmod-based unwritable
+        // dirs are bypassed by root, which test environments may be).
+        let blocker = tmp("blocker");
+        std::fs::write(&blocker, b"not a directory").unwrap();
+        let s = DiskSnapshotStore::new(blocker.join("sub"));
+        assert!(s.save("k", &[1]).is_err());
+        assert!(!s.contains("k"));
+        assert_eq!(s.len(), 0);
+
+        // Where permissions *can* be enforced (non-root), also check the
+        // classic unwritable-directory case end to end.
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::PermissionsExt;
+            let dir = tmp("readonly");
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o555)).unwrap();
+            if std::fs::write(dir.join("probe"), b"x").is_err() {
+                let s = DiskSnapshotStore::new(dir.clone());
+                assert!(s.save("k", &[1]).is_err(), "unwritable dir must error");
+                std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o755)).unwrap();
+                assert_eq!(
+                    std::fs::read_dir(&dir).unwrap().count(),
+                    0,
+                    "no partial snapshot files may be left behind"
+                );
+            }
+            let _ = std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o755));
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        let _ = std::fs::remove_file(&blocker);
+    }
+}

@@ -27,10 +27,15 @@
 use std::collections::HashMap;
 
 use crate::config::RuntimeConfig;
-use crate::harness::{emit, fig2, fig3, table1, table2, table_dist, HarnessOpts, KernelBackend};
+use crate::harness::{
+    emit, fig2, fig3, table1, table2, table_ckpt, table_dist, HarnessOpts, KernelBackend,
+    BENCH_MODES,
+};
 use crate::metrics::{BenchCli, JsonValue, Table};
 use crate::runtime_handle::Runtime;
-use crate::stencil::{self, Backend, ClusterSpec, ExecPolicy, Mode, StencilParams};
+use crate::stencil::{
+    self, Backend, ClusterSpec, ExecPolicy, Mode, SnapshotBackend, StencilParams,
+};
 use crate::workload::{self, Variant, WorkloadParams};
 
 /// Parsed flags: `--key value` pairs plus positional args.
@@ -96,6 +101,14 @@ pub fn run(argv: &[String]) -> i32 {
 
 fn dispatch(argv: &[String]) -> Result<(), String> {
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    // `bench --list` is a valueless flag: handle it before the
+    // `--key value` parser (which would demand a value). Only the
+    // *first* bench argument selects the listing — a later literal
+    // "list" (say, a --csv value) must not hijack a real run.
+    if cmd == "bench" && matches!(argv.get(1).map(String::as_str), Some("--list") | Some("list"))
+    {
+        return cmd_bench_list();
+    }
     let args = parse_args(&argv[1.min(argv.len())..])?;
     match cmd {
         "help" | "-h" | "--help" => {
@@ -115,13 +128,15 @@ const HELP: &str = r#"rhpx — resilient AMT runtime (reproduction of SAND2020-3
 
 USAGE:
   rhpx info
-  rhpx bench <table1|table1_exec|fig2|table2|fig3|table_dist|all>
+  rhpx bench <MODE|all> | rhpx bench --list
        [--scale F] [--repeats N] [--workers N] [--csv PATH]
        [--backend native|pjrt] [--replicas N]
+       (modes: see `rhpx bench --list`)
   rhpx stencil [--case a|b|tiny] [--mode pure|replay|replay_checksum|
                replicate|replicate_checksum|replicate_vote|replicate_replay]
                [--resilience replay:N|replicate:N|adaptive[:CEIL]|
-                             adaptive_replicate[:CEIL]]
+                             adaptive_replicate[:CEIL]|
+                             checkpoint:K[:mem|disk|agas]]
                [--cluster LOCALITIES[:kill=STEP@LOC,...]]
                [--latency-us N] [--loc-workers N]
                [--backend native|pjrt] [--scale F] [--n N] [--json PATH]
@@ -135,7 +150,12 @@ USAGE:
 (rhpx::resilience::executor) instead of per-call resilient functions;
 `adaptive` tunes the *replay budget* online from the observed error
 rate, `adaptive_replicate` tunes the eager *replication width* the same
-way. It is mutually exclusive with `--mode`.
+way. `checkpoint:K` is the third strategy (task-level
+checkpoint/restart): the wavefront is snapshotted every K windows into a
+snapshot store (default: in-memory on the pool, AGAS-replicated across
+localities on a cluster; `:disk` models persistent storage), and a
+failure restores the affected subdomains from the last snapshot and
+replays only the delta tasks. It is mutually exclusive with `--mode`.
 
 `--cluster` runs the stencil distributed: tasks are placed round-robin
 across N simulated localities and each `kill=STEP@LOC` event kills
@@ -252,6 +272,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         "table_dist" => {
             emit(&table_dist::to_table(&table_dist::run_table_dist(&opts)), &opts)
         }
+        "table_ckpt" => {
+            emit(&table_ckpt::to_table(&table_ckpt::run_table_ckpt(&opts)), &opts)
+        }
         "all" => {
             emit(&table1::run_table1(&opts, &table1::default_cores(), replicas), &opts);
             emit(
@@ -262,14 +285,31 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             run_table2_fig3("table2")?;
             run_table2_fig3("fig3")?;
             emit(&table_dist::to_table(&table_dist::run_table_dist(&opts)), &opts);
+            emit(&table_ckpt::to_table(&table_ckpt::run_table_ckpt(&opts)), &opts);
         }
-        other => return Err(format!("unknown bench {other:?}")),
+        other => {
+            return Err(format!(
+                "unknown bench {other:?} (run `rhpx bench --list` for the registry)"
+            ))
+        }
     }
     Ok(())
 }
 
+/// `rhpx bench --list`: print the bench registry — the single source the
+/// harness, CLI help, and CI loop share, so they cannot drift.
+fn cmd_bench_list() -> Result<(), String> {
+    let mut t = Table::new("bench modes (rhpx bench <mode>)", &["mode", "regenerates"]);
+    for (name, what) in BENCH_MODES {
+        t.add([name.to_string(), what.to_string()]);
+    }
+    t.add(["all".to_string(), "every mode above, in order".to_string()]);
+    print!("{}", t.render());
+    Ok(())
+}
+
 /// Parse `--resilience replay:N|replicate:N|adaptive[:CEIL]|
-/// adaptive_replicate[:CEIL]`.
+/// adaptive_replicate[:CEIL]|checkpoint:K[:mem|disk|agas]`.
 fn parse_resilience(s: &str) -> Result<ExecPolicy, String> {
     if s == "adaptive" {
         return Ok(ExecPolicy::Adaptive { ceiling: 10 });
@@ -283,6 +323,26 @@ fn parse_resilience(s: &str) -> Result<ExecPolicy, String> {
             .filter(|n| *n >= 1)
             .ok_or_else(|| format!("--resilience {what}: bad count {v:?}"))
     };
+    if let Some(v) = s.strip_prefix("checkpoint:") {
+        let (every, backend) = match v.split_once(':') {
+            None => (v, SnapshotBackend::Auto),
+            Some((every, b)) => {
+                let backend = match b {
+                    "mem" | "memory" => SnapshotBackend::Memory,
+                    "disk" => SnapshotBackend::Disk,
+                    "agas" => SnapshotBackend::Agas,
+                    other => {
+                        return Err(format!(
+                            "--resilience checkpoint: unknown backend {other:?} \
+                             (expected mem, disk, or agas)"
+                        ))
+                    }
+                };
+                (every, backend)
+            }
+        };
+        return Ok(ExecPolicy::Checkpoint { every: parse_n(every, "checkpoint")?, backend });
+    }
     if let Some(v) = s.strip_prefix("adaptive_replicate:") {
         return Ok(ExecPolicy::AdaptiveReplicate {
             ceiling: parse_n(v, "adaptive_replicate")?,
@@ -299,7 +359,7 @@ fn parse_resilience(s: &str) -> Result<ExecPolicy, String> {
     }
     Err(format!(
         "unknown --resilience {s:?} (expected replay:N, replicate:N, adaptive[:CEIL], \
-         or adaptive_replicate[:CEIL])"
+         adaptive_replicate[:CEIL], or checkpoint:K[:mem|disk|agas])"
     ))
 }
 
@@ -415,7 +475,7 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
         "stencil result",
         &[
             "mode", "launcher", "wall_s", "tasks", "task/s", "injected", "silent",
-            "launch_errors", "survival_pct", "checksum",
+            "launch_errors", "reexec", "survival_pct", "checksum",
         ],
     );
     t.add([
@@ -427,10 +487,19 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
         rep.failures_injected.to_string(),
         rep.silent_corruptions.to_string(),
         rep.launch_errors.to_string(),
+        rep.tasks_reexecuted.to_string(),
         format!("{:.1}", 100.0 * rep.survival_rate()),
         format!("{:.6e}", rep.final_checksum),
     ]);
     print!("{}", t.render());
+
+    // Checkpoint runs: snapshot-store traffic summary.
+    if rep.snapshots.saved > 0 || rep.snapshots.restored > 0 || rep.snapshots.lost > 0 {
+        println!(
+            "snapshots: {} saved ({} bytes), {} restored, {} lost",
+            rep.snapshots.saved, rep.snapshots.bytes, rep.snapshots.restored, rep.snapshots.lost
+        );
+    }
 
     // Cluster runs: per-locality placement/survival breakdown.
     if !rep.localities.is_empty() {
@@ -455,10 +524,13 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
 
     // The executor path publishes its policy state as perfcounters; show
     // them (and fold them into the JSON payload) when it was active.
+    // The checkpoint route's store counters live under /checkpoint/.
     let resilience_counters: Vec<(String, u64)> = crate::perfcounters::global()
         .snapshot()
         .into_iter()
-        .filter(|(k, _)| k.starts_with("/resilience/stencil/"))
+        .filter(|(k, _)| {
+            k.starts_with("/resilience/stencil/") || k.starts_with("/checkpoint/stencil/")
+        })
         .collect();
     if params.resilience.is_some() && !resilience_counters.is_empty() {
         println!("\nresilience counters:");
@@ -477,6 +549,16 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
             ("failures_injected".to_string(), JsonValue::from(rep.failures_injected)),
             ("silent_corruptions".to_string(), JsonValue::from(rep.silent_corruptions)),
             ("launch_errors".to_string(), JsonValue::from(rep.launch_errors)),
+            ("tasks_reexecuted".to_string(), JsonValue::from(rep.tasks_reexecuted)),
+            (
+                "snapshots".to_string(),
+                JsonValue::obj([
+                    ("saved".to_string(), JsonValue::from(rep.snapshots.saved)),
+                    ("restored".to_string(), JsonValue::from(rep.snapshots.restored)),
+                    ("bytes".to_string(), JsonValue::from(rep.snapshots.bytes)),
+                    ("lost".to_string(), JsonValue::from(rep.snapshots.lost)),
+                ]),
+            ),
             ("survival_rate".to_string(), JsonValue::from(rep.survival_rate())),
             ("kills_applied".to_string(), JsonValue::from(rep.kills_applied)),
             (
@@ -727,6 +809,74 @@ mod tests {
         assert!(parse_resilience("replay:0").is_err());
         assert!(parse_resilience("replicate:x").is_err());
         assert!(parse_resilience("adaptive_replicate:0").is_err());
+    }
+
+    #[test]
+    fn resilience_checkpoint_flag_parsing() {
+        assert_eq!(
+            parse_resilience("checkpoint:2").unwrap(),
+            ExecPolicy::Checkpoint { every: 2, backend: SnapshotBackend::Auto }
+        );
+        assert_eq!(
+            parse_resilience("checkpoint:1:mem").unwrap(),
+            ExecPolicy::Checkpoint { every: 1, backend: SnapshotBackend::Memory }
+        );
+        assert_eq!(
+            parse_resilience("checkpoint:4:disk").unwrap(),
+            ExecPolicy::Checkpoint { every: 4, backend: SnapshotBackend::Disk }
+        );
+        assert_eq!(
+            parse_resilience("checkpoint:3:agas").unwrap(),
+            ExecPolicy::Checkpoint { every: 3, backend: SnapshotBackend::Agas }
+        );
+        assert!(parse_resilience("checkpoint:0").is_err(), "K must be >= 1");
+        assert!(parse_resilience("checkpoint:x").is_err());
+        assert!(parse_resilience("checkpoint:2:tape").is_err(), "unknown backend");
+        assert!(parse_resilience("checkpoint").is_err(), "K is required");
+    }
+
+    #[test]
+    fn stencil_cluster_checkpoint_smoke_and_json() {
+        let path = std::env::temp_dir()
+            .join(format!("rhpx_stencil_ckpt_{}.json", std::process::id()));
+        let r = dispatch(&argv(&[
+            "stencil",
+            "--cluster",
+            "4:kill=10@2",
+            "--resilience",
+            "checkpoint:2",
+            "--workers",
+            "2",
+            "--json",
+            path.to_str().unwrap(),
+        ]));
+        assert!(r.is_ok(), "{r:?}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""mode":"exec_checkpoint(2)""#), "{text}");
+        assert!(text.contains(r#""survival_rate":1"#), "{text}");
+        assert!(text.contains(r#""tasks_reexecuted""#), "{text}");
+        assert!(text.contains(r#""snapshots":{"#), "{text}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bench_list_prints_the_registry() {
+        assert!(dispatch(&argv(&["bench", "--list"])).is_ok());
+        assert!(dispatch(&argv(&["bench", "list"])).is_ok());
+        // Pin the registry exactly (both directions): a mode added to
+        // BENCH_MODES or to cmd_bench's dispatch must update this list —
+        // and with it the Makefile BENCHES and the CI bench-smoke loop.
+        let names: Vec<&str> = BENCH_MODES.iter().map(|(n, _)| *n).collect();
+        assert_eq!(
+            names,
+            ["table1", "table1_exec", "fig2", "table2", "fig3", "table_dist", "table_ckpt"],
+            "bench registry changed: update cmd_bench, Makefile BENCHES, and ci.yml to match"
+        );
+        assert!(dispatch(&argv(&["bench", "nonsense"])).is_err());
+        // A literal "list" later in the argv must NOT hijack a real run
+        // (it is an ordinary flag value there); this still errors on the
+        // unknown mode rather than printing the registry.
+        assert!(dispatch(&argv(&["bench", "nonsense", "--csv", "list"])).is_err());
     }
 
     #[test]

@@ -183,6 +183,18 @@ impl Cluster {
         LocalityId(self.inner.rr.fetch_add(1, Ordering::Relaxed) % self.len())
     }
 
+    /// Round-robin over the *live* membership only — what a placement
+    /// layer that consumes the failure detector's view does. Falls back
+    /// to the plain round-robin when every locality is dead (the
+    /// submission then fails at the mailbox like any other attempt).
+    pub fn next_alive_target(&self) -> LocalityId {
+        let alive = self.alive_ids();
+        if alive.is_empty() {
+            return self.next_target();
+        }
+        alive[self.inner.rr.fetch_add(1, Ordering::Relaxed) % alive.len()]
+    }
+
     /// The ring successor of `id`.
     pub fn next_locality(&self, id: LocalityId) -> LocalityId {
         LocalityId((id.0 + 1) % self.len())

@@ -239,11 +239,27 @@ pub type DistBody<T> = Arc<dyn Fn(&Locality) -> TaskResult<T> + Send + Sync>;
 #[derive(Clone)]
 pub struct ClusterExecutor {
     cluster: Cluster,
+    /// Route standalone submissions over live localities only (the
+    /// membership-consuming placement mode of the checkpoint strategy;
+    /// see [`ClusterExecutor::alive_routed`]).
+    alive_only: bool,
 }
 
 impl ClusterExecutor {
     pub fn new(cluster: &Cluster) -> Self {
-        ClusterExecutor { cluster: cluster.clone() }
+        ClusterExecutor { cluster: cluster.clone(), alive_only: false }
+    }
+
+    /// A launcher that places standalone submissions on *live*
+    /// localities only, consuming the membership view the way a
+    /// [`FailureDetector`]-driven scheduler would. This is what the
+    /// checkpoint/restart strategy runs over: unlike replay (which
+    /// absorbs a dead-locality attempt as a retry) it has no per-task
+    /// retry to hide behind, so routing to a known corpse would poison a
+    /// task per launch. Decorated launches (`submit_seq`) keep the full
+    /// ring so the replay/replicate placement guarantees are unchanged.
+    pub fn alive_routed(cluster: &Cluster) -> Self {
+        ClusterExecutor { cluster: cluster.clone(), alive_only: true }
     }
 
     /// The cluster submissions are routed over.
@@ -257,7 +273,11 @@ impl crate::resilience::executor::TaskLauncher for ClusterExecutor {
         &self,
         body: crate::resilience::executor::TaskFn<T>,
     ) -> Future<T> {
-        let target = self.cluster.next_target();
+        let target = if self.alive_only {
+            self.cluster.next_alive_target()
+        } else {
+            self.cluster.next_target()
+        };
         self.cluster.run_on(target, move |_loc| body())
     }
 
@@ -497,6 +517,26 @@ mod tests {
         let f = ex.spawn_vote(vote_majority, || 42i64);
         assert_eq!(f.get(), Ok(42));
         assert_eq!(ex.concurrency(), 3);
+    }
+
+    #[test]
+    fn alive_routed_executor_never_places_on_a_corpse() {
+        use crate::resilience::executor::TaskLauncher;
+        let cl = cluster(3);
+        cl.kill(LocalityId(1));
+        let ex = ClusterExecutor::alive_routed(&cl);
+        let futs: Vec<Future<usize>> = (0..12)
+            .map(|_| ex.submit(Arc::new(|| Ok::<_, TaskError>(0usize))))
+            .collect();
+        for f in futs {
+            assert_eq!(f.get(), Ok(0), "alive routing must avoid the dead locality");
+        }
+        assert_eq!(cl.locality(LocalityId(1)).tasks_rejected(), 0);
+        // All dead: falls back to the plain ring and the attempt fails
+        // like any other (no panic, no spin).
+        cl.kill(LocalityId(0));
+        cl.kill(LocalityId(2));
+        assert!(ex.submit(Arc::new(|| Ok::<_, TaskError>(0usize))).get().is_err());
     }
 
     #[test]

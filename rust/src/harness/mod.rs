@@ -9,7 +9,27 @@ pub mod fig2;
 pub mod fig3;
 pub mod table1;
 pub mod table2;
+pub mod table_ckpt;
 pub mod table_dist;
+
+/// The bench registry: every `rhpx bench <mode>` the CLI accepts, with
+/// what it regenerates. `rhpx bench --list` prints exactly this list;
+/// the CLI dispatch, Makefile `BENCHES`, and the CI bench-smoke loop
+/// must name the same set (the CLI test pins the registry contents so
+/// an addition to either side forces the other to follow).
+pub const BENCH_MODES: &[(&str, &str)] = &[
+    ("table1", "Table I — resiliency API overheads (free functions)"),
+    ("table1_exec", "Table I-E — the same workload through the executor decorators"),
+    ("fig2", "Fig 2 — overhead vs error rate sweep"),
+    ("table2", "Table II — stencil wall time per resilient variant"),
+    ("fig3", "Fig 3 — stencil under swept error rates"),
+    ("table_dist", "distributed stencil survival under locality death"),
+    (
+        "table_ckpt",
+        "checkpoint/restart vs replay vs global C/R — re-executed work, snapshot bytes, \
+         recovery latency",
+    ),
+];
 
 use crate::error::TaskResult;
 use crate::metrics::Table;

@@ -1,0 +1,386 @@
+//! Bench harness: the resilience-strategy ablation around task-level
+//! checkpoint/restart — the number replay alone cannot produce is
+//! *re-executed work*: how many task executions a kill costs under each
+//! strategy, next to the snapshot bytes paid to get there.
+//!
+//! Five arms over one stencil geometry and one scheduled locality kill:
+//!
+//! 1. single-runtime pool, fault-free — wall-time and checksum
+//!    reference;
+//! 2. cluster + kill, `replay:3` — the paper's strategy: every
+//!    post-kill launch that lands on the corpse burns an attempt and
+//!    retries on the next locality;
+//! 3. cluster + kill, `checkpoint:K` sweep (K = 1, 2, 4; AGAS-replicated
+//!    snapshots) — snapshot cadence vs repair depth;
+//! 4. cluster + kill, `checkpoint:2` on the *disk* backend — the same
+//!    strategy paying persistent-storage I/O instead of AGAS
+//!    replication;
+//! 5. coordinated global C/R (`checkpoint::run_with_checkpoints`, §I's
+//!    strawman) — the same kill as a *global* failure: whole-state
+//!    rollback, every subdomain of every rolled-back iteration redone.
+//!
+//! Emitted per arm: wall time, re-executed tasks, snapshots
+//! saved/restored/lost, snapshot bytes, recovery latency, survival, and
+//! whether the checksum matches the reference. The bench binary
+//! (`cargo run --release --bin table_ckpt`) wraps this as
+//! `BENCH_table_ckpt.json`.
+
+use crate::checkpoint::{run_with_checkpoints, CheckpointStore, SnapshotData, Storage};
+use crate::metrics::{JsonValue, Stats, Table};
+use crate::runtime_handle::Runtime;
+use crate::stencil::{
+    build_extended, kernel, run, Chunk, ClusterSpec, Domain, ExecPolicy, SnapshotBackend,
+    StencilParams,
+};
+
+use super::HarnessOpts;
+
+/// Localities in the cluster arms.
+const LOCALITIES: usize = 4;
+/// Which locality the schedule kills.
+const KILL_LOC: usize = 2;
+/// Snapshot cadence of the global-C/R and disk arms (windows).
+const BASE_EVERY: usize = 2;
+
+/// One measured arm of the strategy ablation.
+#[derive(Debug, Clone)]
+pub struct CkptRow {
+    /// Arm id: `pool_ref`, `replay`, `checkpoint:K`, `checkpoint_disk`,
+    /// `global_cr`.
+    pub arm: String,
+    /// Substrate: `pool(N)`, `cluster(N)`, or `serial` (global C/R).
+    pub route: String,
+    /// Policy label.
+    pub policy: String,
+    /// Failures applied (scheduled kills, or the global failure).
+    pub kills: usize,
+    pub wall_secs: f64,
+    /// Work beyond one execution per DAG node (retries, repairs, redone
+    /// rollback iterations × subdomains).
+    pub tasks_reexecuted: u64,
+    pub snapshots_saved: u64,
+    pub snapshots_restored: u64,
+    pub snapshot_bytes: u64,
+    pub snapshots_lost: u64,
+    pub recovery_latency_secs: Option<f64>,
+    pub survival_rate: f64,
+    /// Final checksum bit-matches the fault-free reference run.
+    pub checksum_matches_pool: bool,
+    /// Percent extra wall time vs. the reference arm.
+    pub overhead_pct_vs_pool: f64,
+}
+
+/// The geometry shared by every arm (mirrors `table_dist`).
+fn params(opts: &HarnessOpts) -> StencilParams {
+    StencilParams {
+        iterations: ((1000.0 * opts.scale) as usize).max(10),
+        ..StencilParams::tiny()
+    }
+}
+
+/// Kill schedule shared by the faulty arms: locality [`KILL_LOC`] dies
+/// an eighth of the way through the task stream.
+fn kill_task(p: &StencilParams) -> usize {
+    (p.total_tasks() / 8).max(1)
+}
+
+fn kill_spec(p: &StencilParams) -> String {
+    format!("{LOCALITIES}:kill={}@{KILL_LOC}", kill_task(p))
+}
+
+/// Run one stencil arm `repeats` times; mean wall, last report.
+fn stencil_arm(
+    rt: &Runtime,
+    p: &StencilParams,
+    repeats: usize,
+    arm: &str,
+    ref_wall: f64,
+    ref_checksum: f64,
+) -> (CkptRow, f64, f64) {
+    let mut wall = Stats::new();
+    let mut last = None;
+    for _ in 0..repeats.max(1) {
+        let (_, rep) = run(rt, p).expect("table_ckpt arm failed to run");
+        wall.push(rep.wall_secs);
+        last = Some(rep);
+    }
+    let rep = last.expect("at least one repeat");
+    let mean = wall.mean();
+    let denom = if ref_wall > 0.0 { ref_wall } else { f64::MIN_POSITIVE };
+    let row = CkptRow {
+        arm: arm.to_string(),
+        route: rep.launcher.clone(),
+        policy: p.resilience.map(|r| r.label()).unwrap_or_else(|| "none".into()),
+        kills: rep.kills_applied,
+        wall_secs: mean,
+        tasks_reexecuted: rep.tasks_reexecuted,
+        snapshots_saved: rep.snapshots.saved,
+        snapshots_restored: rep.snapshots.restored,
+        snapshot_bytes: rep.snapshots.bytes,
+        snapshots_lost: rep.snapshots.lost,
+        recovery_latency_secs: rep.recovery_latency_secs,
+        survival_rate: rep.survival_rate(),
+        checksum_matches_pool: ref_wall == 0.0 || rep.final_checksum == ref_checksum,
+        overhead_pct_vs_pool: if ref_wall > 0.0 { 100.0 * (mean - ref_wall) / denom } else { 0.0 },
+    };
+    (row, mean, rep.final_checksum)
+}
+
+/// The coordinated global-C/R arm: the same geometry advanced serially
+/// under `run_with_checkpoints`, with the kill surfacing as a *global*
+/// failure at the iteration the cluster arms' kill task falls into.
+fn global_cr_arm(p: &StencilParams, ref_out: &[f64], ref_wall: f64) -> CkptRow {
+    let domain = Domain::sine(p.n_sub, p.nx);
+    let mut state: Vec<Vec<f64>> = domain.subdomains.iter().map(|c| (*c.data).clone()).collect();
+    let state_bytes = state.to_bytes().len() as u64;
+    let store = CheckpointStore::new(Storage::Memory);
+    let interval = (BASE_EVERY * p.window).max(1) as u64;
+    let fail_iter = (kill_task(p) / p.n_sub) as u64;
+    let steps = p.steps;
+    let courant = p.courant;
+    let n = p.n_sub;
+    let mut failed_once = false;
+
+    let timer = crate::metrics::Timer::start();
+    let rep = run_with_checkpoints(&mut state, p.iterations as u64, interval, &store, |i, s| {
+        if i == fail_iter && !failed_once {
+            failed_once = true;
+            // Under coordinated C/R a locality death is a *global*
+            // failure: everything rolls back.
+            return Err("locality death (global under coordinated C/R)".into());
+        }
+        let chunks: Vec<Chunk> = s.iter().map(|d| Chunk::new(d.clone())).collect();
+        let mut next = Vec::with_capacity(n);
+        for j in 0..n {
+            let ext = build_extended(
+                &chunks[(j + n - 1) % n],
+                &chunks[j],
+                &chunks[(j + 1) % n],
+                steps,
+            );
+            next.push(kernel::lax_wendroff_multistep_owned(ext, steps, courant));
+        }
+        *s = next;
+        Ok(())
+    })
+    .expect("global C/R arm failed to run");
+    let wall = timer.elapsed_secs();
+
+    let out: Vec<f64> = state.iter().flatten().copied().collect();
+    CkptRow {
+        arm: "global_cr".to_string(),
+        route: "serial".to_string(),
+        policy: format!("global_cr(interval {interval})"),
+        kills: 1,
+        wall_secs: wall,
+        // Every redone rollback iteration re-executes all subdomains —
+        // the cost structure task-level checkpointing avoids.
+        tasks_reexecuted: rep.redone * n as u64,
+        snapshots_saved: rep.checkpoints,
+        snapshots_restored: rep.rollbacks,
+        snapshot_bytes: rep.checkpoints * state_bytes,
+        snapshots_lost: 0,
+        recovery_latency_secs: None,
+        survival_rate: 1.0,
+        checksum_matches_pool: out == ref_out,
+        overhead_pct_vs_pool: if ref_wall > 0.0 {
+            100.0 * (wall - ref_wall) / ref_wall
+        } else {
+            0.0
+        },
+    }
+}
+
+/// Run the five-arm (seven-row) ablation. Worker parity follows
+/// `table_dist`: the cluster arms spread `opts.workers` across
+/// localities and the pool reference runs on the same total.
+pub fn run_table_ckpt(opts: &HarnessOpts) -> Vec<CkptRow> {
+    let wpl = (opts.workers / LOCALITIES).max(1);
+    let rt = Runtime::builder().workers(LOCALITIES * wpl).build();
+    let base = params(opts);
+    let faulty = kill_spec(&base);
+    let clustered = |resilience: Option<ExecPolicy>| -> StencilParams {
+        let mut spec = ClusterSpec::parse(&faulty).expect("arm spec parses");
+        spec.workers_per_locality = wpl;
+        StencilParams { cluster: Some(spec), resilience, ..base.clone() }
+    };
+
+    let mut rows = Vec::new();
+
+    // Arm 1: the fault-free pool reference.
+    let (mut ref_row, ref_wall, ref_checksum) =
+        stencil_arm(&rt, &base, opts.repeats, "pool_ref", 0.0, 0.0);
+    ref_row.checksum_matches_pool = true;
+    rows.push(ref_row);
+    let (ref_out, _) = run(&rt, &base).expect("reference gather");
+
+    // Arm 2: replay — the comparator checkpointing must beat on
+    // re-executed work.
+    let p = clustered(Some(ExecPolicy::Replay { n: 3 }));
+    rows.push(stencil_arm(&rt, &p, opts.repeats, "replay", ref_wall, ref_checksum).0);
+
+    // Arm 3: the checkpoint:K cadence sweep (AGAS-replicated snapshots).
+    for every in [1usize, 2, 4] {
+        let p = clustered(Some(ExecPolicy::Checkpoint { every, backend: SnapshotBackend::Auto }));
+        let arm = format!("checkpoint:{every}");
+        rows.push(stencil_arm(&rt, &p, opts.repeats, &arm, ref_wall, ref_checksum).0);
+    }
+
+    // Arm 4: the disk backend at the base cadence.
+    let p = clustered(Some(ExecPolicy::Checkpoint {
+        every: BASE_EVERY,
+        backend: SnapshotBackend::Disk,
+    }));
+    rows.push(stencil_arm(&rt, &p, opts.repeats, "checkpoint_disk", ref_wall, ref_checksum).0);
+
+    // Arm 5: the coordinated global-C/R strawman.
+    rows.push(global_cr_arm(&base, &ref_out, ref_wall));
+
+    rows
+}
+
+/// Render the rows as the printable harness table.
+pub fn to_table(rows: &[CkptRow]) -> Table {
+    let mut t = Table::new(
+        "Table-Ckpt: replay vs task-level checkpoint/restart vs global C/R",
+        &[
+            "arm", "route", "policy", "kills", "wall_s", "reexec", "snap_saved",
+            "snap_restored", "snap_bytes", "snap_lost", "recovery_ms", "survival_pct",
+            "checksum_ok", "overhead_pct",
+        ],
+    );
+    for r in rows {
+        t.add([
+            r.arm.clone(),
+            r.route.clone(),
+            r.policy.clone(),
+            r.kills.to_string(),
+            format!("{:.3}", r.wall_secs),
+            r.tasks_reexecuted.to_string(),
+            r.snapshots_saved.to_string(),
+            r.snapshots_restored.to_string(),
+            r.snapshot_bytes.to_string(),
+            r.snapshots_lost.to_string(),
+            r.recovery_latency_secs
+                .map(|s| format!("{:.2}", s * 1e3))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.1}", 100.0 * r.survival_rate),
+            r.checksum_matches_pool.to_string(),
+            format!("{:+.1}", r.overhead_pct_vs_pool),
+        ]);
+    }
+    t
+}
+
+/// The machine-readable payload for `BENCH_table_ckpt.json`.
+pub fn to_json(rows: &[CkptRow]) -> JsonValue {
+    JsonValue::obj([
+        (
+            "rows".to_string(),
+            JsonValue::Arr(
+                rows.iter()
+                    .map(|r| {
+                        JsonValue::obj([
+                            ("arm".to_string(), JsonValue::from(r.arm.clone())),
+                            ("route".to_string(), JsonValue::from(r.route.clone())),
+                            ("policy".to_string(), JsonValue::from(r.policy.clone())),
+                            ("kills".to_string(), JsonValue::from(r.kills)),
+                            ("wall_secs".to_string(), JsonValue::from(r.wall_secs)),
+                            (
+                                "tasks_reexecuted".to_string(),
+                                JsonValue::from(r.tasks_reexecuted),
+                            ),
+                            (
+                                "snapshots_saved".to_string(),
+                                JsonValue::from(r.snapshots_saved),
+                            ),
+                            (
+                                "snapshots_restored".to_string(),
+                                JsonValue::from(r.snapshots_restored),
+                            ),
+                            ("snapshot_bytes".to_string(), JsonValue::from(r.snapshot_bytes)),
+                            ("snapshots_lost".to_string(), JsonValue::from(r.snapshots_lost)),
+                            (
+                                "recovery_latency_secs".to_string(),
+                                r.recovery_latency_secs
+                                    .map(JsonValue::from)
+                                    .unwrap_or(JsonValue::Null),
+                            ),
+                            ("survival_rate".to_string(), JsonValue::from(r.survival_rate)),
+                            (
+                                "checksum_matches_pool".to_string(),
+                                JsonValue::from(r.checksum_matches_pool),
+                            ),
+                            (
+                                "overhead_pct_vs_pool".to_string(),
+                                JsonValue::from(r.overhead_pct_vs_pool),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("table".to_string(), to_table(rows).to_json()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_ckpt_smoke_tells_the_strategy_story() {
+        let opts = HarnessOpts { scale: 0.01, repeats: 1, workers: 2, ..Default::default() };
+        let rows = run_table_ckpt(&opts);
+        assert_eq!(rows.len(), 7, "5 arms = 7 rows (checkpoint sweep is 3)");
+
+        let reference = &rows[0];
+        assert!(reference.route.starts_with("pool("));
+        assert_eq!(reference.survival_rate, 1.0);
+
+        let replay = &rows[1];
+        assert_eq!(replay.kills, 1);
+        assert_eq!(replay.survival_rate, 1.0);
+        assert!(replay.checksum_matches_pool, "replay must reproduce the reference");
+        assert!(replay.tasks_reexecuted > 0, "replay must pay re-routed attempts");
+        assert_eq!(replay.snapshots_saved, 0, "replay persists nothing");
+
+        // Every checkpoint row: survived, checksum-identical, snapshots
+        // paid, and strictly less re-executed work than replay — the
+        // headline number of the subsystem.
+        for r in &rows[2..=5] {
+            assert_eq!(r.kills, 1, "{}", r.arm);
+            assert_eq!(r.survival_rate, 1.0, "{}", r.arm);
+            assert!(r.checksum_matches_pool, "{} diverged from reference", r.arm);
+            assert!(r.snapshots_saved > 0, "{} must snapshot", r.arm);
+            assert!(
+                r.tasks_reexecuted < replay.tasks_reexecuted,
+                "{} re-executed {} vs replay {}",
+                r.arm,
+                r.tasks_reexecuted,
+                replay.tasks_reexecuted
+            );
+            assert_eq!(r.snapshots_lost, 0, "{}: replicated/disk snapshots survive", r.arm);
+        }
+        // Cadence: snapshotting every window persists at least as much
+        // as every 4 windows.
+        assert!(rows[2].snapshot_bytes >= rows[4].snapshot_bytes);
+        assert!(rows[5].policy.contains("disk"));
+
+        let cr = &rows[6];
+        assert_eq!(cr.arm, "global_cr");
+        assert!(cr.checksum_matches_pool, "global C/R must still be exact");
+        assert!(
+            cr.tasks_reexecuted > 0,
+            "the global rollback must redo whole iterations"
+        );
+        assert!(cr.snapshot_bytes > 0);
+
+        let json = to_json(&rows).render();
+        assert!(json.contains(r#""arm":"checkpoint:2""#), "{json}");
+        assert!(json.contains(r#""tasks_reexecuted""#), "{json}");
+        assert!(json.contains(r#""snapshot_bytes""#), "{json}");
+        let t = to_table(&rows);
+        assert_eq!(t.to_csv().lines().count(), 8, "header + 7 rows");
+    }
+}

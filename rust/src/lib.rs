@@ -22,7 +22,7 @@
 //!
 //! | Paper section | Reproduced by |
 //! |---|---|
-//! | §I motivation: C/R rollback vs localized recovery | [`checkpoint`] (the coordinated-C/R baseline the ablation bench compares against) |
+//! | §I motivation: C/R rollback vs localized recovery | [`checkpoint`] (the coordinated-C/R baseline + shared [`checkpoint::store`] backends), [`resilience::checkpoint`] (task-level checkpoint/restart with AGAS-replicated snapshots — the middle ground; compared by [`harness::table_ckpt`]) |
 //! | §II/§III HPX runtime components (scheduler, futures, AGAS, networking) | [`scheduler`], [`future`], [`agas`], [`distributed`] (active-message layer), [`config`], [`perfcounters`] |
 //! | §III-B failure definition (thrown errors, rejected validations) | [`error`] ([`TaskError`], [`ResilienceError`]) |
 //! | §IV-A task replay (Listing 1) | [`resilience`] `async_replay*`/`dataflow_replay*` |

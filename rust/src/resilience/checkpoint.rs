@@ -1,0 +1,771 @@
+//! Task-level checkpoint/restart — the third resilience strategy.
+//!
+//! The paper's §I argues coordinated global C/R is too expensive at
+//! extreme scale and answers with task replay/replication. This module
+//! implements the middle ground the resilience-design-pattern catalog
+//! calls *checkpoint-recovery composed with rollback at task scope*: a
+//! failed task restarts from its last validated snapshot instead of
+//! re-executing the whole retry chain — completing the strategy triangle
+//! (replay / replicate / checkpoint-restart) next to
+//! [`super::executor`]'s decorators.
+//!
+//! Three pieces:
+//!
+//! * [`CheckpointExecutor`] — a decorator over any
+//!   [`TaskLauncher`]: `spawn_checkpointed(key, task)` consults the
+//!   snapshot store first (hit → the snapshot is returned without
+//!   executing — or even waiting on dependencies, for the dataflow
+//!   variants), and a computed result is validated with the existing
+//!   predicate machinery *before* it is persisted, so a checkpoint can
+//!   never launder a silently corrupted result into a restore point.
+//! * [`Snapshots`] — the counter-instrumented store handle shared by
+//!   executors and drivers; publishes
+//!   `/checkpoint/<name>/count/{saved,restored,bytes,lost}` through
+//!   [`crate::perfcounters`].
+//! * [`AgasSnapshotStore`] — the distributed backend: every snapshot is
+//!   registered as replicated AGAS components
+//!   ([`crate::agas::Agas::register_replicated`]) homed on distinct live
+//!   localities, so a locality death touches at most one replica; the
+//!   survivors are re-homed off the corpse via
+//!   [`crate::agas::Agas::migrate`], and only snapshots whose *every*
+//!   replica was homed on dead localities are counted lost.
+//!
+//! The stencil driver composes these into `--resilience checkpoint:K`
+//! (snapshot every K wavefront windows, cone-bounded delta replay on
+//! locality death) — see [`crate::stencil`] and `docs/ARCHITECTURE.md`
+//! ("Choosing a resilience strategy").
+//!
+//! ```
+//! use std::sync::atomic::{AtomicUsize, Ordering};
+//! use std::sync::Arc;
+//!
+//! use rhpx::checkpoint::MemorySnapshotStore;
+//! use rhpx::resilience::checkpoint::CheckpointExecutor;
+//! use rhpx::resilience::executor::PoolExecutor;
+//! use rhpx::Runtime;
+//!
+//! let rt = Runtime::builder().workers(2).build();
+//! let exec = CheckpointExecutor::new(
+//!     PoolExecutor::new(&rt),
+//!     Arc::new(MemorySnapshotStore::new()),
+//!     "doc",
+//! );
+//! let runs = Arc::new(AtomicUsize::new(0));
+//! let r = Arc::clone(&runs);
+//! let task = move || {
+//!     r.fetch_add(1, Ordering::SeqCst);
+//!     vec![42.0f64]
+//! };
+//! assert_eq!(exec.spawn_checkpointed("t0", task.clone()).get().unwrap(), vec![42.0]);
+//! // Second launch under the same key: served from the snapshot store.
+//! assert_eq!(exec.spawn_checkpointed("t0", task).get().unwrap(), vec![42.0]);
+//! assert_eq!(runs.load(Ordering::SeqCst), 1);
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::agas::{Gid, LocalityId};
+use crate::api::{run_task_body, IntoTaskResult};
+use crate::checkpoint::store::{SnapshotData, SnapshotStore};
+use crate::distributed::Cluster;
+use crate::error::{TaskError, TaskResult};
+use crate::future::{Future, Promise};
+use crate::perfcounters::{global, Instrument};
+
+use super::executor::{
+    base_spawn_into, with_resolved_deps, ResilientExecutor, TaskFn, TaskLauncher, TaskValidator,
+};
+
+// ---------------------------------------------------------------------
+// Snapshots: the counter-instrumented store handle
+// ---------------------------------------------------------------------
+
+/// Point-in-time snapshot-traffic totals of a [`Snapshots`] handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SnapshotCounts {
+    /// Snapshots persisted.
+    pub saved: u64,
+    /// Snapshots served back (store-first hits and recovery restores).
+    pub restored: u64,
+    /// Cumulative serialized bytes persisted.
+    pub bytes: u64,
+    /// Snapshots irrecoverably lost (every replica on a dead locality).
+    pub lost: u64,
+}
+
+/// A typed, counter-instrumented handle over a [`SnapshotStore`].
+///
+/// All checkpoint traffic of one subsystem instance flows through one
+/// `Snapshots`, which keeps per-run totals (for reports) and mirrors
+/// them into the global perfcounter registry under
+/// `/checkpoint/<name>/count/{saved,restored,bytes,lost}`.
+pub struct Snapshots {
+    store: Arc<dyn SnapshotStore>,
+    saved: AtomicU64,
+    restored: AtomicU64,
+    bytes: AtomicU64,
+    c_saved: Arc<Instrument>,
+    c_restored: Arc<Instrument>,
+    c_bytes: Arc<Instrument>,
+    c_lost: Arc<Instrument>,
+}
+
+impl Snapshots {
+    /// Wrap `store`; `name` namespaces the perfcounters.
+    pub fn new(store: Arc<dyn SnapshotStore>, name: &str) -> Self {
+        let reg = global();
+        let base = format!("/checkpoint/{name}");
+        Snapshots {
+            store,
+            saved: AtomicU64::new(0),
+            restored: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            c_saved: reg.counter(&format!("{base}/count/saved")),
+            c_restored: reg.counter(&format!("{base}/count/restored")),
+            c_bytes: reg.counter(&format!("{base}/count/bytes")),
+            c_lost: reg.gauge(&format!("{base}/count/lost")),
+        }
+    }
+
+    /// The wrapped store.
+    pub fn store(&self) -> &Arc<dyn SnapshotStore> {
+        &self.store
+    }
+
+    /// Serialize and persist `value` under `key`.
+    pub fn save_value<T: SnapshotData>(&self, key: &str, value: &T) -> TaskResult<()> {
+        let bytes = value.to_bytes();
+        self.store.save(key, &bytes)?;
+        self.saved.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        self.c_saved.increment(1);
+        self.c_bytes.increment(bytes.len() as u64);
+        Ok(())
+    }
+
+    /// Load, decode, and (when a predicate is given) validate a
+    /// snapshot. Counts a restore only when a usable value is returned;
+    /// an undecodable or invalid snapshot is *dropped* from the store so
+    /// it is never consulted again — the caller recomputes.
+    pub fn restore_value<T: SnapshotData>(
+        &self,
+        key: &str,
+        validate: Option<&TaskValidator<T>>,
+    ) -> Option<T> {
+        let bytes = self.store.load(key)?;
+        match T::from_bytes(&bytes) {
+            Some(v) if validate.map(|check| check(&v)).unwrap_or(true) => {
+                self.restored.fetch_add(1, Ordering::Relaxed);
+                self.c_restored.increment(1);
+                Some(v)
+            }
+            _ => {
+                self.store.remove(key);
+                None
+            }
+        }
+    }
+
+    /// Whether a readable snapshot exists under `key`.
+    pub fn contains(&self, key: &str) -> bool {
+        self.store.contains(key)
+    }
+
+    /// Membership hook: propagate a locality death to the backend (the
+    /// AGAS store drops/re-homes replicas) and refresh the loss gauge.
+    pub fn on_locality_killed(&self, loc: LocalityId) {
+        self.store.on_locality_killed(loc);
+        self.c_lost.set(self.store.lost());
+    }
+
+    /// Current totals (refreshes the loss gauge from the backend).
+    pub fn counts(&self) -> SnapshotCounts {
+        let lost = self.store.lost();
+        self.c_lost.set(lost);
+        SnapshotCounts {
+            saved: self.saved.load(Ordering::Relaxed),
+            restored: self.restored.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            lost,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// CheckpointExecutor<E>
+// ---------------------------------------------------------------------
+
+/// Decorator: keyed launches are memoized through a snapshot store —
+/// §I's checkpoint/restart re-grained to the task level, as a launch
+/// policy over any [`TaskLauncher`].
+///
+/// `spawn_checkpointed(key, task)` consults the store first: a hit
+/// returns the snapshot without executing (the dataflow variants do not
+/// even wait for their dependencies), a miss executes on the wrapped
+/// launcher, validates the result with the usual predicate machinery,
+/// and persists it *only* if validation accepted it. Un-keyed launches
+/// (the plain [`ResilientExecutor`] surface) pass through undecorated —
+/// without an identity there is nothing to restore by.
+#[derive(Clone)]
+pub struct CheckpointExecutor<E: TaskLauncher> {
+    base: E,
+    snaps: Arc<Snapshots>,
+}
+
+impl<E: TaskLauncher> CheckpointExecutor<E> {
+    /// Checkpoint through `store`; `name` namespaces the perfcounters.
+    pub fn new(base: E, store: Arc<dyn SnapshotStore>, name: &str) -> Self {
+        CheckpointExecutor { base, snaps: Arc::new(Snapshots::new(store, name)) }
+    }
+
+    /// Share an existing [`Snapshots`] handle (drivers that also read
+    /// the store directly during recovery use this).
+    pub fn with_snapshots(base: E, snaps: Arc<Snapshots>) -> Self {
+        CheckpointExecutor { base, snaps }
+    }
+
+    /// The snapshot handle (stats, direct restores).
+    pub fn snapshots(&self) -> &Arc<Snapshots> {
+        &self.snaps
+    }
+
+    /// The wrapped launcher.
+    pub fn base(&self) -> &E {
+        &self.base
+    }
+
+    /// Keyed launch: snapshot hit → returned without executing; miss →
+    /// execute on the base launcher and persist the result.
+    pub fn spawn_checkpointed<T, R, F>(&self, key: &str, f: F) -> Future<T>
+    where
+        T: SnapshotData + Clone + Send + 'static,
+        R: IntoTaskResult<T>,
+        F: Fn() -> R + Send + Sync + 'static,
+    {
+        let (p, fut) = Promise::new();
+        self.checkpointed_into(key, p, Arc::new(move || run_task_body(&f)), None);
+        fut
+    }
+
+    /// As [`CheckpointExecutor::spawn_checkpointed`], with a validation
+    /// predicate: a rejected result fails the launch *and is never
+    /// persisted*; a stored snapshot that no longer validates is dropped
+    /// and recomputed.
+    pub fn spawn_checkpointed_validate<T, R, F, V>(&self, key: &str, val_f: V, f: F) -> Future<T>
+    where
+        T: SnapshotData + Clone + Send + 'static,
+        R: IntoTaskResult<T>,
+        F: Fn() -> R + Send + Sync + 'static,
+        V: Fn(&T) -> bool + Send + Sync + 'static,
+    {
+        let (p, fut) = Promise::new();
+        self.checkpointed_into(key, p, Arc::new(move || run_task_body(&f)), Some(Arc::new(val_f)));
+        fut
+    }
+
+    /// Keyed dataflow: a snapshot hit resolves immediately without
+    /// waiting on `deps` (a restart pass flows straight past completed
+    /// tasks); a miss resolves the dependencies, executes, validates,
+    /// and persists.
+    pub fn dataflow_checkpointed<T, U, R, F>(
+        &self,
+        key: &str,
+        f: F,
+        deps: Vec<Future<T>>,
+    ) -> Future<U>
+    where
+        T: Clone + Send + Sync + 'static,
+        U: SnapshotData + Clone + Send + 'static,
+        R: IntoTaskResult<U>,
+        F: Fn(&[T]) -> R + Send + Sync + 'static,
+    {
+        self.dataflow_ck(key, None, f, deps)
+    }
+
+    /// As [`CheckpointExecutor::dataflow_checkpointed`], with a
+    /// validation predicate applied to both restored snapshots and fresh
+    /// results.
+    pub fn dataflow_checkpointed_validate<T, U, R, F, V>(
+        &self,
+        key: &str,
+        val_f: V,
+        f: F,
+        deps: Vec<Future<T>>,
+    ) -> Future<U>
+    where
+        T: Clone + Send + Sync + 'static,
+        U: SnapshotData + Clone + Send + 'static,
+        R: IntoTaskResult<U>,
+        F: Fn(&[T]) -> R + Send + Sync + 'static,
+        V: Fn(&U) -> bool + Send + Sync + 'static,
+    {
+        self.dataflow_ck(key, Some(Arc::new(val_f)), f, deps)
+    }
+
+    fn dataflow_ck<T, U, R, F>(
+        &self,
+        key: &str,
+        validate: Option<TaskValidator<U>>,
+        f: F,
+        deps: Vec<Future<T>>,
+    ) -> Future<U>
+    where
+        T: Clone + Send + Sync + 'static,
+        U: SnapshotData + Clone + Send + 'static,
+        R: IntoTaskResult<U>,
+        F: Fn(&[T]) -> R + Send + Sync + 'static,
+    {
+        if let Some(v) = self.snaps.restore_value(key, validate.as_ref()) {
+            return Future::ready(Ok(v));
+        }
+        let ex = self.clone();
+        let key = key.to_string();
+        with_resolved_deps(f, deps, move |p, body| ex.checkpointed_into(&key, p, body, validate))
+    }
+
+    fn checkpointed_into<T>(
+        &self,
+        key: &str,
+        promise: Promise<T>,
+        body: TaskFn<T>,
+        validate: Option<TaskValidator<T>>,
+    ) where
+        T: SnapshotData + Clone + Send + 'static,
+    {
+        if let Some(v) = self.snaps.restore_value(key, validate.as_ref()) {
+            promise.set_value(v);
+            return;
+        }
+        let snaps = Arc::clone(&self.snaps);
+        let key = key.to_string();
+        self.base.submit(body).on_ready(move |r| match r {
+            Ok(v) => match &validate {
+                Some(check) if !check(v) => promise.set_error(TaskError::ValidationRejected),
+                _ => {
+                    // Persist only validated results. A save failure
+                    // costs durability, not correctness: the task still
+                    // succeeds, and a later restart simply recomputes.
+                    let _ = snaps.save_value(&key, v);
+                    promise.set_value(v.clone());
+                }
+            },
+            Err(e) => promise.set_error(e.clone()),
+        });
+    }
+}
+
+impl<E: TaskLauncher> ResilientExecutor for CheckpointExecutor<E> {
+    fn spawn_into<T>(
+        &self,
+        promise: Promise<T>,
+        body: TaskFn<T>,
+        validate: Option<TaskValidator<T>>,
+    ) where
+        T: Clone + Send + 'static,
+    {
+        // Un-keyed launches have no identity to restore by: single
+        // attempt straight through the base launcher.
+        base_spawn_into(&self.base, promise, body, validate);
+    }
+
+    fn concurrency(&self) -> usize {
+        self.base.parallelism()
+    }
+
+    fn label(&self) -> String {
+        format!("checkpoint({}) over {}", self.snaps.store().label(), self.base.base_label())
+    }
+}
+
+// ---------------------------------------------------------------------
+// AgasSnapshotStore: replicated, locality-death-aware persistence
+// ---------------------------------------------------------------------
+
+/// The distributed snapshot backend: each snapshot's bytes are
+/// registered as `replicas` AGAS components homed on *distinct live*
+/// localities, so one locality death can touch at most one replica.
+///
+/// On a kill ([`SnapshotStore::on_locality_killed`], wired to the
+/// driver's `FaultSchedule`), replicas homed on the corpse that still
+/// have a live sibling are re-homed onto a live locality via
+/// [`crate::agas::Agas::migrate`] — modeling re-replication from the
+/// surviving copy. A snapshot whose *every* replica was homed on dead
+/// localities is gone: it is dropped and counted in
+/// [`SnapshotStore::lost`] (reads discover the same loss lazily when no
+/// detector ran). Lost snapshots are exactly what forces the driver to
+/// replay deeper — "restart only the tasks whose snapshots were lost".
+pub struct AgasSnapshotStore {
+    cluster: Cluster,
+    replicas: usize,
+    cursor: AtomicUsize,
+    index: Mutex<HashMap<String, Vec<Gid>>>,
+    lost: AtomicU64,
+}
+
+impl AgasSnapshotStore {
+    /// Replicate every snapshot `replicas` times across the cluster's
+    /// live localities (clamped to the live count at save time).
+    pub fn new(cluster: &Cluster, replicas: usize) -> Self {
+        AgasSnapshotStore {
+            cluster: cluster.clone(),
+            replicas: replicas.max(1),
+            cursor: AtomicUsize::new(0),
+            index: Mutex::new(HashMap::new()),
+            lost: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured replication factor.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    fn gid_is_live(&self, gid: Gid) -> bool {
+        self.cluster
+            .agas()
+            .locate_with_generation(gid)
+            .is_some_and(|(home, _)| self.cluster.locality(home).is_alive())
+    }
+
+    /// Up to `replicas` distinct live homes, rotated so successive
+    /// snapshots spread across the cluster.
+    fn live_homes(&self) -> Vec<LocalityId> {
+        let alive = self.cluster.alive_ids();
+        if alive.is_empty() {
+            return Vec::new();
+        }
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed) % alive.len();
+        (0..self.replicas.min(alive.len())).map(|i| alive[(start + i) % alive.len()]).collect()
+    }
+
+    /// Declare `key` irrecoverable *if* its registration is still the
+    /// one the caller observed: drop it and count the loss once. The
+    /// guard closes a save/load race — a reader that resolved a stale
+    /// gid list (concurrently replaced by a fresh `save`) must not
+    /// destroy the just-persisted replacement.
+    fn mark_lost_if(&self, key: &str, observed: &[Gid]) {
+        let removed = {
+            let mut index = self.index.lock().unwrap();
+            if index.get(key).is_some_and(|current| current.as_slice() == observed) {
+                index.remove(key)
+            } else {
+                None
+            }
+        };
+        if let Some(gids) = removed {
+            for gid in gids {
+                self.cluster.agas().unregister(gid);
+            }
+            self.lost.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl SnapshotStore for AgasSnapshotStore {
+    fn save(&self, key: &str, bytes: &[u8]) -> TaskResult<()> {
+        let homes = self.live_homes();
+        if homes.is_empty() {
+            return Err(TaskError::Runtime(
+                "agas snapshot store: no live locality to home a replica".into(),
+            ));
+        }
+        let gids = self.cluster.agas().register_replicated(&homes, bytes.to_vec());
+        let old = self.index.lock().unwrap().insert(key.to_string(), gids);
+        if let Some(old) = old {
+            for gid in old {
+                self.cluster.agas().unregister(gid);
+            }
+        }
+        Ok(())
+    }
+
+    fn load(&self, key: &str) -> Option<Vec<u8>> {
+        let gids = self.index.lock().unwrap().get(key)?.clone();
+        for gid in &gids {
+            if self.gid_is_live(*gid) {
+                if let Some(bytes) = self.cluster.agas().resolve::<Vec<u8>>(*gid) {
+                    return Some((*bytes).clone());
+                }
+            }
+        }
+        // Lazily discovered loss: every replica is homed on a corpse.
+        self.mark_lost_if(key, &gids);
+        None
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        // Pure membership probe: no lazy-loss side effect.
+        self.index
+            .lock()
+            .unwrap()
+            .get(key)
+            .is_some_and(|gids| gids.iter().any(|gid| self.gid_is_live(*gid)))
+    }
+
+    fn remove(&self, key: &str) -> bool {
+        match self.index.lock().unwrap().remove(key) {
+            Some(gids) => {
+                for gid in gids {
+                    self.cluster.agas().unregister(gid);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.index.lock().unwrap().len()
+    }
+
+    fn lost(&self) -> u64 {
+        self.lost.load(Ordering::Relaxed)
+    }
+
+    /// `loc` died: re-home its replicas that still have a live sibling
+    /// (re-replication from the surviving copy, expressed as an AGAS
+    /// migration); drop and count snapshots with no live replica left.
+    fn on_locality_killed(&self, loc: LocalityId) {
+        let agas = self.cluster.agas().clone();
+        let mut dead_keys: Vec<(String, Vec<Gid>)> = Vec::new();
+        {
+            let index = self.index.lock().unwrap();
+            for (key, gids) in index.iter() {
+                let any_live = gids.iter().any(|gid| self.gid_is_live(*gid));
+                if !any_live {
+                    dead_keys.push((key.clone(), gids.clone()));
+                    continue;
+                }
+                // Live homes already holding this key (avoid doubling up).
+                let live_homes: Vec<LocalityId> = gids
+                    .iter()
+                    .filter_map(|gid| agas.locate(*gid))
+                    .filter(|home| self.cluster.locality(*home).is_alive())
+                    .collect();
+                for gid in gids {
+                    let Some(home) = agas.locate(*gid) else { continue };
+                    if self.cluster.locality(home).is_alive() {
+                        continue;
+                    }
+                    let target = self
+                        .cluster
+                        .alive_ids()
+                        .into_iter()
+                        .find(|id| !live_homes.contains(id))
+                        .or_else(|| self.cluster.alive_ids().first().copied());
+                    if let Some(target) = target {
+                        agas.migrate(*gid, target);
+                    }
+                }
+            }
+        }
+        for (key, observed) in dead_keys {
+            self.mark_lost_if(&key, &observed);
+        }
+        let _ = loc; // kills are discovered through cluster liveness
+    }
+
+    fn label(&self) -> String {
+        format!("agas(x{})", self.replicas)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::MemorySnapshotStore;
+    use crate::distributed::NetworkConfig;
+    use crate::resilience::executor::PoolExecutor;
+    use crate::runtime_handle::Runtime;
+    use std::sync::atomic::AtomicUsize;
+
+    fn exec(name: &str) -> CheckpointExecutor<PoolExecutor> {
+        let rt = Runtime::builder().workers(2).build();
+        CheckpointExecutor::new(
+            PoolExecutor::new(&rt),
+            Arc::new(MemorySnapshotStore::new()),
+            name,
+        )
+    }
+
+    #[test]
+    fn spawn_checkpointed_memoizes_by_key() {
+        let ex = exec("test_memo");
+        let runs = Arc::new(AtomicUsize::new(0));
+        let task = {
+            let r = Arc::clone(&runs);
+            move || {
+                r.fetch_add(1, Ordering::SeqCst);
+                vec![7.0f64]
+            }
+        };
+        assert_eq!(ex.spawn_checkpointed("a", task.clone()).get().unwrap(), vec![7.0]);
+        assert_eq!(ex.spawn_checkpointed("a", task.clone()).get().unwrap(), vec![7.0]);
+        assert_eq!(runs.load(Ordering::SeqCst), 1, "second launch must hit the snapshot");
+        // A different key is a different task identity.
+        assert_eq!(ex.spawn_checkpointed("b", task).get().unwrap(), vec![7.0]);
+        assert_eq!(runs.load(Ordering::SeqCst), 2);
+        let counts = ex.snapshots().counts();
+        assert_eq!(counts.saved, 2);
+        assert_eq!(counts.restored, 1);
+        assert!(counts.bytes >= 16);
+    }
+
+    #[test]
+    fn rejected_results_are_never_persisted() {
+        let ex = exec("test_reject");
+        let f = ex.spawn_checkpointed_validate("bad", |v: &Vec<f64>| v[0] > 0.0, || vec![-1.0f64]);
+        assert_eq!(f.get(), Err(TaskError::ValidationRejected));
+        assert!(!ex.snapshots().contains("bad"), "a rejected result must not be a restore point");
+        assert_eq!(ex.snapshots().counts().saved, 0);
+    }
+
+    #[test]
+    fn invalid_stored_snapshot_is_dropped_and_recomputed() {
+        let ex = exec("test_stale");
+        // Plant a snapshot that the predicate rejects.
+        ex.snapshots().save_value("k", &vec![-5.0f64]).unwrap();
+        let runs = Arc::new(AtomicUsize::new(0));
+        let r = Arc::clone(&runs);
+        let f = ex.spawn_checkpointed_validate("k", |v: &Vec<f64>| v[0] > 0.0, move || {
+            r.fetch_add(1, Ordering::SeqCst);
+            vec![3.0f64]
+        });
+        assert_eq!(f.get().unwrap(), vec![3.0]);
+        assert_eq!(runs.load(Ordering::SeqCst), 1, "invalid snapshot must be recomputed");
+        // The store now holds the recomputed, valid value.
+        let validator: TaskValidator<Vec<f64>> = Arc::new(|v: &Vec<f64>| v[0] > 0.0);
+        assert_eq!(
+            ex.snapshots().restore_value::<Vec<f64>>("k", Some(&validator)),
+            Some(vec![3.0])
+        );
+    }
+
+    #[test]
+    fn dataflow_hit_resolves_without_waiting_on_dependencies() {
+        let ex = exec("test_dfhit");
+        ex.snapshots().save_value("df", &vec![9.0f64]).unwrap();
+        // A dependency that never resolves: a hit must not wait for it.
+        let (_pending, dep) = Promise::<Vec<f64>>::new();
+        let f = ex.dataflow_checkpointed("df", |deps: &[Vec<f64>]| deps[0].clone(), vec![dep]);
+        assert_eq!(f.get().unwrap(), vec![9.0]);
+        assert_eq!(ex.snapshots().counts().restored, 1);
+    }
+
+    #[test]
+    fn dataflow_miss_executes_validates_and_persists() {
+        let ex = exec("test_dfmiss");
+        let rt = Runtime::builder().workers(2).build();
+        let dep = crate::api::async_(&rt, || vec![2.0f64]);
+        let f = ex.dataflow_checkpointed_validate(
+            "df2",
+            |v: &Vec<f64>| !v.is_empty(),
+            |deps: &[Vec<f64>]| vec![deps[0][0] * 10.0],
+            vec![dep],
+        );
+        assert_eq!(f.get().unwrap(), vec![20.0]);
+        assert!(ex.snapshots().contains("df2"));
+        assert_eq!(ex.snapshots().counts().saved, 1);
+    }
+
+    #[test]
+    fn unkeyed_surface_is_single_attempt_passthrough() {
+        let ex = exec("test_plain");
+        assert_eq!(ex.spawn(|| 5i32).get(), Ok(5));
+        let f = ex.spawn_validate(|_: &i32| false, || 1i32);
+        assert_eq!(f.get(), Err(TaskError::ValidationRejected));
+        assert_eq!(ex.label(), "checkpoint(mem) over pool(2)");
+    }
+
+    #[test]
+    fn checkpoint_counters_are_published() {
+        let ex = exec("test_counters_ck");
+        let _ = ex.spawn_checkpointed("c", || vec![1.0f64]).get();
+        let _ = ex.spawn_checkpointed("c", || vec![1.0f64]).get();
+        let snap = global().snapshot();
+        assert!(snap["/checkpoint/test_counters_ck/count/saved"] >= 1);
+        assert!(snap["/checkpoint/test_counters_ck/count/restored"] >= 1);
+        assert!(snap["/checkpoint/test_counters_ck/count/bytes"] >= 8);
+        assert!(snap.contains_key("/checkpoint/test_counters_ck/count/lost"));
+    }
+
+    // -- the AGAS-replicated backend ------------------------------------
+
+    fn cluster(n: usize) -> Cluster {
+        Cluster::new(n, 1, NetworkConfig::default())
+    }
+
+    #[test]
+    fn agas_store_roundtrips_and_replicates_on_distinct_localities() {
+        let cl = cluster(4);
+        let store = AgasSnapshotStore::new(&cl, 2);
+        store.save("s", &[1, 2, 3]).unwrap();
+        assert_eq!(store.load("s"), Some(vec![1, 2, 3]));
+        assert!(store.contains("s"));
+        assert_eq!(store.len(), 1);
+        assert_eq!(cl.agas().len(), 2, "two replicas registered");
+        let homes: Vec<_> = (1..=2)
+            .map(|g| cl.agas().locate(crate::agas::Gid(g)).unwrap())
+            .collect();
+        assert_ne!(homes[0], homes[1], "replicas must be homed on distinct localities");
+        assert!(store.remove("s"));
+        assert!(cl.agas().is_empty(), "remove unregisters every replica");
+    }
+
+    #[test]
+    fn replicated_snapshot_survives_one_kill_and_is_rehomed() {
+        let cl = cluster(3);
+        let store = AgasSnapshotStore::new(&cl, 2);
+        store.save("s", &[9]).unwrap();
+        // Kill whichever locality homes the first replica.
+        let victim = cl.agas().locate(crate::agas::Gid(1)).unwrap();
+        cl.kill(victim);
+        store.on_locality_killed(victim);
+        assert_eq!(store.load("s"), Some(vec![9]), "a live replica must survive the kill");
+        assert_eq!(store.lost(), 0);
+        assert!(cl.agas().migrations() >= 1, "the dead-homed replica must be re-homed");
+        assert!(
+            cl.agas().gids_homed_on(victim).is_empty(),
+            "no replica may remain homed on the corpse"
+        );
+    }
+
+    #[test]
+    fn unreplicated_snapshot_dies_with_its_locality() {
+        let cl = cluster(2);
+        let store = AgasSnapshotStore::new(&cl, 1);
+        store.save("only", &[5]).unwrap();
+        let victim = cl.agas().locate(crate::agas::Gid(1)).unwrap();
+        cl.kill(victim);
+        store.on_locality_killed(victim);
+        assert_eq!(store.load("only"), None, "single-replica snapshot is lost");
+        assert_eq!(store.lost(), 1);
+        assert_eq!(store.load("only"), None, "loss is counted once");
+        assert_eq!(store.lost(), 1);
+    }
+
+    #[test]
+    fn read_discovers_loss_lazily_without_a_detector() {
+        let cl = cluster(2);
+        let store = AgasSnapshotStore::new(&cl, 1);
+        store.save("lazy", &[7]).unwrap();
+        let victim = cl.agas().locate(crate::agas::Gid(1)).unwrap();
+        cl.kill(victim);
+        // No on_locality_killed call: the read itself discovers the loss.
+        assert!(!store.contains("lazy"));
+        assert_eq!(store.lost(), 0, "contains() is a pure probe");
+        assert_eq!(store.load("lazy"), None);
+        assert_eq!(store.lost(), 1);
+    }
+
+    #[test]
+    fn save_with_no_live_locality_errors() {
+        let cl = cluster(1);
+        cl.kill(LocalityId(0));
+        let store = AgasSnapshotStore::new(&cl, 2);
+        assert!(store.save("s", &[1]).is_err());
+        assert_eq!(store.label(), "agas(x2)");
+    }
+}

@@ -225,7 +225,8 @@ pub trait ResilientExecutor: Clone + Send + Sync + 'static {
 /// values, and hand it — with the outer promise — to `sink` (no
 /// intermediate future, mirroring the free-function dataflow variants).
 /// Failed dependencies skip `sink` and poison the promise directly.
-fn with_resolved_deps<T, U, R, F, G>(f: F, deps: Vec<Future<T>>, sink: G) -> Future<U>
+/// Shared with the checkpoint decorator ([`super::checkpoint`]).
+pub(crate) fn with_resolved_deps<T, U, R, F, G>(f: F, deps: Vec<Future<T>>, sink: G) -> Future<U>
 where
     T: Clone + Send + Sync + 'static,
     U: Send + 'static,
@@ -876,6 +877,42 @@ pub enum PolicySpec {
     /// `ceiling`, so sustained failures widen the replica set instead of
     /// lengthening retry chains.
     AdaptiveReplicate { ceiling: usize },
+    /// Task-level checkpoint/restart
+    /// ([`super::checkpoint::CheckpointExecutor`]): snapshot every
+    /// `every` wavefront windows into the selected [`SnapshotBackend`];
+    /// on failure, restore from the last snapshot and replay only the
+    /// delta. Drivers with checkpoint-aware loops (the stencil) own the
+    /// keying/restart strategy; through the generic [`BuiltExecutor`]
+    /// surface un-keyed launches pass through undecorated.
+    Checkpoint { every: usize, backend: SnapshotBackend },
+}
+
+/// Which [`crate::checkpoint::store::SnapshotStore`] backend a
+/// [`PolicySpec::Checkpoint`] policy persists into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotBackend {
+    /// Route-appropriate default: in-memory on a pool, AGAS-replicated
+    /// (factor 2) on a cluster.
+    Auto,
+    /// In-memory (lower bound on persistence cost).
+    Memory,
+    /// On-disk, fsynced (models persistent-storage I/O cost).
+    Disk,
+    /// AGAS-replicated across live localities
+    /// ([`super::checkpoint::AgasSnapshotStore`]); requires a cluster.
+    Agas,
+}
+
+impl SnapshotBackend {
+    /// Short CLI/report token (`checkpoint:K:<this>`).
+    pub fn token(&self) -> &'static str {
+        match self {
+            SnapshotBackend::Auto => "auto",
+            SnapshotBackend::Memory => "mem",
+            SnapshotBackend::Disk => "disk",
+            SnapshotBackend::Agas => "agas",
+        }
+    }
 }
 
 impl PolicySpec {
@@ -886,6 +923,12 @@ impl PolicySpec {
             PolicySpec::Adaptive { ceiling } => format!("exec_adaptive(max {ceiling})"),
             PolicySpec::AdaptiveReplicate { ceiling } => {
                 format!("exec_adaptive_replicate(max {ceiling})")
+            }
+            PolicySpec::Checkpoint { every, backend: SnapshotBackend::Auto } => {
+                format!("exec_checkpoint({every})")
+            }
+            PolicySpec::Checkpoint { every, backend } => {
+                format!("exec_checkpoint({every},{})", backend.token())
             }
         }
     }
@@ -951,6 +994,24 @@ impl PolicySpec {
                 }));
                 BuiltExecutor::Replicate(ReplicateExecutor::adaptive(base, policy))
             }
+            PolicySpec::Checkpoint { backend, .. } => {
+                // The generic builder has no cluster in hand: `Agas`
+                // (and `Auto` on a cluster) is resolved by the stencil
+                // driver, which constructs the replicated store itself;
+                // here `Auto`/`Agas` degrade to the in-memory backend.
+                // The disk dir is unique per build — two checkpoint
+                // executors in one process must never serve each
+                // other's snapshot files.
+                let store: Arc<dyn crate::checkpoint::store::SnapshotStore> = match backend {
+                    SnapshotBackend::Disk => Arc::new(crate::checkpoint::DiskSnapshotStore::new(
+                        crate::checkpoint::store::unique_temp_dir("rhpx_snapshots"),
+                    )),
+                    _ => Arc::new(crate::checkpoint::MemorySnapshotStore::new()),
+                };
+                BuiltExecutor::Checkpoint(super::checkpoint::CheckpointExecutor::new(
+                    base, store, name,
+                ))
+            }
         }
     }
 }
@@ -969,6 +1030,11 @@ pub enum BuiltExecutor<E: TaskLauncher = PoolExecutor> {
     Single(E),
     Replay(ReplayExecutor<E>),
     Replicate(ReplicateExecutor<E>),
+    /// Task-level checkpoint/restart. Through this generic surface
+    /// (un-keyed launches) it behaves like [`BuiltExecutor::Single`];
+    /// the keyed memoizing surface is reached via
+    /// [`BuiltExecutor::checkpoint`].
+    Checkpoint(super::checkpoint::CheckpointExecutor<E>),
 }
 
 impl<E: TaskLauncher> BuiltExecutor<E> {
@@ -987,6 +1053,7 @@ impl<E: TaskLauncher> BuiltExecutor<E> {
             }
             BuiltExecutor::Replay(ex) => ex.spawn(f),
             BuiltExecutor::Replicate(ex) => ex.spawn(f),
+            BuiltExecutor::Checkpoint(ex) => ex.spawn(f),
         }
     }
 
@@ -1014,6 +1081,7 @@ impl<E: TaskLauncher> BuiltExecutor<E> {
             }
             BuiltExecutor::Replay(ex) => ex.dataflow_validate(val_f, f, deps),
             BuiltExecutor::Replicate(ex) => ex.dataflow_validate(val_f, f, deps),
+            BuiltExecutor::Checkpoint(ex) => ex.dataflow_validate(val_f, f, deps),
         }
     }
 
@@ -1023,6 +1091,7 @@ impl<E: TaskLauncher> BuiltExecutor<E> {
             BuiltExecutor::Single(base) => format!("single over {}", base.base_label()),
             BuiltExecutor::Replay(ex) => ex.label(),
             BuiltExecutor::Replicate(ex) => ex.label(),
+            BuiltExecutor::Checkpoint(ex) => ex.label(),
         }
     }
 
@@ -1033,6 +1102,17 @@ impl<E: TaskLauncher> BuiltExecutor<E> {
             BuiltExecutor::Single(base) => base.base_label(),
             BuiltExecutor::Replay(ex) => ex.base().base_label(),
             BuiltExecutor::Replicate(ex) => ex.base().base_label(),
+            BuiltExecutor::Checkpoint(ex) => ex.base().base_label(),
+        }
+    }
+
+    /// The checkpoint decorator, when this executor is one — the door to
+    /// the keyed memoizing surface (`spawn_checkpointed`, snapshot
+    /// stats) that the generic launch methods cannot express.
+    pub fn checkpoint(&self) -> Option<&super::checkpoint::CheckpointExecutor<E>> {
+        match self {
+            BuiltExecutor::Checkpoint(ex) => Some(ex),
+            _ => None,
         }
     }
 }
@@ -1443,7 +1523,7 @@ mod tests {
                 assert_eq!(ex.current_budget(), 2);
                 assert_eq!(ex.policy().unwrap().ceiling(), 2);
             }
-            BuiltExecutor::Replicate(_) => panic!("adaptive builds a replay decorator"),
+            _ => panic!("adaptive builds a replay decorator"),
         }
         assert_eq!(built.spawn(|| 1i32).get(), Ok(1));
         assert_eq!(built.label(), "replay(adaptive(max 2)) over pool(2)");
@@ -1495,6 +1575,28 @@ mod tests {
             policy.record(false);
         }
         assert_eq!(ex.current_budget(), ADAPTIVE_REPLICATE_FLOOR);
+    }
+
+    #[test]
+    fn policy_spec_checkpoint_builds_passthrough_with_keyed_surface() {
+        let rt = rt();
+        let spec = PolicySpec::Checkpoint { every: 2, backend: SnapshotBackend::Auto };
+        assert_eq!(spec.label(), "exec_checkpoint(2)");
+        assert_eq!(
+            PolicySpec::Checkpoint { every: 4, backend: SnapshotBackend::Disk }.label(),
+            "exec_checkpoint(4,disk)"
+        );
+        assert_eq!(spec.compute_multiplier(), 1, "checkpointing adds no eager compute");
+        let built = spec.build(&rt, "test_spec_ck", 1);
+        // Un-keyed surface: single-attempt passthrough.
+        assert_eq!(built.spawn(|| 11i32).get(), Ok(11));
+        assert_eq!(built.label(), "checkpoint(mem) over pool(2)");
+        assert_eq!(built.base_label(), "pool(2)");
+        // Keyed surface reachable through the accessor.
+        let ck = built.checkpoint().expect("checkpoint spec builds a checkpoint decorator");
+        assert_eq!(ck.spawn_checkpointed("k", || vec![1.0f64]).get().unwrap(), vec![1.0]);
+        assert_eq!(ck.snapshots().counts().saved, 1);
+        assert!(BuiltExecutor::Single(PoolExecutor::new(&rt)).checkpoint().is_none());
     }
 
     #[test]

@@ -22,7 +22,16 @@
 //! resilient executor *decorators* that make whole launch paths (instead
 //! of single call sites) resilient, with an optional adaptive budget
 //! tuned from the observed error rate.
+//!
+//! The third strategy lives in [`checkpoint`]: task-level
+//! checkpoint/restart ([`checkpoint::CheckpointExecutor`]), where a
+//! failed task restarts from its last validated snapshot — backed by the
+//! shared [`crate::checkpoint::store::SnapshotStore`] abstraction with
+//! an AGAS-replicated distributed backend
+//! ([`checkpoint::AgasSnapshotStore`]). See `docs/ARCHITECTURE.md`
+//! ("Choosing a resilience strategy") for when each of the three wins.
 
+pub mod checkpoint;
 pub mod executor;
 mod replay;
 mod replicate;

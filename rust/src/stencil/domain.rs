@@ -47,6 +47,28 @@ impl Chunk {
     }
 }
 
+/// Snapshot encoding: `[checksum: 8 bytes LE][data: len × 8 bytes LE]`.
+/// The *stored* checksum travels verbatim — a chunk persisted with a
+/// stale checksum deserializes with that same stale checksum, so
+/// [`Chunk::verify`] stays meaningful across a snapshot round trip (the
+/// checkpoint layer validates before persisting *and* after restoring).
+impl crate::checkpoint::SnapshotData for Chunk {
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + self.data.len() * 8);
+        out.extend_from_slice(&self.checksum.to_le_bytes());
+        for v in self.data.iter() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Option<Self> {
+        let checksum = f64::from_le_bytes(bytes.get(..8)?.try_into().expect("8 bytes"));
+        let data = <Vec<f64> as crate::checkpoint::SnapshotData>::from_bytes(&bytes[8..])?;
+        Some(Chunk::with_checksum(data, checksum))
+    }
+}
+
 /// The decomposed global domain.
 #[derive(Debug, Clone)]
 pub struct Domain {
@@ -220,6 +242,22 @@ mod tests {
         // Small domains take the serial path; still identical.
         let tiny = Domain::sine(4, 16);
         assert_eq!(tiny.gather_on(&rt), tiny.gather());
+    }
+
+    #[test]
+    fn chunk_snapshot_roundtrip_preserves_data_and_checksum() {
+        use crate::checkpoint::SnapshotData;
+        let c = Chunk::new(vec![1.5, -2.0, 3.25]);
+        let back = Chunk::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back.data, c.data);
+        assert_eq!(back.checksum, c.checksum);
+        assert!(back.verify(1e-12));
+        // A stale checksum survives the round trip and stays detectable.
+        let stale = Chunk::with_checksum(vec![1.0, 2.0], 99.0);
+        let back = Chunk::from_bytes(&stale.to_bytes()).unwrap();
+        assert_eq!(back.checksum, 99.0);
+        assert!(!back.verify(1e-6));
+        assert_eq!(Chunk::from_bytes(&[0u8; 4]), None, "truncated header rejected");
     }
 
     #[test]

@@ -25,12 +25,19 @@ use std::sync::Arc;
 
 use crate::agas::LocalityId;
 use crate::api::dataflow;
+use crate::checkpoint::store::SnapshotStore;
+use crate::checkpoint::{DiskSnapshotStore, MemorySnapshotStore};
 use crate::distributed::{ClusterExecutor, ClusterSpec, KillEvent};
 use crate::error::{TaskError, TaskResult};
 use crate::failure::{FaultInjector, Rng};
 use crate::future::Future;
 use crate::metrics::Timer;
-use crate::resilience::executor::{BuiltExecutor, TaskLauncher};
+use crate::resilience::checkpoint::{
+    AgasSnapshotStore, CheckpointExecutor, SnapshotCounts, Snapshots,
+};
+use crate::resilience::executor::{
+    BuiltExecutor, PoolExecutor, ResilientExecutor, SnapshotBackend, TaskLauncher, TaskValidator,
+};
 use crate::resilience::{
     dataflow_replay, dataflow_replay_validate, dataflow_replicate, dataflow_replicate_replay,
     dataflow_replicate_validate, dataflow_replicate_vote, vote_majority,
@@ -93,6 +100,21 @@ pub use crate::resilience::executor::PolicySpec as ExecPolicy;
 /// [`crate::resilience::executor::ADAPTIVE_REPLICATE_FLOOR`], since
 /// replicas are eager compute.
 const ADAPTIVE_FLOOR: usize = 5;
+
+/// Replication factor of the AGAS snapshot backend on the cluster
+/// checkpoint route: two replicas on distinct live localities, so a
+/// single locality death never loses a snapshot (the survivor is
+/// re-homed off the corpse via `Agas::migrate`). Backends with factor 1
+/// (testable directly through
+/// [`crate::resilience::checkpoint::AgasSnapshotStore::new`]) *do* lose
+/// snapshots on a kill, which is what forces deeper delta replay.
+const AGAS_SNAPSHOT_REPLICAS: usize = 2;
+
+/// Attempt budget for one repair execution during checkpoint recovery.
+/// Repairs route over live localities only, so the budget exists for
+/// *injected* failures (exceptions, silent corruption) re-striking the
+/// repair itself, not for dead-locality routing.
+const REPAIR_ATTEMPTS: usize = 5;
 
 /// Which kernel executes the math.
 #[derive(Clone)]
@@ -237,10 +259,21 @@ pub struct StencilReport {
     pub kills_applied: usize,
     /// Mean time from a kill firing to the next window barrier draining
     /// (the DAG has provably flowed past the fault), when kills fired.
+    /// On the pool checkpoint route (no kills) it is the mean repair
+    /// duration instead.
     pub recovery_latency_secs: Option<f64>,
     /// One entry per locality on the cluster route; empty on the pool
     /// route.
     pub localities: Vec<LocalityReport>,
+    /// Work done beyond one execution per DAG node: on cluster routes,
+    /// locality attempts (bodies executed + dead-locality rejections)
+    /// in excess of the task count — replay retries, eager replicas,
+    /// checkpoint repairs; on pool routes, extra task-body executions.
+    pub tasks_reexecuted: u64,
+    /// Snapshot-store traffic (all zeroes outside the checkpoint
+    /// strategy): snapshots saved/restored, serialized bytes persisted,
+    /// snapshots lost to locality death.
+    pub snapshots: SnapshotCounts,
     pub final_checksum: f64,
 }
 
@@ -264,6 +297,19 @@ impl StencilReport {
 /// experiment (survival rate 0), so the report is always returned.
 pub fn run(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, StencilReport)> {
     assert!(params.steps <= params.nx, "ghost region larger than subdomain");
+    // The checkpoint strategy owns its own window/snapshot/restart loop;
+    // every other policy goes through the shared DAG loop below.
+    if let Some(ExecPolicy::Checkpoint { every, backend }) = params.resilience {
+        if params.window == 0 {
+            return Err(TaskError::Runtime(
+                "checkpoint:K needs window > 0: snapshots are taken at window barriers".into(),
+            ));
+        }
+        return match &params.cluster {
+            None => run_pool_ckpt(rt, params, every, backend),
+            Some(spec) => run_cluster_ckpt(params, spec, every, backend),
+        };
+    }
     match &params.cluster {
         None => run_pool(rt, params),
         Some(spec) => run_cluster(params, spec),
@@ -274,6 +320,7 @@ pub fn run(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, Stenci
 fn run_pool(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, StencilReport)> {
     let injector = FaultInjector::new(params.error_rate.unwrap_or(0.0), params.seed);
     let corruptor = SilentCorruptor::new(params.silent_rate, params.seed ^ 0xDEAD);
+    let body_runs = Arc::new(AtomicU64::new(0));
     let domain = Domain::sine(params.n_sub, params.nx);
     let route: Option<BuiltExecutor> =
         params.resilience.map(|p| p.build(rt, "stencil", ADAPTIVE_FLOOR));
@@ -283,7 +330,7 @@ fn run_pool(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, Stenc
         params,
         &domain,
         |_task_idx| {},
-        |deps| launch_task(rt, params, &route, &injector, &corruptor, deps),
+        |deps| launch_task(rt, params, &route, &injector, &corruptor, &body_runs, deps),
         || {},
     );
     let wall = timer.elapsed_secs();
@@ -306,6 +353,10 @@ fn run_pool(rt: &Runtime, params: &StencilParams) -> TaskResult<(Vec<f64>, Stenc
         kills_applied: 0,
         recovery_latency_secs: None,
         localities: Vec::new(),
+        tasks_reexecuted: body_runs
+            .load(Ordering::Relaxed)
+            .saturating_sub(params.total_tasks() as u64),
+        snapshots: SnapshotCounts::default(),
         final_checksum: final_domain.global_checksum(),
     };
     match first_error {
@@ -323,15 +374,10 @@ fn run_cluster(
     params: &StencilParams,
     spec: &ClusterSpec,
 ) -> TaskResult<(Vec<f64>, StencilReport)> {
-    if params.mode != Mode::Pure {
-        return Err(TaskError::Runtime(
-            "cluster route ignores per-call modes: per-call resilient functions are bound \
-             to a single runtime; select the policy with `resilience` instead"
-                .into(),
-        ));
-    }
+    reject_per_call_modes_on_cluster(params)?;
     let injector = FaultInjector::new(params.error_rate.unwrap_or(0.0), params.seed);
     let corruptor = SilentCorruptor::new(params.silent_rate, params.seed ^ 0xDEAD);
+    let body_runs = Arc::new(AtomicU64::new(0));
     let domain = Domain::sine(params.n_sub, params.nx);
     let cluster = spec.build();
     let exec = ClusterExecutor::new(&cluster);
@@ -359,7 +405,7 @@ fn run_cluster(
                 pending.borrow_mut().push(Timer::start());
             }
         },
-        |deps| launch_via(&route, params, &injector, &corruptor, deps),
+        |deps| launch_via(&route, params, &injector, &corruptor, &body_runs, deps),
         || {
             for t in pending.borrow_mut().drain(..) {
                 latencies.push(t.elapsed_secs());
@@ -372,18 +418,7 @@ fn run_cluster(
     }
     let wall = timer.elapsed_secs();
 
-    let localities = (0..cluster.len())
-        .map(|i| {
-            let loc = cluster.locality(LocalityId(i));
-            LocalityReport {
-                id: i,
-                tasks_executed: loc.tasks_executed(),
-                tasks_rejected: loc.tasks_rejected(),
-                alive_at_end: loc.is_alive(),
-                killed_at_task: kills_applied.iter().find(|e| e.loc.0 == i).map(|e| e.step),
-            }
-        })
-        .collect();
+    let localities = locality_reports(&cluster, &kills_applied);
 
     let report = StencilReport {
         mode: params
@@ -398,11 +433,9 @@ fn run_cluster(
         silent_corruptions: corruptor.count(),
         launch_errors,
         kills_applied: kills_applied.len(),
-        recovery_latency_secs: if latencies.is_empty() {
-            None
-        } else {
-            Some(latencies.iter().sum::<f64>() / latencies.len() as f64)
-        },
+        recovery_latency_secs: mean_secs(&latencies),
+        tasks_reexecuted: cluster_reexecuted(&localities, params.total_tasks()),
+        snapshots: SnapshotCounts::default(),
         localities,
         final_checksum: final_domain.global_checksum(),
     };
@@ -482,20 +515,74 @@ where
     (final_domain, launch_errors, first_error)
 }
 
+/// Mean of a latency sample, `None` when empty.
+fn mean_secs(latencies: &[f64]) -> Option<f64> {
+    if latencies.is_empty() {
+        None
+    } else {
+        Some(latencies.iter().sum::<f64>() / latencies.len() as f64)
+    }
+}
+
+/// Cluster-route re-execution accounting: locality attempts (bodies
+/// executed + dead-locality rejections) in excess of one per DAG node.
+fn cluster_reexecuted(localities: &[LocalityReport], tasks: usize) -> u64 {
+    let attempts: usize = localities.iter().map(|l| l.tasks_executed + l.tasks_rejected).sum();
+    (attempts as u64).saturating_sub(tasks as u64)
+}
+
+/// Per-locality placement/survival breakdown of a finished cluster run
+/// (shared by every cluster route so the report semantics cannot
+/// diverge).
+fn locality_reports(
+    cluster: &crate::distributed::Cluster,
+    kills_applied: &[KillEvent],
+) -> Vec<LocalityReport> {
+    (0..cluster.len())
+        .map(|i| {
+            let loc = cluster.locality(LocalityId(i));
+            LocalityReport {
+                id: i,
+                tasks_executed: loc.tasks_executed(),
+                tasks_rejected: loc.tasks_rejected(),
+                alive_at_end: loc.is_alive(),
+                killed_at_task: kills_applied.iter().find(|e| e.loc.0 == i).map(|e| e.step),
+            }
+        })
+        .collect()
+}
+
+/// Shared guard of the cluster routes: per-call [`Mode`]s are bound to
+/// a single runtime and cannot run distributed.
+fn reject_per_call_modes_on_cluster(params: &StencilParams) -> TaskResult<()> {
+    if params.mode != Mode::Pure {
+        return Err(TaskError::Runtime(
+            "cluster route ignores per-call modes: per-call resilient functions are bound \
+             to a single runtime; select the policy with `resilience` instead"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
 /// The shared per-task kernel body: draw the fault injector, advance the
 /// ghost-extended subdomain through the backend kernel, maybe corrupt
-/// the output silently, and attach the checksum.
+/// the output silently, and attach the checksum. `runs` counts every
+/// invocation (the pool routes' re-execution accounting).
 fn task_body(
     params: &StencilParams,
     injector: &FaultInjector,
     corruptor: &SilentCorruptor,
-) -> impl Fn(&[Chunk]) -> TaskResult<Chunk> + Send + Sync + 'static {
+    runs: &Arc<AtomicU64>,
+) -> impl Fn(&[Chunk]) -> TaskResult<Chunk> + Clone + Send + Sync + 'static {
     let steps = params.steps;
     let courant = params.courant;
     let backend = params.backend.clone();
     let injector = injector.clone();
     let corruptor = corruptor.clone();
+    let runs = Arc::clone(runs);
     move |vals: &[Chunk]| -> TaskResult<Chunk> {
+        runs.fetch_add(1, Ordering::Relaxed);
         injector.draw("stencil-task")?;
         let ext = build_extended(&vals[0], &vals[1], &vals[2], steps);
         let (mut out, cksum) = match &backend {
@@ -532,30 +619,33 @@ fn launch_via<E: TaskLauncher>(
     params: &StencilParams,
     injector: &FaultInjector,
     corruptor: &SilentCorruptor,
+    runs: &Arc<AtomicU64>,
     deps: Vec<Future<Chunk>>,
 ) -> Future<Chunk> {
-    let body = task_body(params, injector, corruptor);
+    let body = task_body(params, injector, corruptor, runs);
     let tol = params.tol;
     route.dataflow_validate(move |c: &Chunk| c.verify(tol), move |v: &[Chunk]| body(v), deps)
 }
 
 /// Launch one stencil task on the single runtime through the configured
 /// API variant (or the executor route, when one is active).
+#[allow(clippy::too_many_arguments)]
 fn launch_task(
     rt: &Runtime,
     params: &StencilParams,
     route: &Option<BuiltExecutor>,
     injector: &FaultInjector,
     corruptor: &SilentCorruptor,
+    runs: &Arc<AtomicU64>,
     deps: Vec<Future<Chunk>>,
 ) -> Future<Chunk> {
     // Executor-routed launches: the call is always the same dataflow;
     // the policy lives entirely in the executor.
     if let Some(ex) = route {
-        return launch_via(ex, params, injector, corruptor, deps);
+        return launch_via(ex, params, injector, corruptor, runs, deps);
     }
 
-    let body = task_body(params, injector, corruptor);
+    let body = task_body(params, injector, corruptor, runs);
     let tol = params.tol;
     let validate = move |c: &Chunk| c.verify(tol);
 
@@ -576,6 +666,463 @@ fn launch_task(
             dataflow_replicate_replay(rt, n, replays, move |v: &[Chunk]| body(v), deps)
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// The checkpoint/restart route (--resilience checkpoint:K)
+// ---------------------------------------------------------------------
+
+/// Snapshot key for the wavefront state of subdomain `j` after task
+/// layer `iter` (`-1` = the initial state, persisted before the run so
+/// the first period always has a durable restore base).
+fn ckpt_key(iter: isize, j: usize) -> String {
+    format!("ckpt_{iter}_{j}")
+}
+
+/// What one checkpointed DAG run produced.
+struct CkptOutcome {
+    domain: Domain,
+    /// Final-wavefront subdomains still poisoned after repair (repair
+    /// itself exhausted — e.g. every locality dead).
+    launch_errors: u64,
+    /// Wall time of each repair pass (pool-route recovery latency).
+    repair_latencies: Vec<f64>,
+}
+
+/// The checkpointed DAG loop. Differences from [`run_dag`]:
+///
+/// * tasks at *snapshot layers* (every `every` windows, aligned to the
+///   window barriers) launch through
+///   [`CheckpointExecutor::dataflow_checkpointed_validate`], so their
+///   validated results are persisted in-band (and a restart pass would
+///   flow straight past them on store hits);
+/// * the current window's futures are retained (the `grid`), and every
+///   barrier runs a repair pass over them: exactly the *failed* tasks —
+///   the failure cone — are re-executed, layer by layer, from
+///   dependencies drawn from already-repaired values, surviving
+///   results, and (for the window-entry layer) the snapshot store;
+/// * `before_task` returns `true` when a fault event fired at that
+///   launch index, which forces an *eager* barrier at the end of the
+///   current layer — the failure-detector-triggered recovery that keeps
+///   the cone from dilating across a whole window.
+#[allow(clippy::too_many_arguments)]
+fn run_ckpt_dag<E: TaskLauncher>(
+    params: &StencilParams,
+    every: usize,
+    exec: &CheckpointExecutor<E>,
+    domain: &Domain,
+    injector: &FaultInjector,
+    corruptor: &SilentCorruptor,
+    body_runs: &Arc<AtomicU64>,
+    mut before_task: impl FnMut(usize) -> bool,
+    mut after_barrier: impl FnMut(),
+) -> TaskResult<CkptOutcome> {
+    let n_sub = params.n_sub;
+    let window = params.window.max(1);
+    let period = every.max(1) * window;
+    let snaps = Arc::clone(exec.snapshots());
+    let tol = params.tol;
+    let validator: TaskValidator<Chunk> = Arc::new(move |c: &Chunk| c.verify(tol));
+    let body = task_body(params, injector, corruptor, body_runs);
+    let is_snap_layer = move |iter: isize| -> bool {
+        iter == -1 || ((iter as usize) + 1) % period == 0
+    };
+
+    // Durable restore base for failures in the first period.
+    for (j, c) in domain.subdomains.iter().enumerate() {
+        snaps.save_value(&ckpt_key(-1, j), c)?;
+    }
+
+    // entry[j]: state at the layer just below the current window
+    // (None = irreparably poisoned).
+    let mut entry: Vec<Option<Chunk>> = domain.subdomains.iter().cloned().map(Some).collect();
+    let mut futs: Vec<Future<Chunk>> =
+        domain.subdomains.iter().map(|c| Future::ready(Ok(c.clone()))).collect();
+    let mut grid: Vec<Vec<Future<Chunk>>> = Vec::new();
+    let mut win_start: usize = 0;
+    let mut force_barrier = false;
+    let mut repair_latencies: Vec<f64> = Vec::new();
+
+    for iter in 0..params.iterations {
+        let mut next: Vec<Future<Chunk>> = Vec::with_capacity(n_sub);
+        for j in 0..n_sub {
+            if before_task(iter * n_sub + j) {
+                force_barrier = true;
+            }
+            let deps = vec![
+                futs[(j + n_sub - 1) % n_sub].clone(),
+                futs[j].clone(),
+                futs[(j + 1) % n_sub].clone(),
+            ];
+            let b = body.clone();
+            let fut = if is_snap_layer(iter as isize) {
+                exec.dataflow_checkpointed_validate(
+                    &ckpt_key(iter as isize, j),
+                    move |c: &Chunk| c.verify(tol),
+                    move |v: &[Chunk]| b(v),
+                    deps,
+                )
+            } else {
+                exec.dataflow_validate(
+                    move |c: &Chunk| c.verify(tol),
+                    move |v: &[Chunk]| b(v),
+                    deps,
+                )
+            };
+            next.push(fut);
+        }
+        grid.push(next.clone());
+        futs = next;
+
+        let at_barrier =
+            force_barrier || (iter + 1) % window == 0 || iter + 1 == params.iterations;
+        if !at_barrier {
+            continue;
+        }
+        force_barrier = false;
+        for f in &futs {
+            f.wait();
+        }
+        let any_failed = grid.iter().any(|layer| layer.iter().any(|f| f.get_copy().is_err()));
+        if any_failed {
+            let t = Timer::start();
+            repair_window(
+                params,
+                exec,
+                &snaps,
+                &validator,
+                &body,
+                &mut grid,
+                &entry,
+                win_start,
+                is_snap_layer,
+            );
+            repair_latencies.push(t.elapsed_secs());
+            futs = grid.last().expect("barrier implies a launched layer").clone();
+        }
+        // Advance the entry wavefront and trim the window state.
+        entry = futs.iter().map(|f| f.get_copy().ok()).collect();
+        grid.clear();
+        win_start = iter + 1;
+        after_barrier();
+    }
+
+    let mut launch_errors = 0u64;
+    let mut final_domain = Domain { n_sub, nx: params.nx, subdomains: Vec::new() };
+    for f in futs {
+        match f.get() {
+            Ok(chunk) => final_domain.subdomains.push(chunk),
+            Err(_) => {
+                launch_errors += 1;
+                final_domain.subdomains.push(Chunk::new(vec![0.0; params.nx]));
+            }
+        }
+    }
+    Ok(CkptOutcome { domain: final_domain, launch_errors, repair_latencies })
+}
+
+/// Repair one window in place: re-execute exactly the failed tasks,
+/// layer by layer ascending. Dependencies for a repaired task at layer
+/// `t` come from (in priority order) the repaired/surviving values of
+/// layer `t-1`, and — for the window-entry layer — the snapshot store
+/// first when that layer was checkpointed (this is where lost AGAS
+/// snapshots bite: a lost entry snapshot falls back to the surviving
+/// in-memory wavefront, and only if both are gone does the poison
+/// stand). Repaired snapshot-layer results are re-persisted so the
+/// snapshot set stays complete. Tasks whose dependencies are
+/// irreparable keep their error — the poison is never papered over.
+#[allow(clippy::too_many_arguments)]
+fn repair_window<E: TaskLauncher>(
+    params: &StencilParams,
+    exec: &CheckpointExecutor<E>,
+    snaps: &Arc<Snapshots>,
+    validator: &TaskValidator<Chunk>,
+    body: &(impl Fn(&[Chunk]) -> TaskResult<Chunk> + Clone + Send + Sync + 'static),
+    grid: &mut [Vec<Future<Chunk>>],
+    entry: &[Option<Chunk>],
+    win_start: usize,
+    is_snap_layer: impl Fn(isize) -> bool,
+) {
+    let n_sub = params.n_sub;
+    let entry_iter = win_start as isize - 1;
+    let entry_snapshotted = is_snap_layer(entry_iter);
+
+    // Entry dependency state, restored lazily: only the slots a failed
+    // first-layer task actually depends on are read back from the store
+    // (the durable copy); everything else comes from the surviving
+    // in-memory wavefront — so the `restored` count is real restore
+    // traffic, not a blanket re-read.
+    let mut needed = vec![false; n_sub];
+    if let Some(layer) = grid.first() {
+        for (j, f) in layer.iter().enumerate() {
+            if f.get_copy().is_err() {
+                needed[(j + n_sub - 1) % n_sub] = true;
+                needed[j] = true;
+                needed[(j + 1) % n_sub] = true;
+            }
+        }
+    }
+    let mut prev: Vec<Option<Chunk>> = (0..n_sub)
+        .map(|j| {
+            if entry_snapshotted && needed[j] {
+                if let Some(c) =
+                    snaps.restore_value::<Chunk>(&ckpt_key(entry_iter, j), Some(validator))
+                {
+                    return Some(c);
+                }
+                // Snapshot missing or lost: fall back to the surviving
+                // in-memory wavefront below.
+            }
+            entry[j].clone()
+        })
+        .collect();
+
+    let attempt = |deps: &[Chunk]| -> TaskResult<Chunk> {
+        let b = body.clone();
+        let d = deps.to_vec();
+        match exec.base().submit(Arc::new(move || b(&d))).get() {
+            Ok(c) if c.verify(params.tol) => Ok(c),
+            Ok(_) => Err(TaskError::ValidationRejected),
+            Err(e) => Err(e),
+        }
+    };
+
+    for (t_rel, layer) in grid.iter_mut().enumerate() {
+        let iter_t = (win_start + t_rel) as isize;
+        let mut cur: Vec<Option<Chunk>> = layer.iter().map(|f| f.get_copy().ok()).collect();
+        // Gather this layer's repair jobs, then launch them all before
+        // collecting any: failed tasks within a layer are independent,
+        // so their repairs run concurrently on the substrate instead of
+        // serializing the recovery pass.
+        let mut jobs: Vec<(usize, Vec<Chunk>)> = Vec::new();
+        for j in 0..n_sub {
+            if cur[j].is_some() {
+                continue;
+            }
+            let deps = [
+                prev[(j + n_sub - 1) % n_sub].clone(),
+                prev[j].clone(),
+                prev[(j + 1) % n_sub].clone(),
+            ];
+            if deps.iter().any(|d| d.is_none()) {
+                continue; // upstream irreparable: the poison stands
+            }
+            jobs.push((j, deps.into_iter().flatten().collect()));
+        }
+        let inflight: Vec<Future<Chunk>> = jobs
+            .iter()
+            .map(|(_, deps)| {
+                let b = body.clone();
+                let d = deps.clone();
+                exec.base().submit(Arc::new(move || b(&d)))
+            })
+            .collect();
+        for ((j, deps), fut) in jobs.into_iter().zip(inflight) {
+            let mut outcome = match fut.get() {
+                Ok(c) if c.verify(params.tol) => Ok(c),
+                Ok(_) => Err(TaskError::ValidationRejected),
+                Err(e) => Err(e),
+            };
+            // Serial retries only for the (rare) repair that failed
+            // again — e.g. an injected error striking the repair itself.
+            for _ in 1..REPAIR_ATTEMPTS {
+                if outcome.is_ok() {
+                    break;
+                }
+                outcome = attempt(&deps);
+            }
+            match outcome {
+                Ok(c) => {
+                    if is_snap_layer(iter_t) {
+                        let _ = snaps.save_value(&ckpt_key(iter_t, j), &c);
+                    }
+                    layer[j] = Future::ready(Ok(c.clone()));
+                    cur[j] = Some(c);
+                }
+                Err(e) => {
+                    layer[j] = Future::ready(Err(e));
+                    // cur[j] stays None: dependents keep their poison.
+                }
+            }
+        }
+        prev = cur;
+    }
+}
+
+/// Fresh per-run directory for the disk snapshot backend (unique even
+/// across runs in one process, e.g. bench arms).
+fn disk_snapshot_dir() -> PathBuf {
+    crate::checkpoint::store::unique_temp_dir("rhpx_stencil_snap")
+}
+
+/// The pool checkpoint route: same substrate as [`run_pool`], but tasks
+/// launch through a [`CheckpointExecutor`] and failed windows repair
+/// from snapshots instead of retrying inline.
+fn run_pool_ckpt(
+    rt: &Runtime,
+    params: &StencilParams,
+    every: usize,
+    backend: SnapshotBackend,
+) -> TaskResult<(Vec<f64>, StencilReport)> {
+    let (store, disk_dir): (Arc<dyn SnapshotStore>, Option<PathBuf>) = match backend {
+        SnapshotBackend::Agas => {
+            return Err(TaskError::Runtime(
+                "--resilience checkpoint: the agas backend needs --cluster".into(),
+            ))
+        }
+        SnapshotBackend::Disk => {
+            let dir = disk_snapshot_dir();
+            (Arc::new(DiskSnapshotStore::new(dir.clone())) as Arc<dyn SnapshotStore>, Some(dir))
+        }
+        SnapshotBackend::Auto | SnapshotBackend::Memory => {
+            (Arc::new(MemorySnapshotStore::new()) as Arc<dyn SnapshotStore>, None)
+        }
+    };
+    let injector = FaultInjector::new(params.error_rate.unwrap_or(0.0), params.seed);
+    let corruptor = SilentCorruptor::new(params.silent_rate, params.seed ^ 0xDEAD);
+    let body_runs = Arc::new(AtomicU64::new(0));
+    let domain = Domain::sine(params.n_sub, params.nx);
+    let exec = CheckpointExecutor::new(PoolExecutor::new(rt), store, "stencil");
+
+    let timer = Timer::start();
+    let outcome = run_ckpt_dag(
+        params,
+        every,
+        &exec,
+        &domain,
+        &injector,
+        &corruptor,
+        &body_runs,
+        |_| false,
+        || {},
+    );
+    let wall = timer.elapsed_secs();
+    // Temp-dir cleanup must also run when the DAG errored out (e.g. an
+    // unwritable snapshot store), not just on success.
+    if let Some(dir) = disk_dir {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+    let out = outcome?;
+
+    let report = StencilReport {
+        mode: params.resilience.map(|p| p.label()).unwrap_or_default(),
+        launcher: exec.base().base_label(),
+        wall_secs: wall,
+        tasks: params.total_tasks(),
+        subdomains: params.n_sub,
+        failures_injected: injector.counters().injected(),
+        silent_corruptions: corruptor.count(),
+        launch_errors: out.launch_errors,
+        kills_applied: 0,
+        recovery_latency_secs: mean_secs(&out.repair_latencies),
+        localities: Vec::new(),
+        tasks_reexecuted: body_runs
+            .load(Ordering::Relaxed)
+            .saturating_sub(params.total_tasks() as u64),
+        snapshots: exec.snapshots().counts(),
+        final_checksum: out.domain.global_checksum(),
+    };
+    Ok((out.domain.gather_on(rt), report))
+}
+
+/// The cluster checkpoint route: tasks place over *live* localities
+/// only ([`ClusterExecutor::alive_routed`] — checkpointing consumes the
+/// membership view instead of absorbing dead-locality attempts as
+/// retries), the fault schedule's kills are propagated to the snapshot
+/// store (loss-on-kill; the AGAS backend re-homes or drops replicas),
+/// and killed subdomains restore from the last window snapshot with
+/// only the delta tasks re-executed.
+fn run_cluster_ckpt(
+    params: &StencilParams,
+    spec: &ClusterSpec,
+    every: usize,
+    backend: SnapshotBackend,
+) -> TaskResult<(Vec<f64>, StencilReport)> {
+    reject_per_call_modes_on_cluster(params)?;
+    let injector = FaultInjector::new(params.error_rate.unwrap_or(0.0), params.seed);
+    let corruptor = SilentCorruptor::new(params.silent_rate, params.seed ^ 0xDEAD);
+    let body_runs = Arc::new(AtomicU64::new(0));
+    let domain = Domain::sine(params.n_sub, params.nx);
+    let cluster = spec.build();
+    let (store, disk_dir): (Arc<dyn SnapshotStore>, Option<PathBuf>) = match backend {
+        SnapshotBackend::Auto | SnapshotBackend::Agas => (
+            Arc::new(AgasSnapshotStore::new(&cluster, AGAS_SNAPSHOT_REPLICAS))
+                as Arc<dyn SnapshotStore>,
+            None,
+        ),
+        SnapshotBackend::Memory => {
+            (Arc::new(MemorySnapshotStore::new()) as Arc<dyn SnapshotStore>, None)
+        }
+        SnapshotBackend::Disk => {
+            let dir = disk_snapshot_dir();
+            (Arc::new(DiskSnapshotStore::new(dir.clone())) as Arc<dyn SnapshotStore>, Some(dir))
+        }
+    };
+    let exec = CheckpointExecutor::new(ClusterExecutor::alive_routed(&cluster), store, "stencil");
+    let snaps = Arc::clone(exec.snapshots());
+
+    let mut schedule = spec.schedule.clone();
+    let mut kills_applied: Vec<KillEvent> = Vec::new();
+    let pending: std::cell::RefCell<Vec<Timer>> = std::cell::RefCell::new(Vec::new());
+    let mut latencies: Vec<f64> = Vec::new();
+
+    let timer = Timer::start();
+    let outcome = run_ckpt_dag(
+        params,
+        every,
+        &exec,
+        &domain,
+        &injector,
+        &corruptor,
+        &body_runs,
+        |task_idx| {
+            let fired = schedule.advance(task_idx, &cluster);
+            for ev in &fired {
+                kills_applied.push(*ev);
+                pending.borrow_mut().push(Timer::start());
+                // Loss-on-kill: replicas homed on the corpse are
+                // re-homed (live sibling exists) or dropped and counted.
+                snaps.on_locality_killed(ev.loc);
+            }
+            // A fired kill forces an eager barrier after this layer, so
+            // recovery starts before the cone crosses the window.
+            !fired.is_empty()
+        },
+        || {
+            for t in pending.borrow_mut().drain(..) {
+                latencies.push(t.elapsed_secs());
+            }
+        },
+    );
+    for t in pending.borrow_mut().drain(..) {
+        latencies.push(t.elapsed_secs());
+    }
+    let wall = timer.elapsed_secs();
+    // Temp-dir cleanup must also run when the DAG errored out.
+    if let Some(dir) = disk_dir {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+    let out = outcome?;
+
+    let localities = locality_reports(&cluster, &kills_applied);
+
+    let report = StencilReport {
+        mode: params.resilience.map(|p| p.label()).unwrap_or_default(),
+        launcher: exec.base().base_label(),
+        wall_secs: wall,
+        tasks: params.total_tasks(),
+        subdomains: params.n_sub,
+        failures_injected: injector.counters().injected(),
+        silent_corruptions: corruptor.count(),
+        launch_errors: out.launch_errors,
+        kills_applied: kills_applied.len(),
+        recovery_latency_secs: mean_secs(&latencies),
+        tasks_reexecuted: cluster_reexecuted(&localities, params.total_tasks()),
+        snapshots: exec.snapshots().counts(),
+        localities,
+        final_checksum: out.domain.global_checksum(),
+    };
+    Ok((out.domain.gather(), report))
 }
 
 /// Injects *silent* errors: corrupts one element of a task's output
@@ -701,6 +1248,7 @@ mod tests {
             Some(ExecPolicy::Replay { n: 3 }),
             Some(ExecPolicy::Replicate { n: 2 }),
             Some(ExecPolicy::AdaptiveReplicate { ceiling: 4 }),
+            Some(ExecPolicy::Checkpoint { every: 1, backend: SnapshotBackend::Auto }),
         ] {
             let params = StencilParams { resilience, ..clustered("4") };
             let (out, rep) = run(&rt, &params).unwrap();
@@ -913,5 +1461,174 @@ mod tests {
         let (_, rep) = run(&rt, &params).unwrap();
         // sine over full periods sums to ~0, conserved by LW
         assert!(rep.final_checksum.abs() < 1e-8, "{}", rep.final_checksum);
+    }
+
+    // -- the checkpoint/restart route -----------------------------------
+
+    fn ckpt(every: usize, backend: SnapshotBackend) -> Option<ExecPolicy> {
+        Some(ExecPolicy::Checkpoint { every, backend })
+    }
+
+    #[test]
+    fn pool_checkpoint_route_matches_pure_run_and_snapshots() {
+        let rt = rt();
+        let base = StencilParams::tiny();
+        let (ref_out, _) = run(&rt, &base).unwrap();
+        for backend in [SnapshotBackend::Memory, SnapshotBackend::Disk] {
+            let params = StencilParams { resilience: ckpt(2, backend), ..base.clone() };
+            let (out, rep) = run(&rt, &params).unwrap();
+            assert_eq!(rep.launch_errors, 0, "{backend:?}");
+            assert_eq!(out, ref_out, "checkpoint route diverged under {backend:?}");
+            assert_eq!(rep.tasks_reexecuted, 0, "fault-free run repairs nothing");
+            // Initial wavefront (8) + the one in-range snapshot layer
+            // (iter 7, period 8) for tiny geometry.
+            assert_eq!(rep.snapshots.saved, 16, "{backend:?}");
+            assert!(rep.snapshots.bytes > 0);
+            assert_eq!(rep.snapshots.lost, 0);
+            assert_eq!(rep.launcher, "pool(2)");
+        }
+        let labeled = StencilParams { resilience: ckpt(2, SnapshotBackend::Memory), ..base };
+        assert_eq!(labeled.resilience.unwrap().label(), "exec_checkpoint(2,mem)");
+    }
+
+    #[test]
+    fn pool_checkpoint_repairs_injected_exceptions_from_snapshots() {
+        let rt = rt();
+        let params = StencilParams {
+            resilience: ckpt(1, SnapshotBackend::Memory),
+            error_rate: Some(2.0), // P ≈ 0.135 per task
+            // window 1: every barrier's entry layer is snapshotted, so
+            // any failed task forces a restore from the store — the
+            // `restored > 0` assertion below is deterministic.
+            window: 1,
+            ..StencilParams::tiny()
+        };
+        let domain = Domain::sine(params.n_sub, params.nx);
+        let (out, rep) = run(&rt, &params).unwrap();
+        assert!(rep.failures_injected > 0);
+        // Repair retries make exhaustion a ~0.135^5 tail per repair; when
+        // it does strike, the poisoned cone widens (dependents are never
+        // papered over), so don't bound the count — pin exactness on the
+        // (overwhelmingly common) clean runs instead.
+        assert!(rep.tasks_reexecuted > 0, "failed tasks must be re-executed by repair");
+        assert!(
+            rep.snapshots.restored > 0,
+            "repair must restore window-entry state from the store"
+        );
+        if rep.launch_errors == 0 {
+            let shift = (params.iterations * params.steps) as f64;
+            let exact = domain.exact_sine_shifted(shift);
+            for (a, b) in out.iter().zip(exact.iter()) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_checkpoint_repairs_silent_corruption_via_validation() {
+        let rt = rt();
+        let params = StencilParams {
+            resilience: ckpt(1, SnapshotBackend::Memory),
+            silent_rate: Some(0.2),
+            ..StencilParams::tiny()
+        };
+        let domain = Domain::sine(params.n_sub, params.nx);
+        let (out, rep) = run(&rt, &params).unwrap();
+        assert!(rep.silent_corruptions > 0, "corruptor must fire");
+        // Exhausted repairs (a ~0.2^5 tail) widen the poisoned cone, so
+        // the error count is unbounded in the rare case; exactness is
+        // pinned on the common clean runs.
+        if rep.launch_errors == 0 {
+            let shift = (params.iterations * params.steps) as f64;
+            let exact = domain.exact_sine_shifted(shift);
+            for (a, b) in out.iter().zip(exact.iter()) {
+                assert!((a - b).abs() < 1e-9, "corruption leaked into result");
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_kill_with_checkpoint_survives_with_less_reexecution_than_replay() {
+        // The acceptance scenario: same kill, checkpoint:2 vs replay:3.
+        // Checkpointing routes over live localities and repairs the
+        // bounded in-flight cone from snapshots, so it must re-execute
+        // strictly less work than replay (whose every post-kill launch
+        // on the corpse burns an attempt).
+        let rt = rt();
+        let base = StencilParams::tiny();
+        let (ref_out, _) = run(&rt, &base).unwrap();
+
+        let ck_params = StencilParams {
+            resilience: ckpt(2, SnapshotBackend::Auto),
+            ..clustered("4:kill=10@2")
+        };
+        let (ck_out, ck) = run(&rt, &ck_params).unwrap();
+        assert_eq!(ck.kills_applied, 1);
+        assert_eq!(ck.launch_errors, 0, "checkpoint must recover every subdomain");
+        assert_eq!(ck.survival_rate(), 1.0);
+        assert_eq!(ck_out, ref_out, "recovered run diverged from the fault-free run");
+        assert_eq!(ck.mode, "exec_checkpoint(2)");
+        assert!(!ck.localities[2].alive_at_end);
+        assert!(ck.snapshots.saved > 0);
+        assert_eq!(ck.snapshots.lost, 0, "replicated AGAS snapshots survive one kill");
+
+        let rp_params = StencilParams {
+            resilience: Some(ExecPolicy::Replay { n: 3 }),
+            ..clustered("4:kill=10@2")
+        };
+        let (_, rp) = run(&rt, &rp_params).unwrap();
+        assert_eq!(rp.launch_errors, 0);
+        assert!(
+            rp.tasks_reexecuted > 0,
+            "replay must re-route post-kill attempts off the corpse"
+        );
+        assert!(
+            ck.tasks_reexecuted < rp.tasks_reexecuted,
+            "checkpoint ({}) must re-execute strictly less than replay ({})",
+            ck.tasks_reexecuted,
+            rp.tasks_reexecuted
+        );
+    }
+
+    #[test]
+    fn cluster_checkpoint_disk_backend_survives_kill() {
+        let rt = rt();
+        let base = StencilParams::tiny();
+        let (ref_out, _) = run(&rt, &base).unwrap();
+        let params = StencilParams {
+            resilience: ckpt(1, SnapshotBackend::Disk),
+            ..clustered("4:kill=10@2")
+        };
+        let (out, rep) = run(&rt, &params).unwrap();
+        assert_eq!(rep.launch_errors, 0);
+        assert_eq!(out, ref_out);
+        assert_eq!(rep.mode, "exec_checkpoint(1,disk)");
+        assert!(rep.snapshots.saved > 0);
+        assert_eq!(rep.snapshots.lost, 0, "disk snapshots do not die with localities");
+    }
+
+    #[test]
+    fn checkpoint_route_rejects_bad_configurations() {
+        let rt = rt();
+        // window = 0: no barriers to snapshot at.
+        let params = StencilParams {
+            resilience: ckpt(2, SnapshotBackend::Auto),
+            window: 0,
+            ..StencilParams::tiny()
+        };
+        assert!(run(&rt, &params).is_err(), "checkpoint needs window > 0");
+        // agas backend without a cluster.
+        let params = StencilParams {
+            resilience: ckpt(2, SnapshotBackend::Agas),
+            ..StencilParams::tiny()
+        };
+        assert!(run(&rt, &params).is_err(), "agas backend needs --cluster");
+        // per-call modes stay rejected on the cluster checkpoint route.
+        let params = StencilParams {
+            resilience: ckpt(2, SnapshotBackend::Auto),
+            mode: Mode::Replay { n: 3 },
+            ..clustered("2")
+        };
+        assert!(run(&rt, &params).is_err());
     }
 }

@@ -20,6 +20,8 @@ pub mod driver;
 pub mod kernel;
 
 pub use crate::distributed::{ClusterSpec, FaultSchedule, KillEvent};
+pub use crate::resilience::checkpoint::SnapshotCounts;
+pub use crate::resilience::executor::SnapshotBackend;
 pub use domain::{build_extended, Chunk, Domain};
 pub use driver::{
     run, Backend, ExecPolicy, LocalityReport, Mode, SilentCorruptor, StencilParams,

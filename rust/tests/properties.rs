@@ -254,6 +254,62 @@ fn prop_toml_roundtrip() {
     });
 }
 
+/// ∀ random stencil domain states: snapshot serialization round-trips
+/// bit-identically through every shared store backend — data, stored
+/// checksum, and the verify() outcome all survive serialize →
+/// persist → load → deserialize.
+#[test]
+fn prop_snapshot_roundtrip_preserves_stencil_state() {
+    use rhpx::checkpoint::{
+        DiskSnapshotStore, MemorySnapshotStore, SnapshotData, SnapshotStore,
+    };
+    use rhpx::stencil::Chunk;
+
+    let dir = std::env::temp_dir().join(format!("rhpx_prop_snap_{}", std::process::id()));
+    let disk = DiskSnapshotStore::new(dir.clone());
+    let mem = MemorySnapshotStore::new();
+    check("snapshot-roundtrip", PropConfig { cases: 32, seed: 0xAA }, |rng| {
+        let len = gen::usize_in(rng, 1, 64);
+        let data = gen::vec_f64(rng, len, len, -1e3, 1e3);
+        // Half the cases carry a deliberately stale checksum — it must
+        // survive the round trip (staleness stays detectable).
+        let stale = gen::bool_with(rng, 0.5);
+        let chunk = if stale {
+            Chunk::with_checksum(data, gen::f64_in(rng, -1e6, 1e6))
+        } else {
+            Chunk::new(data)
+        };
+        let bytes = chunk.to_bytes();
+        for store in [&mem as &dyn SnapshotStore, &disk as &dyn SnapshotStore] {
+            store.save("case", &bytes).map_err(|e| e.to_string())?;
+            let loaded = store.load("case").ok_or("snapshot vanished")?;
+            let back = Chunk::from_bytes(&loaded).ok_or("undecodable snapshot")?;
+            if back.data != chunk.data {
+                return Err("data diverged through the store".into());
+            }
+            if back.checksum.to_bits() != chunk.checksum.to_bits() {
+                return Err("stored checksum diverged through the store".into());
+            }
+            if back.verify(1e-9) != chunk.verify(1e-9) {
+                return Err("verify() outcome changed across the round trip".into());
+            }
+        }
+        // The nested-vector encoding (global C/R state) round-trips too.
+        let rows = gen::usize_in(rng, 1, 4);
+        let state: Vec<Vec<f64>> = (0..rows)
+            .map(|_| {
+                let n = gen::usize_in(rng, 0, 16);
+                gen::vec_f64(rng, n, n, -10.0, 10.0)
+            })
+            .collect();
+        if Vec::<Vec<f64>>::from_bytes(&state.to_bytes()).as_ref() != Some(&state) {
+            return Err("Vec<Vec<f64>> snapshot round trip diverged".into());
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// ∀ random migration sequences: AGAS locate always reflects the last
 /// migrate, and generation counts migrations exactly.
 #[test]

@@ -204,6 +204,74 @@ fn promise_set_vs_continuation_attach_race() {
     assert_eq!(fired.load(Ordering::SeqCst), ROUNDS, "every continuation fires exactly once");
 }
 
+/// AGAS migration under concurrent lookup: a migrator thread re-homes
+/// one object through a fixed schedule (migration k lands on locality
+/// k % HOMES) while reader threads hammer `locate_with_generation`.
+/// Invariants: the generation each reader observes is monotonically
+/// non-decreasing, and the (home, generation) pair is always
+/// *consistent* — the home matches the schedule for that exact
+/// generation, so no reader ever sees a new home with a stale
+/// generation (or vice versa). The object stays resolvable throughout.
+#[test]
+fn agas_migrate_under_concurrent_lookup_has_no_stale_home_reads() {
+    use rhpx::agas::{Agas, LocalityId};
+
+    const HOMES: usize = 8;
+    const MIGRATIONS: u64 = 5_000;
+    const READERS: usize = 4;
+
+    let agas = Agas::new();
+    // Initial home = schedule(0), so home == LocalityId(gen % HOMES)
+    // holds from generation 0 onward.
+    let gid = agas.register(LocalityId(0), vec![42i64]);
+    let done = Arc::new(AtomicBool::new(false));
+
+    let readers: Vec<_> = (0..READERS)
+        .map(|_| {
+            let agas = agas.clone();
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                let mut last_gen = 0u64;
+                let mut observed = 0u64;
+                loop {
+                    // Sample the done flag *before* reading, so the final
+                    // pass still observes (and checks) the end state.
+                    let finished = done.load(Ordering::Acquire);
+                    let (home, generation) =
+                        agas.locate_with_generation(gid).expect("object never unregistered");
+                    assert!(
+                        generation >= last_gen,
+                        "generation went backwards: {generation} < {last_gen}"
+                    );
+                    assert_eq!(
+                        home,
+                        LocalityId((generation % HOMES as u64) as usize),
+                        "stale-home read: home {home:?} does not match generation {generation}"
+                    );
+                    assert_eq!(*agas.resolve::<Vec<i64>>(gid).unwrap(), vec![42]);
+                    last_gen = generation;
+                    observed += 1;
+                    if finished {
+                        break;
+                    }
+                }
+                observed
+            })
+        })
+        .collect();
+
+    for k in 1..=MIGRATIONS {
+        agas.migrate(gid, LocalityId((k % HOMES as u64) as usize));
+    }
+    done.store(true, Ordering::Release);
+    for r in readers {
+        assert!(r.join().unwrap() > 0, "reader made no observations");
+    }
+    assert_eq!(agas.generation(gid), Some(MIGRATIONS));
+    assert_eq!(agas.migrations(), MIGRATIONS);
+    assert_eq!(agas.locate(gid), Some(LocalityId((MIGRATIONS % HOMES as u64) as usize)));
+}
+
 /// Concurrent `get` (helping/parking) against a setter thread, plus
 /// continuation chains racing the set — the end-to-end shape the
 /// dataflow hot path exercises.
