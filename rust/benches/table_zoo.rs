@@ -1,0 +1,27 @@
+//! Bench: the workload zoo under one fault model — per-workload overhead
+//! vs survival across five arms (pool reference, unrecovered kill,
+//! replay recovery, adaptive-replicate recovery, checkpoint recovery)
+//! for every registered `Workload` (1D/2D stencils, fork-join, Jacobi
+//! with global reduction, streaming pipeline).
+//!
+//!   cargo run --release --bin table_zoo -- [--smoke] [--json PATH]
+//!   cargo bench --bench table_zoo
+//!
+//! Env: RHPX_BENCH_SCALE (default 0.01 → zoo scale 1, the floor),
+//!      RHPX_BENCH_REPEATS (default 3).
+
+use rhpx::harness::{emit, table_zoo, HarnessOpts};
+use rhpx::metrics::BenchCli;
+
+fn main() {
+    let cli = BenchCli::parse();
+    let opts = HarnessOpts {
+        scale: cli.scale_from_env(0.01),
+        repeats: cli.repeats_from_env(3),
+        csv: Some("bench_table_zoo.csv".into()),
+        ..Default::default()
+    };
+    let rows = table_zoo::run_table_zoo(&opts);
+    emit(&table_zoo::to_table(&rows), &opts);
+    cli.emit("table_zoo", table_zoo::to_json(&rows));
+}

@@ -127,6 +127,112 @@ impl FaultInjector {
     }
 }
 
+/// Injects *silent* errors: corrupts one element of a task's output
+/// without updating the checksum, so only checksum validation (or
+/// replica voting) can catch it.
+#[derive(Clone)]
+pub struct SilentCorruptor {
+    injector: Option<FaultInjector>,
+    count: Arc<AtomicU64>,
+    seed: u64,
+}
+
+impl SilentCorruptor {
+    pub fn new(probability: Option<f64>, seed: u64) -> Self {
+        SilentCorruptor {
+            injector: probability
+                .filter(|p| *p > 0.0)
+                .map(|p| FaultInjector::with_probability(p, seed)),
+            count: Arc::new(AtomicU64::new(0)),
+            seed,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// With the configured probability, perturb one element.
+    pub fn maybe_corrupt(&self, data: &mut [f64]) {
+        let Some(inj) = &self.injector else { return };
+        if data.is_empty() || !inj.should_fail() {
+            return;
+        }
+        let n = self.count.fetch_add(1, Ordering::Relaxed);
+        let idx = Rng::seeded(self.seed ^ n).next_below(data.len() as u64) as usize;
+        data[idx] += 1.0; // large, checksum-visible corruption
+    }
+}
+
+/// Silent-data-corruption injector of the bit-flip kind: with the
+/// configured probability, XOR the top mantissa bit of one element of a
+/// completed task's output. Unlike [`SilentCorruptor`]'s additive
+/// perturbation, the flipped value keeps its sign and order of
+/// magnitude — it looks entirely plausible to the happy path (no NaN,
+/// no infinity, no range excursion) and is only caught by a validator
+/// recomputing the checksum, or by replica voting. This is the §III-B
+/// "completes successfully with wrong bits" failure at its most honest.
+///
+/// A flip on a value whose magnitude makes the perturbation smaller
+/// than `min_delta` (e.g. an exact 0.0, whose mantissa flip lands in
+/// the subnormals) falls back to an additive `+1.0` so an injected
+/// corruption is never accidentally within a validator's tolerance
+/// (`min_delta` sits three orders of magnitude above the drivers'
+/// default checksum tolerance of 1e-6).
+#[derive(Clone)]
+pub struct SdcInjector {
+    injector: Option<FaultInjector>,
+    count: Arc<AtomicU64>,
+    seed: u64,
+    min_delta: f64,
+}
+
+/// The flipped bit: the mantissa MSB, perturbing a value by 12.5–25 %
+/// of its own magnitude — far above any checksum tolerance, far below
+/// anything a range check would notice.
+const SDC_FLIP_BIT: u64 = 1 << 51;
+
+impl SdcInjector {
+    /// Injector corrupting each task's output with probability `p`
+    /// (`None` or `0.0` disables it, mirroring [`SilentCorruptor`]).
+    pub fn new(probability: Option<f64>, seed: u64) -> Self {
+        SdcInjector {
+            injector: probability
+                .filter(|p| *p > 0.0)
+                .map(|p| FaultInjector::with_probability(p, seed)),
+            count: Arc::new(AtomicU64::new(0)),
+            seed,
+            min_delta: 1e-3,
+        }
+    }
+
+    /// Corruptions injected so far (shared across clones).
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// With the configured probability, bit-flip one element; returns
+    /// `true` when a corruption landed.
+    pub fn maybe_corrupt(&self, data: &mut [f64]) -> bool {
+        let Some(inj) = &self.injector else { return false };
+        if data.is_empty() || !inj.should_fail() {
+            return false;
+        }
+        let n = self.count.fetch_add(1, Ordering::Relaxed);
+        let idx = Rng::seeded(self.seed ^ n).next_below(data.len() as u64) as usize;
+        let orig = data[idx];
+        let flipped = f64::from_bits(orig.to_bits() ^ SDC_FLIP_BIT);
+        data[idx] = if flipped.is_finite() && (flipped - orig).abs() >= self.min_delta {
+            flipped
+        } else {
+            // Tiny/zero/non-finite values: keep the corruption
+            // checksum-visible rather than vanishing into the noise.
+            orig + 1.0
+        };
+        true
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,5 +284,54 @@ mod tests {
             let _ = inj2.should_fail();
         }
         assert_eq!(inj.counters().evaluated(), 100);
+    }
+
+    #[test]
+    fn silent_corruptor_perturbs_one_element() {
+        let c = SilentCorruptor::new(Some(0.999_999), 11);
+        let orig = vec![1.0, 2.0, 3.0, 4.0];
+        let mut corrupted = false;
+        for _ in 0..50 {
+            let mut data = orig.clone();
+            c.maybe_corrupt(&mut data);
+            let changed = data.iter().zip(&orig).filter(|(a, b)| a != b).count();
+            assert!(changed <= 1, "at most one element per corruption");
+            corrupted |= changed == 1;
+        }
+        assert!(corrupted, "corruptor should have fired within 50 draws");
+        assert!(c.count() > 0);
+        // Disabled injectors never touch the data.
+        let off = SilentCorruptor::new(None, 11);
+        let mut data = orig.clone();
+        off.maybe_corrupt(&mut data);
+        assert_eq!(data, orig);
+        assert_eq!(off.count(), 0);
+    }
+
+    #[test]
+    fn sdc_injector_flips_stay_finite_and_checksum_visible() {
+        let sdc = SdcInjector::new(Some(0.999_999), 23);
+        let orig = vec![0.75, -0.5, 0.0, 1e-12, 0.3];
+        let mut landed = 0u64;
+        for _ in 0..50 {
+            let mut data = orig.clone();
+            if !sdc.maybe_corrupt(&mut data) {
+                continue;
+            }
+            landed += 1;
+            assert!(data.iter().all(|v| v.is_finite()), "flip must pass the happy path");
+            let delta: f64 =
+                data.iter().zip(&orig).map(|(a, b)| (a - b).abs()).sum();
+            assert!(delta >= 1e-3, "corruption below validator tolerance: {delta}");
+            // Exactly one element changed.
+            assert_eq!(data.iter().zip(&orig).filter(|(a, b)| a != b).count(), 1);
+        }
+        assert!(landed > 0, "injector should have fired within 50 draws");
+        assert_eq!(sdc.count(), landed);
+        // Disabled: a no-op that reports no corruption.
+        let off = SdcInjector::new(Some(0.0), 23);
+        let mut data = orig.clone();
+        assert!(!off.maybe_corrupt(&mut data));
+        assert_eq!(data, orig);
     }
 }

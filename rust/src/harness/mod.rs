@@ -11,6 +11,7 @@ pub mod table1;
 pub mod table2;
 pub mod table_ckpt;
 pub mod table_dist;
+pub mod table_zoo;
 
 /// The bench registry: every `rhpx bench <mode>` the CLI accepts, with
 /// what it regenerates. `rhpx bench --list` prints exactly this list;
@@ -28,6 +29,10 @@ pub const BENCH_MODES: &[(&str, &str)] = &[
         "table_ckpt",
         "checkpoint/restart vs replay vs global C/R — re-executed work, snapshot bytes, \
          recovery latency",
+    ),
+    (
+        "table_zoo",
+        "workload zoo under one fault model — per-workload overhead vs survival",
     ),
 ];
 

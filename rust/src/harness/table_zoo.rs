@@ -1,0 +1,273 @@
+//! Bench harness: the workload zoo through one fault model — per-workload
+//! overhead vs. survival (the cross-workload generalization of
+//! [`table_dist`](super::table_dist), which runs the same experiment for
+//! the 1D stencil only).
+//!
+//! Every registered [`Workload`](crate::workloads::Workload) runs five
+//! arms that differ only in substrate, fault schedule, and resilience
+//! policy:
+//!
+//! 1. single-runtime pool, fault-free — the wall-time and checksum
+//!    reference the other arms are compared against;
+//! 2. cluster, one scheduled kill, no resilience — the negative
+//!    control: the failure cone must reach the final wavefront
+//!    (survival < 1);
+//! 3. cluster, same kill, `replay:3` — retries walk the locality ring
+//!    off the corpse;
+//! 4. cluster, same kill, `adaptive_replicate:4` — eager fan-out masks
+//!    the death;
+//! 5. cluster, same kill, `checkpoint:1` (AGAS-replicated snapshots) —
+//!    windowed restore + cone repair.
+//!
+//! Emitted per (workload, policy) cell: wall time, poisoned slots,
+//! survival rate, mean recovery latency, re-executed work, overhead vs.
+//! the pool reference, and whether the final checksum bit-matched it.
+//! The bench binary (`cargo run --release --bin table_zoo`) wraps this
+//! as `BENCH_table_zoo.json`.
+
+use crate::metrics::{JsonValue, Stats, Table};
+use crate::runtime_handle::Runtime;
+use crate::stencil::{ClusterSpec, ExecPolicy, SnapshotBackend};
+use crate::workloads::{self, RunParams};
+
+use super::HarnessOpts;
+
+/// Localities in the cluster arms.
+const LOCALITIES: usize = 4;
+/// Which locality the schedule kills.
+const KILL_LOC: usize = 2;
+
+/// One measured (workload, policy) cell of the zoo matrix.
+#[derive(Debug, Clone)]
+pub struct ZooRow {
+    /// Workload registry name (`stencil1d`, `forkjoin`, …).
+    pub workload: String,
+    /// Resilience policy label (`none` for the control arms).
+    pub policy: String,
+    /// Scheduled kills that fired.
+    pub kills: usize,
+    pub wall_secs: f64,
+    /// Poisoned final-wavefront slots.
+    pub poisoned: u64,
+    /// `1 - poisoned / subdomains`.
+    pub survival_rate: f64,
+    /// Mean kill → recovery drain time, when kills fired.
+    pub recovery_latency_secs: Option<f64>,
+    /// Percent extra wall time vs. this workload's pool reference arm.
+    pub overhead_pct_vs_pool: f64,
+    /// Work beyond one execution per DAG node (retries, replicas,
+    /// repairs, dead-locality rejections).
+    pub tasks_reexecuted: u64,
+    /// Final checksum bit-matches the fault-free pool run.
+    pub checksum_matches_pool: bool,
+}
+
+/// The workload scale shared by every arm: the harness scale is a
+/// fraction of "paper scale" (0.01 default), the zoo workloads take a
+/// multiplier around 1 — map one onto the other with a floor so smoke
+/// runs still have enough layers for the kill to land mid-run.
+fn zoo_scale(opts: &HarnessOpts) -> f64 {
+    (100.0 * opts.scale).max(1.0)
+}
+
+/// The kill schedule shared by the faulty arms: locality [`KILL_LOC`]
+/// dies an eighth of the way through the task stream — early enough
+/// that most of the run executes degraded, late enough that the
+/// round-robin has warmed every locality.
+fn kill_spec(total_tasks: usize) -> String {
+    format!("{LOCALITIES}:kill={}@{KILL_LOC}", (total_tasks / 8).max(1))
+}
+
+/// Run the zoo matrix: every registered workload through all five arms.
+/// Each arm repeats `opts.repeats` times; wall time is the mean,
+/// survival/checksum come from the last repeat. As in `table_dist`, the
+/// recovered-vs-poisoned *outcome* of every arm is deterministic while
+/// the control arm's exact poisoned count varies with execution timing.
+pub fn run_table_zoo(opts: &HarnessOpts) -> Vec<ZooRow> {
+    let wpl = (opts.workers / LOCALITIES).max(1);
+    let rt = Runtime::builder().workers(LOCALITIES * wpl).build();
+    let scale = zoo_scale(opts);
+
+    let mut rows = Vec::new();
+    for (name, _) in workloads::WORKLOADS {
+        let w = workloads::by_name(name, scale).expect("registry names resolve");
+        let total_tasks: usize = (0..w.layers()).map(|l| w.layer_tasks(l).len()).sum();
+        let faulty = kill_spec(total_tasks);
+
+        let arms: Vec<(bool, Option<ExecPolicy>)> = vec![
+            (false, None),
+            (true, None),
+            (true, Some(ExecPolicy::Replay { n: 3 })),
+            (true, Some(ExecPolicy::AdaptiveReplicate { ceiling: 4 })),
+            (
+                true,
+                Some(ExecPolicy::Checkpoint { every: 1, backend: SnapshotBackend::Auto }),
+            ),
+        ];
+
+        // Arm 1 is this workload's reference: remember wall + checksum.
+        let mut reference_wall = 0.0f64;
+        let mut reference_checksum = 0.0f64;
+        let mut first = true;
+        for (on_cluster, resilience) in arms {
+            let params = RunParams {
+                resilience,
+                cluster: on_cluster.then(|| {
+                    let mut spec = ClusterSpec::parse(&faulty).expect("arm spec parses");
+                    spec.workers_per_locality = wpl;
+                    spec
+                }),
+                ..RunParams::default()
+            };
+            let mut wall = Stats::new();
+            let mut last = None;
+            for _ in 0..opts.repeats.max(1) {
+                let (_, rep) =
+                    workloads::run(&rt, w.as_ref(), &params).expect("zoo arm failed to run");
+                wall.push(rep.wall_secs);
+                last = Some(rep);
+            }
+            let rep = last.expect("at least one repeat");
+            if first {
+                reference_wall = wall.mean();
+                reference_checksum = rep.final_checksum;
+                first = false;
+            }
+            rows.push(ZooRow {
+                workload: name.to_string(),
+                policy: resilience.map(|r| r.label()).unwrap_or_else(|| "none".into()),
+                kills: rep.kills_applied,
+                wall_secs: wall.mean(),
+                poisoned: rep.launch_errors,
+                survival_rate: rep.survival_rate(),
+                recovery_latency_secs: rep.recovery_latency_secs,
+                overhead_pct_vs_pool: 100.0 * (wall.mean() - reference_wall)
+                    / reference_wall.max(f64::MIN_POSITIVE),
+                tasks_reexecuted: rep.tasks_reexecuted,
+                checksum_matches_pool: rep.final_checksum == reference_checksum,
+            });
+        }
+    }
+    rows
+}
+
+/// Render the rows as the printable harness table.
+pub fn to_table(rows: &[ZooRow]) -> Table {
+    let mut t = Table::new(
+        "Table-Zoo: workload zoo under one fault model (overhead vs survival)",
+        &[
+            "workload", "policy", "kills", "wall_s", "poisoned", "survival_pct",
+            "recovery_ms", "overhead_pct", "reexec", "checksum_ok",
+        ],
+    );
+    for r in rows {
+        t.add([
+            r.workload.clone(),
+            r.policy.clone(),
+            r.kills.to_string(),
+            format!("{:.3}", r.wall_secs),
+            r.poisoned.to_string(),
+            format!("{:.1}", 100.0 * r.survival_rate),
+            r.recovery_latency_secs
+                .map(|s| format!("{:.2}", s * 1e3))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:+.1}", r.overhead_pct_vs_pool),
+            r.tasks_reexecuted.to_string(),
+            r.checksum_matches_pool.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The machine-readable payload for `BENCH_table_zoo.json`: explicit
+/// typed fields per cell plus the rendered table for human diffing.
+pub fn to_json(rows: &[ZooRow]) -> JsonValue {
+    JsonValue::obj([
+        (
+            "rows".to_string(),
+            JsonValue::Arr(
+                rows.iter()
+                    .map(|r| {
+                        JsonValue::obj([
+                            ("workload".to_string(), JsonValue::from(r.workload.clone())),
+                            ("policy".to_string(), JsonValue::from(r.policy.clone())),
+                            ("kills".to_string(), JsonValue::from(r.kills)),
+                            ("wall_secs".to_string(), JsonValue::from(r.wall_secs)),
+                            ("poisoned".to_string(), JsonValue::from(r.poisoned)),
+                            (
+                                "survival_rate".to_string(),
+                                JsonValue::from(r.survival_rate),
+                            ),
+                            (
+                                "recovery_latency_secs".to_string(),
+                                r.recovery_latency_secs
+                                    .map(JsonValue::from)
+                                    .unwrap_or(JsonValue::Null),
+                            ),
+                            (
+                                "overhead_pct_vs_pool".to_string(),
+                                JsonValue::from(r.overhead_pct_vs_pool),
+                            ),
+                            (
+                                "tasks_reexecuted".to_string(),
+                                JsonValue::from(r.tasks_reexecuted),
+                            ),
+                            (
+                                "checksum_matches_pool".to_string(),
+                                JsonValue::from(r.checksum_matches_pool),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("table".to_string(), to_table(rows).to_json()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_zoo_smoke_tells_the_survival_story_for_every_workload() {
+        let opts = HarnessOpts { scale: 0.01, repeats: 1, workers: 2, ..Default::default() };
+        let rows = run_table_zoo(&opts);
+        assert_eq!(rows.len(), workloads::WORKLOADS.len() * 5);
+
+        for (i, (name, _)) in workloads::WORKLOADS.iter().enumerate() {
+            let cells = &rows[i * 5..(i + 1) * 5];
+            assert!(cells.iter().all(|r| r.workload == *name));
+
+            // Reference arm: fault-free pool, everything survives.
+            assert_eq!(cells[0].policy, "none");
+            assert_eq!(cells[0].kills, 0);
+            assert_eq!(cells[0].survival_rate, 1.0, "{name} reference");
+            assert!(cells[0].checksum_matches_pool);
+
+            // Negative control: the unrecovered kill must poison slots.
+            assert_eq!(cells[1].kills, 1, "{name} control");
+            assert!(cells[1].poisoned > 0, "{name}: kill without resilience must poison");
+            assert!(cells[1].survival_rate < 1.0, "{name} control");
+
+            // Every resilient arm fully recovers, bit-identical.
+            for r in &cells[2..] {
+                assert_eq!(r.kills, 1, "{name}/{}", r.policy);
+                assert_eq!(r.poisoned, 0, "{name}/{} must recover", r.policy);
+                assert_eq!(r.survival_rate, 1.0, "{name}/{}", r.policy);
+                assert!(
+                    r.checksum_matches_pool,
+                    "{name}/{} diverged from the pool reference",
+                    r.policy
+                );
+                assert!(r.recovery_latency_secs.is_some(), "{name}/{}", r.policy);
+            }
+        }
+
+        let json = to_json(&rows).render();
+        assert!(json.contains(r#""workload":"forkjoin""#), "{json}");
+        assert!(json.contains(r#""policy":"exec_checkpoint(1)""#), "{json}");
+        let t = to_table(&rows);
+        assert_eq!(t.to_csv().lines().count(), 1 + rows.len(), "header + all cells");
+    }
+}

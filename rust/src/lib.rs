@@ -30,7 +30,8 @@
 //! | §V-A artificial workload (Listing 3), Table I, Fig 2 | [`workload`], [`harness::table1`], [`harness::fig2`] |
 //! | §V-B dataflow stencil, Table II, Fig 3 | [`stencil`], [`harness::table2`], [`harness::fig3`] |
 //! | §V-B distributed: tasks surviving locality death (Fig 4–5 scenario) | [`stencil`] cluster route ([`stencil::StencilParams::cluster`], [`distributed::ClusterSpec`]), [`harness::table_dist`], [`fault_model`] |
-//! | §V-C failure injection | [`failure`] (transient errors), [`stencil::SilentCorruptor`] (silent corruption), [`distributed::FaultSchedule`] (scheduled locality kills) |
+//! | §V-C failure injection | [`failure`] (transient errors), [`failure::SilentCorruptor`] / [`failure::SdcInjector`] (silent corruption / bit-flip SDC), [`distributed::FaultSchedule`] (scheduled locality kills) |
+//! | Scenario diversity beyond §V-B (fork-join, global reduction, streaming; arXiv 1611.02717, 1710.09074) | [`workloads`] (the `Workload` trait + zoo), [`workloads::engine`] (the generic resilient engine), [`harness::table_zoo`] |
 //! | §Future-Work: distributed resiliency, "special executors", replay-in-replicate | [`distributed`], [`resilience::executor`] (decorators + adaptive budgets/width), [`executor`] (algorithm-facing policies), `*_replicate_replay` |
 //!
 //! Each harness module's header states exactly which table/figure it
@@ -92,6 +93,7 @@ pub mod scheduler;
 pub mod stencil;
 pub mod testing;
 pub mod workload;
+pub mod workloads;
 
 pub use api::{apply, async_, async_on, dataflow, dataflow_on, dataflow_results};
 pub use error::{ResilienceError, TaskError, TaskResult};

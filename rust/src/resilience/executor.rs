@@ -913,7 +913,51 @@ impl SnapshotBackend {
             SnapshotBackend::Agas => "agas",
         }
     }
+
+    /// Inverse of [`SnapshotBackend::token`] (plus the `memory` long
+    /// form the CLI has always accepted).
+    pub fn parse(s: &str) -> Result<SnapshotBackend, PolicyParseError> {
+        match s {
+            "auto" => Ok(SnapshotBackend::Auto),
+            "mem" | "memory" => Ok(SnapshotBackend::Memory),
+            "disk" => Ok(SnapshotBackend::Disk),
+            "agas" => Ok(SnapshotBackend::Agas),
+            other => Err(PolicyParseError::UnknownBackend { got: other.to_string() }),
+        }
+    }
 }
+
+/// Why a policy spec string failed to parse ([`PolicySpec::parse`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PolicyParseError {
+    /// The spec named no known policy.
+    UnknownPolicy { spec: String },
+    /// A count/ceiling/interval was missing, non-numeric, or zero.
+    BadCount { what: &'static str, got: String },
+    /// `checkpoint:K:<backend>` named no known snapshot backend.
+    UnknownBackend { got: String },
+}
+
+impl std::fmt::Display for PolicyParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PolicyParseError::UnknownPolicy { spec } => write!(
+                f,
+                "unknown policy spec {spec:?} (expected replay:N, replicate:N, \
+                 adaptive[:CEIL], adaptive_replicate[:CEIL], or checkpoint:K[:mem|disk|agas])"
+            ),
+            PolicyParseError::BadCount { what, got } => {
+                write!(f, "{what}: bad count {got:?} (expected an integer >= 1)")
+            }
+            PolicyParseError::UnknownBackend { got } => write!(
+                f,
+                "checkpoint: unknown backend {got:?} (expected auto, mem, disk, or agas)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PolicyParseError {}
 
 impl PolicySpec {
     pub fn label(&self) -> String {
@@ -931,6 +975,68 @@ impl PolicySpec {
                 format!("exec_checkpoint({every},{})", backend.token())
             }
         }
+    }
+
+    /// The canonical CLI spec string: what `--resilience` accepts and
+    /// what [`PolicySpec::parse`] round-trips. [`SnapshotBackend::Auto`]
+    /// renders without a backend suffix, exactly as users write it
+    /// (`checkpoint:2`), so `parse(token()) == *self` for every variant.
+    pub fn token(&self) -> String {
+        match self {
+            PolicySpec::Replay { n } => format!("replay:{n}"),
+            PolicySpec::Replicate { n } => format!("replicate:{n}"),
+            PolicySpec::Adaptive { ceiling } => format!("adaptive:{ceiling}"),
+            PolicySpec::AdaptiveReplicate { ceiling } => format!("adaptive_replicate:{ceiling}"),
+            PolicySpec::Checkpoint { every, backend: SnapshotBackend::Auto } => {
+                format!("checkpoint:{every}")
+            }
+            PolicySpec::Checkpoint { every, backend } => {
+                format!("checkpoint:{every}:{}", backend.token())
+            }
+        }
+    }
+
+    /// Parse a `--resilience`-style spec string:
+    /// `replay:N | replicate:N | adaptive[:CEIL] | adaptive_replicate[:CEIL]
+    /// | checkpoint:K[:auto|mem|disk|agas]`. The bare adaptive forms
+    /// default their ceilings (10 for replay budgets, 4 for replication
+    /// width); every count must be ≥ 1. This is the single spec-string
+    /// parser in the tree — the CLI and the workload engine both call it.
+    pub fn parse(s: &str) -> Result<PolicySpec, PolicyParseError> {
+        if s == "adaptive" {
+            return Ok(PolicySpec::Adaptive { ceiling: 10 });
+        }
+        if s == "adaptive_replicate" {
+            return Ok(PolicySpec::AdaptiveReplicate { ceiling: 4 });
+        }
+        let parse_n = |v: &str, what: &'static str| -> Result<usize, PolicyParseError> {
+            v.parse()
+                .ok()
+                .filter(|n| *n >= 1)
+                .ok_or(PolicyParseError::BadCount { what, got: v.to_string() })
+        };
+        if let Some(v) = s.strip_prefix("checkpoint:") {
+            let (every, backend) = match v.split_once(':') {
+                None => (v, SnapshotBackend::Auto),
+                Some((every, b)) => (every, SnapshotBackend::parse(b)?),
+            };
+            return Ok(PolicySpec::Checkpoint { every: parse_n(every, "checkpoint")?, backend });
+        }
+        if let Some(v) = s.strip_prefix("adaptive_replicate:") {
+            return Ok(PolicySpec::AdaptiveReplicate {
+                ceiling: parse_n(v, "adaptive_replicate")?,
+            });
+        }
+        if let Some(v) = s.strip_prefix("adaptive:") {
+            return Ok(PolicySpec::Adaptive { ceiling: parse_n(v, "adaptive")? });
+        }
+        if let Some(v) = s.strip_prefix("replay:") {
+            return Ok(PolicySpec::Replay { n: parse_n(v, "replay")? });
+        }
+        if let Some(v) = s.strip_prefix("replicate:") {
+            return Ok(PolicySpec::Replicate { n: parse_n(v, "replicate")? });
+        }
+        Err(PolicyParseError::UnknownPolicy { spec: s.to_string() })
     }
 
     /// Eager-compute multiplier: replicate runs the body `n` times even
@@ -1631,5 +1737,59 @@ mod tests {
             Arc::new(AdaptivePolicy::named("test_label")),
         );
         assert_eq!(ad.label(), "replicate(adaptive(max 8)) over pool(2)");
+    }
+
+    #[test]
+    fn policy_spec_parses_every_token_back() {
+        let specs = [
+            PolicySpec::Replay { n: 3 },
+            PolicySpec::Replicate { n: 2 },
+            PolicySpec::Adaptive { ceiling: 10 },
+            PolicySpec::AdaptiveReplicate { ceiling: 4 },
+            PolicySpec::Checkpoint { every: 2, backend: SnapshotBackend::Auto },
+            PolicySpec::Checkpoint { every: 1, backend: SnapshotBackend::Memory },
+            PolicySpec::Checkpoint { every: 4, backend: SnapshotBackend::Disk },
+            PolicySpec::Checkpoint { every: 3, backend: SnapshotBackend::Agas },
+        ];
+        for spec in specs {
+            assert_eq!(PolicySpec::parse(&spec.token()), Ok(spec), "{}", spec.token());
+        }
+    }
+
+    #[test]
+    fn policy_spec_parse_grammar_and_errors() {
+        assert_eq!(PolicySpec::parse("adaptive"), Ok(PolicySpec::Adaptive { ceiling: 10 }));
+        assert_eq!(
+            PolicySpec::parse("adaptive_replicate"),
+            Ok(PolicySpec::AdaptiveReplicate { ceiling: 4 })
+        );
+        assert_eq!(
+            PolicySpec::parse("checkpoint:2:memory"),
+            Ok(PolicySpec::Checkpoint { every: 2, backend: SnapshotBackend::Memory })
+        );
+        assert_eq!(
+            PolicySpec::parse("checkpoint:2:auto"),
+            Ok(PolicySpec::Checkpoint { every: 2, backend: SnapshotBackend::Auto })
+        );
+        assert_eq!(
+            PolicySpec::parse("bogus"),
+            Err(PolicyParseError::UnknownPolicy { spec: "bogus".into() })
+        );
+        assert_eq!(
+            PolicySpec::parse("replay:0"),
+            Err(PolicyParseError::BadCount { what: "replay", got: "0".into() })
+        );
+        assert_eq!(
+            PolicySpec::parse("replicate:x"),
+            Err(PolicyParseError::BadCount { what: "replicate", got: "x".into() })
+        );
+        assert_eq!(
+            PolicySpec::parse("checkpoint:2:tape"),
+            Err(PolicyParseError::UnknownBackend { got: "tape".into() })
+        );
+        assert!(PolicySpec::parse("checkpoint").is_err(), "K is required");
+        // The error type renders a usable message (the CLI shows it).
+        let msg = PolicySpec::parse("bogus").unwrap_err().to_string();
+        assert!(msg.contains("unknown policy spec"), "{msg}");
     }
 }

@@ -29,7 +29,7 @@ use crate::checkpoint::store::SnapshotStore;
 use crate::checkpoint::{DiskSnapshotStore, MemorySnapshotStore};
 use crate::distributed::{ClusterExecutor, ClusterSpec, KillEvent};
 use crate::error::{TaskError, TaskResult};
-use crate::failure::{FaultInjector, Rng};
+use crate::failure::FaultInjector;
 use crate::future::Future;
 use crate::metrics::Timer;
 use crate::resilience::checkpoint::{
@@ -1125,42 +1125,10 @@ fn run_cluster_ckpt(
     Ok((out.domain.gather(), report))
 }
 
-/// Injects *silent* errors: corrupts one element of a task's output
-/// without updating the checksum, so only checksum validation (or
-/// replica voting) can catch it.
-#[derive(Clone)]
-pub struct SilentCorruptor {
-    injector: Option<FaultInjector>,
-    count: Arc<AtomicU64>,
-    seed: u64,
-}
-
-impl SilentCorruptor {
-    pub fn new(probability: Option<f64>, seed: u64) -> Self {
-        SilentCorruptor {
-            injector: probability
-                .filter(|p| *p > 0.0)
-                .map(|p| FaultInjector::with_probability(p, seed)),
-            count: Arc::new(AtomicU64::new(0)),
-            seed,
-        }
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    /// With the configured probability, perturb one element.
-    pub fn maybe_corrupt(&self, data: &mut [f64]) {
-        let Some(inj) = &self.injector else { return };
-        if data.is_empty() || !inj.should_fail() {
-            return;
-        }
-        let n = self.count.fetch_add(1, Ordering::Relaxed);
-        let idx = Rng::seeded(self.seed ^ n).next_below(data.len() as u64) as usize;
-        data[idx] += 1.0; // large, checksum-visible corruption
-    }
-}
+/// Injects *silent* errors (now shared crate-wide from
+/// [`crate::failure`]; re-exported here because the stencil surface has
+/// always offered it as `stencil::SilentCorruptor`).
+pub use crate::failure::SilentCorruptor;
 
 #[cfg(test)]
 mod tests {

@@ -73,15 +73,62 @@ impl Variant {
         ]
     }
 
-    /// True for the replicate family (affects the compute multiplier).
-    pub fn is_replicate(&self) -> bool {
+    /// The declarative policy this variant is a *view* of.
+    ///
+    /// [`PolicySpec`](crate::resilience::executor::PolicySpec) is the
+    /// single source of truth for what a strategy *is* (family, budget,
+    /// compute multiplier, spec-string grammar); `Variant` only adds
+    /// the per-call API dressing Table I distinguishes — whether the
+    /// launch validates ([`Variant::validates`]) and/or votes
+    /// ([`Variant::votes`]) on top of the base policy. `Plain` maps to
+    /// `None` (no resilience at all).
+    pub fn policy(&self) -> Option<crate::resilience::executor::PolicySpec> {
+        use crate::resilience::executor::PolicySpec;
+        match *self {
+            Variant::Plain => None,
+            Variant::Replay { n } | Variant::ReplayValidate { n } => {
+                Some(PolicySpec::Replay { n })
+            }
+            Variant::Replicate { n }
+            | Variant::ReplicateValidate { n }
+            | Variant::ReplicateVote { n }
+            | Variant::ReplicateVoteValidate { n } => Some(PolicySpec::Replicate { n }),
+        }
+    }
+
+    /// True when the launch re-checks results against the expected
+    /// answer (the `_validate` API variants).
+    pub fn validates(&self) -> bool {
         matches!(
             self,
-            Variant::Replicate { .. }
+            Variant::ReplayValidate { .. }
                 | Variant::ReplicateValidate { .. }
-                | Variant::ReplicateVote { .. }
                 | Variant::ReplicateVoteValidate { .. }
         )
+    }
+
+    /// True when replicas are reduced by majority vote (the `_vote` API
+    /// variants).
+    pub fn votes(&self) -> bool {
+        matches!(
+            self,
+            Variant::ReplicateVote { .. } | Variant::ReplicateVoteValidate { .. }
+        )
+    }
+
+    /// True for the replicate family (affects the compute multiplier) —
+    /// derived from the underlying policy, not re-enumerated here.
+    pub fn is_replicate(&self) -> bool {
+        use crate::resilience::executor::PolicySpec;
+        matches!(self.policy(), Some(PolicySpec::Replicate { .. }))
+    }
+
+    /// Eager duplicated compute per launch — delegated to the policy's
+    /// [`compute_multiplier`](crate::resilience::executor::PolicySpec::compute_multiplier)
+    /// so the free-function path and the executor path can never
+    /// disagree on ideal-time accounting.
+    pub fn compute_multiplier(&self) -> usize {
+        self.policy().map_or(1, |p| p.compute_multiplier())
     }
 }
 
@@ -168,14 +215,9 @@ pub fn launch(
 pub fn run(rt: &Runtime, variant: Variant, params: &WorkloadParams) -> WorkloadReport {
     let injector = make_injector(params);
     // Ideal packed time per task across the pool, accounting for the n×
-    // duplicated compute of replicate variants.
-    let multiplier = match variant {
-        Variant::Replicate { n }
-        | Variant::ReplicateValidate { n }
-        | Variant::ReplicateVote { n }
-        | Variant::ReplicateVoteValidate { n } => n as f64,
-        _ => 1.0,
-    };
+    // duplicated compute of replicate variants (the policy view keeps
+    // this identical to the executor path's accounting).
+    let multiplier = variant.compute_multiplier() as f64;
     let inj = injector.clone();
     run_windowed(rt, variant.label(), multiplier, params, &injector, move |rt| {
         launch(rt, variant, params.grain_ns, &inj)
@@ -391,5 +433,36 @@ mod tests {
         assert_eq!(Variant::table1_variants(3).len(), 6);
         assert!(Variant::Replicate { n: 3 }.is_replicate());
         assert!(!Variant::Replay { n: 3 }.is_replicate());
+    }
+
+    #[test]
+    fn variant_is_a_view_over_policy_spec() {
+        use crate::resilience::executor::PolicySpec;
+        assert_eq!(Variant::Plain.policy(), None);
+        for v in Variant::table1_variants(3) {
+            let p = v.policy().expect("every resilient variant has a base policy");
+            match p {
+                PolicySpec::Replay { n } => {
+                    assert_eq!(n, 3);
+                    assert!(!v.is_replicate());
+                }
+                PolicySpec::Replicate { n } => {
+                    assert_eq!(n, 3);
+                    assert!(v.is_replicate());
+                }
+                other => panic!("unexpected base policy {other:?}"),
+            }
+            // The view's multiplier is the policy's, never a private
+            // re-derivation.
+            assert_eq!(v.compute_multiplier(), p.compute_multiplier());
+        }
+        // The API dressing on top of the base policy.
+        assert!(Variant::ReplayValidate { n: 2 }.validates());
+        assert!(!Variant::Replay { n: 2 }.validates());
+        assert!(Variant::ReplicateVote { n: 3 }.votes());
+        assert!(Variant::ReplicateVoteValidate { n: 3 }.votes());
+        assert!(Variant::ReplicateVoteValidate { n: 3 }.validates());
+        assert!(!Variant::ReplicateValidate { n: 3 }.votes());
+        assert_eq!(Variant::Plain.compute_multiplier(), 1);
     }
 }

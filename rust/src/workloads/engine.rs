@@ -1,0 +1,1029 @@
+//! The generic resilient-execution engine: any [`Workload`] through the
+//! full `--resilience` × `--cluster` fault-model matrix.
+//!
+//! This is `stencil::driver`'s DAG loop, fault wiring, repair logic, and
+//! reporting factored out of the 1D-stencil specifics: the driver owned
+//! ring-shaped dependencies and fixed wavefront widths; the engine takes
+//! both from [`Workload::layer_tasks`] ([`TaskSpec`] declares each
+//! task's dependency slots) and so runs fork-join trees, global
+//! reductions, and pipelines through byte-for-byte the same recovery
+//! machinery. Four routes, selected exactly like the driver's:
+//!
+//! * pool / cluster (plain or decorated): the shared layered-DAG loop,
+//!   every task launched through a [`BuiltExecutor`] route;
+//! * pool / cluster checkpoint (`--resilience checkpoint:K[:backend]`):
+//!   the windowed snapshot/repair loop — snapshot layers every K
+//!   windows, barrier-triggered cone repair, eager barriers on kills.
+//!
+//! Reports are uniform ([`RunReport`]): survival rate, recovery
+//! latency, `tasks_reexecuted`, snapshot traffic — same semantics as
+//! [`StencilReport`](crate::stencil::StencilReport) so the zoo's
+//! numbers compare directly against Table II / Fig 4–5.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::agas::LocalityId;
+use crate::checkpoint::store::SnapshotStore;
+use crate::checkpoint::{DiskSnapshotStore, MemorySnapshotStore};
+use crate::distributed::{Cluster, ClusterExecutor, ClusterSpec, KillEvent};
+use crate::error::{TaskError, TaskResult};
+use crate::failure::{FaultInjector, SdcInjector};
+use crate::future::Future;
+use crate::metrics::Timer;
+use crate::resilience::checkpoint::{
+    AgasSnapshotStore, CheckpointExecutor, SnapshotCounts, Snapshots,
+};
+use crate::resilience::executor::{
+    BuiltExecutor, PolicySpec, PoolExecutor, SnapshotBackend, TaskLauncher, TaskValidator,
+};
+use crate::runtime_handle::Runtime;
+use crate::stencil::kernel;
+use crate::stencil::{Chunk, LocalityReport};
+
+use super::{TaskBody, TaskSpec, Workload};
+
+/// The adaptive replay route's minimum budget — same value and rationale
+/// as the stencil driver's (`stencil::driver::ADAPTIVE_FLOOR`): replay
+/// attempts cost nothing until a task fails, and a low floor would let
+/// early tasks exhaust before the policy has observed anything.
+const ADAPTIVE_FLOOR: usize = 5;
+
+/// Replication factor of the AGAS snapshot backend on the cluster
+/// checkpoint route: two replicas on distinct live localities so a
+/// single locality death never loses a snapshot.
+const AGAS_SNAPSHOT_REPLICAS: usize = 2;
+
+/// Attempt budget for one repair execution during checkpoint recovery
+/// (for injected failures re-striking the repair itself; repairs route
+/// over live localities only).
+const REPAIR_ATTEMPTS: usize = 5;
+
+/// How a workload runs: the fault model and the resilience answer to
+/// it, everything the CLI's `rhpx run` flags map onto.
+#[derive(Clone)]
+pub struct RunParams {
+    /// Executor-routed resilience policy (`--resilience`); `None` runs
+    /// the undecorated control arm.
+    pub resilience: Option<PolicySpec>,
+    /// When set, tasks place round-robin across a simulated cluster and
+    /// the spec's fault schedule kills localities mid-run
+    /// (`--cluster N:kill=STEP@LOC`).
+    pub cluster: Option<ClusterSpec>,
+    /// Exception-style failures: the paper's error-rate factor *x*,
+    /// P(failure per task) = e^{-x}. `None` disables injection.
+    pub error_rate: Option<f64>,
+    /// Silent-data-corruption probability per task: each completed task
+    /// body suffers a mantissa bit-flip ([`SdcInjector`]) with this
+    /// probability. Only checksum validation can catch it.
+    pub sdc_rate: Option<f64>,
+    /// Checksum validation on/off. The SDC control arm turns this off
+    /// to demonstrate corruption flowing through undetected.
+    pub validate: bool,
+    pub seed: u64,
+}
+
+impl Default for RunParams {
+    fn default() -> Self {
+        RunParams {
+            resilience: None,
+            cluster: None,
+            error_rate: None,
+            sdc_rate: None,
+            validate: true,
+            seed: 0x1CE,
+        }
+    }
+}
+
+/// Outcome of a workload run — field-for-field the semantics of
+/// [`StencilReport`](crate::stencil::StencilReport), plus the workload
+/// name, so every zoo member reports survival, recovery latency, and
+/// re-execution work identically.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub workload: String,
+    pub mode: String,
+    /// The substrate tasks ran on: `pool(N)` or `cluster(N)`.
+    pub launcher: String,
+    pub wall_secs: f64,
+    /// Tasks the DAG launched (layer widths summed).
+    pub tasks: usize,
+    /// Slots in the final wavefront (the survival denominator).
+    pub subdomains: usize,
+    pub failures_injected: u64,
+    pub silent_corruptions: u64,
+    /// Final-wavefront slots whose resilient launch ultimately failed.
+    pub launch_errors: u64,
+    pub kills_applied: usize,
+    /// Mean kill→barrier-drain time on cluster routes; mean repair-pass
+    /// duration on the pool checkpoint route.
+    pub recovery_latency_secs: Option<f64>,
+    pub localities: Vec<LocalityReport>,
+    /// Work beyond one execution per DAG node (retries, replicas,
+    /// repairs, dead-locality rejections) — see
+    /// [`StencilReport::tasks_reexecuted`](crate::stencil::StencilReport::tasks_reexecuted).
+    pub tasks_reexecuted: u64,
+    pub snapshots: SnapshotCounts,
+    pub final_checksum: f64,
+}
+
+impl RunReport {
+    /// Fraction of final-wavefront slots that survived.
+    pub fn survival_rate(&self) -> f64 {
+        if self.subdomains == 0 {
+            return 1.0;
+        }
+        (self.subdomains as u64).saturating_sub(self.launch_errors) as f64
+            / self.subdomains as f64
+    }
+}
+
+/// Run a workload; returns the gathered final wavefront (poisoned slots
+/// as empty placeholders) and the report.
+///
+/// Route selection is identical to `stencil::driver::run`: the
+/// checkpoint policy owns its own window/snapshot/repair loop; every
+/// other policy goes through the shared DAG loop. Pool routes where
+/// *every* final slot is poisoned return the first error; on cluster
+/// routes total poisoning is a legitimate measured outcome (survival
+/// rate 0) and the report is always returned.
+pub fn run(
+    rt: &Runtime,
+    w: &dyn Workload,
+    params: &RunParams,
+) -> TaskResult<(Vec<f64>, RunReport)> {
+    if let Some(PolicySpec::Checkpoint { every, backend }) = params.resilience {
+        if w.window() == 0 {
+            return Err(TaskError::Runtime(
+                "checkpoint:K needs window > 0: snapshots are taken at window barriers".into(),
+            ));
+        }
+        return match &params.cluster {
+            None => run_pool_ckpt(rt, w, params, every, backend),
+            Some(spec) => run_cluster_ckpt(w, params, spec, every, backend),
+        };
+    }
+    match &params.cluster {
+        None => run_pool(rt, w, params),
+        Some(spec) => run_cluster(w, params, spec),
+    }
+}
+
+/// The per-run fault wiring, shared by every route: exception injector,
+/// SDC injector, and the body-run counter (pool-route re-execution
+/// accounting), cloned into each task body.
+#[derive(Clone)]
+struct FaultWiring {
+    injector: FaultInjector,
+    sdc: SdcInjector,
+    runs: Arc<AtomicU64>,
+}
+
+impl FaultWiring {
+    fn new(params: &RunParams) -> Self {
+        FaultWiring {
+            injector: FaultInjector::new(params.error_rate.unwrap_or(0.0), params.seed),
+            sdc: SdcInjector::new(params.sdc_rate, params.seed ^ 0xDEAD),
+            runs: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Wrap a pure workload body with the fault model: count the run,
+    /// draw the injector, run the math, attach the checksum of the
+    /// *correct* output, then maybe bit-flip it — so a landed corruption
+    /// is exactly a checksum mismatch, the §III-B silent error.
+    fn wrap(
+        &self,
+        body: &TaskBody,
+    ) -> impl Fn(&[Chunk]) -> TaskResult<Chunk> + Clone + Send + Sync + 'static {
+        let injector = self.injector.clone();
+        let sdc = self.sdc.clone();
+        let runs = Arc::clone(&self.runs);
+        let body = Arc::clone(body);
+        move |vals: &[Chunk]| -> TaskResult<Chunk> {
+            runs.fetch_add(1, Ordering::Relaxed);
+            injector.draw("workload-task")?;
+            let mut out = body(vals)?;
+            let cksum = kernel::checksum(&out);
+            sdc.maybe_corrupt(&mut out);
+            Ok(Chunk::with_checksum(out, cksum))
+        }
+    }
+}
+
+/// What the shared DAG loop produced.
+struct DagOutcome {
+    /// Final wavefront, poisoned slots as empty placeholders (keeping
+    /// the gather shape; an empty chunk contributes 0 to the checksum).
+    finals: Vec<Chunk>,
+    /// Final wavefront width (the survival denominator).
+    width: usize,
+    /// Tasks launched across all layers.
+    tasks: usize,
+    launch_errors: u64,
+    first_error: Option<TaskError>,
+}
+
+/// The shared layered-DAG loop — `run_dag` generalized: wavefront
+/// widths and dependency slots come from the workload's [`TaskSpec`]s
+/// instead of a hardcoded ring. `before_task` sees the global task
+/// index (the fault schedule's clock); `after_barrier` runs after each
+/// window barrier drains.
+fn run_layers<S, L, B>(
+    w: &dyn Workload,
+    mut before_task: S,
+    mut launch: L,
+    mut after_barrier: B,
+) -> DagOutcome
+where
+    S: FnMut(usize),
+    L: FnMut(&TaskSpec, Vec<Future<Chunk>>) -> Future<Chunk>,
+    B: FnMut(),
+{
+    let window = w.window().max(1);
+    let layers = w.layers();
+    let mut futs: Vec<Future<Chunk>> =
+        w.initial().into_iter().map(|c| Future::ready(Ok(c))).collect();
+    let mut task_idx = 0usize;
+
+    for layer in 0..layers {
+        let specs = w.layer_tasks(layer);
+        let mut next: Vec<Future<Chunk>> = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            before_task(task_idx);
+            task_idx += 1;
+            let deps: Vec<Future<Chunk>> =
+                spec.deps.iter().map(|&d| futs[d].clone()).collect();
+            next.push(launch(spec, deps));
+        }
+        futs = next;
+        if (layer + 1) % window == 0 {
+            // Bound in-flight work: block until this wavefront is done.
+            for f in &futs {
+                f.wait();
+            }
+            after_barrier();
+        }
+    }
+
+    let width = futs.len();
+    let mut launch_errors = 0u64;
+    let mut first_error: Option<TaskError> = None;
+    let mut finals: Vec<Chunk> = Vec::with_capacity(width);
+    for f in futs {
+        match f.get() {
+            Ok(chunk) => finals.push(chunk),
+            Err(e) => {
+                launch_errors += 1;
+                if first_error.is_none() {
+                    first_error = Some(e);
+                }
+                finals.push(Chunk::new(Vec::new()));
+            }
+        }
+    }
+    DagOutcome { finals, width, tasks: task_idx, launch_errors, first_error }
+}
+
+/// Concatenate the final wavefront (the generic "gather").
+fn gather(finals: &[Chunk]) -> Vec<f64> {
+    finals.iter().flat_map(|c| c.data.iter().copied()).collect()
+}
+
+/// Global checksum of the final wavefront — same definition as
+/// [`Domain::global_checksum`](crate::stencil::Domain::global_checksum).
+fn checksum_of(finals: &[Chunk]) -> f64 {
+    finals.iter().map(|c| kernel::checksum(&c.data)).sum()
+}
+
+/// Mean of a latency sample, `None` when empty.
+fn mean_secs(latencies: &[f64]) -> Option<f64> {
+    if latencies.is_empty() {
+        None
+    } else {
+        Some(latencies.iter().sum::<f64>() / latencies.len() as f64)
+    }
+}
+
+fn mode_label(params: &RunParams) -> String {
+    params
+        .resilience
+        .map(|p| p.label())
+        .unwrap_or_else(|| "pure_dataflow".into())
+}
+
+/// Cluster-route re-execution accounting: locality attempts (bodies
+/// executed + dead-locality rejections) in excess of one per DAG node.
+fn cluster_reexecuted(localities: &[LocalityReport], tasks: usize) -> u64 {
+    let attempts: usize =
+        localities.iter().map(|l| l.tasks_executed + l.tasks_rejected).sum();
+    (attempts as u64).saturating_sub(tasks as u64)
+}
+
+/// Per-locality placement/survival breakdown of a finished cluster run.
+fn locality_reports(cluster: &Cluster, kills_applied: &[KillEvent]) -> Vec<LocalityReport> {
+    (0..cluster.len())
+        .map(|i| {
+            let loc = cluster.locality(LocalityId(i));
+            LocalityReport {
+                id: i,
+                tasks_executed: loc.tasks_executed(),
+                tasks_rejected: loc.tasks_rejected(),
+                alive_at_end: loc.is_alive(),
+                killed_at_task: kills_applied.iter().find(|e| e.loc.0 == i).map(|e| e.step),
+            }
+        })
+        .collect()
+}
+
+/// Launch one task through an executor route over any launcher — the
+/// seam that keeps the engine substrate-generic.
+fn launch_via<E: TaskLauncher>(
+    route: &BuiltExecutor<E>,
+    spec: &TaskSpec,
+    wiring: &FaultWiring,
+    validate: bool,
+    tol: f64,
+    deps: Vec<Future<Chunk>>,
+) -> Future<Chunk> {
+    let body = wiring.wrap(&spec.body);
+    route.dataflow_validate(
+        move |c: &Chunk| !validate || c.verify(tol),
+        move |v: &[Chunk]| body(v),
+        deps,
+    )
+}
+
+/// The single-runtime route.
+fn run_pool(
+    rt: &Runtime,
+    w: &dyn Workload,
+    params: &RunParams,
+) -> TaskResult<(Vec<f64>, RunReport)> {
+    let wiring = FaultWiring::new(params);
+    let route: BuiltExecutor = match params.resilience {
+        Some(p) => p.build(rt, w.name(), ADAPTIVE_FLOOR),
+        None => BuiltExecutor::Single(PoolExecutor::new(rt)),
+    };
+    let (validate, tol) = (params.validate, w.tol());
+
+    let timer = Timer::start();
+    let out = run_layers(
+        w,
+        |_task_idx| {},
+        |spec, deps| launch_via(&route, spec, &wiring, validate, tol, deps),
+        || {},
+    );
+    let wall = timer.elapsed_secs();
+
+    let report = RunReport {
+        workload: w.name().into(),
+        mode: mode_label(params),
+        launcher: route.base_label(),
+        wall_secs: wall,
+        tasks: out.tasks,
+        subdomains: out.width,
+        failures_injected: wiring.injector.counters().injected(),
+        silent_corruptions: wiring.sdc.count(),
+        launch_errors: out.launch_errors,
+        kills_applied: 0,
+        recovery_latency_secs: None,
+        localities: Vec::new(),
+        tasks_reexecuted: wiring
+            .runs
+            .load(Ordering::Relaxed)
+            .saturating_sub(out.tasks as u64),
+        snapshots: SnapshotCounts::default(),
+        final_checksum: checksum_of(&out.finals),
+    };
+    match out.first_error {
+        Some(e) if out.launch_errors as usize == out.width => Err(e),
+        _ => Ok((gather(&out.finals), report)),
+    }
+}
+
+/// The distributed route: the same DAG, every task launched through a
+/// cluster-backed executor, with the spec's fault schedule applied at
+/// deterministic task indices.
+fn run_cluster(
+    w: &dyn Workload,
+    params: &RunParams,
+    spec: &ClusterSpec,
+) -> TaskResult<(Vec<f64>, RunReport)> {
+    let wiring = FaultWiring::new(params);
+    let cluster = spec.build();
+    let exec = ClusterExecutor::new(&cluster);
+    let route: BuiltExecutor<ClusterExecutor> = match params.resilience {
+        Some(p) => p.build_over(exec, w.name(), ADAPTIVE_FLOOR),
+        None => BuiltExecutor::Single(exec),
+    };
+    let (validate, tol) = (params.validate, w.tol());
+
+    let mut schedule = spec.schedule.clone();
+    let mut kills_applied: Vec<KillEvent> = Vec::new();
+    // Kills awaiting their recovery-latency measurement (taken at the
+    // next window barrier, when the wavefront containing the fault has
+    // provably drained).
+    let pending: RefCell<Vec<Timer>> = RefCell::new(Vec::new());
+    let mut latencies: Vec<f64> = Vec::new();
+
+    let timer = Timer::start();
+    let out = run_layers(
+        w,
+        |task_idx| {
+            for ev in schedule.advance(task_idx, &cluster) {
+                kills_applied.push(ev);
+                pending.borrow_mut().push(Timer::start());
+            }
+        },
+        |spec, deps| launch_via(&route, spec, &wiring, validate, tol, deps),
+        || {
+            for t in pending.borrow_mut().drain(..) {
+                latencies.push(t.elapsed_secs());
+            }
+        },
+    );
+    // Kills in the final (un-barriered) window recover by the gather.
+    for t in pending.borrow_mut().drain(..) {
+        latencies.push(t.elapsed_secs());
+    }
+    let wall = timer.elapsed_secs();
+
+    let localities = locality_reports(&cluster, &kills_applied);
+
+    let report = RunReport {
+        workload: w.name().into(),
+        mode: mode_label(params),
+        launcher: route.base_label(),
+        wall_secs: wall,
+        tasks: out.tasks,
+        subdomains: out.width,
+        failures_injected: wiring.injector.counters().injected(),
+        silent_corruptions: wiring.sdc.count(),
+        launch_errors: out.launch_errors,
+        kills_applied: kills_applied.len(),
+        recovery_latency_secs: mean_secs(&latencies),
+        tasks_reexecuted: cluster_reexecuted(&localities, out.tasks),
+        snapshots: SnapshotCounts::default(),
+        localities,
+        final_checksum: checksum_of(&out.finals),
+    };
+    Ok((gather(&out.finals), report))
+}
+
+// ---------------------------------------------------------------------
+// The checkpoint/restart route (--resilience checkpoint:K)
+// ---------------------------------------------------------------------
+
+/// Snapshot key for the wavefront state of slot `j` after layer
+/// `layer` (`-1` = the initial wavefront, persisted before the run so
+/// the first period always has a durable restore base).
+fn ckpt_key(layer: isize, j: usize) -> String {
+    format!("ckpt_{layer}_{j}")
+}
+
+/// One launched layer retained for window repair: the futures *and* the
+/// specs that produced them, so the repair pass can re-derive any
+/// task's dependency slots and re-run its body. (The stencil driver
+/// hardcoded the ring here; this is the piece that makes repair
+/// shape-generic.)
+struct LayerState {
+    specs: Vec<TaskSpec>,
+    futs: Vec<Future<Chunk>>,
+}
+
+/// What one checkpointed DAG run produced.
+struct CkptOutcome {
+    finals: Vec<Chunk>,
+    width: usize,
+    tasks: usize,
+    launch_errors: u64,
+    repair_latencies: Vec<f64>,
+}
+
+/// The checkpointed DAG loop — `run_ckpt_dag` generalized over layer
+/// shape. Snapshot layers (every `every` windows, aligned to window
+/// barriers) launch through
+/// [`CheckpointExecutor::dataflow_checkpointed_validate`]; the current
+/// window's layers are retained ([`LayerState`]) and every barrier runs
+/// a repair pass over exactly the failed tasks; `before_task` returning
+/// `true` (a fault event fired) forces an eager barrier after the
+/// current layer.
+fn run_ckpt_dag<E: TaskLauncher>(
+    w: &dyn Workload,
+    params: &RunParams,
+    every: usize,
+    exec: &CheckpointExecutor<E>,
+    wiring: &FaultWiring,
+    mut before_task: impl FnMut(usize) -> bool,
+    mut after_barrier: impl FnMut(),
+) -> TaskResult<CkptOutcome> {
+    let window = w.window().max(1);
+    let layers = w.layers();
+    let period = every.max(1) * window;
+    let snaps = Arc::clone(exec.snapshots());
+    let (validate, tol) = (params.validate, w.tol());
+    let validator: TaskValidator<Chunk> = Arc::new(move |c: &Chunk| !validate || c.verify(tol));
+    let is_snap_layer =
+        move |layer: isize| -> bool { layer == -1 || ((layer as usize) + 1) % period == 0 };
+
+    // Durable restore base for failures in the first period.
+    let initial = w.initial();
+    for (j, c) in initial.iter().enumerate() {
+        snaps.save_value(&ckpt_key(-1, j), c)?;
+    }
+
+    // entry[j]: state at the layer just below the current window
+    // (None = irreparably poisoned).
+    let mut entry: Vec<Option<Chunk>> = initial.iter().cloned().map(Some).collect();
+    let mut futs: Vec<Future<Chunk>> =
+        initial.iter().map(|c| Future::ready(Ok(c.clone()))).collect();
+    let mut grid: Vec<LayerState> = Vec::new();
+    let mut win_start: usize = 0;
+    let mut force_barrier = false;
+    let mut repair_latencies: Vec<f64> = Vec::new();
+    let mut task_idx = 0usize;
+
+    for layer in 0..layers {
+        let specs = w.layer_tasks(layer);
+        let mut next: Vec<Future<Chunk>> = Vec::with_capacity(specs.len());
+        for (j, spec) in specs.iter().enumerate() {
+            if before_task(task_idx) {
+                force_barrier = true;
+            }
+            task_idx += 1;
+            let deps: Vec<Future<Chunk>> =
+                spec.deps.iter().map(|&d| futs[d].clone()).collect();
+            let body = wiring.wrap(&spec.body);
+            let fut = if is_snap_layer(layer as isize) {
+                exec.dataflow_checkpointed_validate(
+                    &ckpt_key(layer as isize, j),
+                    move |c: &Chunk| !validate || c.verify(tol),
+                    move |v: &[Chunk]| body(v),
+                    deps,
+                )
+            } else {
+                exec.dataflow_validate(
+                    move |c: &Chunk| !validate || c.verify(tol),
+                    move |v: &[Chunk]| body(v),
+                    deps,
+                )
+            };
+            next.push(fut);
+        }
+        grid.push(LayerState { specs, futs: next.clone() });
+        futs = next;
+
+        let at_barrier = force_barrier || (layer + 1) % window == 0 || layer + 1 == layers;
+        if !at_barrier {
+            continue;
+        }
+        force_barrier = false;
+        for f in &futs {
+            f.wait();
+        }
+        let any_failed =
+            grid.iter().any(|ls| ls.futs.iter().any(|f| f.get_copy().is_err()));
+        if any_failed {
+            let t = Timer::start();
+            repair_window(exec, &snaps, &validator, wiring, &mut grid, &entry, win_start, is_snap_layer);
+            repair_latencies.push(t.elapsed_secs());
+            futs = grid.last().expect("barrier implies a launched layer").futs.clone();
+        }
+        // Advance the entry wavefront and trim the window state.
+        entry = futs.iter().map(|f| f.get_copy().ok()).collect();
+        grid.clear();
+        win_start = layer + 1;
+        after_barrier();
+    }
+
+    let width = futs.len();
+    let mut launch_errors = 0u64;
+    let mut finals: Vec<Chunk> = Vec::with_capacity(width);
+    for f in futs {
+        match f.get() {
+            Ok(chunk) => finals.push(chunk),
+            Err(_) => {
+                launch_errors += 1;
+                finals.push(Chunk::new(Vec::new()));
+            }
+        }
+    }
+    Ok(CkptOutcome { finals, width, tasks: task_idx, launch_errors, repair_latencies })
+}
+
+/// Repair one window in place: re-execute exactly the failed tasks,
+/// layer by layer ascending, with dependencies drawn from
+/// already-repaired values, surviving results, and (for the
+/// window-entry layer) the snapshot store — the driver's repair pass
+/// with the failure cone derived from each task's declared `deps`
+/// instead of the stencil ring. Repaired snapshot-layer results are
+/// re-persisted; tasks whose dependencies are irreparable keep their
+/// poison.
+#[allow(clippy::too_many_arguments)]
+fn repair_window<E: TaskLauncher>(
+    exec: &CheckpointExecutor<E>,
+    snaps: &Arc<Snapshots>,
+    validator: &TaskValidator<Chunk>,
+    wiring: &FaultWiring,
+    grid: &mut [LayerState],
+    entry: &[Option<Chunk>],
+    win_start: usize,
+    is_snap_layer: impl Fn(isize) -> bool,
+) {
+    let entry_layer = win_start as isize - 1;
+    let entry_snapshotted = is_snap_layer(entry_layer);
+    let entry_width = entry.len();
+
+    // Entry dependency state, restored lazily: only the slots a failed
+    // first-layer task actually depends on are read back from the store.
+    let mut needed = vec![false; entry_width];
+    if let Some(ls) = grid.first() {
+        for (j, f) in ls.futs.iter().enumerate() {
+            if f.get_copy().is_err() {
+                for &d in &ls.specs[j].deps {
+                    needed[d] = true;
+                }
+            }
+        }
+    }
+    let mut prev: Vec<Option<Chunk>> = (0..entry_width)
+        .map(|j| {
+            if entry_snapshotted && needed[j] {
+                if let Some(c) =
+                    snaps.restore_value::<Chunk>(&ckpt_key(entry_layer, j), Some(validator))
+                {
+                    return Some(c);
+                }
+                // Snapshot missing or lost: fall back to the surviving
+                // in-memory wavefront below.
+            }
+            entry[j].clone()
+        })
+        .collect();
+
+    for (t_rel, ls) in grid.iter_mut().enumerate() {
+        let layer_t = (win_start + t_rel) as isize;
+        let mut cur: Vec<Option<Chunk>> =
+            ls.futs.iter().map(|f| f.get_copy().ok()).collect();
+        // Gather this layer's repair jobs, then launch them all before
+        // collecting any: failed tasks within a layer are independent,
+        // so their repairs run concurrently on the substrate.
+        let mut jobs: Vec<(usize, Vec<Chunk>)> = Vec::new();
+        for j in 0..ls.futs.len() {
+            if cur[j].is_some() {
+                continue;
+            }
+            let deps: Vec<Option<Chunk>> =
+                ls.specs[j].deps.iter().map(|&d| prev[d].clone()).collect();
+            if deps.iter().any(|d| d.is_none()) {
+                continue; // upstream irreparable: the poison stands
+            }
+            jobs.push((j, deps.into_iter().flatten().collect()));
+        }
+        let inflight: Vec<Future<Chunk>> = jobs
+            .iter()
+            .map(|(j, deps)| {
+                let b = wiring.wrap(&ls.specs[*j].body);
+                let d = deps.clone();
+                exec.base().submit(Arc::new(move || b(&d)))
+            })
+            .collect();
+        for ((j, deps), fut) in jobs.into_iter().zip(inflight) {
+            let judge = |r: TaskResult<Chunk>| match r {
+                Ok(c) if validator(&c) => Ok(c),
+                Ok(_) => Err(TaskError::ValidationRejected),
+                Err(e) => Err(e),
+            };
+            let mut outcome = judge(fut.get());
+            // Serial retries only for the (rare) repair that failed
+            // again — e.g. an injected error striking the repair itself.
+            for _ in 1..REPAIR_ATTEMPTS {
+                if outcome.is_ok() {
+                    break;
+                }
+                let b = wiring.wrap(&ls.specs[j].body);
+                let d = deps.clone();
+                outcome = judge(exec.base().submit(Arc::new(move || b(&d))).get());
+            }
+            match outcome {
+                Ok(c) => {
+                    if is_snap_layer(layer_t) {
+                        let _ = snaps.save_value(&ckpt_key(layer_t, j), &c);
+                    }
+                    ls.futs[j] = Future::ready(Ok(c.clone()));
+                    cur[j] = Some(c);
+                }
+                Err(e) => {
+                    ls.futs[j] = Future::ready(Err(e));
+                    // cur[j] stays None: dependents keep their poison.
+                }
+            }
+        }
+        prev = cur;
+    }
+}
+
+/// Fresh per-run directory for the disk snapshot backend.
+fn disk_snapshot_dir() -> PathBuf {
+    crate::checkpoint::store::unique_temp_dir("rhpx_zoo_snap")
+}
+
+/// The pool checkpoint route.
+fn run_pool_ckpt(
+    rt: &Runtime,
+    w: &dyn Workload,
+    params: &RunParams,
+    every: usize,
+    backend: SnapshotBackend,
+) -> TaskResult<(Vec<f64>, RunReport)> {
+    let (store, disk_dir): (Arc<dyn SnapshotStore>, Option<PathBuf>) = match backend {
+        SnapshotBackend::Agas => {
+            return Err(TaskError::Runtime(
+                "--resilience checkpoint: the agas backend needs --cluster".into(),
+            ))
+        }
+        SnapshotBackend::Disk => {
+            let dir = disk_snapshot_dir();
+            (Arc::new(DiskSnapshotStore::new(dir.clone())) as Arc<dyn SnapshotStore>, Some(dir))
+        }
+        SnapshotBackend::Auto | SnapshotBackend::Memory => {
+            (Arc::new(MemorySnapshotStore::new()) as Arc<dyn SnapshotStore>, None)
+        }
+    };
+    let wiring = FaultWiring::new(params);
+    let exec = CheckpointExecutor::new(PoolExecutor::new(rt), store, w.name());
+
+    let timer = Timer::start();
+    let outcome = run_ckpt_dag(w, params, every, &exec, &wiring, |_| false, || {});
+    let wall = timer.elapsed_secs();
+    // Temp-dir cleanup must also run when the DAG errored out.
+    if let Some(dir) = disk_dir {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+    let out = outcome?;
+
+    let report = RunReport {
+        workload: w.name().into(),
+        mode: mode_label(params),
+        launcher: exec.base().base_label(),
+        wall_secs: wall,
+        tasks: out.tasks,
+        subdomains: out.width,
+        failures_injected: wiring.injector.counters().injected(),
+        silent_corruptions: wiring.sdc.count(),
+        launch_errors: out.launch_errors,
+        kills_applied: 0,
+        recovery_latency_secs: mean_secs(&out.repair_latencies),
+        localities: Vec::new(),
+        tasks_reexecuted: wiring
+            .runs
+            .load(Ordering::Relaxed)
+            .saturating_sub(out.tasks as u64),
+        snapshots: exec.snapshots().counts(),
+        final_checksum: checksum_of(&out.finals),
+    };
+    Ok((gather(&out.finals), report))
+}
+
+/// The cluster checkpoint route: tasks place over *live* localities
+/// only, kills are propagated to the snapshot store (loss-on-kill), and
+/// killed slots restore from the last window snapshot with only the
+/// delta tasks re-executed.
+fn run_cluster_ckpt(
+    w: &dyn Workload,
+    params: &RunParams,
+    spec: &ClusterSpec,
+    every: usize,
+    backend: SnapshotBackend,
+) -> TaskResult<(Vec<f64>, RunReport)> {
+    let wiring = FaultWiring::new(params);
+    let cluster = spec.build();
+    let (store, disk_dir): (Arc<dyn SnapshotStore>, Option<PathBuf>) = match backend {
+        SnapshotBackend::Auto | SnapshotBackend::Agas => (
+            Arc::new(AgasSnapshotStore::new(&cluster, AGAS_SNAPSHOT_REPLICAS))
+                as Arc<dyn SnapshotStore>,
+            None,
+        ),
+        SnapshotBackend::Memory => {
+            (Arc::new(MemorySnapshotStore::new()) as Arc<dyn SnapshotStore>, None)
+        }
+        SnapshotBackend::Disk => {
+            let dir = disk_snapshot_dir();
+            (Arc::new(DiskSnapshotStore::new(dir.clone())) as Arc<dyn SnapshotStore>, Some(dir))
+        }
+    };
+    let exec =
+        CheckpointExecutor::new(ClusterExecutor::alive_routed(&cluster), store, w.name());
+    let snaps = Arc::clone(exec.snapshots());
+
+    let mut schedule = spec.schedule.clone();
+    let mut kills_applied: Vec<KillEvent> = Vec::new();
+    let pending: RefCell<Vec<Timer>> = RefCell::new(Vec::new());
+    let mut latencies: Vec<f64> = Vec::new();
+
+    let timer = Timer::start();
+    let outcome = run_ckpt_dag(
+        w,
+        params,
+        every,
+        &exec,
+        &wiring,
+        |task_idx| {
+            let fired = schedule.advance(task_idx, &cluster);
+            for ev in &fired {
+                kills_applied.push(*ev);
+                pending.borrow_mut().push(Timer::start());
+                // Loss-on-kill: replicas homed on the corpse are
+                // re-homed (live sibling exists) or dropped and counted.
+                snaps.on_locality_killed(ev.loc);
+            }
+            // A fired kill forces an eager barrier after this layer, so
+            // recovery starts before the cone crosses the window.
+            !fired.is_empty()
+        },
+        || {
+            for t in pending.borrow_mut().drain(..) {
+                latencies.push(t.elapsed_secs());
+            }
+        },
+    );
+    for t in pending.borrow_mut().drain(..) {
+        latencies.push(t.elapsed_secs());
+    }
+    let wall = timer.elapsed_secs();
+    if let Some(dir) = disk_dir {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+    let out = outcome?;
+
+    let localities = locality_reports(&cluster, &kills_applied);
+
+    let report = RunReport {
+        workload: w.name().into(),
+        mode: mode_label(params),
+        launcher: exec.base().base_label(),
+        wall_secs: wall,
+        tasks: out.tasks,
+        subdomains: out.width,
+        failures_injected: wiring.injector.counters().injected(),
+        silent_corruptions: wiring.sdc.count(),
+        launch_errors: out.launch_errors,
+        kills_applied: kills_applied.len(),
+        recovery_latency_secs: mean_secs(&latencies),
+        tasks_reexecuted: cluster_reexecuted(&localities, out.tasks),
+        snapshots: exec.snapshots().counts(),
+        localities,
+        final_checksum: checksum_of(&out.finals),
+    };
+    Ok((gather(&out.finals), report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::by_name;
+
+    fn rt() -> Runtime {
+        Runtime::builder().workers(2).build()
+    }
+
+    fn clustered(spec: &str) -> RunParams {
+        RunParams {
+            cluster: Some(ClusterSpec::parse(spec).unwrap()),
+            ..RunParams::default()
+        }
+    }
+
+    #[test]
+    fn plain_pool_run_is_deterministic_and_survives() {
+        let rt = rt();
+        let w = by_name("forkjoin", 1.0).unwrap();
+        let (out_a, rep_a) = run(&rt, w.as_ref(), &RunParams::default()).unwrap();
+        let (out_b, rep_b) = run(&rt, w.as_ref(), &RunParams::default()).unwrap();
+        assert_eq!(out_a, out_b, "pure bodies must be bit-deterministic");
+        assert_eq!(rep_a.final_checksum.to_bits(), rep_b.final_checksum.to_bits());
+        assert_eq!(rep_a.survival_rate(), 1.0);
+        assert_eq!(rep_a.launch_errors, 0);
+        assert_eq!(rep_a.tasks_reexecuted, 0);
+        assert_eq!(rep_a.mode, "pure_dataflow");
+        assert!(rep_a.launcher.starts_with("pool("), "launcher = {}", rep_a.launcher);
+        assert_eq!(rep_a.workload, "forkjoin");
+        assert!(rep_a.tasks > 16);
+    }
+
+    #[test]
+    fn cluster_kill_with_replay_matches_pool_checksum() {
+        let rt = rt();
+        let w = by_name("jacobi", 1.0).unwrap();
+        let (pool_out, pool_rep) = run(&rt, w.as_ref(), &RunParams::default()).unwrap();
+
+        let mut params = clustered("4:kill=10@2");
+        params.resilience = Some(PolicySpec::Replay { n: 3 });
+        let (out, rep) = run(&rt, w.as_ref(), &params).unwrap();
+        assert_eq!(rep.kills_applied, 1);
+        assert_eq!(rep.survival_rate(), 1.0);
+        assert!(rep.tasks_reexecuted > 0, "the kill must have cost retries");
+        assert!(rep.recovery_latency_secs.is_some());
+        assert_eq!(rep.launcher, "cluster(4)");
+        assert_eq!(out, pool_out, "recovered run must be bit-identical");
+        assert_eq!(rep.final_checksum.to_bits(), pool_rep.final_checksum.to_bits());
+    }
+
+    #[test]
+    fn cluster_kill_without_resilience_poisons_slots() {
+        let rt = rt();
+        let w = by_name("stencil1d", 1.0).unwrap();
+        let (_, rep) = run(&rt, w.as_ref(), &clustered("4:kill=10@2")).unwrap();
+        assert_eq!(rep.kills_applied, 1);
+        assert!(rep.launch_errors > 0, "an unprotected kill must poison the DAG");
+        assert!(rep.survival_rate() < 1.0);
+    }
+
+    #[test]
+    fn checkpoint_pool_route_snapshots_and_matches_plain_checksum() {
+        let rt = rt();
+        let w = by_name("stream", 1.0).unwrap();
+        let (plain_out, _) = run(&rt, w.as_ref(), &RunParams::default()).unwrap();
+        let params = RunParams {
+            resilience: Some(PolicySpec::Checkpoint {
+                every: 1,
+                backend: SnapshotBackend::Auto,
+            }),
+            ..RunParams::default()
+        };
+        let (out, rep) = run(&rt, w.as_ref(), &params).unwrap();
+        assert_eq!(out, plain_out);
+        assert_eq!(rep.launch_errors, 0);
+        assert!(rep.snapshots.saved > 0, "snapshot layers must persist");
+        assert_eq!(rep.mode, "exec_checkpoint(1)");
+    }
+
+    #[test]
+    fn checkpoint_cluster_kill_recovers_bit_identical() {
+        let rt = rt();
+        let w = by_name("stencil2d", 1.0).unwrap();
+        let (pool_out, _) = run(&rt, w.as_ref(), &RunParams::default()).unwrap();
+        let mut params = clustered("4:kill=12@1");
+        params.resilience = Some(PolicySpec::Checkpoint {
+            every: 1,
+            backend: SnapshotBackend::Auto,
+        });
+        let (out, rep) = run(&rt, w.as_ref(), &params).unwrap();
+        assert_eq!(rep.kills_applied, 1);
+        assert_eq!(rep.survival_rate(), 1.0, "launch_errors = {}", rep.launch_errors);
+        assert_eq!(out, pool_out, "checkpoint repair must restore exact bytes");
+        assert!(rep.snapshots.saved > 0);
+    }
+
+    #[test]
+    fn checkpoint_agas_backend_requires_cluster() {
+        let rt = rt();
+        let w = by_name("stencil1d", 1.0).unwrap();
+        let params = RunParams {
+            resilience: Some(PolicySpec::Checkpoint {
+                every: 1,
+                backend: SnapshotBackend::Agas,
+            }),
+            ..RunParams::default()
+        };
+        assert!(run(&rt, w.as_ref(), &params).is_err());
+    }
+
+    #[test]
+    fn sdc_leaks_without_validation_and_is_caught_with_it() {
+        let rt = rt();
+        let w = by_name("forkjoin", 1.0).unwrap();
+        let (clean_out, clean_rep) = run(&rt, w.as_ref(), &RunParams::default()).unwrap();
+
+        // Control arm: corruption flows through undetected.
+        let leaky = RunParams {
+            sdc_rate: Some(0.5),
+            validate: false,
+            ..RunParams::default()
+        };
+        let (bad_out, bad_rep) = run(&rt, w.as_ref(), &leaky).unwrap();
+        assert!(bad_rep.silent_corruptions > 0, "0.5/task over many tasks must land");
+        assert_eq!(bad_rep.launch_errors, 0, "silent means silent: nothing failed");
+        assert_ne!(bad_out, clean_out, "undetected corruption must reach the output");
+
+        // Detection arm: validation + replay recover the exact result.
+        let guarded = RunParams {
+            sdc_rate: Some(0.2),
+            resilience: Some(PolicySpec::Replay { n: 10 }),
+            ..RunParams::default()
+        };
+        let (good_out, good_rep) = run(&rt, w.as_ref(), &guarded).unwrap();
+        assert!(good_rep.silent_corruptions > 0);
+        assert_eq!(good_rep.launch_errors, 0);
+        assert!(good_rep.tasks_reexecuted > 0, "caught corruptions cost retries");
+        assert_eq!(good_out, clean_out, "validated replay must restore exact bytes");
+        assert_eq!(
+            good_rep.final_checksum.to_bits(),
+            clean_rep.final_checksum.to_bits()
+        );
+    }
+}

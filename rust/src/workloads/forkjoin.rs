@@ -1,0 +1,152 @@
+//! A recursive fork-join tree: each round forks a root vector three
+//! levels deep (widths 2 → 4 → 8), applies a leaf kernel to the eight
+//! fragments, then joins back up (8 → 4 → 2 → 1), and the joined root
+//! feeds the next round. This is arXiv 1710.09074's divide-and-conquer
+//! pattern — the shape the 1D ring can't express: a failure near the
+//! root of the join half poisons *everything* above it, so replay cost
+//! compounds up the tree instead of dilating sideways.
+//!
+//! The leaf kernel is `sin(x)` elementwise (a contraction, so repeated
+//! rounds stay bounded); forks split exact halves and joins concatenate
+//! them back, so fork/join layers are pure data movement and the final
+//! root has the same length as the input.
+
+use crate::error::TaskResult;
+use crate::stencil::Chunk;
+
+use super::{TaskSpec, Workload};
+
+/// Fork depth: 2^3 = 8 leaves per round.
+const DEPTH: u32 = 3;
+/// Root vector length (divisible by 2^DEPTH).
+const ROOT_LEN: usize = 64;
+/// Layers per round: DEPTH forks + 1 leaf + DEPTH joins.
+const LAYERS_PER_ROUND: usize = 2 * DEPTH as usize + 1;
+
+pub struct ForkJoin {
+    rounds: usize,
+}
+
+impl ForkJoin {
+    /// Scale stretches the round count; the tree depth stays fixed so
+    /// the fan-out/fan-in shape is scale-invariant.
+    pub fn scaled(scale: f64) -> Self {
+        ForkJoin { rounds: ((3.0 * scale).round() as usize).max(1) }
+    }
+
+    /// Fork task: take the first or second half of the single parent.
+    fn fork(parent: usize, second_half: bool) -> TaskSpec {
+        TaskSpec::new(vec![parent], move |v: &[Chunk]| {
+            let data = &v[0].data;
+            let half = data.len() / 2;
+            Ok(if second_half { data[half..].to_vec() } else { data[..half].to_vec() })
+        })
+    }
+
+    /// Join task: concatenate two siblings back into their parent.
+    fn join(lhs: usize, rhs: usize) -> TaskSpec {
+        TaskSpec::new(vec![lhs, rhs], |v: &[Chunk]| {
+            let mut out = Vec::with_capacity(v[0].data.len() + v[1].data.len());
+            out.extend_from_slice(&v[0].data);
+            out.extend_from_slice(&v[1].data);
+            Ok(out)
+        })
+    }
+
+    /// Leaf kernel on one fragment.
+    fn leaf(slot: usize) -> TaskSpec {
+        TaskSpec::new(vec![slot], |v: &[Chunk]| {
+            Ok(v[0].data.iter().map(|x| x.sin()).collect())
+        })
+    }
+}
+
+impl Workload for ForkJoin {
+    fn name(&self) -> &'static str {
+        "forkjoin"
+    }
+
+    fn describe(&self) -> &'static str {
+        "recursive fork-join tree (replay cost compounds up the tree)"
+    }
+
+    fn initial(&self) -> Vec<Chunk> {
+        let data = (0..ROOT_LEN)
+            .map(|i| (std::f64::consts::TAU * i as f64 / ROOT_LEN as f64).sin())
+            .collect();
+        vec![Chunk::new(data)]
+    }
+
+    fn layers(&self) -> usize {
+        self.rounds * LAYERS_PER_ROUND
+    }
+
+    fn layer_tasks(&self, layer: usize) -> Vec<TaskSpec> {
+        let depth = DEPTH as usize;
+        match layer % LAYERS_PER_ROUND {
+            // Fork levels: width doubles each layer (2, 4, 8, …); task j
+            // splits parent j/2, taking the half its parity selects.
+            l if l < depth => {
+                let width = 2 << l;
+                (0..width).map(|j| Self::fork(j / 2, j % 2 == 1)).collect()
+            }
+            // Leaf level: one kernel task per fragment.
+            l if l == depth => (0..1 << depth).map(Self::leaf).collect(),
+            // Join levels: width halves each layer (4, 2, 1, … after the
+            // 8-wide leaf level); task j rejoins siblings 2j and 2j+1.
+            l => {
+                let width = 1 << (2 * depth - l);
+                (0..width).map(|j| Self::join(2 * j, 2 * j + 1)).collect()
+            }
+        }
+    }
+
+    /// One full round per repair window, so a checkpoint layer always
+    /// lands on the joined root (width 1) — the natural cut point of the
+    /// tree.
+    fn window(&self) -> usize {
+        LAYERS_PER_ROUND
+    }
+
+    fn tol(&self) -> f64 {
+        1e-6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_handle::Runtime;
+    use crate::workloads::{engine, RunParams};
+
+    #[test]
+    fn tree_shape_is_fork_leaf_join() {
+        let w = ForkJoin::scaled(1.0);
+        let widths: Vec<usize> =
+            (0..LAYERS_PER_ROUND).map(|l| w.layer_tasks(l).len()).collect();
+        assert_eq!(widths, vec![2, 4, 8, 8, 4, 2, 1]);
+        assert_eq!(w.layers(), 21);
+    }
+
+    #[test]
+    fn rounds_preserve_length_and_contract_into_sin_range() {
+        let rt = Runtime::builder().workers(2).build();
+        let w = ForkJoin::scaled(1.0);
+        let (out, rep) = engine::run(&rt, &w, &RunParams::default()).unwrap();
+        assert_eq!(rep.launch_errors, 0);
+        assert_eq!(rep.subdomains, 1, "the tree must join back to one root");
+        assert_eq!(out.len(), ROOT_LEN, "fork/join must preserve the root length");
+        // After ≥1 round every element went through sin at least once.
+        assert!(out.iter().all(|x| x.abs() <= 1.0));
+        // And the kernel actually ran: sin is not the identity.
+        let fresh: Vec<f64> = w.initial()[0].data.to_vec();
+        assert_ne!(out, fresh);
+        // Reference: the whole tree is equivalent to rounds× elementwise
+        // sin over the root vector.
+        let mut expect = fresh;
+        for _ in 0..3 {
+            expect = expect.iter().map(|x| x.sin()).collect();
+        }
+        assert_eq!(out, expect, "tree must equal rounds of elementwise sin");
+    }
+}

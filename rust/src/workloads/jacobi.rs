@@ -1,0 +1,136 @@
+//! Jacobi smoothing with a per-step global reduction: every layer runs
+//! one weighted-smoothing task per subdomain (a width-3 ring, like the
+//! 1D stencil) *plus* one residual task whose dependency list is the
+//! entire domain — a `when_all` at width = domain size, the paper's
+//! global-reduction shape. That reduction task is the interesting
+//! failure target: it sits downstream of *every* subdomain, so a kill
+//! anywhere in the layer poisons it, and a kill of the reduction itself
+//! must not take the domain down with it.
+//!
+//! The smoother is the periodic three-point kernel
+//! `out[i] = ¼·u[i−1] + ½·u[i] + ¼·u[i+1]` (weights sum to 1, so the
+//! global sum over value slots is conserved — pinned by the unit test);
+//! the residual is the L1 norm of the whole domain.
+
+use crate::error::TaskResult;
+use crate::stencil::{Chunk, Domain};
+
+use super::{TaskSpec, Workload};
+
+pub struct Jacobi {
+    /// Value subdomains (the wavefront also carries one residual slot).
+    n_sub: usize,
+    nx: usize,
+    layers: usize,
+    window: usize,
+}
+
+impl Jacobi {
+    /// Scale stretches the layer count; the domain width (and with it
+    /// the reduction's fan-in) stays fixed.
+    pub fn scaled(scale: f64) -> Self {
+        Jacobi {
+            n_sub: 8,
+            nx: 32,
+            layers: ((8.0 * scale).round() as usize).max(2),
+            window: 4,
+        }
+    }
+
+    /// Periodic three-point smoothing over one ghost cell per side.
+    fn smooth(v: &[Chunk]) -> TaskResult<Vec<f64>> {
+        let (left, center, right) = (&v[0], &v[1], &v[2]);
+        let n = center.data.len();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let lo = if i == 0 { left.data[left.data.len() - 1] } else { center.data[i - 1] };
+            let hi = if i + 1 == n { right.data[0] } else { center.data[i + 1] };
+            out.push(0.25 * lo + 0.5 * center.data[i] + 0.25 * hi);
+        }
+        Ok(out)
+    }
+}
+
+impl Workload for Jacobi {
+    fn name(&self) -> &'static str {
+        "jacobi"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Jacobi smoothing with per-step global residual reduction"
+    }
+
+    /// Value slots 0..n_sub, plus slot n_sub holding the (initially
+    /// zero) residual.
+    fn initial(&self) -> Vec<Chunk> {
+        let mut slots = Domain::sine(self.n_sub, self.nx).subdomains;
+        slots.push(Chunk::new(vec![0.0]));
+        slots
+    }
+
+    fn layers(&self) -> usize {
+        self.layers
+    }
+
+    fn layer_tasks(&self, _layer: usize) -> Vec<TaskSpec> {
+        let n = self.n_sub;
+        let mut specs: Vec<TaskSpec> = (0..n)
+            .map(|j| {
+                TaskSpec::new(vec![(j + n - 1) % n, j, (j + 1) % n], Self::smooth)
+            })
+            .collect();
+        // The global reduction: depends on every value slot of the
+        // previous wavefront at once (`when_all` at domain width).
+        specs.push(TaskSpec::new((0..n).collect(), |v: &[Chunk]| {
+            Ok(vec![v
+                .iter()
+                .map(|c| c.data.iter().map(|x| x.abs()).sum::<f64>())
+                .sum::<f64>()])
+        }));
+        specs
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_handle::Runtime;
+    use crate::workloads::{engine, RunParams};
+
+    #[test]
+    fn wavefront_carries_values_plus_one_reduction_slot() {
+        let w = Jacobi::scaled(1.0);
+        assert_eq!(w.initial().len(), 9);
+        let specs = w.layer_tasks(0);
+        assert_eq!(specs.len(), 9);
+        assert_eq!(specs[8].deps, (0..8).collect::<Vec<_>>(), "width-8 when_all");
+    }
+
+    #[test]
+    fn smoothing_conserves_the_sum_and_residual_tracks_the_norm() {
+        let rt = Runtime::builder().workers(2).build();
+        let w = Jacobi::scaled(1.0);
+        let initial_sum: f64 = Domain::sine(8, 32).gather().iter().sum();
+        let (out, rep) = engine::run(&rt, &w, &RunParams::default()).unwrap();
+        assert_eq!(rep.launch_errors, 0);
+        assert_eq!(rep.subdomains, 9);
+        assert_eq!(out.len(), 8 * 32 + 1);
+        let (values, residual) = out.split_at(8 * 32);
+        let final_sum: f64 = values.iter().sum();
+        assert!(
+            (final_sum - initial_sum).abs() < 1e-9,
+            "smoothing weights sum to 1: {initial_sum} -> {final_sum}"
+        );
+        // The final residual is the L1 norm of the *previous* layer's
+        // values — nonzero and no larger than the initial norm (the
+        // smoother is a contraction in L1 for this sign-alternating
+        // profile).
+        let initial_l1: f64 = Domain::sine(8, 32).gather().iter().map(|x| x.abs()).sum();
+        assert!(residual[0] > 0.0);
+        assert!(residual[0] <= initial_l1 + 1e-9, "{} > {initial_l1}", residual[0]);
+    }
+}

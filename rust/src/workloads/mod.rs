@@ -1,0 +1,171 @@
+//! The workload zoo: structurally distinct computation patterns behind
+//! one [`Workload`] trait, all runnable through the full
+//! `--resilience` × `--cluster` fault-model matrix by the generic
+//! [`engine`].
+//!
+//! The resilience-design-patterns literature (arXiv 1611.02717,
+//! 1710.09074) argues a resilience mechanism is only understood once it
+//! is evaluated against structurally different DAG shapes — the repo's
+//! original §V-B 1D stencil is exactly one shape. This module supplies
+//! the missing ones:
+//!
+//! | workload | DAG shape | what it stresses |
+//! |---|---|---|
+//! | [`stencil1d`] | ring of width-3 dependency cones | the §V-B baseline, now engine-hosted |
+//! | [`stencil2d`] | 2D torus, width-5 cones | failure cones overlapping in two dimensions |
+//! | [`forkjoin`] | recursive fork/leaf/join tree | replay cost compounding up the tree |
+//! | [`jacobi`] | smoothing + per-step global reduction | `when_all` at width = domain size |
+//! | [`stream`] | systolic pipeline with sustained ingest | sourceless tasks (empty deps), long chains |
+//!
+//! Every workload expresses its computation as *layers* of
+//! [`TaskSpec`]s — pure math bodies plus dependency indices into the
+//! previous wavefront. The engine owns everything else: fault
+//! injection ([`crate::failure::FaultInjector`]), silent-data
+//! corruption ([`crate::failure::SdcInjector`]), checksum validation,
+//! executor-decorator routing, cluster placement, kill schedules,
+//! window barriers, checkpoint/repair, and uniform reporting
+//! ([`RunReport`]: survival rate, recovery latency, `tasks_reexecuted`).
+//!
+//! See `docs/ARCHITECTURE.md` § "Writing a new workload" for the trait
+//! contract and how to register a new shape.
+
+pub mod engine;
+pub mod forkjoin;
+pub mod jacobi;
+pub mod stencil1d;
+pub mod stencil2d;
+pub mod stream;
+
+use std::sync::Arc;
+
+use crate::error::TaskResult;
+use crate::stencil::Chunk;
+
+pub use engine::{run, RunParams, RunReport};
+
+/// A pure task body: dependency chunks in (in the declared order),
+/// raw output values out. The engine wraps it with the fault wiring —
+/// injector draw, checksum attachment, silent corruption, run counting —
+/// so workload math stays fault-agnostic and trivially re-runnable.
+pub type TaskBody = Arc<dyn Fn(&[Chunk]) -> TaskResult<Vec<f64>> + Send + Sync>;
+
+/// One task of one layer: which slots of the *previous* wavefront it
+/// consumes, and the math it runs over them.
+#[derive(Clone)]
+pub struct TaskSpec {
+    /// Indices into the previous wavefront (layer − 1's output slots;
+    /// for layer 0, into [`Workload::initial`]). May be empty — a
+    /// sourceless task (e.g. pipeline ingest) launches immediately.
+    pub deps: Vec<usize>,
+    pub body: TaskBody,
+}
+
+impl TaskSpec {
+    pub fn new(
+        deps: Vec<usize>,
+        body: impl Fn(&[Chunk]) -> TaskResult<Vec<f64>> + Send + Sync + 'static,
+    ) -> Self {
+        TaskSpec { deps, body: Arc::new(body) }
+    }
+}
+
+/// A computation pattern the engine can run resiliently.
+///
+/// The contract:
+/// * the DAG is layered — [`Workload::layer_tasks`]`(t)` declares the
+///   tasks of wavefront `t`, whose `deps` index into wavefront `t − 1`
+///   (or [`Workload::initial`] for `t = 0`); widths may vary per layer;
+/// * bodies are **pure** and deterministic — same deps in, same bytes
+///   out, in a fixed operation order — which is what makes a recovered
+///   run bit-identical to a fault-free one, on any substrate;
+/// * [`Workload::window`] is the repair granularity: the engine
+///   barriers every `window` layers, which bounds in-flight work, takes
+///   checkpoint snapshots (`checkpoint:K` snapshots every K windows),
+///   and scopes the checkpoint repair pass.
+pub trait Workload: Send + Sync {
+    /// Registry name (also the CLI's `rhpx run <name>`).
+    fn name(&self) -> &'static str;
+    /// One-line description for listings.
+    fn describe(&self) -> &'static str;
+    /// The initial wavefront (layer −1's output).
+    fn initial(&self) -> Vec<Chunk>;
+    /// Number of layers.
+    fn layers(&self) -> usize;
+    /// The tasks of layer `layer` (0-based), in slot order.
+    fn layer_tasks(&self, layer: usize) -> Vec<TaskSpec>;
+    /// Repair granularity: barrier (and checkpoint-cadence unit) every
+    /// this many layers. Must be ≥ 1.
+    fn window(&self) -> usize;
+    /// Checksum-validation tolerance.
+    fn tol(&self) -> f64 {
+        1e-6
+    }
+}
+
+/// The registry: name → description, one row per workload, shared by
+/// `rhpx run --list`, the `table_zoo` bench, and the acceptance matrix
+/// so they cannot drift.
+pub const WORKLOADS: &[(&str, &str)] = &[
+    ("stencil1d", "1D Lax-Wendroff ring stencil (the §V-B DAG, engine-hosted)"),
+    ("stencil2d", "2D periodic diffusion stencil (failure cones overlap in two dimensions)"),
+    ("forkjoin", "recursive fork-join tree (replay cost compounds up the tree)"),
+    ("jacobi", "Jacobi smoothing with per-step global residual reduction"),
+    ("stream", "streaming pipeline with sustained ingest"),
+];
+
+/// Construct a workload by registry name. `scale` stretches the layer
+/// count (1.0 = the test-size geometry every acceptance test runs);
+/// widths stay fixed so the DAG shape is scale-invariant.
+pub fn by_name(name: &str, scale: f64) -> Option<Box<dyn Workload>> {
+    match name {
+        "stencil1d" => Some(Box::new(stencil1d::Stencil1d::scaled(scale))),
+        "stencil2d" => Some(Box::new(stencil2d::Stencil2d::scaled(scale))),
+        "forkjoin" => Some(Box::new(forkjoin::ForkJoin::scaled(scale))),
+        "jacobi" => Some(Box::new(jacobi::Jacobi::scaled(scale))),
+        "stream" => Some(Box::new(stream::Stream::scaled(scale))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_listed_workload() {
+        for (name, _) in WORKLOADS {
+            let w = by_name(name, 1.0).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(w.name(), *name);
+            assert!(!w.describe().is_empty());
+            assert!(w.layers() >= 2, "{name}: too few layers");
+            assert!(w.window() >= 1, "{name}: window must be >= 1");
+            assert!(!w.initial().is_empty(), "{name}: empty initial wavefront");
+        }
+        assert!(by_name("bogus", 1.0).is_none());
+    }
+
+    #[test]
+    fn every_workload_declares_well_formed_layers() {
+        for (name, _) in WORKLOADS {
+            let w = by_name(name, 1.0).unwrap();
+            let mut prev_width = w.initial().len();
+            let mut total = 0usize;
+            for layer in 0..w.layers() {
+                let specs = w.layer_tasks(layer);
+                assert!(!specs.is_empty(), "{name}: empty layer {layer}");
+                for (j, s) in specs.iter().enumerate() {
+                    for &d in &s.deps {
+                        assert!(
+                            d < prev_width,
+                            "{name}: layer {layer} slot {j} dep {d} out of range {prev_width}"
+                        );
+                    }
+                }
+                total += specs.len();
+                prev_width = specs.len();
+            }
+            // Enough tasks for the acceptance kill schedule (kill=10@2).
+            assert!(total > 16, "{name}: only {total} tasks");
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! The §V-B 1D Lax-Wendroff ring stencil as a [`Workload`] — the same
+//! DAG `stencil::driver` builds (one task per subdomain per iteration,
+//! depending on itself and both neighbors), expressed through
+//! [`TaskSpec`]s so the generic engine hosts it. At scale 1.0 the
+//! geometry is exactly [`StencilParams::tiny`]'s
+//! (8 × 64, 10 iterations, 4 steps, unit Courant), which is what lets
+//! the equivalence test below pin engine output bit-identical to the
+//! legacy driver.
+//!
+//! [`StencilParams::tiny`]: crate::stencil::StencilParams::tiny
+
+use crate::stencil::domain::build_extended;
+use crate::stencil::{kernel, Chunk, Domain};
+
+use super::{TaskSpec, Workload};
+
+pub struct Stencil1d {
+    n_sub: usize,
+    nx: usize,
+    iterations: usize,
+    /// Time steps advanced per task (= ghost cells per side).
+    steps: usize,
+    courant: f64,
+    window: usize,
+}
+
+impl Stencil1d {
+    /// Scale stretches the iteration count; the ring width stays 8 so
+    /// the DAG shape (and the per-task dependency cone) is invariant.
+    pub fn scaled(scale: f64) -> Self {
+        Stencil1d {
+            n_sub: 8,
+            nx: 64,
+            iterations: ((10.0 * scale).round() as usize).max(2),
+            steps: 4,
+            courant: 1.0,
+            window: 4,
+        }
+    }
+}
+
+impl Workload for Stencil1d {
+    fn name(&self) -> &'static str {
+        "stencil1d"
+    }
+
+    fn describe(&self) -> &'static str {
+        "1D Lax-Wendroff ring stencil (the §V-B DAG, engine-hosted)"
+    }
+
+    fn initial(&self) -> Vec<Chunk> {
+        Domain::sine(self.n_sub, self.nx).subdomains
+    }
+
+    fn layers(&self) -> usize {
+        self.iterations
+    }
+
+    fn layer_tasks(&self, _layer: usize) -> Vec<TaskSpec> {
+        let n = self.n_sub;
+        let (steps, courant) = (self.steps, self.courant);
+        (0..n)
+            .map(|j| {
+                TaskSpec::new(
+                    vec![(j + n - 1) % n, j, (j + 1) % n],
+                    move |v: &[Chunk]| {
+                        let ext = build_extended(&v[0], &v[1], &v[2], steps);
+                        Ok(kernel::lax_wendroff_multistep_owned(ext, steps, courant))
+                    },
+                )
+            })
+            .collect()
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_handle::Runtime;
+    use crate::stencil::{self, Mode, StencilParams};
+    use crate::workloads::{engine, RunParams};
+
+    fn rt() -> Runtime {
+        Runtime::builder().workers(2).build()
+    }
+
+    #[test]
+    fn engine_run_matches_legacy_driver_bit_for_bit() {
+        let rt = rt();
+        let params = StencilParams::tiny(); // 8 × 64, 10 iters, Mode::Pure
+        assert_eq!(params.mode, Mode::Pure);
+        let (legacy, legacy_rep) = stencil::run(&rt, &params).unwrap();
+
+        let w = Stencil1d::scaled(1.0);
+        let (ours, rep) = engine::run(&rt, &w, &RunParams::default()).unwrap();
+
+        assert_eq!(ours, legacy, "engine must reproduce the driver's exact bytes");
+        assert_eq!(rep.final_checksum.to_bits(), legacy_rep.final_checksum.to_bits());
+        assert_eq!(rep.tasks, params.total_tasks());
+        assert_eq!(rep.subdomains, params.n_sub);
+    }
+
+    #[test]
+    fn unit_courant_is_an_exact_shift() {
+        let rt = rt();
+        let w = Stencil1d::scaled(1.0);
+        let (out, rep) = engine::run(&rt, &w, &RunParams::default()).unwrap();
+        assert_eq!(rep.launch_errors, 0);
+        // c = 1 Lax-Wendroff advects the profile by exactly one cell per
+        // step: 10 iterations × 4 steps = 40 cells.
+        let exact = Domain::sine(8, 64).exact_sine_shifted(40.0);
+        let max_err = out
+            .iter()
+            .zip(&exact)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_err < 1e-9, "max_err = {max_err}");
+    }
+}

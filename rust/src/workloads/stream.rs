@@ -1,0 +1,136 @@
+//! A streaming pipeline with sustained ingest: every layer, slot 0
+//! *generates* a fresh item (a sourceless task — empty dependency list,
+//! the shape no other zoo member has), slots 1–3 each transform the
+//! item the upstream stage produced last layer (systolic: an item
+//! ingested at layer `t` leaves stage 3 at layer `t+3`), and slot 4
+//! folds finished items into a running exponentially-weighted
+//! accumulator. This is arXiv 1710.09074's stream-processing pattern:
+//! failures don't dilate across a spatial domain, they ride the
+//! pipeline — a killed stage loses exactly the items in flight, and the
+//! accumulator's history makes that loss *stateful* (which is what the
+//! checkpoint strategy has to protect).
+
+use std::f64::consts::TAU;
+
+use crate::stencil::Chunk;
+
+use super::{TaskSpec, Workload};
+
+/// Points per stream item.
+const ITEM_LEN: usize = 16;
+/// Transform stages between ingest and the accumulator.
+const STAGES: usize = 3;
+/// Accumulator decay: `acc' = DECAY·acc + mean(item)`.
+const DECAY: f64 = 0.9;
+
+pub struct Stream {
+    /// Layers = items ingested (the pipeline runs one beat per layer).
+    beats: usize,
+    window: usize,
+}
+
+impl Stream {
+    /// Scale stretches the beat count; the pipeline depth stays fixed.
+    pub fn scaled(scale: f64) -> Self {
+        Stream { beats: ((12.0 * scale).round() as usize).max(4), window: 4 }
+    }
+
+    /// The deterministic ingest source for beat `t`.
+    fn source(&self, t: usize) -> Vec<f64> {
+        let total = (self.beats * ITEM_LEN) as f64;
+        (0..ITEM_LEN)
+            .map(|i| (TAU * (t * ITEM_LEN + i) as f64 / total).sin())
+            .collect()
+    }
+}
+
+impl Workload for Stream {
+    fn name(&self) -> &'static str {
+        "stream"
+    }
+
+    fn describe(&self) -> &'static str {
+        "streaming pipeline with sustained ingest"
+    }
+
+    /// Slots 0..=STAGES hold the (empty, all-zero) pipeline registers;
+    /// the last slot is the accumulator.
+    fn initial(&self) -> Vec<Chunk> {
+        let mut slots: Vec<Chunk> =
+            (0..=STAGES).map(|_| Chunk::new(vec![0.0; ITEM_LEN])).collect();
+        slots.push(Chunk::new(vec![0.0]));
+        slots
+    }
+
+    fn layers(&self) -> usize {
+        self.beats
+    }
+
+    fn layer_tasks(&self, layer: usize) -> Vec<TaskSpec> {
+        let mut specs = Vec::with_capacity(STAGES + 2);
+        // Ingest: no dependencies at all — the task is ready the moment
+        // it is launched, beat after beat.
+        let item = self.source(layer);
+        specs.push(TaskSpec::new(Vec::new(), move |_: &[Chunk]| Ok(item.clone())));
+        // Transform stages: each consumes what the upstream stage
+        // produced last beat. Bounded maps, so the stream can run
+        // indefinitely without blowing up.
+        specs.push(TaskSpec::new(vec![0], |v: &[Chunk]| {
+            Ok(v[0].data.iter().map(|x| 0.5 * x + 0.1).collect())
+        }));
+        specs.push(TaskSpec::new(vec![1], |v: &[Chunk]| {
+            Ok(v[0].data.iter().map(|x| x * x - 0.3).collect())
+        }));
+        specs.push(TaskSpec::new(vec![2], |v: &[Chunk]| {
+            Ok(v[0].data.iter().map(|x| x.sin()).collect())
+        }));
+        // Accumulator: fold the item leaving the pipeline into the
+        // running state — the stream's only long-lived value.
+        specs.push(TaskSpec::new(vec![STAGES, STAGES + 1], |v: &[Chunk]| {
+            let (item, acc) = (&v[0], &v[1]);
+            let mean = item.data.iter().sum::<f64>() / item.data.len() as f64;
+            Ok(vec![DECAY * acc.data[0] + mean])
+        }));
+        specs
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_handle::Runtime;
+    use crate::workloads::{engine, RunParams};
+
+    #[test]
+    fn pipeline_shape_has_sourceless_ingest_and_stateful_tail() {
+        let w = Stream::scaled(1.0);
+        assert_eq!(w.initial().len(), 5);
+        let specs = w.layer_tasks(0);
+        assert_eq!(specs.len(), 5);
+        assert!(specs[0].deps.is_empty(), "ingest must be sourceless");
+        assert_eq!(specs[4].deps, vec![3, 4], "accumulator folds item + own state");
+    }
+
+    #[test]
+    fn sustained_ingest_stays_bounded_and_deterministic() {
+        let rt = Runtime::builder().workers(2).build();
+        let w = Stream::scaled(1.0);
+        let (out_a, rep) = engine::run(&rt, &w, &RunParams::default()).unwrap();
+        let (out_b, _) = engine::run(&rt, &w, &RunParams::default()).unwrap();
+        assert_eq!(out_a, out_b, "same beats, same bytes");
+        assert_eq!(rep.launch_errors, 0);
+        assert_eq!(rep.subdomains, 5);
+        assert_eq!(rep.tasks, 12 * 5);
+        assert_eq!(out_a.len(), 4 * ITEM_LEN + 1);
+        // Stage 3 is sin(·), so items leave the pipeline in [-1, 1]; the
+        // geometric fold then bounds the accumulator by 1/(1-DECAY).
+        let acc = out_a[4 * ITEM_LEN];
+        assert!(acc.is_finite() && acc.abs() < 1.0 / (1.0 - DECAY), "acc = {acc}");
+        // The accumulator must actually have accumulated something.
+        assert_ne!(acc, 0.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Cross-workload acceptance matrix: every registered workload through
+//! the unified fault model (the `rhpx run` surface), pinned to the
+//! paper's recovery guarantees:
+//!
+//! * a cluster run with a scheduled locality kill, under `replay:3`,
+//!   recovers **bit-identically** to the fault-free pool run — survival
+//!   rate 1.0, zero poisoned slots, for every zoo member;
+//! * silent data corruption (bit-flip SDC) is caught by checksum
+//!   validation and replayed away — while the control arm with
+//!   validation off lets the corruption leak into the final wavefront.
+
+use rhpx::resilience::executor::PolicySpec;
+use rhpx::stencil::ClusterSpec;
+use rhpx::workloads::{self, RunParams};
+use rhpx::Runtime;
+
+fn rt() -> Runtime {
+    Runtime::builder().workers(2).build()
+}
+
+fn cluster(spec: &str) -> ClusterSpec {
+    let mut c = ClusterSpec::parse(spec).expect("cluster spec parses");
+    c.workers_per_locality = 1;
+    c
+}
+
+#[test]
+fn every_workload_survives_a_locality_kill_bit_identically_under_replay() {
+    let rt = rt();
+    for (name, _) in workloads::WORKLOADS {
+        let w = workloads::by_name(name, 1.0).expect("registry name resolves");
+
+        // Fault-free pool reference.
+        let (clean, clean_rep) =
+            workloads::run(&rt, w.as_ref(), &RunParams::default()).unwrap();
+        assert_eq!(clean_rep.launch_errors, 0, "{name} reference");
+
+        // Cluster, locality 2 of 4 dies at task 10, replay:3 recovers.
+        let params = RunParams {
+            resilience: Some(PolicySpec::Replay { n: 3 }),
+            cluster: Some(cluster("4:kill=10@2")),
+            ..RunParams::default()
+        };
+        let (out, rep) = workloads::run(&rt, w.as_ref(), &params).unwrap();
+        assert_eq!(rep.kills_applied, 1, "{name}: the kill must fire");
+        assert_eq!(rep.launch_errors, 0, "{name}: replay must recover every slot");
+        assert_eq!(rep.survival_rate(), 1.0, "{name}");
+        assert!(rep.launcher.starts_with("cluster(4)"), "{name}: {}", rep.launcher);
+        assert_eq!(out, clean, "{name}: recovery must be bit-identical to the pool run");
+        assert_eq!(
+            rep.final_checksum.to_bits(),
+            clean_rep.final_checksum.to_bits(),
+            "{name}: checksums must match bit-for-bit"
+        );
+        assert!(
+            rep.tasks_reexecuted > 0,
+            "{name}: surviving a kill costs re-executed work"
+        );
+    }
+}
+
+#[test]
+fn sdc_is_caught_with_validation_and_leaks_without_it() {
+    let rt = rt();
+    for (name, _) in workloads::WORKLOADS {
+        let w = workloads::by_name(name, 1.0).expect("registry name resolves");
+        let (clean, _) = workloads::run(&rt, w.as_ref(), &RunParams::default()).unwrap();
+
+        // Control arm: validation off, heavy corruption — the bit-flips
+        // flow through undetected and the final bytes diverge.
+        let leaky = RunParams {
+            sdc_rate: Some(0.5),
+            validate: false,
+            ..RunParams::default()
+        };
+        let (bad, bad_rep) = workloads::run(&rt, w.as_ref(), &leaky).unwrap();
+        assert!(bad_rep.silent_corruptions > 0, "{name}: control must corrupt");
+        assert_eq!(
+            bad_rep.launch_errors, 0,
+            "{name}: silent corruption is invisible without validation"
+        );
+        assert_ne!(bad, clean, "{name}: unvalidated corruption must leak");
+
+        // Guarded arm: checksum validation detects every flip, replay
+        // re-executes until a clean result lands — bit-identical output.
+        let guarded = RunParams {
+            resilience: Some(PolicySpec::Replay { n: 10 }),
+            sdc_rate: Some(0.2),
+            ..RunParams::default()
+        };
+        let (good, good_rep) = workloads::run(&rt, w.as_ref(), &guarded).unwrap();
+        assert_eq!(good_rep.launch_errors, 0, "{name}: replay must outlast the SDC");
+        assert_eq!(good, clean, "{name}: validated recovery must be bit-identical");
+        assert!(
+            good_rep.silent_corruptions > 0,
+            "{name}: the guarded arm must actually have been attacked"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_recovers_every_workload_on_the_cluster_route() {
+    let rt = rt();
+    for (name, _) in workloads::WORKLOADS {
+        let w = workloads::by_name(name, 1.0).expect("registry name resolves");
+        let (clean, _) = workloads::run(&rt, w.as_ref(), &RunParams::default()).unwrap();
+
+        let params = RunParams {
+            resilience: Some(PolicySpec::parse("checkpoint:1").unwrap()),
+            cluster: Some(cluster("4:kill=10@2")),
+            ..RunParams::default()
+        };
+        let (out, rep) = workloads::run(&rt, w.as_ref(), &params).unwrap();
+        assert_eq!(rep.kills_applied, 1, "{name}");
+        assert_eq!(rep.launch_errors, 0, "{name}: checkpoint repair must recover");
+        assert_eq!(out, clean, "{name}: restored run must be bit-identical");
+        assert!(rep.snapshots.saved > 0, "{name}: snapshots must have been taken");
+    }
+}

@@ -310,6 +310,47 @@ fn prop_snapshot_roundtrip_preserves_stencil_state() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// ∀ resilience policy specs: `PolicySpec::parse` inverts `token()`
+/// exactly — the CLI/harness spec-string grammar and the typed policy
+/// are one bijection, so no component can accept a spec another would
+/// print differently.
+#[test]
+fn prop_policy_spec_parse_inverts_token() {
+    use rhpx::resilience::executor::{PolicySpec, SnapshotBackend};
+    check("policy-spec-roundtrip", PropConfig { cases: 64, seed: 0xBB }, |rng| {
+        let n = gen::usize_in(rng, 1, 12);
+        let spec = match gen::usize_in(rng, 0, 4) {
+            0 => PolicySpec::Replay { n },
+            1 => PolicySpec::Replicate { n },
+            2 => PolicySpec::Adaptive { ceiling: n },
+            3 => PolicySpec::AdaptiveReplicate { ceiling: n },
+            _ => {
+                let backend = match gen::usize_in(rng, 0, 3) {
+                    0 => SnapshotBackend::Auto,
+                    1 => SnapshotBackend::Memory,
+                    2 => SnapshotBackend::Disk,
+                    _ => SnapshotBackend::Agas,
+                };
+                PolicySpec::Checkpoint { every: n, backend }
+            }
+        };
+        let token = spec.token();
+        let parsed = PolicySpec::parse(&token).map_err(|e| e.to_string())?;
+        if parsed != spec {
+            return Err(format!("{token:?}: parsed {parsed:?} != {spec:?}"));
+        }
+        if parsed.label() != spec.label() {
+            return Err(format!("{token:?}: label diverged across the round trip"));
+        }
+        // And a token is never ambiguous with garbage: appending junk
+        // must fail to parse, not silently truncate.
+        if PolicySpec::parse(&format!("{token}:zzz")).is_ok() {
+            return Err(format!("{token:?}: trailing junk accepted"));
+        }
+        Ok(())
+    });
+}
+
 /// ∀ random migration sequences: AGAS locate always reflects the last
 /// migrate, and generation counts migrations exactly.
 #[test]
