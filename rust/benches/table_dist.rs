@@ -1,8 +1,9 @@
 //! Bench: the distributed fault-surviving stencil (§V-B over simulated
 //! localities, the Fig 4–5 scenario) — survival rate, recovery latency,
-//! and distribution overhead vs. the single-runtime run, across five
-//! arms (pool reference, fault-free cluster, unrecovered kill, replay
-//! recovery, adaptive-replicate recovery).
+//! and distribution overhead vs. the single-runtime run, across eight
+//! arms (pool reference, fault-free cluster, unrecovered kill, then
+//! queue-drain, replay, replicate, first-result-wins team, and
+//! adaptive-replicate recovery).
 //!
 //!   cargo run --release --bin table_dist -- [--smoke] [--json PATH]
 //!   cargo bench --bench table_dist

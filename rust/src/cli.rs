@@ -157,7 +157,7 @@ const HELP: &str = r#"rhpx — resilient AMT runtime (reproduction of SAND2020-3
 USAGE:
   rhpx info
   rhpx run <WORKLOAD> | rhpx run --list
-       [--resilience replay:N|replicate:N|adaptive[:CEIL]|
+       [--resilience replay:N|replicate:N|team:N|drain|adaptive[:CEIL]|
                      adaptive_replicate[:CEIL]|checkpoint:K[:mem|disk|agas]]
        [--cluster LOCALITIES[:kill=STEP@LOC,...]]
        [--latency-us N] [--loc-workers N] [--scale F] [--workers N]
@@ -169,8 +169,8 @@ USAGE:
        (modes: see `rhpx bench --list`)
   rhpx stencil [--case a|b|tiny] [--mode pure|replay|replay_checksum|
                replicate|replicate_checksum|replicate_vote|replicate_replay]
-               [--resilience replay:N|replicate:N|adaptive[:CEIL]|
-                             adaptive_replicate[:CEIL]|
+               [--resilience replay:N|replicate:N|team:N|drain|
+                             adaptive[:CEIL]|adaptive_replicate[:CEIL]|
                              checkpoint:K[:mem|disk|agas]]
                [--cluster LOCALITIES[:kill=STEP@LOC,...]]
                [--latency-us N] [--loc-workers N]
@@ -200,7 +200,13 @@ geometries and the per-call `--mode` variants.
 (rhpx::resilience::executor) instead of per-call resilient functions;
 `adaptive` tunes the *replay budget* online from the observed error
 rate, `adaptive_replicate` tunes the eager *replication width* the same
-way. `checkpoint:K` is the third strategy (task-level
+way. `team:N` runs first-result-wins replica teams: the first validated
+replica resolves the future and its siblings retire early through a
+shared cancellation token instead of running to completion. `drain`
+adds no decorator at all — it routes placements over live localities
+only and relies on lineage re-materialization (queued tasks on a killed
+locality are re-scheduled onto survivors from their lineage records).
+`checkpoint:K` is the third strategy (task-level
 checkpoint/restart): the wavefront is snapshotted every K windows into a
 snapshot store (default: in-memory on the pool, AGAS-replicated across
 localities on a cluster; `:disk` models persistent storage), and a
@@ -481,20 +487,21 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if !rep.localities.is_empty() {
         let mut lt = Table::new(
             "cluster placement",
-            &["locality", "executed", "rejected", "alive_at_end", "killed_at_task"],
+            &["locality", "executed", "rejected", "lost", "alive_at_end", "killed_at_task"],
         );
         for loc in &rep.localities {
             lt.add([
                 loc.id.to_string(),
                 loc.tasks_executed.to_string(),
                 loc.tasks_rejected.to_string(),
+                loc.tasks_lost.to_string(),
                 loc.alive_at_end.to_string(),
                 loc.killed_at_task.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
             ]);
         }
         print!("{}", lt.render());
         if let Some(lat) = rep.recovery_latency_secs {
-            println!("mean recovery latency: {lat:.4}s (kill -> next window barrier)");
+            println!("mean recovery latency: {lat:.4}s (queue drain, or kill -> next barrier)");
         }
     }
 
@@ -558,6 +565,7 @@ fn run_report_json(rep: &RunReport) -> JsonValue {
                             ("id".to_string(), JsonValue::from(l.id)),
                             ("executed".to_string(), JsonValue::from(l.tasks_executed)),
                             ("rejected".to_string(), JsonValue::from(l.tasks_rejected)),
+                            ("lost".to_string(), JsonValue::from(l.tasks_lost)),
                             ("alive_at_end".to_string(), JsonValue::from(l.alive_at_end)),
                             (
                                 "killed_at_task".to_string(),
@@ -574,7 +582,7 @@ fn run_report_json(rep: &RunReport) -> JsonValue {
     ])
 }
 
-/// Parse `--resilience replay:N|replicate:N|adaptive[:CEIL]|
+/// Parse `--resilience replay:N|replicate:N|team:N|drain|adaptive[:CEIL]|
 /// adaptive_replicate[:CEIL]|checkpoint:K[:mem|disk|agas]`.
 ///
 /// The grammar lives in [`ExecPolicy::parse`] (the single spec-string
@@ -733,20 +741,21 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
     if !rep.localities.is_empty() {
         let mut lt = Table::new(
             "cluster placement",
-            &["locality", "executed", "rejected", "alive_at_end", "killed_at_task"],
+            &["locality", "executed", "rejected", "lost", "alive_at_end", "killed_at_task"],
         );
         for loc in &rep.localities {
             lt.add([
                 loc.id.to_string(),
                 loc.tasks_executed.to_string(),
                 loc.tasks_rejected.to_string(),
+                loc.tasks_lost.to_string(),
                 loc.alive_at_end.to_string(),
                 loc.killed_at_task.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
             ]);
         }
         print!("{}", lt.render());
         if let Some(lat) = rep.recovery_latency_secs {
-            println!("mean recovery latency: {lat:.4}s (kill -> next window barrier)");
+            println!("mean recovery latency: {lat:.4}s (queue drain, or kill -> next barrier)");
         }
     }
 
@@ -803,6 +812,7 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
                                 ("id".to_string(), JsonValue::from(l.id)),
                                 ("executed".to_string(), JsonValue::from(l.tasks_executed)),
                                 ("rejected".to_string(), JsonValue::from(l.tasks_rejected)),
+                                ("lost".to_string(), JsonValue::from(l.tasks_lost)),
                                 ("alive_at_end".to_string(), JsonValue::from(l.alive_at_end)),
                                 (
                                     "killed_at_task".to_string(),
@@ -1053,10 +1063,14 @@ mod tests {
             parse_resilience("adaptive_replicate:6").unwrap(),
             ExecPolicy::AdaptiveReplicate { ceiling: 6 }
         );
+        assert_eq!(parse_resilience("team:3").unwrap(), ExecPolicy::Team { n: 3 });
+        assert_eq!(parse_resilience("drain").unwrap(), ExecPolicy::Drain);
         assert!(parse_resilience("bogus").is_err());
         assert!(parse_resilience("replay:0").is_err());
         assert!(parse_resilience("replicate:x").is_err());
         assert!(parse_resilience("adaptive_replicate:0").is_err());
+        assert!(parse_resilience("team:0").is_err());
+        assert!(parse_resilience("drain:2").is_err());
     }
 
     #[test]

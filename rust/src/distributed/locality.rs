@@ -1,13 +1,15 @@
 //! Simulated localities and the active-message layer.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::agas::{Agas, LocalityId};
 use crate::api::run_task_body;
 use crate::error::{TaskError, TaskResult};
 use crate::future::{Future, Promise};
 use crate::runtime_handle::Runtime;
+use crate::scheduler::{Job, Lineage, LineageLedger};
 
 /// Interconnect model for the simulated cluster.
 #[derive(Debug, Clone, Copy)]
@@ -33,6 +35,13 @@ struct LocalityInner {
     sent: AtomicUsize,
     executed: AtomicUsize,
     rejected: AtomicUsize,
+    /// Tracked tasks that died *in this locality's queue* — routed here,
+    /// never executed, never rejected; drained off on kill.
+    lost: AtomicUsize,
+    /// Side table of queued-but-unexecuted tracked tasks. Entry presence
+    /// is the claim token: a worker must `claim` its epoch before running
+    /// the body, and `Cluster::kill` drains whatever is unclaimed.
+    ledger: LineageLedger,
 }
 
 /// One simulated HPX locality: a private scheduler pool plus an
@@ -79,6 +88,20 @@ impl Locality {
     pub fn tasks_rejected(&self) -> usize {
         self.inner.rejected.load(Ordering::Relaxed)
     }
+
+    /// Tracked tasks that sat queued here when the locality was killed —
+    /// neither executed nor rejected. Each one was re-materialized onto a
+    /// survivor by the kill-time queue drain, so `executed + rejected +
+    /// lost` over all localities equals tasks routed (initial submissions
+    /// plus re-materializations).
+    pub fn tasks_lost(&self) -> usize {
+        self.inner.lost.load(Ordering::Relaxed)
+    }
+
+    /// Lineage records of tracked tasks still queued (unclaimed) here.
+    pub fn pending_lineages(&self) -> Vec<Lineage> {
+        self.inner.ledger.lineages()
+    }
 }
 
 struct ClusterInner {
@@ -87,6 +110,11 @@ struct ClusterInner {
     agas: Agas,
     rr: AtomicUsize,
     net: NetworkConfig,
+    /// Cluster-wide monotonic epoch minted per tracked submission; the
+    /// lineage key that makes claim/drain arbitration exactly-once.
+    epoch: AtomicU64,
+    /// Drain-to-reschedule latency of each kill-time queue drain.
+    drain_latency: Mutex<Vec<Duration>>,
 }
 
 /// An in-process simulation of a multi-locality HPX deployment.
@@ -112,6 +140,8 @@ impl Cluster {
                     sent: AtomicUsize::new(0),
                     executed: AtomicUsize::new(0),
                     rejected: AtomicUsize::new(0),
+                    lost: AtomicUsize::new(0),
+                    ledger: LineageLedger::new(),
                 }),
             };
             let (tx, rx) = mpsc::channel::<Message>();
@@ -144,6 +174,8 @@ impl Cluster {
                 agas,
                 rr: AtomicUsize::new(0),
                 net,
+                epoch: AtomicU64::new(0),
+                drain_latency: Mutex::new(Vec::new()),
             }),
         }
     }
@@ -168,9 +200,47 @@ impl Cluster {
         &self.inner.localities[id.0]
     }
 
-    /// Mark a locality failed: tasks routed to it error out.
+    /// Mark a locality failed: tasks routed to it error out, and tracked
+    /// tasks still queued on it are re-materialized onto survivors from
+    /// their lineage records (resilient work stealing: no global barrier,
+    /// survivors inherit the corpse's pending work).
     pub fn kill(&self, id: LocalityId) {
         self.inner.localities[id.0].inner.alive.store(false, Ordering::SeqCst);
+        self.drain_pending(id);
+    }
+
+    /// Drain the corpse's lineage ledger and relaunch every unclaimed
+    /// task on a live locality. Claim and drain are mutually exclusive
+    /// per epoch (the ledger mutex arbitrates), so a task observed here
+    /// can no longer start on the corpse — and a task already claimed by
+    /// a corpse worker runs to completion there instead of appearing
+    /// twice.
+    fn drain_pending(&self, id: LocalityId) {
+        let started = Instant::now();
+        let drained = self.inner.localities[id.0].inner.ledger.drain();
+        if drained.is_empty() {
+            return;
+        }
+        self.inner.localities[id.0]
+            .inner
+            .lost
+            .fetch_add(drained.len(), Ordering::Relaxed);
+        for (_lineage, relaunch) in drained {
+            relaunch();
+        }
+        self.inner.drain_latency.lock().unwrap().push(started.elapsed());
+    }
+
+    /// Drain-to-reschedule latency of each kill-time queue drain so far,
+    /// in seconds (one entry per kill that found pending work).
+    pub fn drain_latency_secs(&self) -> Vec<f64> {
+        self.inner
+            .drain_latency
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|d| d.as_secs_f64())
+            .collect()
     }
 
     /// Bring a locality back (post-recovery rejoin).
@@ -246,6 +316,142 @@ impl Cluster {
         fut
     }
 
+    /// Ship a *tracked* task to locality `target`: like [`run_on`], but
+    /// the submission is registered in the target's lineage ledger
+    /// (origin locality, spawn `parent` epoch, fresh monotonic epoch)
+    /// until a worker claims it. If the target is killed while the task
+    /// still sits queued, [`kill`] drains the ledger and re-materializes
+    /// the task onto a survivor — the future then resolves with the
+    /// survivor's result, so a backlogged kill loses no work.
+    ///
+    /// Liveness is checked at submit time on the caller's thread (the
+    /// same thread `FaultSchedule` advances kills on, which keeps the
+    /// executed/rejected/lost accounting deterministic): a dead target
+    /// rejects immediately and the future fails, exactly like `run_on`.
+    ///
+    /// [`run_on`]: Cluster::run_on
+    /// [`kill`]: Cluster::kill
+    pub fn run_on_resilient<T>(
+        &self,
+        target: LocalityId,
+        parent: Option<u64>,
+        body: Arc<dyn Fn(&Locality) -> TaskResult<T> + Send + Sync>,
+    ) -> Future<T>
+    where
+        T: Send + 'static,
+    {
+        let (p, fut) = Promise::new();
+        self.submit_tracked(target, parent, body, Arc::new(Mutex::new(Some(p))), false);
+        fut
+    }
+
+    /// Like [`run_on_resilient`], but placement is advisory: if `target`
+    /// turns out to be dead at the submit-time check (a kill landed
+    /// between choosing it and submitting — the race a concurrent
+    /// `FaultSchedule` opens against dataflow continuations), the task is
+    /// re-routed to [`next_alive_target`] instead of rejected. This is
+    /// the placement mode behind live-only routing (`--resilience
+    /// drain`), which has no decorator retry to absorb a rejection; the
+    /// re-pick is not counted as a routing, so the
+    /// executed/rejected/lost accounting is identical to a first-try
+    /// landing.
+    ///
+    /// [`run_on_resilient`]: Cluster::run_on_resilient
+    /// [`next_alive_target`]: Cluster::next_alive_target
+    pub fn run_on_resilient_routed<T>(
+        &self,
+        target: LocalityId,
+        parent: Option<u64>,
+        body: Arc<dyn Fn(&Locality) -> TaskResult<T> + Send + Sync>,
+    ) -> Future<T>
+    where
+        T: Send + 'static,
+    {
+        let (p, fut) = Promise::new();
+        self.submit_tracked(target, parent, body, Arc::new(Mutex::new(Some(p))), true);
+        fut
+    }
+
+    /// One tracked routing attempt. Exactly one of three counters is
+    /// bumped per call: `rejected` (dead at submit), `executed` (a worker
+    /// claimed and ran it), or `lost` (killed in queue — in which case
+    /// the recorded relaunch closure re-enters this function on a
+    /// survivor, which counts as a fresh routing).
+    ///
+    /// With `reroute`, a dead-at-submit target is not a routing at all:
+    /// the attempt silently re-picks a live target and tries again, so no
+    /// counter moves until the task actually lands somewhere.
+    fn submit_tracked<T>(
+        &self,
+        target: LocalityId,
+        parent: Option<u64>,
+        body: Arc<dyn Fn(&Locality) -> TaskResult<T> + Send + Sync>,
+        slot: Arc<Mutex<Option<Promise<T>>>>,
+        reroute: bool,
+    ) where
+        T: Send + 'static,
+    {
+        let mut target = target;
+        let loc = loop {
+            let loc = &self.inner.localities[target.0];
+            if loc.is_alive() {
+                break loc;
+            }
+            if reroute && !self.alive_ids().is_empty() {
+                target = self.next_alive_target();
+                continue;
+            }
+            loc.inner.rejected.fetch_add(1, Ordering::Relaxed);
+            if let Some(p) = slot.lock().unwrap().take() {
+                p.set_error(TaskError::App(format!("locality {} dead", target.0)));
+            }
+            return;
+        };
+        let epoch = self.inner.epoch.fetch_add(1, Ordering::Relaxed);
+        // The relaunch closure stored with the lineage record: on drain it
+        // re-submits the same body (and the same promise slot) to a live
+        // locality. It holds the cluster weakly so ledgers don't keep the
+        // cluster alive past the last user handle.
+        let weak = Arc::downgrade(&self.inner);
+        let rl_body = Arc::clone(&body);
+        let rl_slot = Arc::clone(&slot);
+        let relaunch: Job = Box::new(move || {
+            if let Some(inner) = weak.upgrade() {
+                let cluster = Cluster { inner };
+                // Re-materialization always reroutes: the lost task was
+                // already counted, and its relaunch must land on a
+                // survivor even if another kill races the re-pick.
+                let next = cluster.next_alive_target();
+                cluster.submit_tracked(next, Some(epoch), rl_body, rl_slot, true);
+            }
+        });
+        loc.inner.ledger.record(Lineage { origin: target.0, parent, epoch }, relaunch);
+        let msg: Message = Box::new(move |loc: &Locality| {
+            let loc2 = loc.clone();
+            loc.runtime().pool().spawn_job(Box::new(move || {
+                // Claiming the epoch is the exactly-once gate: if the
+                // kill-time drain got there first the entry is gone, the
+                // corpse's worker drops the task silently, and the
+                // re-materialized copy owns the promise. If the claim
+                // succeeds the task runs to completion even mid-kill —
+                // claimed in-flight work is never duplicated.
+                if !loc2.inner.ledger.claim(epoch) {
+                    return;
+                }
+                loc2.inner.executed.fetch_add(1, Ordering::Relaxed);
+                let result = run_task_body(|| body(&loc2));
+                if let Some(p) = slot.lock().unwrap().take() {
+                    p.set_result(result);
+                }
+            }));
+        });
+        let tx = self.inner.mailboxes[target.0].lock().unwrap();
+        if tx.send(msg).is_err() {
+            // Pump gone (cluster shutting down). The ledger entry stays;
+            // it drops with the cluster and the promise reports broken.
+        }
+    }
+
     /// Broadcast a closure to every live locality.
     pub fn broadcast<F>(&self, f: F)
     where
@@ -314,6 +520,136 @@ mod tests {
             cl.run_on(LocalityId(0), |_| Ok::<_, TaskError>(0)).get().unwrap();
         }
         assert_eq!(cl.locality(LocalityId(0)).messages_received(), 5);
+    }
+
+    #[test]
+    fn tracked_submission_executes_once_and_counts() {
+        let cl = Cluster::new(2, 1, NetworkConfig::default());
+        let runs = Arc::new(AtomicUsize::new(0));
+        let r = Arc::clone(&runs);
+        let f = cl.run_on_resilient(
+            LocalityId(0),
+            None,
+            Arc::new(move |_loc: &Locality| {
+                r.fetch_add(1, Ordering::SeqCst);
+                Ok::<_, TaskError>(7)
+            }),
+        );
+        assert_eq!(f.get(), Ok(7));
+        assert_eq!(runs.load(Ordering::SeqCst), 1);
+        assert_eq!(cl.locality(LocalityId(0)).tasks_executed(), 1);
+        assert_eq!(cl.locality(LocalityId(0)).tasks_lost(), 0);
+        assert!(cl.locality(LocalityId(0)).pending_lineages().is_empty());
+        assert!(cl.drain_latency_secs().is_empty());
+    }
+
+    #[test]
+    fn tracked_submission_to_dead_locality_rejects_at_submit_time() {
+        let cl = Cluster::new(2, 1, NetworkConfig::default());
+        cl.kill(LocalityId(1));
+        let f = cl.run_on_resilient(
+            LocalityId(1),
+            None,
+            Arc::new(|_loc: &Locality| Ok::<_, TaskError>(0)),
+        );
+        assert!(f.get().is_err());
+        assert_eq!(cl.locality(LocalityId(1)).tasks_rejected(), 1);
+        assert_eq!(cl.locality(LocalityId(1)).tasks_lost(), 0);
+    }
+
+    #[test]
+    fn kill_drains_queued_tracked_tasks_onto_survivors() {
+        // One worker per locality so a blocker task lets tracked work
+        // pile up unclaimed behind it in locality 1's queue.
+        let cl = Cluster::new(2, 1, NetworkConfig::default());
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let (entered_tx, entered_rx) = mpsc::channel::<()>();
+        let blocker = cl.run_on(LocalityId(1), move |_| {
+            entered_tx.send(()).unwrap();
+            gate_rx.recv().unwrap();
+            Ok::<_, TaskError>(0)
+        });
+        entered_rx.recv().unwrap(); // the single worker is now pinned
+        const K: usize = 4;
+        let mut futs = Vec::new();
+        for i in 0..K {
+            futs.push(cl.run_on_resilient(
+                LocalityId(1),
+                None,
+                Arc::new(move |loc: &Locality| Ok::<_, TaskError>((loc.id().0, i))),
+            ));
+        }
+        assert_eq!(cl.locality(LocalityId(1)).pending_lineages().len(), K);
+        cl.kill(LocalityId(1));
+        // Every queued task was re-materialized; the futures resolve with
+        // results computed on the survivor, not errors.
+        for (i, f) in futs.into_iter().enumerate() {
+            assert_eq!(f.get(), Ok((0, i)));
+        }
+        gate_tx.send(()).unwrap();
+        assert_eq!(blocker.get(), Ok(0));
+        assert_eq!(cl.locality(LocalityId(1)).tasks_lost(), K);
+        // Locality 1 executed only the untracked blocker; all K tracked
+        // bodies ran on the survivor.
+        assert_eq!(cl.locality(LocalityId(1)).tasks_executed(), 1);
+        assert_eq!(cl.locality(LocalityId(0)).tasks_executed(), K);
+        assert_eq!(cl.drain_latency_secs().len(), 1);
+        // Invariant: executed + rejected + lost over the cluster equals
+        // tasks routed — K initial tracked routings, K re-materialized
+        // routings, plus the blocker.
+        let routed: usize = (0..2)
+            .map(|i| {
+                let l = cl.locality(LocalityId(i));
+                l.tasks_executed() + l.tasks_rejected() + l.tasks_lost()
+            })
+            .sum();
+        assert_eq!(routed, K + K + 1);
+    }
+
+    #[test]
+    fn rematerialized_lineage_records_its_parent_epoch() {
+        // Pin the single worker of BOTH localities so the re-materialized
+        // task stays queued on the survivor long enough to inspect its
+        // lineage record.
+        let cl = Cluster::new(2, 1, NetworkConfig::default());
+        let mut gates = Vec::new();
+        let mut blockers = Vec::new();
+        for i in 0..2 {
+            let (gate_tx, gate_rx) = mpsc::channel::<()>();
+            let (entered_tx, entered_rx) = mpsc::channel::<()>();
+            blockers.push(cl.run_on(LocalityId(i), move |_| {
+                entered_tx.send(()).unwrap();
+                gate_rx.recv().unwrap();
+                Ok::<_, TaskError>(0)
+            }));
+            entered_rx.recv().unwrap();
+            gates.push(gate_tx);
+        }
+        assert!(cl.locality(LocalityId(1)).pending_lineages().is_empty());
+        let f = cl.run_on_resilient(
+            LocalityId(1),
+            None,
+            Arc::new(|_loc: &Locality| Ok::<_, TaskError>(1)),
+        );
+        let orig = cl.locality(LocalityId(1)).pending_lineages();
+        assert_eq!(orig.len(), 1);
+        assert_eq!(orig[0].origin, 1);
+        assert_eq!(orig[0].parent, None);
+        cl.kill(LocalityId(1));
+        // The relaunch landed on the survivor with the corpse's epoch as
+        // its spawn parent.
+        let re = cl.locality(LocalityId(0)).pending_lineages();
+        assert_eq!(re.len(), 1);
+        assert_eq!(re[0].origin, 0);
+        assert_eq!(re[0].parent, Some(orig[0].epoch));
+        assert!(re[0].epoch > orig[0].epoch);
+        for g in gates {
+            let _ = g.send(());
+        }
+        assert_eq!(f.get(), Ok(1));
+        for b in blockers {
+            let _ = b.get();
+        }
     }
 
     #[test]

@@ -256,8 +256,11 @@ impl ClusterExecutor {
     /// checkpoint/restart strategy runs over: unlike replay (which
     /// absorbs a dead-locality attempt as a retry) it has no per-task
     /// retry to hide behind, so routing to a known corpse would poison a
-    /// task per launch. Decorated launches (`submit_seq`) keep the full
-    /// ring so the replay/replicate placement guarantees are unchanged.
+    /// task per launch. In this mode a kill racing the placement
+    /// re-routes the submission to a survivor instead of rejecting it.
+    /// Decorated launches run over [`ClusterExecutor::new`], which keeps
+    /// the full ring so the replay/replicate placement guarantees are
+    /// unchanged.
     pub fn alive_routed(cluster: &Cluster) -> Self {
         ClusterExecutor { cluster: cluster.clone(), alive_only: true }
     }
@@ -273,12 +276,21 @@ impl crate::resilience::executor::TaskLauncher for ClusterExecutor {
         &self,
         body: crate::resilience::executor::TaskFn<T>,
     ) -> Future<T> {
-        let target = if self.alive_only {
-            self.cluster.next_alive_target()
+        // Tracked submission: the task carries a lineage record while
+        // queued, so a kill drains it onto a survivor instead of losing
+        // it (resilient work stealing). On the full ring, dead-at-submit
+        // rejects, preserving the failure signal the decorators recover
+        // from; in alive-only mode there is no decorator to absorb a
+        // rejection, so a kill racing the placement re-routes to a
+        // survivor instead.
+        if self.alive_only {
+            let target = self.cluster.next_alive_target();
+            self.cluster
+                .run_on_resilient_routed(target, None, Arc::new(move |_loc: &Locality| body()))
         } else {
-            self.cluster.next_target()
-        };
-        self.cluster.run_on(target, move |_loc| body())
+            let target = self.cluster.next_target();
+            self.cluster.run_on_resilient(target, None, Arc::new(move |_loc: &Locality| body()))
+        }
     }
 
     fn placement_token(&self) -> usize {
@@ -292,7 +304,14 @@ impl crate::resilience::executor::TaskLauncher for ClusterExecutor {
         seq: usize,
     ) -> Future<T> {
         let target = LocalityId((token + seq) % self.cluster.len());
-        self.cluster.run_on(target, move |_loc| body())
+        if self.alive_only {
+            // Sequence placement is advisory under live-only routing: a
+            // dead seq-target re-routes rather than poisoning the slot.
+            self.cluster
+                .run_on_resilient_routed(target, None, Arc::new(move |_loc: &Locality| body()))
+        } else {
+            self.cluster.run_on_resilient(target, None, Arc::new(move |_loc: &Locality| body()))
+        }
     }
 
     fn parallelism(&self) -> usize {

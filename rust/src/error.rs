@@ -23,6 +23,13 @@ pub enum TaskError {
     Runtime(String),
     /// A user validation function rejected the computed result.
     ValidationRejected,
+    /// The task was retired before (or instead of) producing a result
+    /// because a sibling replica in its [`ReplicaTeam`] already won the
+    /// first-result-wins race. Losers report this instead of a value; the
+    /// team treats it as an orderly retirement, not a failure.
+    ///
+    /// [`ReplicaTeam`]: crate::resilience::ReplicaTeam
+    Cancelled,
     /// A resilient launch ultimately failed (replay exhausted, all
     /// replicas failed, ...). Wrapping it in `TaskError` lets resilient
     /// futures flow through `dataflow` dependencies unchanged.
@@ -39,6 +46,7 @@ impl TaskError {
             TaskError::DependencyFailed(_) => "dependency",
             TaskError::Runtime(_) => "runtime",
             TaskError::ValidationRejected => "validation",
+            TaskError::Cancelled => "cancelled",
             TaskError::Resilience(_) => "resilience",
         }
     }
@@ -68,6 +76,7 @@ impl fmt::Display for TaskError {
             TaskError::DependencyFailed(m) => write!(f, "dependency failed: {m}"),
             TaskError::Runtime(m) => write!(f, "runtime error: {m}"),
             TaskError::ValidationRejected => write!(f, "result failed validation"),
+            TaskError::Cancelled => write!(f, "task retired by replica-team cancellation"),
             TaskError::Resilience(e) => write!(f, "resilient launch failed: {e}"),
         }
     }
@@ -156,6 +165,14 @@ mod tests {
         let i = TaskError::Injected { site: "stencil" };
         assert_eq!(i.kind(), "injected");
         assert!(i.to_string().contains("stencil"));
+    }
+
+    #[test]
+    fn cancelled_is_its_own_kind() {
+        let c = TaskError::Cancelled;
+        assert_eq!(c.kind(), "cancelled");
+        assert!(c.to_string().contains("replica-team"));
+        assert!(c.as_resilience().is_none());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Bench harness: the distributed fault-surviving stencil (the paper's
 //! §V-B headline scenario, Fig 4–5 — "task survives locality death").
 //!
-//! One stencil geometry is run through five arms that differ only in
+//! One stencil geometry is run through eight arms that differ only in
 //! substrate, fault schedule, and resilience policy:
 //!
 //! 1. single-runtime pool, fault-free — the wall-time and checksum
@@ -11,9 +11,17 @@
 //! 3. cluster, one scheduled kill, no resilience — the negative
 //!    control: the failure cone must reach the final wavefront
 //!    (survival < 1);
-//! 4. cluster, same kill, `replay:3` — retries walk the locality ring
+//! 4. cluster, same kill, `drain` — no decorator: live-only placement
+//!    plus lineage re-materialization of the corpse's queued tasks
+//!    (survival = 1, recovery latency is the direct drain measure);
+//! 5. cluster, same kill, `replay:3` — retries walk the locality ring
 //!    off the corpse (survival = 1, checksum matches the reference);
-//! 5. cluster, same kill, `adaptive_replicate:4` — eager fan-out masks
+//! 6. cluster, same kill, `replicate:3` — eager run-to-completion
+//!    replicas mask the death (the overhead baseline for the teams);
+//! 7. cluster, same kill, `team:3` — first-result-wins replica teams:
+//!    same fan-out, but losers retire through the shared cancel token,
+//!    so team overhead must not exceed replicate overhead;
+//! 8. cluster, same kill, `adaptive_replicate:4` — eager fan-out masks
 //!    the death and widens under the observed failures (survival = 1).
 //!
 //! Emitted per arm: wall time, poisoned subdomains, survival rate, mean
@@ -73,7 +81,7 @@ fn kill_spec(p: &StencilParams) -> String {
     format!("{LOCALITIES}:kill={}@{KILL_LOC}", (p.total_tasks() / 8).max(1))
 }
 
-/// Run the five-arm experiment. Each arm repeats `opts.repeats` times;
+/// Run the eight-arm experiment. Each arm repeats `opts.repeats` times;
 /// wall time is the mean, survival/checksum come from the last repeat.
 /// The recovered-vs-poisoned outcome of every arm is deterministic; the
 /// control arm's exact poisoned *count* varies with execution timing
@@ -101,7 +109,10 @@ pub fn run_table_dist(opts: &HarnessOpts) -> Vec<DistRow> {
         (None, None),
         (Some(&fault_free), None),
         (Some(&faulty), None),
+        (Some(&faulty), Some(ExecPolicy::Drain)),
         (Some(&faulty), Some(ExecPolicy::Replay { n: 3 })),
+        (Some(&faulty), Some(ExecPolicy::Replicate { n: 3 })),
+        (Some(&faulty), Some(ExecPolicy::Team { n: 3 })),
         (Some(&faulty), Some(ExecPolicy::AdaptiveReplicate { ceiling: 4 })),
     ];
 
@@ -222,7 +233,7 @@ mod tests {
     fn table_dist_smoke_demonstrates_the_survival_story() {
         let opts = HarnessOpts { scale: 0.01, repeats: 1, workers: 2, ..Default::default() };
         let rows = run_table_dist(&opts);
-        assert_eq!(rows.len(), 5);
+        assert_eq!(rows.len(), 8);
 
         // Reference and fault-free cluster arms: everything survives and
         // matches.
@@ -238,7 +249,8 @@ mod tests {
         assert!(rows[2].poisoned > 0, "unrecovered kill must poison subdomains");
         assert!(rows[2].survival_rate < 1.0);
 
-        // Both resilient arms fully recover and reproduce the reference
+        // Every resilient arm (drain, replay, replicate, team, adaptive
+        // replicate) fully recovers and reproduces the reference
         // checksum.
         for r in &rows[3..] {
             assert_eq!(r.kills, 1, "{}", r.policy);
@@ -248,10 +260,27 @@ mod tests {
             assert!(r.recovery_latency_secs.is_some());
         }
 
+        // First-result-wins teams shed loser work that replicate runs to
+        // completion, so the team arm must not cost more wall time than
+        // the replicate arm at the same fan-out (25% tolerance: one
+        // smoke repeat at tiny scale is noisy).
+        let replicate = &rows[5];
+        let team = &rows[6];
+        assert_eq!(replicate.policy, "exec_replicate(3)");
+        assert_eq!(team.policy, "exec_team(3)");
+        assert!(
+            team.wall_secs <= replicate.wall_secs * 1.25,
+            "team:3 ({:.4}s) must not exceed replicate:3 ({:.4}s) by >25%",
+            team.wall_secs,
+            replicate.wall_secs,
+        );
+
         let json = to_json(&rows).render();
         assert!(json.contains(r#""survival_rate":1"#), "{json}");
         assert!(json.contains(r#""policy":"exec_replay(3)""#), "{json}");
+        assert!(json.contains(r#""policy":"exec_team(3)""#), "{json}");
+        assert!(json.contains(r#""policy":"exec_drain""#), "{json}");
         let t = to_table(&rows);
-        assert_eq!(t.to_csv().lines().count(), 6, "header + 5 arms");
+        assert_eq!(t.to_csv().lines().count(), 9, "header + 8 arms");
     }
 }

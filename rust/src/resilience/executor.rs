@@ -44,7 +44,7 @@ use crate::future::{when_all_results, Future, Promise};
 use crate::perfcounters::{global, Instrument};
 use crate::runtime_handle::Runtime;
 
-use super::replicate::{with_retries, ReplicateState};
+use super::replicate::{with_retries, ReplicaTeam, ReplicateState};
 use super::Voter;
 
 /// A re-runnable task body, shared across attempts and replicas.
@@ -673,17 +673,53 @@ pub struct ReplicateExecutor<E: TaskLauncher> {
     /// Per-replica private replay attempts (the paper's future-work
     /// replicate-of-replays refinement); 1 = off.
     replay_each: usize,
+    /// First-result-wins mode ([`ReplicateExecutor::team`]): the first
+    /// acceptable replica resolves the future and a shared
+    /// [`CancelToken`](super::CancelToken) retires the losers.
+    first_wins: bool,
 }
 
 impl<E: TaskLauncher> ReplicateExecutor<E> {
     /// Launch `n` eager replicas per task.
     pub fn new(base: E, n: usize) -> Self {
-        ReplicateExecutor { base, budget: Budget::Fixed(n.max(1)), replay_each: 1 }
+        ReplicateExecutor {
+            base,
+            budget: Budget::Fixed(n.max(1)),
+            replay_each: 1,
+            first_wins: false,
+        }
     }
 
     /// Replicate with the width tuned online by `policy`.
     pub fn adaptive(base: E, policy: Arc<AdaptivePolicy>) -> Self {
-        ReplicateExecutor { base, budget: Budget::Adaptive(policy), replay_each: 1 }
+        ReplicateExecutor {
+            base,
+            budget: Budget::Adaptive(policy),
+            replay_each: 1,
+            first_wins: false,
+        }
+    }
+
+    /// A first-result-wins replica *team* of width `n` (TeaMPI-style):
+    /// replicas still fan out eagerly, but the first one whose result is
+    /// acceptable resolves the future and cancels the rest through a
+    /// shared [`CancelToken`](super::CancelToken), checked at each
+    /// replica's body entry. Losers still queued when the token flips
+    /// retire without executing — team mode sheds most of replication's
+    /// eager-compute overhead while keeping its fail-fast latency.
+    /// Selected as `team:N` through [`PolicySpec`].
+    pub fn team(base: E, n: usize) -> Self {
+        ReplicateExecutor {
+            base,
+            budget: Budget::Fixed(n.max(1)),
+            replay_each: 1,
+            first_wins: true,
+        }
+    }
+
+    /// Whether this executor races replicas first-result-wins.
+    pub fn is_team(&self) -> bool {
+        self.first_wins
     }
 
     /// Let each replica privately retry up to `attempts` times before it
@@ -731,6 +767,13 @@ impl<E: TaskLauncher> ReplicateExecutor<E> {
         } else {
             (body, validate)
         };
+        // First-result-wins team mode replaces the consensus state with a
+        // ReplicaTeam; a vote needs every ballot, so an explicit voter
+        // keeps the all-replicas semantics even on a team executor.
+        if self.first_wins && voter.is_none() {
+            self.team_into(promise, body, validate, n);
+            return;
+        }
         let state = ReplicateState::new(promise, n, voter);
         let token = self.base.placement_token();
         for i in 0..n {
@@ -746,6 +789,55 @@ impl<E: TaskLauncher> ReplicateExecutor<E> {
                 Err(e) => {
                     budget.record(true);
                     state.on_replica_done(Err(e.clone()), None);
+                }
+            });
+        }
+    }
+
+    /// Fan `n` replicas out first-result-wins: every replica's body is
+    /// guarded by the team's [`CancelToken`](super::CancelToken) — a
+    /// replica whose slot comes up after the race is decided reports
+    /// [`TaskError::Cancelled`] instead of executing. For dataflow
+    /// launches the guard sits between dependency resolution and the
+    /// body (the deps resolve once, before fan-out), so a team whose
+    /// race ended while deps were pending sheds all of its bodies.
+    fn team_into<T>(
+        &self,
+        promise: Promise<T>,
+        body: TaskFn<T>,
+        validate: Option<TaskValidator<T>>,
+        n: usize,
+    ) where
+        T: Clone + Send + 'static,
+    {
+        let team = ReplicaTeam::with_promise(promise, n);
+        let token = self.base.placement_token();
+        for i in 0..n {
+            let team = Arc::clone(&team);
+            let cancel = team.token();
+            let validate = validate.clone();
+            let budget = self.budget.clone();
+            let body = Arc::clone(&body);
+            let guarded: TaskFn<T> = Arc::new(move || {
+                if cancel.is_cancelled() {
+                    return Err(TaskError::Cancelled);
+                }
+                body()
+            });
+            self.base.submit_seq(guarded, token, i).on_ready(move |r| match r {
+                Ok(v) => {
+                    let validated = validate.as_ref().map(|check| check(v));
+                    budget.record(validated == Some(false));
+                    team.report(Ok(v.clone()), validated);
+                }
+                Err(e) => {
+                    // A retirement is the cancellation protocol working,
+                    // not a substrate failure — keep it out of any
+                    // adaptive error-rate estimate.
+                    if !matches!(e, TaskError::Cancelled) {
+                        budget.record(true);
+                    }
+                    team.report(Err(e.clone()), None);
                 }
             });
         }
@@ -831,7 +923,8 @@ impl<E: TaskLauncher> ResilientExecutor for ReplicateExecutor<E> {
     }
 
     fn label(&self) -> String {
-        format!("replicate({}) over {}", self.budget.label(), self.base.base_label())
+        let kind = if self.first_wins { "team" } else { "replicate" };
+        format!("{kind}({}) over {}", self.budget.label(), self.base.base_label())
     }
 }
 
@@ -869,6 +962,18 @@ pub enum PolicySpec {
     /// `ReplicateExecutor(n)` over the base launcher (first validated
     /// replica wins).
     Replicate { n: usize },
+    /// [`ReplicateExecutor::team`]`(n)` over the base launcher:
+    /// first-result-wins replica team — the first acceptable replica
+    /// resolves the future and the losers retire through a shared
+    /// [`CancelToken`](super::CancelToken) instead of running.
+    Team { n: usize },
+    /// No decoration, but standalone submissions are routed over *live*
+    /// localities only and the substrate's kill-time lineage drain is
+    /// the sole recovery mechanism: queued-but-unexecuted tasks on a
+    /// corpse re-materialize onto survivors. The cheapest survival mode
+    /// measured by `table_dist` — no retries, no replicas, just the
+    /// resilient-work-stealing drain plus membership-aware placement.
+    Drain,
     /// Adaptive replay: the retry budget is tuned online by an
     /// [`AdaptivePolicy`] and never exceeds `ceiling`.
     Adaptive { ceiling: usize },
@@ -943,8 +1048,9 @@ impl std::fmt::Display for PolicyParseError {
         match self {
             PolicyParseError::UnknownPolicy { spec } => write!(
                 f,
-                "unknown policy spec {spec:?} (expected replay:N, replicate:N, \
-                 adaptive[:CEIL], adaptive_replicate[:CEIL], or checkpoint:K[:mem|disk|agas])"
+                "unknown policy spec {spec:?} (expected replay:N, replicate:N, team:N, \
+                 drain, adaptive[:CEIL], adaptive_replicate[:CEIL], or \
+                 checkpoint:K[:mem|disk|agas])"
             ),
             PolicyParseError::BadCount { what, got } => {
                 write!(f, "{what}: bad count {got:?} (expected an integer >= 1)")
@@ -964,6 +1070,8 @@ impl PolicySpec {
         match self {
             PolicySpec::Replay { n } => format!("exec_replay({n})"),
             PolicySpec::Replicate { n } => format!("exec_replicate({n})"),
+            PolicySpec::Team { n } => format!("exec_team({n})"),
+            PolicySpec::Drain => "exec_drain".to_string(),
             PolicySpec::Adaptive { ceiling } => format!("exec_adaptive(max {ceiling})"),
             PolicySpec::AdaptiveReplicate { ceiling } => {
                 format!("exec_adaptive_replicate(max {ceiling})")
@@ -985,6 +1093,8 @@ impl PolicySpec {
         match self {
             PolicySpec::Replay { n } => format!("replay:{n}"),
             PolicySpec::Replicate { n } => format!("replicate:{n}"),
+            PolicySpec::Team { n } => format!("team:{n}"),
+            PolicySpec::Drain => "drain".to_string(),
             PolicySpec::Adaptive { ceiling } => format!("adaptive:{ceiling}"),
             PolicySpec::AdaptiveReplicate { ceiling } => format!("adaptive_replicate:{ceiling}"),
             PolicySpec::Checkpoint { every, backend: SnapshotBackend::Auto } => {
@@ -997,17 +1107,21 @@ impl PolicySpec {
     }
 
     /// Parse a `--resilience`-style spec string:
-    /// `replay:N | replicate:N | adaptive[:CEIL] | adaptive_replicate[:CEIL]
-    /// | checkpoint:K[:auto|mem|disk|agas]`. The bare adaptive forms
-    /// default their ceilings (10 for replay budgets, 4 for replication
-    /// width); every count must be ≥ 1. This is the single spec-string
-    /// parser in the tree — the CLI and the workload engine both call it.
+    /// `replay:N | replicate:N | team:N | drain | adaptive[:CEIL]
+    /// | adaptive_replicate[:CEIL] | checkpoint:K[:auto|mem|disk|agas]`.
+    /// The bare adaptive forms default their ceilings (10 for replay
+    /// budgets, 4 for replication width); every count must be ≥ 1. This
+    /// is the single spec-string parser in the tree — the CLI and the
+    /// workload engine both call it.
     pub fn parse(s: &str) -> Result<PolicySpec, PolicyParseError> {
         if s == "adaptive" {
             return Ok(PolicySpec::Adaptive { ceiling: 10 });
         }
         if s == "adaptive_replicate" {
             return Ok(PolicySpec::AdaptiveReplicate { ceiling: 4 });
+        }
+        if s == "drain" {
+            return Ok(PolicySpec::Drain);
         }
         let parse_n = |v: &str, what: &'static str| -> Result<usize, PolicyParseError> {
             v.parse()
@@ -1036,6 +1150,9 @@ impl PolicySpec {
         if let Some(v) = s.strip_prefix("replicate:") {
             return Ok(PolicySpec::Replicate { n: parse_n(v, "replicate")? });
         }
+        if let Some(v) = s.strip_prefix("team:") {
+            return Ok(PolicySpec::Team { n: parse_n(v, "team")? });
+        }
         Err(PolicyParseError::UnknownPolicy { spec: s.to_string() })
     }
 
@@ -1046,11 +1163,27 @@ impl PolicySpec {
     pub fn compute_multiplier(&self) -> usize {
         match self {
             PolicySpec::Replicate { n } => *n,
+            // Worst case: every replica starts before the winner cancels.
+            // In practice the token retires still-queued losers, which is
+            // exactly the overhead gap `table_dist` measures.
+            PolicySpec::Team { n } => *n,
             PolicySpec::AdaptiveReplicate { ceiling } => {
                 ADAPTIVE_REPLICATE_FLOOR.min((*ceiling).max(1))
             }
             _ => 1,
         }
+    }
+
+    /// Whether a cluster substrate under this policy should route
+    /// standalone submissions over live localities only
+    /// ([`ClusterExecutor::alive_routed`](crate::distributed)). The
+    /// drain policy has no per-task retry or replica to absorb a
+    /// routed-to-corpse rejection, so — like the checkpoint strategy's
+    /// driver route — it must consume the membership view; every other
+    /// policy keeps the full ring so its placement guarantees (and the
+    /// control arm's failure signal) are unchanged.
+    pub fn routes_alive_only(&self) -> bool {
+        matches!(self, PolicySpec::Drain)
     }
 
     /// Build the decorator over `rt`'s pool. `name` namespaces the
@@ -1080,6 +1213,12 @@ impl PolicySpec {
             PolicySpec::Replicate { n } => {
                 BuiltExecutor::Replicate(ReplicateExecutor::new(base, n))
             }
+            PolicySpec::Team { n } => {
+                BuiltExecutor::Replicate(ReplicateExecutor::team(base, n))
+            }
+            // Drain is a substrate property (lineage drain + alive
+            // routing), not a decorator: the launch path stays single.
+            PolicySpec::Drain => BuiltExecutor::Single(base),
             PolicySpec::Adaptive { ceiling } => {
                 let ceiling = ceiling.max(1);
                 let policy = Arc::new(AdaptivePolicy::new(AdaptiveConfig {
@@ -1502,6 +1641,123 @@ mod tests {
         assert_eq!(f.get(), Ok(5));
     }
 
+    // -- replica teams through the decorator ----------------------------
+
+    #[test]
+    fn team_decorator_sheds_loser_work_on_a_serial_pool() {
+        // One worker ⇒ replicas run strictly in submission order: the
+        // first wins and cancels, so the queued losers' bodies never run.
+        let rt = Runtime::builder().workers(1).build();
+        let ex = ReplicateExecutor::team(PoolExecutor::new(&rt), 3);
+        assert!(ex.is_team());
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = ex.spawn(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+            5i32
+        });
+        assert_eq!(f.get(), Ok(5));
+        rt.wait_idle();
+        assert_eq!(
+            calls.load(Ordering::SeqCst),
+            1,
+            "cancelled losers must not execute their bodies"
+        );
+    }
+
+    #[test]
+    fn team_decorator_survives_failing_replicas() {
+        let rt = Runtime::builder().workers(1).build();
+        let ex = ReplicateExecutor::team(PoolExecutor::new(&rt), 3);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = ex.spawn(move || -> TaskResult<i32> {
+            if c.fetch_add(1, Ordering::SeqCst) == 0 {
+                Err("first replica dies".into())
+            } else {
+                Ok(8)
+            }
+        });
+        assert_eq!(f.get(), Ok(8));
+    }
+
+    #[test]
+    fn team_decorator_all_fail_reports_team_failure() {
+        let rt = rt();
+        let ex = ReplicateExecutor::team(PoolExecutor::new(&rt), 3);
+        let f: Future<i32> = ex.spawn(|| -> TaskResult<i32> { Err("dead".into()) });
+        match f.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::AllReplicasFailed { replicas: 3, .. }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn team_decorator_validation_gates_the_win() {
+        let rt = Runtime::builder().workers(1).build();
+        let ex = ReplicateExecutor::team(PoolExecutor::new(&rt), 3);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = ex.spawn_validate(
+            |v: &usize| *v >= 1,
+            move || c.fetch_add(1, Ordering::SeqCst),
+        );
+        // Replica 0 computes 0 (rejected); replica 1 computes 1 (wins);
+        // replica 2 is cancelled.
+        assert_eq!(f.get(), Ok(1));
+        rt.wait_idle();
+        assert_eq!(calls.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn team_decorator_dataflow_checks_token_after_deps() {
+        let rt = Runtime::builder().workers(1).build();
+        let ex = ReplicateExecutor::team(PoolExecutor::new(&rt), 3);
+        let a = crate::api::async_(&rt, || 4i64);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let f = ex.dataflow(
+            move |vals: &[i64]| {
+                c.fetch_add(1, Ordering::SeqCst);
+                vals[0] * 10
+            },
+            vec![a],
+        );
+        assert_eq!(f.get(), Ok(40));
+        rt.wait_idle();
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "losers shed after deps resolved");
+    }
+
+    #[test]
+    fn team_label_names_the_mode() {
+        let rt = rt();
+        let ex = ReplicateExecutor::team(PoolExecutor::new(&rt), 3);
+        assert_eq!(ex.label(), "team(3) over pool(2)");
+        assert!(!ReplicateExecutor::new(PoolExecutor::new(&rt), 3).is_team());
+    }
+
+    #[test]
+    fn policy_spec_team_and_drain_build_and_describe() {
+        let rt = rt();
+        assert_eq!(PolicySpec::Team { n: 3 }.label(), "exec_team(3)");
+        assert_eq!(PolicySpec::Team { n: 3 }.compute_multiplier(), 3);
+        assert_eq!(PolicySpec::Drain.label(), "exec_drain");
+        assert_eq!(PolicySpec::Drain.compute_multiplier(), 1);
+        assert!(PolicySpec::Drain.routes_alive_only());
+        assert!(!PolicySpec::Team { n: 3 }.routes_alive_only());
+        assert!(!PolicySpec::Replay { n: 3 }.routes_alive_only());
+        let built = PolicySpec::Team { n: 3 }.build(&rt, "test_team_spec", 1);
+        match &built {
+            BuiltExecutor::Replicate(ex) => assert!(ex.is_team()),
+            _ => panic!("team spec must build a team replicate decorator"),
+        }
+        assert_eq!(built.spawn(|| 2i32).get(), Ok(2));
+        assert_eq!(built.label(), "team(3) over pool(2)");
+        let drained = PolicySpec::Drain.build(&rt, "test_drain_spec", 1);
+        assert!(matches!(drained, BuiltExecutor::Single(_)));
+        assert_eq!(drained.spawn(|| 6i32).get(), Ok(6));
+    }
+
     #[test]
     fn pool_executor_is_the_plain_baseline() {
         let rt = rt();
@@ -1744,6 +2000,8 @@ mod tests {
         let specs = [
             PolicySpec::Replay { n: 3 },
             PolicySpec::Replicate { n: 2 },
+            PolicySpec::Team { n: 3 },
+            PolicySpec::Drain,
             PolicySpec::Adaptive { ceiling: 10 },
             PolicySpec::AdaptiveReplicate { ceiling: 4 },
             PolicySpec::Checkpoint { every: 2, backend: SnapshotBackend::Auto },
@@ -1770,6 +2028,17 @@ mod tests {
         assert_eq!(
             PolicySpec::parse("checkpoint:2:auto"),
             Ok(PolicySpec::Checkpoint { every: 2, backend: SnapshotBackend::Auto })
+        );
+        assert_eq!(PolicySpec::parse("team:4"), Ok(PolicySpec::Team { n: 4 }));
+        assert_eq!(PolicySpec::parse("drain"), Ok(PolicySpec::Drain));
+        assert_eq!(
+            PolicySpec::parse("team:0"),
+            Err(PolicyParseError::BadCount { what: "team", got: "0".into() })
+        );
+        assert_eq!(
+            PolicySpec::parse("drain:2"),
+            Err(PolicyParseError::UnknownPolicy { spec: "drain:2".into() }),
+            "drain takes no count"
         );
         assert_eq!(
             PolicySpec::parse("bogus"),

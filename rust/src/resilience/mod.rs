@@ -18,6 +18,14 @@
 //! individually retries before the consensus step ("finer consensus in
 //! case of soft failures").
 //!
+//! A TeaMPI-style refinement of replicate also lives here:
+//! [`ReplicaTeam`] / [`CancelToken`] implement first-result-wins replica
+//! teams — the first validated replica resolves the future and the
+//! losers retire through a shared cancellation token instead of running
+//! to completion (selected as `team:N` through
+//! [`executor::PolicySpec`]). See `docs/FAULT_MODEL.md` for the
+//! team-cancellation fault row.
+//!
 //! The second surface over the same machinery lives in [`executor`]:
 //! resilient executor *decorators* that make whole launch paths (instead
 //! of single call sites) resilient, with an optional adaptive budget
@@ -45,7 +53,7 @@ pub use replicate::{
     async_replicate_vote_validate, dataflow_replicate, dataflow_replicate_replay,
     dataflow_replicate_validate, dataflow_replicate_vote, dataflow_replicate_vote_validate,
 };
-pub use replicate::Voter;
+pub use replicate::{CancelToken, ReplicaTeam, Voter};
 pub use vote::{vote_majority, vote_majority_approx, vote_median_f64, vote_plurality};
 
 use crate::error::ResilienceError;

@@ -16,6 +16,7 @@
 //! results were computed but none validated, `ValidationFailed`; if the
 //! voting function cannot produce a winner, `NoConsensus`.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::api::{run_task_body, IntoTaskResult};
@@ -229,6 +230,193 @@ pub(crate) fn with_retries<T: Send + 'static>(
         }
         Err(last.expect("attempts >= 1 recorded an error"))
     })
+}
+
+// ---------------------------------------------------------------------
+// Replica teams (first-result-wins with loser cancellation)
+// ---------------------------------------------------------------------
+
+/// Shared cancellation flag of a replica team (TeaMPI-style). Cloned into
+/// every replica; set by the team when the first acceptable result
+/// resolves the future. Replicas are expected to check it at body entry
+/// (and, for dataflow tasks, between dependency resolution and launch)
+/// and retire with [`TaskError::Cancelled`] instead of doing the work.
+///
+/// The token is advisory: a replica that never checks still runs to
+/// completion, but its late result is dropped — the team's promise has
+/// already been taken, so a cancelled replica can never write into a
+/// resolved future.
+#[derive(Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        CancelToken::default()
+    }
+
+    /// Retire the remaining team members.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// Mutable first-result-wins state, all under one lock.
+struct TeamInner<T> {
+    promise: Option<Promise<T>>,
+    remaining: usize,
+    /// Replicas that produced a finite result (even if validation then
+    /// rejected it) — distinguishes `ValidationFailed` from
+    /// `AllReplicasFailed` when nobody wins.
+    finite_results: usize,
+    /// Losers that retired via the cancel token instead of running.
+    retired: usize,
+    last_error: Option<TaskError>,
+}
+
+/// A first-result-wins replica team: the first replica whose result is
+/// acceptable (no error, and positively validated when a validator is in
+/// play) resolves the shared future and cancels the rest of the team
+/// through a [`CancelToken`]. This differs from the paper's plain
+/// replicate (§IV-B), which lets every replica run to completion: a team
+/// sheds the losers' work, trading replicate's silent-corruption ballot
+/// for near-replay cost with replicate's fail-fast latency.
+///
+/// The team is consensus machinery only — it does not launch anything.
+/// Callers (the `team:N` mode of `ReplicateExecutor`, the deterministic
+/// schedule tests) fan the replicas out themselves and funnel outcomes
+/// into [`report`](ReplicaTeam::report) or
+/// [`run_replica`](ReplicaTeam::run_replica).
+pub struct ReplicaTeam<T> {
+    inner: Mutex<TeamInner<T>>,
+    token: CancelToken,
+    replicas: usize,
+}
+
+impl<T: Send + 'static> ReplicaTeam<T> {
+    /// A team expecting `replicas` reports; the future resolves with the
+    /// first acceptable result, or the team-wide failure when none is.
+    pub fn new(replicas: usize) -> (Arc<Self>, Future<T>) {
+        let (p, fut) = Promise::new();
+        (Self::with_promise(p, replicas), fut)
+    }
+
+    /// A team resolving an existing promise (the decorator layer's
+    /// `spawn_into` contract hands the promise in).
+    pub(crate) fn with_promise(promise: Promise<T>, replicas: usize) -> Arc<Self> {
+        let replicas = replicas.max(1);
+        Arc::new(ReplicaTeam {
+            inner: Mutex::new(TeamInner {
+                promise: Some(promise),
+                remaining: replicas,
+                finite_results: 0,
+                retired: 0,
+                last_error: None,
+            }),
+            token: CancelToken::new(),
+            replicas,
+        })
+    }
+
+    /// The team's shared cancellation token.
+    pub fn token(&self) -> CancelToken {
+        self.token.clone()
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Losers that retired through the cancel token so far.
+    pub fn retired(&self) -> usize {
+        self.inner.lock().unwrap().retired
+    }
+
+    /// Replicas that have not reported yet.
+    pub fn outstanding(&self) -> usize {
+        self.inner.lock().unwrap().remaining
+    }
+
+    /// Check the token, run `body` if the team is still racing, and
+    /// report the outcome — the whole per-replica protocol in one call.
+    pub fn run_replica<F>(&self, body: F)
+    where
+        F: FnOnce() -> TaskResult<T>,
+    {
+        if self.token.is_cancelled() {
+            self.report(Err(TaskError::Cancelled), None);
+            return;
+        }
+        self.report(body(), None);
+    }
+
+    /// Record one replica's outcome. The first `Ok` not rejected by
+    /// validation takes the promise, resolves it, and cancels the token
+    /// (in that order, under the team lock, so no later report can win).
+    /// `Err(Cancelled)` is an orderly loser retirement, not a failure.
+    /// When every replica has reported and nothing won: validation
+    /// rejections yield `ValidationFailed`, otherwise `AllReplicasFailed`
+    /// with the last real error.
+    pub fn report(&self, outcome: TaskResult<T>, validated: Option<bool>) {
+        enum Action<T> {
+            None,
+            Resolve(Promise<T>, T),
+            Fail(Promise<T>, usize, Option<TaskError>),
+        }
+        let action = {
+            let mut g = self.inner.lock().unwrap();
+            g.remaining = g.remaining.saturating_sub(1);
+            let mut action = Action::None;
+            match outcome {
+                Ok(v) => {
+                    g.finite_results += 1;
+                    if validated == Some(false) {
+                        g.last_error = Some(TaskError::ValidationRejected);
+                    } else if let Some(p) = g.promise.take() {
+                        // Cancel while still holding the lock: by the
+                        // time any other replica can observe an
+                        // un-cancelled token and report, the promise is
+                        // already gone.
+                        self.token.cancel();
+                        action = Action::Resolve(p, v);
+                    }
+                }
+                Err(TaskError::Cancelled) => {
+                    g.retired += 1;
+                }
+                Err(e) => {
+                    g.last_error = Some(e);
+                }
+            }
+            if g.remaining == 0 && g.promise.is_some() {
+                if let Some(p) = g.promise.take() {
+                    action = Action::Fail(p, g.finite_results, g.last_error.take());
+                }
+            }
+            action
+        };
+        match action {
+            Action::None => {}
+            Action::Resolve(p, v) => p.set_value(v),
+            Action::Fail(p, finite, last) => {
+                let err = if finite > 0 {
+                    ResilienceError::ValidationFailed { replicas: self.replicas }
+                } else {
+                    ResilienceError::AllReplicasFailed {
+                        replicas: self.replicas,
+                        last: last
+                            .unwrap_or(TaskError::App("no replica produced a result".into())),
+                    }
+                };
+                p.set_error(err.into());
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -633,6 +821,91 @@ mod tests {
             },
         );
         assert_eq!(f.get(), Ok(5));
+    }
+
+    #[test]
+    fn team_first_result_wins_and_cancels_losers() {
+        let (team, fut) = ReplicaTeam::<i32>::new(3);
+        assert!(!team.token().is_cancelled());
+        team.report(Ok(7), None);
+        assert!(team.token().is_cancelled(), "winner must retire the team");
+        assert_eq!(fut.get_copy(), Ok(7));
+        // Losers checking the token retire without running their bodies.
+        let ran = std::cell::Cell::new(false);
+        team.run_replica(|| {
+            ran.set(true);
+            Ok(99)
+        });
+        team.run_replica(|| {
+            ran.set(true);
+            Ok(98)
+        });
+        assert!(!ran.get(), "cancelled replicas must not execute");
+        assert_eq!(team.retired(), 2);
+        assert_eq!(team.outstanding(), 0);
+        // The future still holds the winner's value.
+        assert_eq!(fut.get_copy(), Ok(7));
+    }
+
+    #[test]
+    fn team_late_uncancelled_result_is_dropped() {
+        // A replica that never checks the token loses the race: its Ok
+        // arrives after the promise was taken and vanishes.
+        let (team, fut) = ReplicaTeam::<i32>::new(2);
+        team.report(Ok(1), None);
+        team.report(Ok(2), None);
+        assert_eq!(fut.get_copy(), Ok(1));
+        assert_eq!(team.retired(), 0);
+    }
+
+    #[test]
+    fn team_validation_rejection_does_not_win() {
+        let (team, fut) = ReplicaTeam::<i32>::new(2);
+        team.report(Ok(666), Some(false));
+        assert!(!team.token().is_cancelled(), "rejected result must not cancel");
+        team.report(Ok(42), Some(true));
+        assert_eq!(fut.get_copy(), Ok(42));
+    }
+
+    #[test]
+    fn team_all_rejected_reports_validation_failure() {
+        let (team, fut) = ReplicaTeam::<i32>::new(2);
+        team.report(Ok(1), Some(false));
+        team.report(Ok(2), Some(false));
+        match fut.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::ValidationFailed { replicas: 2 }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn team_all_failed_reports_last_error() {
+        let (team, fut) = ReplicaTeam::<i32>::new(2);
+        team.report(Err("first".into()), None);
+        team.report(Err("second".into()), None);
+        match fut.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::AllReplicasFailed { replicas: 2, last }) => {
+                assert_eq!(last, &TaskError::App("second".to_string()));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn team_retirement_is_not_a_failure() {
+        // One real failure plus one retirement: the retirement must not
+        // overwrite the real error in the team-wide report.
+        let (team, fut) = ReplicaTeam::<i32>::new(2);
+        team.report(Err("real".into()), None);
+        team.token().cancel();
+        team.run_replica(|| Ok(5));
+        match fut.get().unwrap_err().as_resilience() {
+            Some(ResilienceError::AllReplicasFailed { last, .. }) => {
+                assert_eq!(last, &TaskError::App("real".to_string()));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert_eq!(team.retired(), 1);
     }
 
     #[test]

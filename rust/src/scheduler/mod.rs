@@ -28,7 +28,7 @@
 mod queue;
 mod worker;
 
-pub use queue::{Injector, InjectorBatch, WorkQueue};
+pub use queue::{Injector, InjectorBatch, Lineage, LineageLedger, WorkQueue};
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};

@@ -392,6 +392,89 @@ impl Drop for InjectorBatch {
     }
 }
 
+/// Per-task lineage record for resilient work stealing (arXiv
+/// 1706.03539): where a task was placed, which task (if any) it was
+/// re-materialized from, and a monotonically increasing epoch that
+/// orders spawns cluster-wide.
+///
+/// Lineage does *not* ride inside the [`WorkQueue`]/[`Injector`] nodes —
+/// those hot paths stay pointer-sized (PR-4's throughput depends on it).
+/// Instead it lives in a [`LineageLedger`] side table keyed by epoch:
+/// the distributed layer records an entry per routed task, the executing
+/// job *claims* its epoch just before running, and a locality kill
+/// *drains* whatever is still unclaimed — the queued-but-unexecuted
+/// set — handing each entry's relaunch closure to a survivor. Claim and
+/// drain are mutually exclusive per epoch, so a task is never both
+/// executed on the corpse and re-materialized elsewhere.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lineage {
+    /// Locality the task was originally routed to.
+    pub origin: usize,
+    /// Epoch of the spawn this task was re-materialized from (`None`
+    /// for a first placement).
+    pub parent: Option<u64>,
+    /// Cluster-wide monotonic spawn epoch (the ledger key).
+    pub epoch: u64,
+}
+
+/// The queued-but-unexecuted side table backing [`Lineage`] tracking.
+///
+/// One ledger per locality mailbox/deque pair. `BTreeMap` (not
+/// `HashMap`) so [`LineageLedger::drain`] re-materializes in epoch
+/// (spawn) order — deterministic replays for the scripted-interleaving
+/// tests, FIFO fairness in production.
+pub struct LineageLedger {
+    pending: Mutex<std::collections::BTreeMap<u64, (Lineage, Job)>>,
+}
+
+impl LineageLedger {
+    pub fn new() -> Self {
+        LineageLedger { pending: Mutex::new(std::collections::BTreeMap::new()) }
+    }
+
+    /// Record a routed-but-not-yet-executed task: its lineage and the
+    /// relaunch closure a drain hands to a survivor.
+    pub fn record(&self, lineage: Lineage, relaunch: Job) {
+        self.pending.lock().unwrap().insert(lineage.epoch, (lineage, relaunch));
+    }
+
+    /// Executor-side claim: the job for `epoch` is about to run. Returns
+    /// `true` when this caller won the entry (it must run the task) and
+    /// `false` when a drain already re-materialized it (the caller must
+    /// do nothing — the task now belongs to a survivor).
+    pub fn claim(&self, epoch: u64) -> bool {
+        self.pending.lock().unwrap().remove(&epoch).is_some()
+    }
+
+    /// Kill-side drain: claim *every* pending entry at once, in epoch
+    /// order. Each returned closure re-materializes its task elsewhere.
+    pub fn drain(&self) -> Vec<(Lineage, Job)> {
+        let mut map = self.pending.lock().unwrap();
+        let drained = std::mem::take(&mut *map);
+        drained.into_values().collect()
+    }
+
+    /// Lineages currently pending (diagnostics and tests).
+    pub fn lineages(&self) -> Vec<Lineage> {
+        self.pending.lock().unwrap().values().map(|(l, _)| l.clone()).collect()
+    }
+
+    /// Number of queued-but-unexecuted tasks.
+    pub fn len(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for LineageLedger {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -503,6 +586,44 @@ mod tests {
             j();
         }
         assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn lineage_claim_and_drain_are_mutually_exclusive() {
+        let ledger = LineageLedger::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        for epoch in 0..4u64 {
+            ledger.record(
+                Lineage { origin: 2, parent: None, epoch },
+                job(&hits, 1 << epoch),
+            );
+        }
+        assert_eq!(ledger.len(), 4);
+        // The executor claims epoch 1; a later drain must not see it.
+        assert!(ledger.claim(1));
+        assert!(!ledger.claim(1), "double claim must lose");
+        let drained = ledger.drain();
+        assert_eq!(drained.len(), 3);
+        // Epoch (spawn) order, and each job exactly once.
+        let epochs: Vec<u64> = drained.iter().map(|(l, _)| l.epoch).collect();
+        assert_eq!(epochs, vec![0, 2, 3]);
+        for (_, relaunch) in drained {
+            relaunch();
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 0b1101);
+        assert!(ledger.is_empty());
+        assert!(!ledger.claim(0), "drained epochs cannot be claimed");
+    }
+
+    #[test]
+    fn lineage_records_parent_chain() {
+        let ledger = LineageLedger::new();
+        ledger.record(Lineage { origin: 0, parent: None, epoch: 7 }, Box::new(|| {}));
+        ledger.record(Lineage { origin: 3, parent: Some(7), epoch: 8 }, Box::new(|| {}));
+        let lins = ledger.lineages();
+        assert_eq!(lins.len(), 2);
+        assert_eq!(lins[0], Lineage { origin: 0, parent: None, epoch: 7 });
+        assert_eq!(lins[1].parent, Some(7), "re-materialized spawn keeps its parent");
     }
 
     #[test]

@@ -236,6 +236,10 @@ pub struct LocalityReport {
     pub tasks_executed: usize,
     /// Attempts rejected because the locality was dead.
     pub tasks_rejected: usize,
+    /// Tracked tasks that died in this locality's queue when it was
+    /// killed — each was re-materialized onto a survivor from its
+    /// lineage record, so a lost task is recovered work, not a failure.
+    pub tasks_lost: usize,
     pub alive_at_end: bool,
     /// The global task index at which the fault schedule killed it.
     pub killed_at_task: Option<usize>,
@@ -380,7 +384,13 @@ fn run_cluster(
     let body_runs = Arc::new(AtomicU64::new(0));
     let domain = Domain::sine(params.n_sub, params.nx);
     let cluster = spec.build();
-    let exec = ClusterExecutor::new(&cluster);
+    // `--resilience drain` recovers queued work through the lineage
+    // drain alone, so new placements must avoid corpses entirely.
+    let exec = if params.resilience.map(|p| p.routes_alive_only()).unwrap_or(false) {
+        ClusterExecutor::alive_routed(&cluster)
+    } else {
+        ClusterExecutor::new(&cluster)
+    };
     let route: BuiltExecutor<ClusterExecutor> = match params.resilience {
         Some(p) => p.build_over(exec, "stencil", ADAPTIVE_FLOOR),
         None => BuiltExecutor::Single(exec),
@@ -420,6 +430,12 @@ fn run_cluster(
 
     let localities = locality_reports(&cluster, &kills_applied);
 
+    // Prefer the direct drain-to-reschedule measurement when a kill
+    // actually drained queued tracked tasks; fall back to the
+    // kill→barrier measure otherwise.
+    let drain = cluster.drain_latency_secs();
+    let recovery = if drain.is_empty() { mean_secs(&latencies) } else { mean_secs(&drain) };
+
     let report = StencilReport {
         mode: params
             .resilience
@@ -433,7 +449,7 @@ fn run_cluster(
         silent_corruptions: corruptor.count(),
         launch_errors,
         kills_applied: kills_applied.len(),
-        recovery_latency_secs: mean_secs(&latencies),
+        recovery_latency_secs: recovery,
         tasks_reexecuted: cluster_reexecuted(&localities, params.total_tasks()),
         snapshots: SnapshotCounts::default(),
         localities,
@@ -525,9 +541,14 @@ fn mean_secs(latencies: &[f64]) -> Option<f64> {
 }
 
 /// Cluster-route re-execution accounting: locality attempts (bodies
-/// executed + dead-locality rejections) in excess of one per DAG node.
+/// executed + dead-locality rejections + in-queue deaths) in excess of
+/// one per DAG node. Each lost task re-materializes on a survivor as a
+/// fresh routing, so Σ(executed + rejected + lost) counts every routing.
 fn cluster_reexecuted(localities: &[LocalityReport], tasks: usize) -> u64 {
-    let attempts: usize = localities.iter().map(|l| l.tasks_executed + l.tasks_rejected).sum();
+    let attempts: usize = localities
+        .iter()
+        .map(|l| l.tasks_executed + l.tasks_rejected + l.tasks_lost)
+        .sum();
     (attempts as u64).saturating_sub(tasks as u64)
 }
 
@@ -545,6 +566,7 @@ fn locality_reports(
                 id: i,
                 tasks_executed: loc.tasks_executed(),
                 tasks_rejected: loc.tasks_rejected(),
+                tasks_lost: loc.tasks_lost(),
                 alive_at_end: loc.is_alive(),
                 killed_at_task: kills_applied.iter().find(|e| e.loc.0 == i).map(|e| e.step),
             }

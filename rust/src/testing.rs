@@ -1,4 +1,5 @@
-//! A miniature property-based testing harness.
+//! Testing substrates: a miniature property-based harness and a
+//! deterministic interleaving scheduler.
 //!
 //! The offline build has no `proptest`/`quickcheck`, so the crate carries
 //! its own: generate many random cases from a seeded [`Rng`]
@@ -6,8 +7,17 @@
 //! failure report the case number and seed so the exact case can be
 //! replayed.
 //!
+//! The second substrate, [`det`], is a virtual-time, script-driven
+//! single-thread scheduler: concurrency protocols (the Chase–Lev deque,
+//! the lineage ledger, replica-team cancellation) are decomposed into
+//! named logical threads of discrete steps, and a *script* chooses the
+//! exact interleaving to replay. Where `tests/stress_concurrency.rs`
+//! hammers real threads and hopes the schedule of interest occurs, a
+//! `det` script *forces* it, every run, as a plain `cargo test` case.
+//!
 //! Paper mapping: verification substrate only (no table/figure); backs
-//! the property suites in `rust/tests/properties.rs`.
+//! the property suites in `rust/tests/properties.rs` and the scripted
+//! interleavings in `rust/tests/deterministic_schedules.rs`.
 
 use crate::failure::Rng;
 
@@ -90,6 +100,186 @@ pub mod gen {
     }
 }
 
+/// Deterministic interleaving harness: a virtual-time, script-driven
+/// single-thread scheduler.
+///
+/// A test registers *logical threads* — named queues of discrete steps
+/// (closures) — then replays a chosen interleaving by naming which
+/// thread takes the next step. All steps run on the calling OS thread,
+/// so there are no data races to win or lose: what is exercised is the
+/// *protocol logic* (index arbitration, claim-exactly-once, cancel
+/// ordering) under an interleaving the script pins down exactly.
+///
+/// ```
+/// use rhpx::testing::det::{step, Interleaver};
+/// use std::cell::Cell;
+///
+/// let hits = Cell::new(0u64);
+/// let mut il = Interleaver::new();
+/// il.spawn("a", vec![step(|clk| { clk.advance(5); hits.set(hits.get() + 1) })]);
+/// il.spawn("b", vec![step(|_| hits.set(hits.get() + 10))]);
+/// il.run_script("b a").unwrap();
+/// assert_eq!(hits.get(), 11);
+/// assert_eq!(il.now(), 7); // 1 tick per step + the explicit advance(5)
+/// assert!(il.is_drained());
+/// ```
+pub mod det {
+    use std::collections::VecDeque;
+    use std::fmt;
+
+    /// Virtual time: advances one tick per scheduled step, plus whatever
+    /// a step adds explicitly via [`VirtualClock::advance`]. No wall
+    /// clock is ever consulted, so traces replay identically.
+    #[derive(Debug, Default)]
+    pub struct VirtualClock {
+        now: u64,
+    }
+
+    impl VirtualClock {
+        /// Current virtual time in ticks.
+        pub fn now(&self) -> u64 {
+            self.now
+        }
+
+        /// Model a step taking `ticks` of virtual time.
+        pub fn advance(&mut self, ticks: u64) {
+            self.now += ticks;
+        }
+    }
+
+    /// One discrete step of a logical thread.
+    pub type Step<'a> = Box<dyn FnOnce(&mut VirtualClock) + 'a>;
+
+    /// Build a [`Step`] from any closure (saves the `Box::new` at every
+    /// call site and fixes the closure's argument type).
+    pub fn step<'a, F: FnOnce(&mut VirtualClock) + 'a>(f: F) -> Step<'a> {
+        Box::new(f)
+    }
+
+    /// A script referenced a thread that cannot take a step.
+    #[derive(Debug, Clone, PartialEq, Eq)]
+    pub enum ScheduleError {
+        /// No thread with this name was spawned.
+        UnknownThread { name: String },
+        /// The named thread has no steps left.
+        Exhausted { name: String },
+    }
+
+    impl fmt::Display for ScheduleError {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            match self {
+                ScheduleError::UnknownThread { name } => {
+                    write!(f, "script names unknown thread {name:?}")
+                }
+                ScheduleError::Exhausted { name } => {
+                    write!(f, "thread {name:?} has no steps left")
+                }
+            }
+        }
+    }
+
+    impl std::error::Error for ScheduleError {}
+
+    /// The deterministic scheduler: named step queues + a trace of which
+    /// thread ran at which virtual time.
+    #[derive(Default)]
+    pub struct Interleaver<'a> {
+        threads: Vec<(&'static str, VecDeque<Step<'a>>)>,
+        clock: VirtualClock,
+        trace: Vec<(u64, &'static str)>,
+    }
+
+    impl<'a> Interleaver<'a> {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        /// Register a logical thread. Spawning an existing name appends
+        /// to that thread's queue (handy for phased scripts).
+        pub fn spawn<I>(&mut self, name: &'static str, steps: I)
+        where
+            I: IntoIterator<Item = Step<'a>>,
+        {
+            if let Some((_, q)) = self.threads.iter_mut().find(|(n, _)| *n == name) {
+                q.extend(steps);
+            } else {
+                self.threads.push((name, steps.into_iter().collect()));
+            }
+        }
+
+        /// Run the next step of the named thread.
+        pub fn run_step(&mut self, name: &str) -> Result<(), ScheduleError> {
+            let idx = self
+                .threads
+                .iter()
+                .position(|(n, _)| *n == name)
+                .ok_or_else(|| ScheduleError::UnknownThread { name: name.to_string() })?;
+            let tname = self.threads[idx].0;
+            let step = self.threads[idx]
+                .1
+                .pop_front()
+                .ok_or_else(|| ScheduleError::Exhausted { name: name.to_string() })?;
+            self.clock.advance(1);
+            self.trace.push((self.clock.now, tname));
+            step(&mut self.clock);
+            Ok(())
+        }
+
+        /// Replay a whitespace-separated script of thread names, e.g.
+        /// `"owner owner thief owner"`. Each token runs one step.
+        pub fn run_script(&mut self, script: &str) -> Result<(), ScheduleError> {
+            for name in script.split_whitespace() {
+                self.run_step(name)?;
+            }
+            Ok(())
+        }
+
+        /// Run every remaining step, round-robin across threads in spawn
+        /// order — the canonical "and then everything else finishes"
+        /// tail after the interesting prefix has been scripted.
+        pub fn run_remaining(&mut self) {
+            loop {
+                let names: Vec<&'static str> = self
+                    .threads
+                    .iter()
+                    .filter(|(_, q)| !q.is_empty())
+                    .map(|(n, _)| *n)
+                    .collect();
+                if names.is_empty() {
+                    return;
+                }
+                for n in names {
+                    // Step queues only shrink here, so this cannot fail.
+                    let _ = self.run_step(n);
+                }
+            }
+        }
+
+        /// Steps left on the named thread (0 for unknown names).
+        pub fn remaining(&self, name: &str) -> usize {
+            self.threads
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map_or(0, |(_, q)| q.len())
+        }
+
+        /// True once every thread's queue is empty.
+        pub fn is_drained(&self) -> bool {
+            self.threads.iter().all(|(_, q)| q.is_empty())
+        }
+
+        /// Current virtual time.
+        pub fn now(&self) -> u64 {
+            self.clock.now()
+        }
+
+        /// The `(virtual time, thread)` execution trace so far.
+        pub fn trace(&self) -> &[(u64, &'static str)] {
+            &self.trace
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +327,80 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    mod det_harness {
+        use crate::testing::det::{step, Interleaver, ScheduleError};
+        use std::cell::RefCell;
+
+        #[test]
+        fn script_runs_steps_in_scripted_order() {
+            let log = RefCell::new(Vec::new());
+            let mut il = Interleaver::new();
+            il.spawn(
+                "a",
+                vec![
+                    step(|_| log.borrow_mut().push("a0")),
+                    step(|_| log.borrow_mut().push("a1")),
+                ],
+            );
+            il.spawn("b", vec![step(|_| log.borrow_mut().push("b0"))]);
+            il.run_script("a b a").unwrap();
+            assert_eq!(*log.borrow(), vec!["a0", "b0", "a1"]);
+            assert!(il.is_drained());
+            assert_eq!(il.now(), 3, "one tick per step");
+            let trace: Vec<&str> = il.trace().iter().map(|(_, n)| *n).collect();
+            assert_eq!(trace, vec!["a", "b", "a"]);
+        }
+
+        #[test]
+        fn virtual_time_is_step_controlled() {
+            let mut il = Interleaver::new();
+            il.spawn("t", vec![step(|clk| clk.advance(41))]);
+            il.run_script("t").unwrap();
+            assert_eq!(il.now(), 42); // 1 scheduling tick + 41 explicit
+        }
+
+        #[test]
+        fn bad_scripts_report_typed_errors() {
+            let mut il = Interleaver::new();
+            il.spawn("only", vec![step(|_| {})]);
+            assert_eq!(
+                il.run_script("ghost"),
+                Err(ScheduleError::UnknownThread { name: "ghost".to_string() })
+            );
+            il.run_script("only").unwrap();
+            assert_eq!(
+                il.run_script("only"),
+                Err(ScheduleError::Exhausted { name: "only".to_string() })
+            );
+        }
+
+        #[test]
+        fn run_remaining_drains_every_thread() {
+            let log = RefCell::new(Vec::new());
+            let log = &log;
+            let mut il = Interleaver::new();
+            il.spawn(
+                "x",
+                (0..3).map(|i| step(move |_| log.borrow_mut().push(("x", i)))).collect::<Vec<_>>(),
+            );
+            il.spawn("y", vec![step(|_| log.borrow_mut().push(("y", 0)))]);
+            il.run_script("y").unwrap();
+            il.run_remaining();
+            assert!(il.is_drained());
+            assert_eq!(log.borrow().len(), 4);
+            assert_eq!(il.remaining("x"), 0);
+        }
+
+        #[test]
+        fn respawning_a_name_appends_steps() {
+            let log = RefCell::new(Vec::new());
+            let mut il = Interleaver::new();
+            il.spawn("t", vec![step(|_| log.borrow_mut().push(1))]);
+            il.spawn("t", vec![step(|_| log.borrow_mut().push(2))]);
+            il.run_script("t t").unwrap();
+            assert_eq!(*log.borrow(), vec![1, 2]);
+        }
     }
 }

@@ -316,10 +316,15 @@ fn mode_label(params: &RunParams) -> String {
 }
 
 /// Cluster-route re-execution accounting: locality attempts (bodies
-/// executed + dead-locality rejections) in excess of one per DAG node.
+/// executed + dead-locality rejections + in-queue deaths) in excess of
+/// one per DAG node. A task lost from a corpse's queue re-materializes
+/// on a survivor as a fresh routing, so counting `tasks_lost` here keeps
+/// the invariant Σ(executed + rejected + lost) = routings.
 fn cluster_reexecuted(localities: &[LocalityReport], tasks: usize) -> u64 {
-    let attempts: usize =
-        localities.iter().map(|l| l.tasks_executed + l.tasks_rejected).sum();
+    let attempts: usize = localities
+        .iter()
+        .map(|l| l.tasks_executed + l.tasks_rejected + l.tasks_lost)
+        .sum();
     (attempts as u64).saturating_sub(tasks as u64)
 }
 
@@ -332,6 +337,7 @@ fn locality_reports(cluster: &Cluster, kills_applied: &[KillEvent]) -> Vec<Local
                 id: i,
                 tasks_executed: loc.tasks_executed(),
                 tasks_rejected: loc.tasks_rejected(),
+                tasks_lost: loc.tasks_lost(),
                 alive_at_end: loc.is_alive(),
                 killed_at_task: kills_applied.iter().find(|e| e.loc.0 == i).map(|e| e.step),
             }
@@ -415,7 +421,14 @@ fn run_cluster(
 ) -> TaskResult<(Vec<f64>, RunReport)> {
     let wiring = FaultWiring::new(params);
     let cluster = spec.build();
-    let exec = ClusterExecutor::new(&cluster);
+    // `--resilience drain` relies on the lineage drain alone: tasks must
+    // never be *placed* on a corpse (there is nothing to reject them),
+    // so the substrate routes over live localities only.
+    let exec = if params.resilience.map(|p| p.routes_alive_only()).unwrap_or(false) {
+        ClusterExecutor::alive_routed(&cluster)
+    } else {
+        ClusterExecutor::new(&cluster)
+    };
     let route: BuiltExecutor<ClusterExecutor> = match params.resilience {
         Some(p) => p.build_over(exec, w.name(), ADAPTIVE_FLOOR),
         None => BuiltExecutor::Single(exec),
@@ -454,6 +467,13 @@ fn run_cluster(
 
     let localities = locality_reports(&cluster, &kills_applied);
 
+    // When a kill actually drained queued tracked tasks, the direct
+    // drain-to-reschedule measurement is the recovery latency (no window
+    // barrier involved); the kill→barrier measure is the fallback for
+    // kills that found an empty queue.
+    let drain = cluster.drain_latency_secs();
+    let recovery = if drain.is_empty() { mean_secs(&latencies) } else { mean_secs(&drain) };
+
     let report = RunReport {
         workload: w.name().into(),
         mode: mode_label(params),
@@ -465,7 +485,7 @@ fn run_cluster(
         silent_corruptions: wiring.sdc.count(),
         launch_errors: out.launch_errors,
         kills_applied: kills_applied.len(),
-        recovery_latency_secs: mean_secs(&latencies),
+        recovery_latency_secs: recovery,
         tasks_reexecuted: cluster_reexecuted(&localities, out.tasks),
         snapshots: SnapshotCounts::default(),
         localities,

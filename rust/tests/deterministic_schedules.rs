@@ -1,0 +1,426 @@
+//! Scripted concurrency interleavings, replayed deterministically.
+//!
+//! Every test here decomposes a concurrency protocol into named logical
+//! threads of discrete steps and replays one *chosen* interleaving with
+//! [`rhpx::testing::det`] — virtual time, one OS thread, zero races to
+//! win or lose. Where `tests/stress_concurrency.rs` hammers real
+//! threads and hopes the schedule of interest occurs, these scripts
+//! *force* it, identically on every run:
+//!
+//! * steal-vs-pop arbitration on the Chase–Lev deque's last element,
+//!   both orders;
+//! * buffer growth with a thief mid-stream (retired-buffer path);
+//! * injector push vs. `take_all` orderings;
+//! * kill-mid-drain orderings on the lineage ledger (claim-then-drain
+//!   and drain-then-claim — the exactly-once arbitration);
+//! * replica-team cancel-vs-resolve, both orders (a loser's late result
+//!   never lands).
+//!
+//! CI runs this file with `--test-threads=1`: the schedules are already
+//! deterministic, serial execution keeps their traces readable when one
+//! fails.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use rhpx::resilience::ReplicaTeam;
+use rhpx::scheduler::{Injector, Lineage, LineageLedger, WorkQueue};
+use rhpx::testing::det::{step, Interleaver};
+use rhpx::TaskError;
+
+/// A job that bumps `runs[id]` when executed — ownership of a job is
+/// observable as exactly one bump.
+fn counting_job(runs: &Arc<Vec<AtomicUsize>>, id: usize) -> rhpx::scheduler::Job {
+    let runs = Arc::clone(runs);
+    Box::new(move || {
+        runs[id].fetch_add(1, Ordering::Relaxed);
+    })
+}
+
+fn run_counts(n: usize) -> Arc<Vec<AtomicUsize>> {
+    Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect())
+}
+
+// ---------------------------------------------------------------------
+// Chase–Lev deque: steal vs. pop on the last element, both orders
+// ---------------------------------------------------------------------
+
+#[test]
+fn det_steal_vs_pop_last_element_owner_first() {
+    let q = WorkQueue::new();
+    let runs = run_counts(1);
+    // SAFETY: all owner-side calls happen on this one OS thread.
+    unsafe { q.push(counting_job(&runs, 0)) };
+
+    let winner: RefCell<Vec<&'static str>> = RefCell::new(Vec::new());
+    let mut il = Interleaver::new();
+    il.spawn(
+        "owner",
+        vec![step(|_| {
+            if let Some(j) = unsafe { q.pop() } {
+                j();
+                winner.borrow_mut().push("owner");
+            }
+        })],
+    );
+    il.spawn(
+        "thief",
+        vec![step(|_| {
+            if let Some(j) = q.steal() {
+                j();
+                winner.borrow_mut().push("thief");
+            }
+        })],
+    );
+
+    il.run_script("owner thief").unwrap();
+    assert_eq!(*winner.borrow(), vec!["owner"], "pop first: the owner wins the element");
+    assert_eq!(runs[0].load(Ordering::Relaxed), 1, "exactly-once");
+    assert!(q.is_empty());
+}
+
+#[test]
+fn det_steal_vs_pop_last_element_thief_first() {
+    let q = WorkQueue::new();
+    let runs = run_counts(1);
+    unsafe { q.push(counting_job(&runs, 0)) };
+
+    let winner: RefCell<Vec<&'static str>> = RefCell::new(Vec::new());
+    let mut il = Interleaver::new();
+    il.spawn(
+        "owner",
+        vec![step(|_| {
+            if let Some(j) = unsafe { q.pop() } {
+                j();
+                winner.borrow_mut().push("owner");
+            }
+        })],
+    );
+    il.spawn(
+        "thief",
+        vec![step(|_| {
+            if let Some(j) = q.steal() {
+                j();
+                winner.borrow_mut().push("thief");
+            }
+        })],
+    );
+
+    // Same threads, opposite order: the thief must win and the owner's
+    // pop must find the deque empty — never a double execution.
+    il.run_script("thief owner").unwrap();
+    assert_eq!(*winner.borrow(), vec!["thief"], "steal first: the thief wins the element");
+    assert_eq!(runs[0].load(Ordering::Relaxed), 1, "exactly-once");
+    assert!(q.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Chase–Lev deque: buffer growth with a thief mid-stream
+// ---------------------------------------------------------------------
+
+#[test]
+fn det_buffer_growth_mid_steal_loses_no_jobs() {
+    // 64 is the deque's initial capacity: the second push batch forces
+    // `grow` *after* the thief has advanced top, exercising the
+    // retired-buffer copy with live jobs on both sides of the boundary.
+    const FIRST: usize = 64;
+    const SECOND: usize = 10;
+    const STOLEN_BEFORE_GROW: usize = 3;
+    const TOTAL: usize = FIRST + SECOND;
+
+    let q = WorkQueue::new();
+    let runs = run_counts(TOTAL);
+
+    let mut il = Interleaver::new();
+    il.spawn(
+        "owner",
+        vec![
+            step(|_| {
+                for id in 0..FIRST {
+                    unsafe { q.push(counting_job(&runs, id)) };
+                }
+            }),
+            step(|_| {
+                // bottom − top ≥ capacity here, so this batch grows the
+                // buffer while the thief's 3 steals are already banked.
+                for id in FIRST..TOTAL {
+                    unsafe { q.push(counting_job(&runs, id)) };
+                }
+            }),
+        ],
+    );
+    il.spawn(
+        "thief",
+        (0..STOLEN_BEFORE_GROW)
+            .map(|_| {
+                step(|_| {
+                    let j = q.steal().expect("deque is non-empty before the grow");
+                    j();
+                })
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    il.run_script("owner thief thief thief owner").unwrap();
+
+    // Drain the survivors from both ends, strictly alternating: pops
+    // (LIFO, newest first) interleaved with steals (FIFO, oldest first)
+    // until the two frontiers meet on the grown buffer.
+    let remaining = TOTAL - STOLEN_BEFORE_GROW;
+    il.spawn(
+        "owner",
+        (0..remaining)
+            .map(|_| {
+                step(|_| {
+                    if let Some(j) = unsafe { q.pop() } {
+                        j();
+                    }
+                })
+            })
+            .collect::<Vec<_>>(),
+    );
+    il.spawn(
+        "thief",
+        (0..remaining)
+            .map(|_| {
+                step(|_| {
+                    if let Some(j) = q.steal() {
+                        j();
+                    }
+                })
+            })
+            .collect::<Vec<_>>(),
+    );
+    il.run_remaining();
+    assert!(il.is_drained());
+
+    assert!(q.is_empty(), "every job must have been handed out");
+    for (id, r) in runs.iter().enumerate() {
+        assert_eq!(
+            r.load(Ordering::Relaxed),
+            1,
+            "job {id} must run exactly once across the grow"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Injector (Treiber stack): push vs. take_all orderings
+// ---------------------------------------------------------------------
+
+#[test]
+fn det_injector_push_vs_take_all_orderings() {
+    let inj = Injector::new();
+    let order: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let push_job = |id: usize| -> rhpx::scheduler::Job {
+        let order = Arc::clone(&order);
+        Box::new(move || order.lock().unwrap().push(id))
+    };
+
+    let batches: RefCell<Vec<usize>> = RefCell::new(Vec::new());
+    let mut il = Interleaver::new();
+    il.spawn(
+        "producer",
+        vec![
+            step(|_| inj.push(push_job(1))),
+            step(|_| inj.push(push_job(2))),
+            step(|_| inj.push(push_job(3))),
+        ],
+    );
+    il.spawn(
+        "consumer",
+        vec![
+            // First take_all races ahead of any push: empty batch.
+            step(|_| batches.borrow_mut().push(inj.take_all().map(|j| j()).count())),
+            // Second lands between pushes 2 and 3: two jobs, newest
+            // first (stack order).
+            step(|_| batches.borrow_mut().push(inj.take_all().map(|j| j()).count())),
+            // Third collects the straggler.
+            step(|_| batches.borrow_mut().push(inj.take_all().map(|j| j()).count())),
+        ],
+    );
+
+    il.run_script("consumer producer producer consumer producer consumer").unwrap();
+
+    assert_eq!(*batches.borrow(), vec![0, 2, 1], "batch sizes follow the interleaving");
+    // Stack order within a batch: [2, 1] then [3]; union exactly once.
+    assert_eq!(*order.lock().unwrap(), vec![2, 1, 3]);
+    assert!(inj.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Lineage ledger: kill-mid-drain orderings (the exactly-once gate)
+// ---------------------------------------------------------------------
+
+/// A ledger with `n` recorded epochs whose relaunch closures log into
+/// `relaunched` — the shape `Cluster::kill` drains.
+fn seeded_ledger(n: u64, relaunched: &Arc<Mutex<Vec<u64>>>) -> LineageLedger {
+    let ledger = LineageLedger::new();
+    for epoch in 0..n {
+        let log = Arc::clone(relaunched);
+        ledger.record(
+            Lineage { origin: 2, parent: None, epoch },
+            Box::new(move || log.lock().unwrap().push(epoch)),
+        );
+    }
+    ledger
+}
+
+#[test]
+fn det_kill_drain_after_claim_respects_the_claim() {
+    let relaunched: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let ledger = seeded_ledger(4, &relaunched);
+    let executed: RefCell<Vec<u64>> = RefCell::new(Vec::new());
+
+    let mut il = Interleaver::new();
+    il.spawn(
+        "worker",
+        vec![step(|_| {
+            // The corpse's worker reaches epoch 0 just before the kill.
+            if ledger.claim(0) {
+                executed.borrow_mut().push(0);
+            }
+        })],
+    );
+    il.spawn(
+        "kill",
+        vec![step(|_| {
+            for (_lineage, relaunch) in ledger.drain() {
+                relaunch();
+            }
+        })],
+    );
+
+    il.run_script("worker kill").unwrap();
+
+    // Claim won epoch 0, so the drain must hand out only 1..4 — in
+    // epoch order (the ledger is a BTreeMap precisely for this).
+    assert_eq!(*executed.borrow(), vec![0]);
+    assert_eq!(*relaunched.lock().unwrap(), vec![1, 2, 3]);
+    assert!(ledger.is_empty());
+}
+
+#[test]
+fn det_kill_drain_before_claim_wins_the_epoch() {
+    let relaunched: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let ledger = seeded_ledger(4, &relaunched);
+    let executed: RefCell<Vec<u64>> = RefCell::new(Vec::new());
+
+    let mut il = Interleaver::new();
+    il.spawn(
+        "worker",
+        vec![step(|_| {
+            // The worker wakes up *after* the kill drained its queue:
+            // the claim must lose and the body must not run here.
+            if ledger.claim(0) {
+                executed.borrow_mut().push(0);
+            }
+        })],
+    );
+    il.spawn(
+        "kill",
+        vec![step(|_| {
+            for (_lineage, relaunch) in ledger.drain() {
+                relaunch();
+            }
+        })],
+    );
+
+    // Same threads, opposite order.
+    il.run_script("kill worker").unwrap();
+
+    assert!(executed.borrow().is_empty(), "a drained epoch must not execute on the corpse");
+    assert_eq!(*relaunched.lock().unwrap(), vec![0, 1, 2, 3]);
+    assert!(ledger.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Replica teams: cancel vs. resolve, both orders
+// ---------------------------------------------------------------------
+
+#[test]
+fn det_cancel_vs_resolve_winner_reports_first() {
+    let (team, fut) = ReplicaTeam::<u64>::new(2);
+    let token = team.token();
+    let body_runs: RefCell<Vec<&'static str>> = RefCell::new(Vec::new());
+
+    let mut il = Interleaver::new();
+    {
+        let team_a = Arc::clone(&team);
+        let team_b = Arc::clone(&team);
+        let token_b = token.clone();
+        let body_runs = &body_runs;
+        il.spawn(
+            "winner",
+            vec![step(move |_| {
+                body_runs.borrow_mut().push("winner");
+                team_a.report(Ok(7), Some(true));
+            })],
+        );
+        il.spawn(
+            "loser",
+            vec![step(move |_| {
+                // The task-body entry check: a cancelled replica retires
+                // without running its body.
+                if token_b.is_cancelled() {
+                    team_b.report(Err(TaskError::Cancelled), None);
+                } else {
+                    body_runs.borrow_mut().push("loser");
+                    team_b.report(Ok(9), Some(true));
+                }
+            })],
+        );
+        il.run_script("winner loser").unwrap();
+    }
+
+    assert_eq!(fut.get(), Ok(7), "the first validated result resolves the future");
+    assert_eq!(*body_runs.borrow(), vec!["winner"], "the loser's body must not run");
+    assert!(token.is_cancelled());
+    assert_eq!(team.retired(), 1);
+    assert_eq!(team.outstanding(), 0);
+}
+
+#[test]
+fn det_cancel_vs_resolve_late_result_never_lands() {
+    let (team, fut) = ReplicaTeam::<u64>::new(2);
+    let token = team.token();
+    let body_runs: RefCell<Vec<&'static str>> = RefCell::new(Vec::new());
+
+    let mut il = Interleaver::new();
+    {
+        let team_a = Arc::clone(&team);
+        let team_b = Arc::clone(&team);
+        let token_b = token.clone();
+        let body_runs = &body_runs;
+        il.spawn(
+            "winner",
+            vec![step(move |_| {
+                body_runs.borrow_mut().push("winner");
+                team_a.report(Ok(7), Some(true));
+            })],
+        );
+        il.spawn(
+            "loser",
+            vec![step(move |_| {
+                // Opposite order: the "loser" thread runs first, before
+                // any cancellation exists, so *it* wins the race.
+                if token_b.is_cancelled() {
+                    team_b.report(Err(TaskError::Cancelled), None);
+                } else {
+                    body_runs.borrow_mut().push("loser");
+                    team_b.report(Ok(9), Some(true));
+                }
+            })],
+        );
+        il.run_script("loser winner").unwrap();
+    }
+
+    // First result wins; the second (uncancelled, fully computed)
+    // result arrives late and must be dropped, not overwrite the value.
+    assert_eq!(fut.get(), Ok(9), "the future keeps the first result");
+    assert_eq!(*body_runs.borrow(), vec!["loser", "winner"]);
+    assert!(token.is_cancelled(), "the win must have cancelled the token");
+    assert_eq!(team.retired(), 0, "both bodies ran: nothing retired");
+    assert_eq!(team.outstanding(), 0);
+}

@@ -173,6 +173,93 @@ fn cluster_stencil_equivalent_to_pool_without_faults() {
     assert!(rep.localities.iter().all(|l| l.tasks_executed > 0));
 }
 
+/// The lineage-ledger accounting invariant, pinned directly against the
+/// tracked submission protocol: build a backlog on one locality (its
+/// single worker is parked on a gate, so at most one task can have
+/// claimed its epoch), kill it mid-drain, and check that
+///
+/// * every queued-but-unexecuted task is counted `lost` and
+///   re-materializes onto a survivor (all futures still resolve, each
+///   body runs exactly once);
+/// * the three per-locality counters sum to the number of *routings* —
+///   logical submissions plus one fresh routing per lost task.
+#[test]
+fn killed_backlog_is_counted_lost_and_the_three_counters_sum_to_routings() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Condvar, Mutex};
+
+    const TASKS: usize = 8;
+    let cl = Cluster::new(3, 1, NetworkConfig::default());
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let runs: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..TASKS).map(|_| AtomicUsize::new(0)).collect());
+
+    // Pin every submission on locality 1. Its worker claims at most one
+    // epoch before parking on the gate; the rest sit in the ledger.
+    let futs: Vec<_> = (0..TASKS)
+        .map(|i| {
+            let gate = Arc::clone(&gate);
+            let runs = Arc::clone(&runs);
+            cl.run_on_resilient(
+                LocalityId(1),
+                None,
+                Arc::new(move |_loc: &rhpx::distributed::Locality| -> TaskResult<usize> {
+                    let (open, cv) = &*gate;
+                    let mut open = open.lock().unwrap();
+                    while !*open {
+                        open = cv.wait(open).unwrap();
+                    }
+                    drop(open);
+                    runs[i].fetch_add(1, Ordering::SeqCst);
+                    Ok(i)
+                }),
+            )
+        })
+        .collect();
+
+    // Kill the backlogged locality: the drain must find the unclaimed
+    // entries (at least TASKS - 1 of them) and relaunch them inline on
+    // the survivors before `kill` returns.
+    cl.kill(LocalityId(1));
+    let lost = cl.locality(LocalityId(1)).tasks_lost();
+    assert!(lost >= TASKS - 1, "backlog must be drained as lost, got {lost}");
+    assert_eq!(
+        cl.drain_latency_secs().len(),
+        1,
+        "one kill with pending work -> one drain-latency sample"
+    );
+
+    // Open the gate; every future must now resolve with its own value,
+    // whether its task ran on the corpse (claimed pre-kill) or was
+    // re-materialized onto a survivor.
+    {
+        let (open, cv) = &*gate;
+        *open.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    for (i, f) in futs.into_iter().enumerate() {
+        assert_eq!(f.get(), Ok(i), "task {i} must survive the kill");
+    }
+    for (i, r) in runs.iter().enumerate() {
+        assert_eq!(r.load(Ordering::SeqCst), 1, "task {i} must run exactly once");
+    }
+
+    // Counter algebra over the whole cluster: nothing was rejected (the
+    // pin target was alive at submit, relaunches land on survivors), so
+    // executed == logical submissions, and the three counters sum to the
+    // routings — submissions plus one fresh routing per lost task.
+    let executed: usize = (0..3).map(|i| cl.locality(LocalityId(i)).tasks_executed()).sum();
+    let rejected: usize = (0..3).map(|i| cl.locality(LocalityId(i)).tasks_rejected()).sum();
+    let total_lost: usize = (0..3).map(|i| cl.locality(LocalityId(i)).tasks_lost()).sum();
+    assert_eq!(executed, TASKS, "every logical submission executes exactly once");
+    assert_eq!(rejected, 0, "no routing in this schedule targets a known corpse");
+    assert_eq!(
+        executed + rejected + total_lost,
+        TASKS + total_lost,
+        "sum(executed, rejected, lost) must equal routings"
+    );
+}
+
 #[test]
 fn dead_majority_defeats_replication_but_not_bigger_n() {
     let cl = Cluster::new(4, 1, NetworkConfig::default());

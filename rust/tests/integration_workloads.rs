@@ -60,6 +60,91 @@ fn every_workload_survives_a_locality_kill_bit_identically_under_replay() {
 }
 
 #[test]
+fn every_workload_survives_a_locality_kill_under_replica_teams() {
+    let rt = rt();
+    for (name, _) in workloads::WORKLOADS {
+        let w = workloads::by_name(name, 1.0).expect("registry name resolves");
+        let (clean, clean_rep) =
+            workloads::run(&rt, w.as_ref(), &RunParams::default()).unwrap();
+
+        // First-result-wins teams of 3: the replica landing on the
+        // corpse is rejected or lost, a sibling wins, losers retire.
+        let params = RunParams {
+            resilience: Some(PolicySpec::Team { n: 3 }),
+            cluster: Some(cluster("4:kill=10@2")),
+            ..RunParams::default()
+        };
+        let (out, rep) = workloads::run(&rt, w.as_ref(), &params).unwrap();
+        assert_eq!(rep.kills_applied, 1, "{name}: the kill must fire");
+        assert_eq!(rep.launch_errors, 0, "{name}: a team must always produce a winner");
+        assert_eq!(rep.survival_rate(), 1.0, "{name}");
+        assert_eq!(rep.mode, "exec_team(3)", "{name}");
+        assert_eq!(out, clean, "{name}: team recovery must be bit-identical");
+        assert_eq!(
+            rep.final_checksum.to_bits(),
+            clean_rep.final_checksum.to_bits(),
+            "{name}: checksums must match bit-for-bit"
+        );
+        assert!(
+            rep.tasks_reexecuted > 0,
+            "{name}: replica fan-out is extra routed work by construction"
+        );
+    }
+}
+
+#[test]
+fn every_workload_survives_a_kill_with_queue_drain_alone() {
+    let rt = rt();
+    for (name, _) in workloads::WORKLOADS {
+        let w = workloads::by_name(name, 1.0).expect("registry name resolves");
+        let (clean, clean_rep) =
+            workloads::run(&rt, w.as_ref(), &RunParams::default()).unwrap();
+
+        // No decorator at all: live-only placement + lineage
+        // re-materialization of whatever the corpse had queued is the
+        // entire recovery story.
+        let params = RunParams {
+            resilience: Some(PolicySpec::Drain),
+            cluster: Some(cluster("4:kill=10@2")),
+            ..RunParams::default()
+        };
+        let (out, rep) = workloads::run(&rt, w.as_ref(), &params).unwrap();
+        assert_eq!(rep.kills_applied, 1, "{name}: the kill must fire");
+        assert_eq!(
+            rep.launch_errors, 0,
+            "{name}: every queued task must re-materialize onto a survivor"
+        );
+        assert_eq!(rep.survival_rate(), 1.0, "{name}");
+        assert_eq!(rep.mode, "exec_drain", "{name}");
+        assert_eq!(out, clean, "{name}: drained recovery must be bit-identical");
+        assert_eq!(
+            rep.final_checksum.to_bits(),
+            clean_rep.final_checksum.to_bits(),
+            "{name}: checksums must match bit-for-bit"
+        );
+        // The corpse's lost tasks (if the kill caught any in-queue) are
+        // fresh routings; the report's accounting must agree with the
+        // per-locality counters either way.
+        let lost: usize = rep.localities.iter().map(|l| l.tasks_lost).sum();
+        let attempts: usize = rep
+            .localities
+            .iter()
+            .map(|l| l.tasks_executed + l.tasks_rejected + l.tasks_lost)
+            .sum();
+        assert_eq!(
+            rep.tasks_reexecuted,
+            (attempts as u64).saturating_sub(rep.tasks as u64),
+            "{name}: tasks_reexecuted must be derived from the three counters"
+        );
+        assert_eq!(
+            attempts,
+            rep.tasks + lost,
+            "{name}: Σ(executed+rejected+lost) must equal routings (tasks + lost)"
+        );
+    }
+}
+
+#[test]
 fn sdc_is_caught_with_validation_and_leaks_without_it() {
     let rt = rt();
     for (name, _) in workloads::WORKLOADS {

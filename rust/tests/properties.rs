@@ -319,11 +319,13 @@ fn prop_policy_spec_parse_inverts_token() {
     use rhpx::resilience::executor::{PolicySpec, SnapshotBackend};
     check("policy-spec-roundtrip", PropConfig { cases: 64, seed: 0xBB }, |rng| {
         let n = gen::usize_in(rng, 1, 12);
-        let spec = match gen::usize_in(rng, 0, 4) {
+        let spec = match gen::usize_in(rng, 0, 6) {
             0 => PolicySpec::Replay { n },
             1 => PolicySpec::Replicate { n },
             2 => PolicySpec::Adaptive { ceiling: n },
             3 => PolicySpec::AdaptiveReplicate { ceiling: n },
+            4 => PolicySpec::Team { n },
+            5 => PolicySpec::Drain,
             _ => {
                 let backend = match gen::usize_in(rng, 0, 3) {
                     0 => SnapshotBackend::Auto,
@@ -346,6 +348,168 @@ fn prop_policy_spec_parse_inverts_token() {
         // must fail to parse, not silently truncate.
         if PolicySpec::parse(&format!("{token}:zzz")).is_ok() {
             return Err(format!("{token:?}: trailing junk accepted"));
+        }
+        Ok(())
+    });
+}
+
+/// ∀ random cluster shapes, task counts, and kill points: every tracked
+/// task body runs exactly once (the lineage ledger's claim/drain
+/// arbitration), every future resolves with its own task's value, and
+/// the three per-locality counters account for every routing —
+/// Σ(executed + rejected + lost) = initial submissions + lost, i.e. each
+/// re-materialization is one fresh routing and nothing is double-counted
+/// or dropped.
+#[test]
+fn prop_lineage_exactly_once_under_random_kills() {
+    use rhpx::agas::LocalityId;
+    use rhpx::distributed::{Cluster, Locality, NetworkConfig};
+    use rhpx::TaskResult;
+
+    check("lineage-exactly-once", PropConfig { cases: 12, seed: 0xCC }, |rng| {
+        let n_loc = gen::usize_in(rng, 2, 4);
+        let tasks = gen::usize_in(rng, 8, 40);
+        let kill_before = gen::usize_in(rng, 0, tasks - 1);
+        let victim = gen::usize_in(rng, 0, n_loc - 1);
+
+        let cluster = Cluster::new(n_loc, 1, NetworkConfig::default());
+        let runs: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..tasks).map(|_| AtomicUsize::new(0)).collect());
+
+        let mut futs = Vec::with_capacity(tasks);
+        for i in 0..tasks {
+            if i == kill_before {
+                // The kill lands mid-stream: whatever the victim still
+                // has queued must re-materialize onto survivors.
+                cluster.kill(LocalityId(victim));
+            }
+            let target = cluster.next_alive_target();
+            let r = Arc::clone(&runs);
+            futs.push(cluster.run_on_resilient(
+                target,
+                None,
+                Arc::new(move |_loc: &Locality| -> TaskResult<usize> {
+                    r[i].fetch_add(1, Ordering::SeqCst);
+                    Ok(i)
+                }),
+            ));
+        }
+
+        for (i, f) in futs.into_iter().enumerate() {
+            match f.get() {
+                Ok(v) if v == i => {}
+                other => return Err(format!("task {i} resolved {other:?}")),
+            }
+        }
+        for (i, r) in runs.iter().enumerate() {
+            let n = r.load(Ordering::SeqCst);
+            if n != 1 {
+                return Err(format!("task {i} ran {n} times (kill@{kill_before} loc{victim})"));
+            }
+        }
+
+        let (mut executed, mut rejected, mut lost) = (0usize, 0usize, 0usize);
+        for id in 0..cluster.len() {
+            let loc = cluster.locality(LocalityId(id));
+            executed += loc.tasks_executed();
+            rejected += loc.tasks_rejected();
+            lost += loc.tasks_lost();
+        }
+        if executed + rejected + lost != tasks + lost {
+            return Err(format!(
+                "routing accounting broke: executed {executed} + rejected {rejected} \
+                 + lost {lost} != submissions {tasks} + lost {lost}"
+            ));
+        }
+        if executed != tasks {
+            return Err(format!("{executed} executions for {tasks} tracked tasks"));
+        }
+        Ok(())
+    });
+}
+
+/// ∀ team sizes, replica outcomes, and arrival orders: the future
+/// resolves with the *first* acceptable result in arrival order, every
+/// replica arriving after the win retires (cancellation soundness: its
+/// body never runs), a late result never overwrites the resolved value,
+/// and a team where nothing wins reports a team-wide error.
+#[test]
+fn prop_team_cancellation_soundness() {
+    use rhpx::resilience::ReplicaTeam;
+    use rhpx::TaskError;
+
+    check("team-cancel-sound", PropConfig { cases: 64, seed: 0xDD }, |rng| {
+        let n = gen::usize_in(rng, 1, 6);
+        // Per replica: 0 = hard failure, 1 = validation-rejected result,
+        // 2 = validated success (value = replica index).
+        let outcomes: Vec<u8> =
+            (0..n).map(|_| gen::usize_in(rng, 0, 2) as u8).collect();
+        // Random arrival order (Fisher–Yates).
+        let mut order: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = gen::usize_in(rng, 0, i);
+            order.swap(i, j);
+        }
+
+        let (team, fut) = ReplicaTeam::<usize>::new(n);
+        let token = team.token();
+        let mut expected_winner: Option<usize> = None;
+        let mut expected_retired = 0usize;
+        for &idx in &order {
+            // The replica protocol: a cancelled replica retires without
+            // running its body.
+            if token.is_cancelled() {
+                expected_retired += 1;
+                team.report(Err(TaskError::Cancelled), None);
+                continue;
+            }
+            match outcomes[idx] {
+                0 => team.report(Err(TaskError::App("replica crashed".into())), None),
+                1 => team.report(Ok(usize::MAX), Some(false)),
+                _ => {
+                    if expected_winner.is_none() {
+                        expected_winner = Some(idx);
+                    }
+                    team.report(Ok(idx), Some(true));
+                }
+            }
+        }
+
+        if team.outstanding() != 0 {
+            return Err(format!("{} replicas never reported", team.outstanding()));
+        }
+        if team.retired() != expected_retired {
+            return Err(format!(
+                "retired {} != expected {expected_retired}",
+                team.retired()
+            ));
+        }
+        let first = fut.get_copy();
+        match expected_winner {
+            Some(w) => {
+                if first != Ok(w) {
+                    return Err(format!(
+                        "future resolved {first:?}, expected first winner {w} \
+                         (order {order:?}, outcomes {outcomes:?})"
+                    ));
+                }
+                if !token.is_cancelled() {
+                    return Err("a win must cancel the token".into());
+                }
+            }
+            None => {
+                if first.is_ok() {
+                    return Err(format!("no acceptable replica, yet future = {first:?}"));
+                }
+                if token.is_cancelled() {
+                    return Err("nothing won, yet the token is cancelled".into());
+                }
+            }
+        }
+        // Stability: every report has already landed; re-reading must
+        // return the identical outcome (late writes never overwrite).
+        if fut.get_copy() != first {
+            return Err("resolved future changed value on re-read".into());
         }
         Ok(())
     });
