@@ -1,0 +1,28 @@
+//! Bench: `rhpx serve` under sustained multi-client load — steady-state
+//! throughput/latency (p50/p99/p999 from the log-bucketed histogram), an
+//! overload arm at ≥4× queue capacity (graceful degradation: bounded
+//! queue, explicit rejects, zero lost accepted jobs), and journaled
+//! crash-restart recovery (every accepted job completes exactly once).
+//!
+//!   cargo run --release --bin table_serve -- [--smoke] [--json PATH]
+//!   cargo bench --bench table_serve
+//!
+//! Env: RHPX_BENCH_SCALE (default 0.04 → 4 jobs per client, the floor),
+//!      RHPX_BENCH_REPEATS (accepted for interface parity; the arms are
+//!      single-shot).
+
+use rhpx::harness::{emit, table_serve, HarnessOpts};
+use rhpx::metrics::BenchCli;
+
+fn main() {
+    let cli = BenchCli::parse();
+    let opts = HarnessOpts {
+        scale: cli.scale_from_env(0.04),
+        repeats: cli.repeats_from_env(1),
+        csv: Some("bench_table_serve.csv".into()),
+        ..Default::default()
+    };
+    let bench = table_serve::run_table_serve(&opts);
+    emit(&table_serve::to_table(&bench), &opts);
+    cli.emit("table_serve", table_serve::to_json(&bench));
+}

@@ -145,6 +145,19 @@ pub trait SnapshotStore: Send + Sync + 'static {
         0
     }
 
+    /// Enumerate stored keys (order unspecified). Restart paths scan
+    /// this to find journaled work a previous process left behind (the
+    /// `rhpx serve` job journal). Backends that cannot enumerate return
+    /// an empty list — callers must treat enumeration as best-effort.
+    ///
+    /// Disk caveat: a fresh instance recovers keys from *file names*,
+    /// which are sanitized; enumeration is exact only for keys that
+    /// were already filename-safe (ASCII alphanumeric plus `-_.`), which
+    /// crate-generated journal keys are.
+    fn keys(&self) -> Vec<String> {
+        Vec::new()
+    }
+
     /// Membership hook: `loc` was declared dead. Backends homing
     /// replicas on localities react (drop or re-home); local backends
     /// ignore it.
@@ -189,6 +202,10 @@ impl SnapshotStore for MemorySnapshotStore {
 
     fn len(&self) -> usize {
         self.map.lock().unwrap().len()
+    }
+
+    fn keys(&self) -> Vec<String> {
+        self.map.lock().unwrap().keys().cloned().collect()
     }
 
     fn label(&self) -> String {
@@ -314,6 +331,23 @@ impl SnapshotStore for DiskSnapshotStore {
         self.index.lock().unwrap().len()
     }
 
+    /// Index keys plus on-disk `*.bin` stems, so a fresh instance can
+    /// enumerate what a previous process journaled (see the trait-level
+    /// sanitization caveat).
+    fn keys(&self) -> Vec<String> {
+        let mut keys: std::collections::HashSet<String> =
+            self.index.lock().unwrap().keys().cloned().collect();
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                if let Some(stem) = name.to_str().and_then(|n| n.strip_suffix(".bin")) {
+                    keys.insert(stem.to_string());
+                }
+            }
+        }
+        keys.into_iter().collect()
+    }
+
     fn label(&self) -> String {
         "disk".to_string()
     }
@@ -395,6 +429,36 @@ mod tests {
         assert_eq!(second.load("survivor"), Some(vec![4, 5, 6]));
         assert!(second.remove("survivor"));
         assert_eq!(second.load("survivor"), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn memory_store_enumerates_keys() {
+        let s = MemorySnapshotStore::new();
+        s.save("job_1", &[1]).unwrap();
+        s.save("job_2", &[2]).unwrap();
+        let mut keys = s.keys();
+        keys.sort();
+        assert_eq!(keys, vec!["job_1", "job_2"]);
+    }
+
+    #[test]
+    fn disk_store_enumerates_keys_across_instances() {
+        let dir = tmp("enumerate");
+        let first = DiskSnapshotStore::new(dir.clone());
+        first.save("job_1", &[1]).unwrap();
+        first.save("job_2", &[2]).unwrap();
+        drop(first);
+        // A fresh instance (the restart story) recovers the key set from
+        // the directory alone.
+        let second = DiskSnapshotStore::new(dir.clone());
+        let mut keys = second.keys();
+        keys.sort();
+        assert_eq!(keys, vec!["job_1", "job_2"]);
+        // New saves and directory contents merge without duplicates.
+        second.save("job_2", &[22]).unwrap();
+        second.save("job_3", &[3]).unwrap();
+        assert_eq!(second.keys().len(), 3);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

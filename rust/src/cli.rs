@@ -8,9 +8,11 @@
 //! rhpx run <WORKLOAD> [--resilience SPEC] [--cluster SPEC] [--json [PATH]]
 //!          | rhpx run --list
 //! rhpx bench <table1|table1_exec|fig2|table2|fig3|table_dist|table_ckpt|
-//!             table_zoo|all>
+//!             table_zoo|table_serve|all>
 //!            [--scale F] [--repeats N] [--workers N] [--csv PATH]
 //!            [--backend native|pjrt]
+//! rhpx serve [--addr HOST:PORT] [--queue N] [--executors N] [--workers N]
+//!            [--journal DIR] [--for-secs N]
 //! rhpx stencil [--case a|b|tiny] [--mode MODE] [--backend native|pjrt]
 //!              [--resilience replay:N|replicate:N|adaptive[:CEIL]|
 //!                            adaptive_replicate[:CEIL]]
@@ -39,8 +41,8 @@ use std::collections::HashMap;
 
 use crate::config::RuntimeConfig;
 use crate::harness::{
-    emit, fig2, fig3, table1, table2, table_ckpt, table_dist, table_zoo, HarnessOpts,
-    KernelBackend, BENCH_MODES,
+    emit, fig2, fig3, table1, table2, table_ckpt, table_dist, table_serve, table_zoo,
+    HarnessOpts, KernelBackend, BENCH_MODES,
 };
 use crate::metrics::{BenchCli, JsonValue, Table};
 use crate::runtime_handle::Runtime;
@@ -145,6 +147,7 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
         "info" => cmd_info(),
         "run" => cmd_run(&args),
         "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
         "stencil" => cmd_stencil(&args),
         "workload" => cmd_workload(&args),
         "distributed" => cmd_distributed(&args),
@@ -167,6 +170,8 @@ USAGE:
        [--scale F] [--repeats N] [--workers N] [--csv PATH]
        [--backend native|pjrt] [--replicas N]
        (modes: see `rhpx bench --list`)
+  rhpx serve [--addr HOST:PORT] [--queue N] [--executors N] [--workers N]
+       [--journal DIR] [--for-secs N]
   rhpx stencil [--case a|b|tiny] [--mode pure|replay|replay_checksum|
                replicate|replicate_checksum|replicate_vote|replicate_replay]
                [--resilience replay:N|replicate:N|team:N|drain|
@@ -191,6 +196,15 @@ leak), `--cluster` adds scheduled locality kills. Every run reports
 survival rate, recovery latency, and tasks re-executed uniformly, so
 workloads compare directly. `--json` without a path prints the payload
 to stdout.
+
+`rhpx serve` runs the resilient task service: a long-lived daemon that
+accepts framed job submissions over TCP (any zoo workload plus a
+per-client `--resilience`-style policy spec), bounds its queue with
+admission control (`--queue`), circuit-breaks failing task classes, and
+journals every accepted job so a killed-and-restarted daemon (same
+`--journal DIR`) completes all acked work exactly once. `--for-secs N`
+serves for N seconds then drains and exits (benchmarks/smoke tests);
+without it the daemon runs until killed.
 
 `rhpx stencil` is the legacy single-workload entry point, DEPRECATED in
 favor of `rhpx run stencil1d`; it remains for the paper's `--case a|b`
@@ -334,6 +348,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         "table_zoo" => {
             emit(&table_zoo::to_table(&table_zoo::run_table_zoo(&opts)), &opts)
         }
+        "table_serve" => {
+            emit(&table_serve::to_table(&table_serve::run_table_serve(&opts)), &opts)
+        }
         "all" => {
             emit(&table1::run_table1(&opts, &table1::default_cores(), replicas), &opts);
             emit(
@@ -346,6 +363,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             emit(&table_dist::to_table(&table_dist::run_table_dist(&opts)), &opts);
             emit(&table_ckpt::to_table(&table_ckpt::run_table_ckpt(&opts)), &opts);
             emit(&table_zoo::to_table(&table_zoo::run_table_zoo(&opts)), &opts);
+            emit(&table_serve::to_table(&table_serve::run_table_serve(&opts)), &opts);
         }
         other => {
             return Err(format!(
@@ -844,6 +862,75 @@ fn cmd_stencil(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `rhpx serve`: the long-running resilient task service over TCP (see
+/// [`crate::serve`]). With `--journal DIR` accepted jobs survive a
+/// daemon kill — restart with the same directory and they complete
+/// exactly once.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    use crate::checkpoint::{DiskSnapshotStore, MemorySnapshotStore, SnapshotStore};
+    use crate::serve::{ServeConfig, Server};
+    use std::sync::Arc;
+
+    let addr = args.get_str("addr", "127.0.0.1:8377");
+    let cfg = ServeConfig {
+        queue_capacity: args.get_usize("queue", 64)?,
+        executors: args.get_usize("executors", 2)?.max(1),
+        workers: args.get_usize(
+            "workers",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )?,
+        ..ServeConfig::default()
+    };
+    let journal: Arc<dyn SnapshotStore> = match args.flags.get("journal") {
+        Some(dir) => Arc::new(DiskSnapshotStore::new(std::path::PathBuf::from(dir))),
+        None => Arc::new(MemorySnapshotStore::new()),
+    };
+    let for_secs = args.get_usize("for-secs", 0)?;
+
+    let server = Server::start(cfg, journal);
+    let recovered = server.stats();
+    if recovered.recovered_pending + recovered.recovered_done > 0 {
+        println!(
+            "journal recovery: {} pending jobs re-queued, {} completed outcomes cached",
+            recovered.recovered_pending, recovered.recovered_done
+        );
+    }
+    let (local, accept) = server.listen(&addr).map_err(|e| format!("--addr {addr}: {e}"))?;
+    println!(
+        "rhpx serve listening on {local} (queue {}, {} executors{})",
+        server.status().queue_capacity,
+        args.get_usize("executors", 2)?.max(1),
+        args.flags
+            .get("journal")
+            .map(|d| format!(", journal {d}"))
+            .unwrap_or_else(|| ", in-memory journal".into()),
+    );
+
+    if for_secs > 0 {
+        std::thread::sleep(std::time::Duration::from_secs(for_secs as u64));
+        // Drain what was accepted, then stop: a bounded-run exit leaves
+        // no acked work incomplete (a kill would, and the journal would
+        // cover it on restart).
+        let _ = server.drain(std::time::Duration::from_secs(60));
+        server.stop();
+        let _ = accept.join();
+        let s = server.stats();
+        println!(
+            "served {}s: {} submitted, {} accepted, {} ok, {} failed, {} rejected",
+            for_secs,
+            s.submitted,
+            s.accepted,
+            s.completed_ok,
+            s.failed,
+            s.rejected()
+        );
+    } else {
+        // Run until the process is killed.
+        let _ = accept.join();
+    }
+    Ok(())
+}
+
 fn parse_variant(s: &str, n: usize) -> Result<Variant, String> {
     Ok(match s {
         "plain" => Variant::Plain,
@@ -1133,7 +1220,7 @@ mod tests {
             names,
             [
                 "table1", "table1_exec", "fig2", "table2", "fig3", "table_dist", "table_ckpt",
-                "table_zoo"
+                "table_zoo", "table_serve"
             ],
             "bench registry changed: update cmd_bench, Makefile BENCHES, and ci.yml to match"
         );
@@ -1294,6 +1381,34 @@ mod tests {
             "stencil2d",
             "--resilience",
             "checkpoint:1",
+            "--workers",
+            "2",
+        ]));
+        assert!(r.is_ok(), "{r:?}");
+    }
+
+    #[test]
+    fn serve_rejects_an_unbindable_address() {
+        let r = dispatch(&argv(&["serve", "--addr", "not-an-address", "--workers", "2"]));
+        assert!(r.is_err(), "bind failure must surface as a CLI error, got {r:?}");
+        let r = dispatch(&argv(&["serve", "--addr", "256.0.0.1:1", "--workers", "2"]));
+        assert!(r.is_err(), "{r:?}");
+    }
+
+    #[test]
+    fn serve_bounded_run_smoke() {
+        // Ephemeral port, 1-second bounded run: binds, serves, drains,
+        // exits cleanly.
+        let r = dispatch(&argv(&[
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--for-secs",
+            "1",
+            "--queue",
+            "4",
+            "--executors",
+            "1",
             "--workers",
             "2",
         ]));

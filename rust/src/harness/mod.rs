@@ -11,6 +11,7 @@ pub mod table1;
 pub mod table2;
 pub mod table_ckpt;
 pub mod table_dist;
+pub mod table_serve;
 pub mod table_zoo;
 
 /// The bench registry: every `rhpx bench <mode>` the CLI accepts, with
@@ -33,6 +34,11 @@ pub const BENCH_MODES: &[(&str, &str)] = &[
     (
         "table_zoo",
         "workload zoo under one fault model — per-workload overhead vs survival",
+    ),
+    (
+        "table_serve",
+        "rhpx serve under sustained load — throughput/latency, overload shedding, \
+         crash-restart recovery",
     ),
 ];
 

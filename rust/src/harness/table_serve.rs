@@ -1,0 +1,436 @@
+//! Bench harness: `rhpx serve` under sustained multi-client load — the
+//! service-level resilience story (admission control, circuit breaking,
+//! journaled crash-restart) measured end to end.
+//!
+//! Three phases:
+//!
+//! 1. **steady** — N closed-loop client threads (submit, await the
+//!    result, repeat) against a capacity-matched server: the
+//!    throughput/latency reference. Zero rejects by construction, and
+//!    the p50/p99/p999 figures come from the fixed-memory
+//!    [`LatencyHistogram`] (per-client histograms merged at the end —
+//!    the merge path is load-bearing, not decorative).
+//! 2. **overload** — the same clients burst-submit with no pacing at a
+//!    server whose queue bound is a quarter of the offered jobs
+//!    (offered ≥ 4× capacity): graceful degradation means a bounded
+//!    queue, explicit rejects with retry hints, and *zero lost accepted
+//!    jobs* — everything acked completes.
+//! 3. **recovery** — K jobs are accepted and journaled but never run,
+//!    the daemon is dropped mid-flight, and a fresh server over the same
+//!    journal must complete all K exactly once; the recovery figure is
+//!    restart → queue drained.
+//!
+//! The bench binary (`cargo run --release --bin table_serve`) wraps the
+//! output as `BENCH_table_serve.json`; CI's bench-smoke job asserts the
+//! overload and recovery invariants on that JSON.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::checkpoint::{MemorySnapshotStore, SnapshotStore};
+use crate::metrics::{JsonValue, LatencyHistogram, Table, Timer};
+use crate::serve::{BreakerConfig, JobSpec, ServeConfig, Server, SubmitResponse};
+
+use super::HarnessOpts;
+
+/// Client threads in both load arms.
+const CLIENTS: usize = 4;
+/// Jobs accepted-then-abandoned in the recovery phase.
+const RECOVERY_JOBS: u64 = 8;
+/// Per-job workload scale (stencil1d at 0.15 ⇒ 2 layers × 8 tasks).
+const JOB_SCALE_MILLI: u32 = 150;
+
+/// One measured load arm.
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    pub arm: String,
+    pub clients: usize,
+    /// Jobs the clients tried to submit.
+    pub offered: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    /// Accepted jobs that finished (ok or failed) by drain time.
+    pub completed: u64,
+    /// Accepted jobs with no outcome after the drain — must be 0.
+    pub lost_accepted: u64,
+    pub wall_secs: f64,
+    pub throughput_jobs_per_sec: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    /// rejected / offered.
+    pub reject_rate: f64,
+    /// Deepest the admission gate got (≤ capacity: the bound held).
+    pub queue_high_water: u64,
+    pub queue_capacity: u64,
+}
+
+/// The crash-restart measurement.
+#[derive(Debug, Clone)]
+pub struct RecoveryRow {
+    pub accepted_before_crash: u64,
+    pub pending_at_crash: u64,
+    /// Pending jobs the restarted server found in the journal.
+    pub recovered: u64,
+    /// Executions after restart — exactly the pending count when the
+    /// ledger holds.
+    pub completed_after_restart: u64,
+    /// Restart (journal scan) → queue drained.
+    pub recovery_secs: f64,
+    /// Every accepted job completed exactly once across both lives.
+    pub completed_exactly_once: bool,
+}
+
+/// Full bench output.
+#[derive(Debug, Clone)]
+pub struct ServeBench {
+    pub rows: Vec<ServeRow>,
+    pub recovery: RecoveryRow,
+}
+
+fn job(job_id: u64) -> JobSpec {
+    JobSpec {
+        job_id,
+        workload: "stencil1d".into(),
+        policy: String::new(),
+        scale_milli: JOB_SCALE_MILLI,
+        error_prob_pct: 0,
+    }
+}
+
+fn quantile_ms(h: &LatencyHistogram, q: f64) -> f64 {
+    h.quantile(q).map(|ns| ns as f64 / 1e6).unwrap_or(f64::NAN)
+}
+
+/// Drive one load arm. `paced` = closed loop (each client waits for its
+/// result before the next submit); unpaced clients burst every job and
+/// wait afterwards.
+fn run_arm(
+    name: &str,
+    cfg: ServeConfig,
+    jobs_per_client: u64,
+    paced: bool,
+) -> ServeRow {
+    let capacity = cfg.queue_capacity as u64;
+    let server = Arc::new(Server::start(cfg, Arc::new(MemorySnapshotStore::new())));
+    let latencies = Arc::new(Mutex::new(LatencyHistogram::new()));
+    let timer = Timer::start();
+
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let server = Arc::clone(&server);
+        let latencies = Arc::clone(&latencies);
+        handles.push(std::thread::spawn(move || {
+            let mut hist = LatencyHistogram::new();
+            let mut accepted_ids = Vec::new();
+            let mut pending = Vec::new();
+            for j in 0..jobs_per_client {
+                let job_id = (c as u64) * 1_000_000 + j + 1;
+                let t = Timer::start();
+                match server.submit(job(job_id)) {
+                    SubmitResponse::Accepted { future } => {
+                        accepted_ids.push(job_id);
+                        if paced {
+                            let _ = future.get();
+                            hist.record_duration(t.elapsed());
+                        } else {
+                            pending.push((t, future));
+                        }
+                    }
+                    SubmitResponse::AlreadyDone { .. } | SubmitResponse::Rejected { .. } => {}
+                }
+            }
+            for (t, future) in pending {
+                // Accurate per-job latency: the continuation fires at
+                // resolution time, not when this loop reaches the job.
+                let hist_ref = Arc::clone(&latencies);
+                future.on_ready(move |_| {
+                    hist_ref.lock().unwrap().record_duration(t.elapsed());
+                });
+                future.wait();
+            }
+            latencies.lock().unwrap().merge(&hist);
+            accepted_ids
+        }));
+    }
+    let accepted_ids: Vec<u64> = handles
+        .into_iter()
+        .flat_map(|h| h.join().expect("client thread"))
+        .collect();
+    assert!(server.drain(Duration::from_secs(120)), "arm {name}: queue failed to drain");
+    let wall = timer.elapsed_secs();
+    server.stop();
+
+    let stats = server.stats();
+    let lost = accepted_ids.iter().filter(|id| server.outcome(**id).is_none()).count() as u64;
+    let completed = stats.completed_ok + stats.failed + stats.deduped;
+    let hist = latencies.lock().unwrap();
+    let offered = (CLIENTS as u64) * jobs_per_client;
+    ServeRow {
+        arm: name.to_string(),
+        clients: CLIENTS,
+        offered,
+        accepted: stats.accepted,
+        rejected: stats.rejected(),
+        completed,
+        lost_accepted: lost,
+        wall_secs: wall,
+        throughput_jobs_per_sec: completed as f64 / wall.max(f64::MIN_POSITIVE),
+        p50_ms: quantile_ms(&hist, 0.50),
+        p99_ms: quantile_ms(&hist, 0.99),
+        p999_ms: quantile_ms(&hist, 0.999),
+        reject_rate: stats.rejected() as f64 / (offered as f64).max(1.0),
+        queue_high_water: stats.queue_high_water,
+        queue_capacity: capacity,
+    }
+}
+
+/// The crash-restart phase: accept K jobs on a server with no executor
+/// threads (so they journal but never run), drop it mid-flight, restart
+/// over the same journal, and time the drain.
+fn run_recovery(workers: usize) -> RecoveryRow {
+    let journal: Arc<MemorySnapshotStore> = Arc::new(MemorySnapshotStore::new());
+    let base = ServeConfig {
+        queue_capacity: RECOVERY_JOBS as usize * 2,
+        workers,
+        breaker: BreakerConfig::default(),
+        ..ServeConfig::default()
+    };
+
+    let first = Server::start(
+        ServeConfig { executors: 0, ..base.clone() },
+        Arc::clone(&journal) as Arc<dyn SnapshotStore>,
+    );
+    let mut accepted = 0u64;
+    for id in 1..=RECOVERY_JOBS {
+        if matches!(first.submit(job(id)), SubmitResponse::Accepted { .. }) {
+            accepted += 1;
+        }
+    }
+    let pending_at_crash = first.pending() as u64;
+    let executions_before = first.stats().executions;
+    first.stop(); // the "kill": queued jobs survive only in the journal
+    drop(first);
+
+    let timer = Timer::start();
+    let second = Server::start(
+        ServeConfig { executors: 2, ..base },
+        journal as Arc<dyn SnapshotStore>,
+    );
+    let drained = second.drain(Duration::from_secs(120));
+    let recovery_secs = timer.elapsed_secs();
+    let stats = second.stats();
+    let all_done = (1..=RECOVERY_JOBS).all(|id| second.outcome(id).is_some());
+    let exactly_once = drained
+        && all_done
+        && executions_before == 0
+        && stats.executions == accepted
+        && stats.deduped == 0;
+    second.stop();
+
+    RecoveryRow {
+        accepted_before_crash: accepted,
+        pending_at_crash,
+        recovered: stats.recovered_pending,
+        completed_after_restart: stats.executions,
+        recovery_secs,
+        completed_exactly_once: exactly_once,
+    }
+}
+
+/// Run the full service bench: steady arm, overload arm, recovery.
+pub fn run_table_serve(opts: &HarnessOpts) -> ServeBench {
+    let jobs_per_client = ((100.0 * opts.scale).round() as u64).clamp(4, 200);
+    let workers = opts.workers.clamp(2, 8);
+
+    let steady = run_arm(
+        "steady",
+        ServeConfig {
+            queue_capacity: 64,
+            executors: 2,
+            workers,
+            ..ServeConfig::default()
+        },
+        jobs_per_client,
+        true,
+    );
+    // Offered = CLIENTS × jobs_per_client ≥ 16; capacity 4 ⇒ ≥ 4×.
+    let overload = run_arm(
+        "overload",
+        ServeConfig {
+            queue_capacity: 4,
+            executors: 1,
+            workers,
+            ..ServeConfig::default()
+        },
+        jobs_per_client,
+        false,
+    );
+    let recovery = run_recovery(workers);
+    ServeBench { rows: vec![steady, overload], recovery }
+}
+
+/// Render as the printable harness table.
+pub fn to_table(bench: &ServeBench) -> Table {
+    let mut t = Table::new(
+        "Table-Serve: rhpx serve under sustained load",
+        &[
+            "arm", "offered", "accepted", "rejected", "completed", "lost",
+            "jobs_per_s", "p50_ms", "p99_ms", "p999_ms", "reject_rate",
+        ],
+    );
+    for r in &bench.rows {
+        t.add([
+            r.arm.clone(),
+            r.offered.to_string(),
+            r.accepted.to_string(),
+            r.rejected.to_string(),
+            r.completed.to_string(),
+            r.lost_accepted.to_string(),
+            format!("{:.1}", r.throughput_jobs_per_sec),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p99_ms),
+            format!("{:.3}", r.p999_ms),
+            format!("{:.3}", r.reject_rate),
+        ]);
+    }
+    let rec = &bench.recovery;
+    t.add([
+        "recovery".into(),
+        rec.accepted_before_crash.to_string(),
+        rec.accepted_before_crash.to_string(),
+        "0".into(),
+        rec.completed_after_restart.to_string(),
+        "0".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("recov {:.3}s once={}", rec.recovery_secs, rec.completed_exactly_once),
+    ]);
+    t
+}
+
+/// The machine-readable payload for `BENCH_table_serve.json` — the CI
+/// assert step parses exactly this shape.
+pub fn to_json(bench: &ServeBench) -> JsonValue {
+    let rec = &bench.recovery;
+    JsonValue::obj([
+        (
+            "arms".to_string(),
+            JsonValue::Arr(
+                bench
+                    .rows
+                    .iter()
+                    .map(|r| {
+                        JsonValue::obj([
+                            ("arm".to_string(), JsonValue::from(r.arm.clone())),
+                            ("clients".to_string(), JsonValue::from(r.clients)),
+                            ("offered".to_string(), JsonValue::from(r.offered)),
+                            ("accepted".to_string(), JsonValue::from(r.accepted)),
+                            ("rejected".to_string(), JsonValue::from(r.rejected)),
+                            ("completed".to_string(), JsonValue::from(r.completed)),
+                            ("lost_accepted".to_string(), JsonValue::from(r.lost_accepted)),
+                            ("wall_secs".to_string(), JsonValue::from(r.wall_secs)),
+                            (
+                                "throughput_jobs_per_sec".to_string(),
+                                JsonValue::from(r.throughput_jobs_per_sec),
+                            ),
+                            ("p50_ms".to_string(), JsonValue::from(r.p50_ms)),
+                            ("p99_ms".to_string(), JsonValue::from(r.p99_ms)),
+                            ("p999_ms".to_string(), JsonValue::from(r.p999_ms)),
+                            ("reject_rate".to_string(), JsonValue::from(r.reject_rate)),
+                            (
+                                "queue_high_water".to_string(),
+                                JsonValue::from(r.queue_high_water),
+                            ),
+                            (
+                                "queue_capacity".to_string(),
+                                JsonValue::from(r.queue_capacity),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "recovery".to_string(),
+            JsonValue::obj([
+                (
+                    "accepted_before_crash".to_string(),
+                    JsonValue::from(rec.accepted_before_crash),
+                ),
+                ("pending_at_crash".to_string(), JsonValue::from(rec.pending_at_crash)),
+                ("recovered".to_string(), JsonValue::from(rec.recovered)),
+                (
+                    "completed_after_restart".to_string(),
+                    JsonValue::from(rec.completed_after_restart),
+                ),
+                ("recovery_secs".to_string(), JsonValue::from(rec.recovery_secs)),
+                (
+                    "completed_exactly_once".to_string(),
+                    JsonValue::from(rec.completed_exactly_once),
+                ),
+            ]),
+        ),
+        ("table".to_string(), to_table(bench).to_json()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_serve_smoke_shows_graceful_degradation_and_recovery() {
+        let opts = HarnessOpts { scale: 0.04, repeats: 1, workers: 2, ..Default::default() };
+        let bench = run_table_serve(&opts);
+        assert_eq!(bench.rows.len(), 2);
+
+        // Steady arm: closed-loop clients never outrun the queue bound.
+        let steady = &bench.rows[0];
+        assert_eq!(steady.arm, "steady");
+        assert_eq!(steady.rejected, 0, "paced load must not be rejected");
+        assert_eq!(steady.lost_accepted, 0);
+        assert_eq!(steady.completed, steady.accepted);
+        assert!(steady.throughput_jobs_per_sec > 0.0);
+        assert!(steady.p50_ms.is_finite() && steady.p50_ms > 0.0);
+        assert!(steady.p99_ms >= steady.p50_ms);
+        assert!(steady.p999_ms >= steady.p99_ms);
+
+        // Overload arm: offered ≥ 4× capacity degrades gracefully —
+        // explicit rejects, bounded queue, nothing accepted is lost.
+        let overload = &bench.rows[1];
+        assert_eq!(overload.arm, "overload");
+        assert!(overload.offered >= 4 * overload.queue_capacity, "arm must truly overload");
+        assert!(overload.rejected > 0, "overload must shed load explicitly");
+        assert_eq!(overload.lost_accepted, 0, "no accepted job may vanish");
+        assert_eq!(overload.completed, overload.accepted);
+        assert!(
+            overload.queue_high_water <= overload.queue_capacity,
+            "admission bound held: {} > {}",
+            overload.queue_high_water,
+            overload.queue_capacity,
+        );
+        // "p99 of accepted work within budget": accepted jobs finish in
+        // interactive time even under 4× offered load.
+        assert!(overload.p99_ms < 30_000.0, "p99 {}ms", overload.p99_ms);
+
+        // Recovery: every job accepted before the crash completes
+        // exactly once after the restart.
+        let rec = &bench.recovery;
+        assert_eq!(rec.accepted_before_crash, RECOVERY_JOBS);
+        assert_eq!(rec.pending_at_crash, RECOVERY_JOBS);
+        assert_eq!(rec.recovered, RECOVERY_JOBS);
+        assert_eq!(rec.completed_after_restart, RECOVERY_JOBS);
+        assert!(rec.completed_exactly_once);
+        assert!(rec.recovery_secs > 0.0);
+
+        let json = to_json(&bench).render();
+        assert!(json.contains(r#""arm":"overload""#), "{json}");
+        assert!(json.contains(r#""completed_exactly_once":true"#), "{json}");
+        assert!(json.contains(r#""lost_accepted":0"#), "{json}");
+        let t = to_table(&bench);
+        assert_eq!(t.to_csv().lines().count(), 4, "header + 2 arms + recovery row");
+    }
+}

@@ -10,7 +10,7 @@ mod stats;
 mod table;
 
 pub use bench_json::{BenchCli, JsonValue};
-pub use stats::Stats;
+pub use stats::{LatencyHistogram, Stats};
 pub use table::Table;
 
 use std::time::{Duration, Instant};

@@ -93,6 +93,164 @@ impl Stats {
     }
 }
 
+/// Sub-bucket resolution: each power-of-two magnitude is split into
+/// `2^SUB_BITS` linear sub-buckets, bounding the relative quantile error
+/// at `2^-SUB_BITS` (≈3.1%).
+const SUB_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BITS;
+/// Magnitudes 5..=63 each contribute `SUB` buckets on top of the exact
+/// 0..32 range, so the whole u64 domain fits in a fixed array.
+const HIST_BUCKETS: usize = (64 - SUB_BITS as usize + 1) * SUB;
+
+/// HDR-style log-bucketed latency histogram over `u64` nanoseconds.
+///
+/// Fixed memory (one `u64` counter per bucket, ~15 KiB), dependency-free,
+/// mergeable. Values 0..32 are exact; above that, each power-of-two range
+/// is split into 32 linear sub-buckets, so any reported quantile is within
+/// `value/32 + 1` of the true nearest-rank sample — tight enough for
+/// p50/p99/p999 service reporting without retaining samples (the `Stats`
+/// retained-sample path is exact but grows with the run; this one does
+/// not, which is what a 10M-task percentile needs).
+///
+/// Quantiles are reported as the *upper* bound of the containing bucket
+/// (clamped to the observed max): conservative for latency budgets — the
+/// true sample is never larger than the reported figure.
+///
+/// ```
+/// use rhpx::metrics::LatencyHistogram;
+/// let mut h = LatencyHistogram::new();
+/// for v in 1..=1000u64 {
+///     h.record(v);
+/// }
+/// let p50 = h.quantile(0.50).unwrap();
+/// assert!((500..=517).contains(&p50), "p50 {p50}");
+/// assert_eq!(h.quantile(1.0), Some(1000));
+/// ```
+#[derive(Clone)]
+pub struct LatencyHistogram {
+    counts: Box<[u64; HIST_BUCKETS]>,
+    n: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyHistogram")
+            .field("count", &self.n)
+            .field("min", &self.min)
+            .field("max", &self.max)
+            .finish()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: Box::new([0u64; HIST_BUCKETS]),
+            n: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Bucket index for a value: exact below `SUB`, then
+    /// `(magnitude, linear sub-position)` above.
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            v as usize
+        } else {
+            let k = 63 - v.leading_zeros(); // k >= SUB_BITS
+            (((k - SUB_BITS + 1) as usize) << SUB_BITS) | (((v >> (k - SUB_BITS)) as usize) & (SUB - 1))
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i` (the value a quantile reports).
+    fn bucket_high(i: usize) -> u64 {
+        if i < SUB {
+            i as u64
+        } else {
+            let k = (i >> SUB_BITS) as u32 + SUB_BITS - 1; // magnitude
+            let sub = (i & (SUB - 1)) as u128;
+            // u128 keeps the top magnitude's `(64+sub+1) << 58` from
+            // overflowing; the final bucket's bound saturates at u64::MAX.
+            let high = ((SUB as u128 + sub + 1) << (k - SUB_BITS)) - 1;
+            u64::try_from(high).unwrap_or(u64::MAX)
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.n += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a duration in whole nanoseconds (saturating at `u64::MAX`).
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn min(&self) -> Option<u64> {
+        (self.n > 0).then_some(self.min)
+    }
+
+    pub fn max(&self) -> Option<u64> {
+        (self.n > 0).then_some(self.max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.n as f64
+        }
+    }
+
+    /// Nearest-rank quantile, `q` in `[0, 1]`. Returns the containing
+    /// bucket's upper bound clamped to the observed min/max; `None` when
+    /// empty.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        if self.n == 0 {
+            return None;
+        }
+        let rank = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(Self::bucket_high(i).clamp(self.min, self.max));
+            }
+        }
+        Some(self.max) // unreachable in practice: counts sum to n
+    }
+
+    /// Bucket-wise merge — associative and commutative, so per-thread
+    /// histograms can be combined in any order.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +298,125 @@ mod tests {
         assert_eq!(s.stddev(), 0.0);
         assert_eq!(s.median(), 3.0);
         assert_eq!(s.ci95(), 0.0);
+    }
+
+    / ---- LatencyHistogram ------------------------------------------
+
+    /// Tiny deterministic generator so histogram tests don't depend on
+    /// the crate's failure RNG.
+    fn lcg(seed: &mut u64) -> u64 {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *seed >> 17
+    }
+
+    #[test]
+    fn histogram_buckets_are_continuous_and_in_bounds() {
+        // Every magnitude boundary lands in a bucket whose range
+        // contains it, and the index is monotone in the value.
+        let mut probe = vec![0u64, u64::MAX];
+        for shift in 0..64 {
+            let v = 1u64 << shift;
+            probe.push(v - 1);
+            probe.push(v);
+            probe.push(v.saturating_add(1));
+        }
+        probe.sort_unstable();
+        let mut last = 0usize;
+        for v in probe {
+            let i = LatencyHistogram::index(v);
+            assert!(i < HIST_BUCKETS, "v={v} index={i}");
+            assert!(LatencyHistogram::bucket_high(i) >= v, "v={v} i={i}");
+            assert!(i >= last, "index not monotone at v={v}");
+            last = i;
+        }
+        assert_eq!(LatencyHistogram::index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_quantile_error_bound() {
+        // Reported quantile must be >= the exact nearest-rank sample and
+        // within the 2^-5 relative bucket width (+1 for the integer
+        // floor) above it.
+        let mut h = LatencyHistogram::new();
+        let mut exact = Vec::new();
+        let mut seed = 0x1CEu64;
+        for _ in 0..10_000 {
+            let v = lcg(&mut seed) % 10_000_000; // 0..10ms in ns
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999, 1.0] {
+            let rank = ((q * exact.len() as f64).ceil() as usize).clamp(1, exact.len());
+            let truth = exact[rank - 1];
+            let est = h.quantile(q).unwrap();
+            assert!(est >= truth, "q={q}: est {est} < exact {truth}");
+            let budget = truth + truth / 32 + 1;
+            assert!(est <= budget, "q={q}: est {est} > budget {budget} (exact {truth})");
+        }
+        // q=1.0 lands in the max's bucket and clamps to the exact max.
+        assert_eq!(h.quantile(1.0), Some(*exact.last().unwrap()));
+        // q=0.0 reports the min's bucket, which may sit above the min by
+        // at most one bucket width.
+        let min = *exact.first().unwrap();
+        let p0 = h.quantile(0.0).unwrap();
+        assert!(p0 >= min && p0 <= min + min / 32 + 1, "p0 {p0} min {min}");
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_commutative() {
+        let mut seed = 7u64;
+        let mut parts = Vec::new();
+        for _ in 0..3 {
+            let mut h = LatencyHistogram::new();
+            for _ in 0..1000 {
+                h.record(lcg(&mut seed) % 1_000_000);
+            }
+            parts.push(h);
+        }
+        let (a, b, c) = (&parts[0], &parts[1], &parts[2]);
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(b);
+        left.merge(c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        // c ⊕ b ⊕ a
+        let mut rev = c.clone();
+        rev.merge(b);
+        rev.merge(a);
+        for h in [&right, &rev] {
+            assert_eq!(left.count(), h.count());
+            assert_eq!(left.min(), h.min());
+            assert_eq!(left.max(), h.max());
+            assert_eq!(left.counts[..], h.counts[..]);
+            for q in [0.5, 0.99, 0.999] {
+                assert_eq!(left.quantile(q), h.quantile(q));
+            }
+        }
+        assert_eq!(left.count(), 3000);
+    }
+
+    #[test]
+    fn histogram_empty_and_small() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), None);
+        assert!(h.mean().is_nan());
+        assert_eq!(h.min(), None);
+        h.record(0);
+        assert_eq!(h.quantile(0.5), Some(0));
+        assert_eq!(h.quantile(1.0), Some(0));
+        h.record(42);
+        assert_eq!(h.min(), Some(0));
+        assert_eq!(h.max(), Some(42));
+        assert_eq!(h.quantile(1.0), Some(42)); // buckets are width-1 below 64
+        assert!((h.mean() - 21.0).abs() < 1e-12);
+        let mut d = LatencyHistogram::new();
+        d.record_duration(std::time::Duration::from_micros(3));
+        assert_eq!(d.quantile(1.0), Some(3000));
     }
 }

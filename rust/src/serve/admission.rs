@@ -1,0 +1,170 @@
+//! `serve::admission` — queue-depth admission control with backpressure.
+//!
+//! The containment half of the service-level resilience story: instead
+//! of buffering unboundedly (and letting an overload turn into memory
+//! exhaustion and unbounded latency), the gate holds a fixed number of
+//! in-flight-or-queued jobs and answers everything beyond it with an
+//! explicit [`Decision::Rejected`] carrying a retry hint. Clients that
+//! honor `retry_after_ms` turn an overload spike into a paced retry
+//! storm the server can absorb; clients that don't still cannot push
+//! the queue past its bound.
+//!
+//! The gate is deliberately tiny — one mutex, three counters — so the
+//! deterministic-schedule test for "two clients race the last slot" can
+//! replay both interleavings and see exactly one admission.
+
+use std::sync::Mutex;
+
+/// Outcome of [`AdmissionGate::try_admit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// A slot was taken; the caller owns it until
+    /// [`AdmissionGate::release`].
+    Admitted,
+    /// Queue full — retry no sooner than `retry_after_ms`.
+    Rejected { retry_after_ms: u64 },
+}
+
+#[derive(Default)]
+struct GateState {
+    depth: usize,
+    admitted: u64,
+    rejected: u64,
+    high_water: usize,
+}
+
+/// Bounded admission gate: at most `capacity` jobs admitted-and-unreleased
+/// at any instant.
+pub struct AdmissionGate {
+    capacity: usize,
+    retry_after_ms: u64,
+    state: Mutex<GateState>,
+}
+
+impl AdmissionGate {
+    /// Gate with `capacity` slots; rejections advise retrying after
+    /// `retry_after_ms`.
+    pub fn new(capacity: usize, retry_after_ms: u64) -> Self {
+        AdmissionGate {
+            capacity: capacity.max(1),
+            retry_after_ms,
+            state: Mutex::new(GateState::default()),
+        }
+    }
+
+    /// Take a slot if one is free. Check-and-increment under one lock:
+    /// two racing clients can never both see the last free slot.
+    pub fn try_admit(&self) -> Decision {
+        let mut st = self.state.lock().unwrap();
+        if st.depth < self.capacity {
+            st.depth += 1;
+            st.admitted += 1;
+            st.high_water = st.high_water.max(st.depth);
+            Decision::Admitted
+        } else {
+            st.rejected += 1;
+            Decision::Rejected { retry_after_ms: self.retry_after_ms }
+        }
+    }
+
+    /// Take a slot unconditionally — the restart-recovery path, where
+    /// jobs journaled by a previous process re-enter the queue even if
+    /// that briefly exceeds `capacity` (they were already admitted once;
+    /// dropping them would violate the no-lost-accepted-work promise).
+    pub fn admit_unchecked(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.depth += 1;
+        st.admitted += 1;
+        st.high_water = st.high_water.max(st.depth);
+    }
+
+    /// Return a slot (job completed or failed terminally).
+    pub fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.depth > 0, "release without a matching admit");
+        st.depth = st.depth.saturating_sub(1);
+    }
+
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().depth
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// (admitted, rejected, high-water depth) so far.
+    pub fn counters(&self) -> (u64, u64, usize) {
+        let st = self.state.lock().unwrap();
+        (st.admitted, st.rejected, st.high_water)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_to_capacity_then_rejects_with_retry_hint() {
+        let gate = AdmissionGate::new(2, 40);
+        assert_eq!(gate.try_admit(), Decision::Admitted);
+        assert_eq!(gate.try_admit(), Decision::Admitted);
+        assert_eq!(gate.try_admit(), Decision::Rejected { retry_after_ms: 40 });
+        assert_eq!(gate.depth(), 2);
+        let (admitted, rejected, high) = gate.counters();
+        assert_eq!((admitted, rejected, high), (2, 1, 2));
+    }
+
+    #[test]
+    fn release_frees_a_slot() {
+        let gate = AdmissionGate::new(1, 10);
+        assert_eq!(gate.try_admit(), Decision::Admitted);
+        assert!(matches!(gate.try_admit(), Decision::Rejected { .. }));
+        gate.release();
+        assert_eq!(gate.try_admit(), Decision::Admitted);
+        assert_eq!(gate.depth(), 1);
+    }
+
+    #[test]
+    fn unchecked_admission_can_exceed_capacity_for_recovery() {
+        let gate = AdmissionGate::new(1, 10);
+        gate.admit_unchecked();
+        gate.admit_unchecked();
+        assert_eq!(gate.depth(), 2, "recovered jobs re-enter past the cap");
+        assert!(matches!(gate.try_admit(), Decision::Rejected { .. }));
+        gate.release();
+        gate.release();
+        assert_eq!(gate.try_admit(), Decision::Admitted);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let gate = AdmissionGate::new(0, 10);
+        assert_eq!(gate.capacity(), 1);
+        assert_eq!(gate.try_admit(), Decision::Admitted);
+    }
+
+    #[test]
+    fn concurrent_admits_never_exceed_capacity() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        let gate = Arc::new(AdmissionGate::new(4, 5));
+        let wins = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let gate = Arc::clone(&gate);
+                let wins = Arc::clone(&wins);
+                std::thread::spawn(move || {
+                    if gate.try_admit() == Decision::Admitted {
+                        wins.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(wins.load(Ordering::Relaxed), 4);
+        assert_eq!(gate.depth(), 4);
+    }
+}

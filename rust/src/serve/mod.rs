@@ -1,0 +1,58 @@
+//! `rhpx serve` — a long-running resilient task service over the
+//! workload zoo.
+//!
+//! The paper's replay/replicate/validate APIs protect a single task
+//! launch; this module composes them with the *service-level* resilience
+//! patterns (ORNL resilience-design-patterns catalogue: detection,
+//! containment, recovery) that a daemon under sustained multi-client
+//! load needs:
+//!
+//! * [`protocol`] — dependency-free length-prefixed framed protocol
+//!   (versioned header, FNV-checksummed payload) carrying
+//!   Submit/Ack/Result/Status/Reject frames over `std::net` TCP or any
+//!   in-memory transport; submissions name a zoo workload plus a
+//!   per-client `PolicySpec`, exposing the whole `--resilience` matrix
+//!   as a service.
+//! * [`admission`] — queue-depth admission control with backpressure:
+//!   bounded buffering, explicit `Reject{retry_after}` beyond the bound.
+//! * [`breaker`] — per-task-class Closed→Open→HalfOpen circuit breaker
+//!   with exponential backoff and deterministic seeded jitter.
+//! * [`server`] — the daemon: accepted jobs journal through a
+//!   [`crate::checkpoint::SnapshotStore`] before they are acked, so a
+//!   killed-and-restarted daemon completes every accepted job exactly
+//!   once and never silently drops acked work.
+//!
+//! Quick start (the in-memory transport; `rhpx serve` wires the same
+//! server to a `TcpListener`):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use rhpx::checkpoint::MemorySnapshotStore;
+//! use rhpx::serve::{JobSpec, ServeConfig, Server, SubmitResponse};
+//!
+//! let cfg = ServeConfig { executors: 1, workers: 2, ..ServeConfig::default() };
+//! let server = Server::start(cfg, Arc::new(MemorySnapshotStore::new()));
+//! let spec = JobSpec {
+//!     job_id: 1,
+//!     workload: "stencil1d".into(),
+//!     policy: "replay:5".into(),
+//!     scale_milli: 100,
+//!     error_prob_pct: 10,
+//! };
+//! let SubmitResponse::Accepted { future } = server.submit(spec) else {
+//!     panic!("accepted");
+//! };
+//! let outcome = future.get().unwrap();
+//! assert!(outcome.ok, "replay:5 absorbs the injected faults");
+//! server.stop();
+//! ```
+
+pub mod admission;
+pub mod breaker;
+pub mod protocol;
+pub mod server;
+
+pub use admission::{AdmissionGate, Decision};
+pub use breaker::{Admission, BreakerConfig, CircuitBreaker};
+pub use protocol::{Frame, FrameError, JobRecord, JobSpec, JobState, StatusReport};
+pub use server::{JobOutcome, RejectReason, ServeConfig, Server, ServerStats, SubmitResponse};

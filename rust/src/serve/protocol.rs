@@ -1,0 +1,585 @@
+//! `serve::protocol` — the dependency-free framed wire protocol for
+//! [`rhpx serve`](crate::serve).
+//!
+//! One frame = an 8-byte versioned header (`magic "rh"`, version, tag,
+//! payload length), a length-prefixed payload, and a trailing FNV-1a
+//! checksum over header + payload. Payload bytes for job submissions are
+//! the [`SnapshotData`] encoding of [`JobSpec`] — the same bytes the
+//! server journals through a [`crate::checkpoint::SnapshotStore`], so
+//! what travels on the wire is exactly what survives a daemon restart.
+//!
+//! Decoding is total: any byte stream yields either a complete
+//! `(Frame, consumed)` pair or a typed [`FrameError`] — never a panic,
+//! never a partial frame, never an unbounded allocation
+//! ([`FrameError::Oversize`] caps the length field before any buffer is
+//! sized from it). [`FrameError::Truncated`] doubles as the streaming
+//! "need more bytes" signal for TCP readers accumulating a buffer.
+//!
+//! Paper mapping: the wire layer of the service-level resilience story —
+//! checksummed framing is the same detection-by-redundancy pattern the
+//! task layer uses for silent data corruption, applied to bytes in
+//! flight instead of task outputs.
+
+use crate::checkpoint::SnapshotData;
+
+/// Protocol magic: first two bytes of every frame.
+pub const MAGIC: [u8; 2] = *b"rh";
+
+/// Current protocol version; [`Frame::decode`] rejects anything else.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Upper bound on the payload-length field. Bounds the allocation a
+/// hostile or corrupted length prefix can demand.
+pub const MAX_PAYLOAD: usize = 1 << 20;
+
+const HEADER_LEN: usize = 8;
+const CHECKSUM_LEN: usize = 8;
+
+const TAG_SUBMIT: u8 = 1;
+const TAG_ACK: u8 = 2;
+const TAG_RESULT: u8 = 3;
+const TAG_STATUS: u8 = 4;
+const TAG_REJECT: u8 = 5;
+
+/// FNV-1a over `bytes`. Every step is a bijection of the running state,
+/// so any single-byte difference in the covered region is guaranteed to
+/// change the digest (multi-byte garbling is caught probabilistically,
+/// like any 64-bit checksum).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A job submission: which zoo workload to run, under which resilience
+/// policy, at what scale and injected fault probability.
+///
+/// Implements [`SnapshotData`]; the Submit frame payload and the
+/// server's journal entry share this encoding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    /// Client-chosen identifier; the exactly-once boundary. Resubmitting
+    /// a completed `job_id` returns the cached result.
+    pub job_id: u64,
+    /// Workload name from the zoo registry (`workloads::WORKLOADS`).
+    pub workload: String,
+    /// `PolicySpec` token (e.g. `replay:3`), or empty for no resilience.
+    pub policy: String,
+    /// Workload scale ×1000 (250 ⇒ scale 0.25).
+    pub scale_milli: u32,
+    /// Per-task injected-failure probability ×100 (0..=99).
+    pub error_prob_pct: u32,
+}
+
+impl JobSpec {
+    /// Scale as the zoo's `f64` factor.
+    pub fn scale(&self) -> f64 {
+        self.scale_milli as f64 / 1000.0
+    }
+
+    /// Injected-failure probability in `[0, 1)`.
+    pub fn error_prob(&self) -> f64 {
+        (self.error_prob_pct.min(99)) as f64 / 100.0
+    }
+}
+
+impl SnapshotData for JobSpec {
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + self.workload.len() + self.policy.len());
+        out.extend_from_slice(&self.job_id.to_le_bytes());
+        out.extend_from_slice(&self.scale_milli.to_le_bytes());
+        out.extend_from_slice(&self.error_prob_pct.to_le_bytes());
+        put_str(&mut out, &self.workload);
+        put_str(&mut out, &self.policy);
+        out
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Option<Self> {
+        let mut c = Cursor::new(bytes);
+        let spec = JobSpec {
+            job_id: c.u64()?,
+            scale_milli: c.u32()?,
+            error_prob_pct: c.u32()?,
+            workload: c.str()?,
+            policy: c.str()?,
+        };
+        c.done()?;
+        Some(spec)
+    }
+}
+
+/// Lifecycle state of a journaled job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobState {
+    /// Acked to the client but not yet completed; a restart re-runs it.
+    Accepted,
+    /// Completed (`ok` = ran to completion without launch errors);
+    /// `checksum_bits` is the workload's final checksum as `f64` bits.
+    Done { ok: bool, checksum_bits: u64 },
+}
+
+/// What the server journals per accepted job: the spec (so a restart can
+/// re-run it) plus its lifecycle state (so a restart never re-runs a
+/// completed job — the exactly-once half of the ledger).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    pub spec: JobSpec,
+    pub state: JobState,
+}
+
+impl SnapshotData for JobRecord {
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self.state {
+            JobState::Accepted => out.push(0),
+            JobState::Done { ok, checksum_bits } => {
+                out.push(1);
+                out.push(ok as u8);
+                out.extend_from_slice(&checksum_bits.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&self.spec.to_bytes());
+        out
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Option<Self> {
+        let (state, rest) = match bytes.split_first()? {
+            (0, rest) => (JobState::Accepted, rest),
+            (1, rest) => {
+                let mut c = Cursor::new(rest);
+                let ok = match c.u8()? {
+                    0 => false,
+                    1 => true,
+                    _ => return None,
+                };
+                let checksum_bits = c.u64()?;
+                (JobState::Done { ok, checksum_bits }, &rest[9..])
+            }
+            _ => return None,
+        };
+        Some(JobRecord { state, spec: JobSpec::from_bytes(rest)? })
+    }
+}
+
+/// Server-side counters a Status frame carries.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatusReport {
+    pub submitted: u64,
+    pub accepted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected_queue: u64,
+    pub rejected_breaker: u64,
+    pub queue_depth: u64,
+    pub queue_capacity: u64,
+}
+
+/// One protocol message. Clients send `Submit` and (empty) `Status`
+/// queries; the server answers with `Ack`/`Result`/`Reject` and filled
+/// `Status` frames.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server: run this job.
+    Submit(JobSpec),
+    /// Server → client: the job was accepted and journaled; a `Result`
+    /// frame will follow.
+    Ack { job_id: u64 },
+    /// Server → client: terminal outcome of an accepted job.
+    Result { job_id: u64, ok: bool, checksum_bits: u64, detail: String },
+    /// Health/state snapshot. A client sends the default (all-zero)
+    /// report as a query; the server replies with counters filled in.
+    Status(StatusReport),
+    /// Server → client: not accepted — back off and retry (or fix the
+    /// request; `reason` says which).
+    Reject { job_id: u64, retry_after_ms: u64, reason: String },
+}
+
+/// Typed decode failure. `Truncated` is retryable with more bytes;
+/// everything else means the stream is corrupt at this frame boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// Not enough bytes yet for a complete frame.
+    Truncated { needed: usize, have: usize },
+    /// First two bytes are not [`MAGIC`].
+    BadMagic { got: [u8; 2] },
+    /// Version byte is not [`PROTOCOL_VERSION`].
+    BadVersion { got: u8 },
+    /// Header is valid and checksummed but the tag is unknown.
+    UnknownTag { got: u8 },
+    /// Length field exceeds [`MAX_PAYLOAD`].
+    Oversize { len: usize },
+    /// FNV-1a over header + payload does not match the trailer.
+    ChecksumMismatch { expected: u64, got: u64 },
+    /// Payload bytes do not decode as the tagged variant.
+    BadPayload { tag: &'static str },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated { needed, have } => {
+                write!(f, "truncated frame: need {needed} bytes, have {have}")
+            }
+            FrameError::BadMagic { got } => write!(f, "bad magic {got:?}"),
+            FrameError::BadVersion { got } => {
+                write!(f, "unsupported protocol version {got} (want {PROTOCOL_VERSION})")
+            }
+            FrameError::UnknownTag { got } => write!(f, "unknown frame tag {got}"),
+            FrameError::Oversize { len } => {
+                write!(f, "payload length {len} exceeds cap {MAX_PAYLOAD}")
+            }
+            FrameError::ChecksumMismatch { expected, got } => {
+                write!(f, "frame checksum mismatch: computed {expected:#x}, stored {got:#x}")
+            }
+            FrameError::BadPayload { tag } => write!(f, "malformed {tag} payload"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl Frame {
+    fn tag(&self) -> u8 {
+        match self {
+            Frame::Submit(_) => TAG_SUBMIT,
+            Frame::Ack { .. } => TAG_ACK,
+            Frame::Result { .. } => TAG_RESULT,
+            Frame::Status(_) => TAG_STATUS,
+            Frame::Reject { .. } => TAG_REJECT,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Frame::Submit(spec) => p = spec.to_bytes(),
+            Frame::Ack { job_id } => p.extend_from_slice(&job_id.to_le_bytes()),
+            Frame::Result { job_id, ok, checksum_bits, detail } => {
+                p.extend_from_slice(&job_id.to_le_bytes());
+                p.push(*ok as u8);
+                p.extend_from_slice(&checksum_bits.to_le_bytes());
+                put_str(&mut p, detail);
+            }
+            Frame::Status(s) => {
+                for v in [
+                    s.submitted,
+                    s.accepted,
+                    s.completed,
+                    s.failed,
+                    s.rejected_queue,
+                    s.rejected_breaker,
+                    s.queue_depth,
+                    s.queue_capacity,
+                ] {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Reject { job_id, retry_after_ms, reason } => {
+                p.extend_from_slice(&job_id.to_le_bytes());
+                p.extend_from_slice(&retry_after_ms.to_le_bytes());
+                put_str(&mut p, reason);
+            }
+        }
+        p
+    }
+
+    /// Encode as header ∥ payload ∥ checksum.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.payload();
+        assert!(payload.len() <= MAX_PAYLOAD, "frame payload exceeds protocol cap");
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + CHECKSUM_LEN);
+        out.extend_from_slice(&MAGIC);
+        out.push(PROTOCOL_VERSION);
+        out.push(self.tag());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Decode one frame from the front of `buf`; returns the frame and
+    /// the number of bytes consumed (trailing bytes are the next
+    /// frame's, untouched). [`FrameError::Truncated`] means "feed me
+    /// more bytes"; any other error means the stream is corrupt.
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize), FrameError> {
+        if buf.len() < HEADER_LEN {
+            return Err(FrameError::Truncated { needed: HEADER_LEN, have: buf.len() });
+        }
+        if buf[0..2] != MAGIC {
+            return Err(FrameError::BadMagic { got: [buf[0], buf[1]] });
+        }
+        if buf[2] != PROTOCOL_VERSION {
+            return Err(FrameError::BadVersion { got: buf[2] });
+        }
+        let len = u32::from_le_bytes(buf[4..8].try_into().expect("4 bytes")) as usize;
+        if len > MAX_PAYLOAD {
+            return Err(FrameError::Oversize { len });
+        }
+        let total = HEADER_LEN + len + CHECKSUM_LEN;
+        if buf.len() < total {
+            return Err(FrameError::Truncated { needed: total, have: buf.len() });
+        }
+        let expected = fnv1a(&buf[..HEADER_LEN + len]);
+        let got = u64::from_le_bytes(
+            buf[HEADER_LEN + len..total].try_into().expect("8 bytes"),
+        );
+        if expected != got {
+            return Err(FrameError::ChecksumMismatch { expected, got });
+        }
+        let payload = &buf[HEADER_LEN..HEADER_LEN + len];
+        let frame = match buf[3] {
+            TAG_SUBMIT => Frame::Submit(
+                JobSpec::from_bytes(payload).ok_or(FrameError::BadPayload { tag: "Submit" })?,
+            ),
+            TAG_ACK => {
+                let mut c = Cursor::new(payload);
+                let job_id = c.u64().ok_or(FrameError::BadPayload { tag: "Ack" })?;
+                c.done().ok_or(FrameError::BadPayload { tag: "Ack" })?;
+                Frame::Ack { job_id }
+            }
+            TAG_RESULT => {
+                let mut c = Cursor::new(payload);
+                let parse = || -> Option<Frame> {
+                    let job_id = c.u64()?;
+                    let ok = match c.u8()? {
+                        0 => false,
+                        1 => true,
+                        _ => return None,
+                    };
+                    let checksum_bits = c.u64()?;
+                    let detail = c.str()?;
+                    c.done()?;
+                    Some(Frame::Result { job_id, ok, checksum_bits, detail })
+                };
+                parse().ok_or(FrameError::BadPayload { tag: "Result" })?
+            }
+            TAG_STATUS => {
+                let mut c = Cursor::new(payload);
+                let parse = || -> Option<Frame> {
+                    let s = StatusReport {
+                        submitted: c.u64()?,
+                        accepted: c.u64()?,
+                        completed: c.u64()?,
+                        failed: c.u64()?,
+                        rejected_queue: c.u64()?,
+                        rejected_breaker: c.u64()?,
+                        queue_depth: c.u64()?,
+                        queue_capacity: c.u64()?,
+                    };
+                    c.done()?;
+                    Some(Frame::Status(s))
+                };
+                parse().ok_or(FrameError::BadPayload { tag: "Status" })?
+            }
+            TAG_REJECT => {
+                let mut c = Cursor::new(payload);
+                let parse = || -> Option<Frame> {
+                    let job_id = c.u64()?;
+                    let retry_after_ms = c.u64()?;
+                    let reason = c.str()?;
+                    c.done()?;
+                    Some(Frame::Reject { job_id, retry_after_ms, reason })
+                };
+                parse().ok_or(FrameError::BadPayload { tag: "Reject" })?
+            }
+            other => return Err(FrameError::UnknownTag { got: other }),
+        };
+        Ok((frame, total))
+    }
+}
+
+/// Length-prefixed UTF-8 string (u32 LE length + bytes).
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over untrusted bytes: every
+/// accessor returns `None` past the end, string lengths are checked
+/// against the bytes actually present before any allocation.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        let s = self.buf.get(self.pos..end)?;
+        self.pos = end;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|s| s[0])
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes(s.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|s| u64::from_le_bytes(s.try_into().expect("8 bytes")))
+    }
+
+    fn str(&mut self) -> Option<String> {
+        let len = usize::try_from(self.u32()?).ok()?;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).ok()
+    }
+
+    /// All bytes consumed — trailing garbage is a decode failure.
+    fn done(&self) -> Option<()> {
+        (self.pos == self.buf.len()).then_some(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Submit(JobSpec {
+                job_id: 42,
+                workload: "stencil1d".into(),
+                policy: "replay:3".into(),
+                scale_milli: 250,
+                error_prob_pct: 10,
+            }),
+            Frame::Ack { job_id: 7 },
+            Frame::Result {
+                job_id: 7,
+                ok: true,
+                checksum_bits: 1.5f64.to_bits(),
+                detail: "stencil1d ✓".into(),
+            },
+            Frame::Status(StatusReport {
+                submitted: 10,
+                accepted: 8,
+                completed: 6,
+                failed: 1,
+                rejected_queue: 1,
+                rejected_breaker: 1,
+                queue_depth: 1,
+                queue_capacity: 16,
+            }),
+            Frame::Reject { job_id: 9, retry_after_ms: 250, reason: "queue full".into() },
+        ]
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        for f in sample_frames() {
+            let bytes = f.encode();
+            let (back, consumed) = Frame::decode(&bytes).unwrap();
+            assert_eq!(back, f);
+            assert_eq!(consumed, bytes.len());
+        }
+    }
+
+    #[test]
+    fn decode_consumes_one_frame_from_a_stream() {
+        let a = Frame::Ack { job_id: 1 }.encode();
+        let b = Frame::Ack { job_id: 2 }.encode();
+        let mut stream = a.clone();
+        stream.extend_from_slice(&b);
+        let (f1, n1) = Frame::decode(&stream).unwrap();
+        assert_eq!(f1, Frame::Ack { job_id: 1 });
+        assert_eq!(n1, a.len());
+        let (f2, n2) = Frame::decode(&stream[n1..]).unwrap();
+        assert_eq!(f2, Frame::Ack { job_id: 2 });
+        assert_eq!(n1 + n2, stream.len());
+    }
+
+    #[test]
+    fn truncation_asks_for_more_bytes_at_every_cut() {
+        let bytes = sample_frames()[0].encode();
+        for cut in 0..bytes.len() {
+            match Frame::decode(&bytes[..cut]) {
+                Err(FrameError::Truncated { needed, have }) => {
+                    assert_eq!(have, cut);
+                    assert!(needed > cut);
+                }
+                other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn header_corruption_is_typed() {
+        let mut bytes = Frame::Ack { job_id: 3 }.encode();
+        bytes[0] = b'x';
+        assert!(matches!(Frame::decode(&bytes), Err(FrameError::BadMagic { .. })));
+
+        let mut bytes = Frame::Ack { job_id: 3 }.encode();
+        bytes[2] = 99;
+        assert_eq!(Frame::decode(&bytes), Err(FrameError::BadVersion { got: 99 }));
+
+        // An oversize length field is rejected before any allocation or
+        // wait-for-more-bytes, even though the buffer is short.
+        let mut bytes = Frame::Ack { job_id: 3 }.encode();
+        bytes[4..8].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        assert_eq!(Frame::decode(&bytes), Err(FrameError::Oversize { len: MAX_PAYLOAD + 1 }));
+    }
+
+    #[test]
+    fn payload_corruption_fails_the_checksum() {
+        let mut bytes = sample_frames()[0].encode();
+        let mid = HEADER_LEN + 2;
+        bytes[mid] ^= 0x40;
+        assert!(matches!(Frame::decode(&bytes), Err(FrameError::ChecksumMismatch { .. })));
+    }
+
+    #[test]
+    fn unknown_tag_with_valid_checksum_is_typed() {
+        // Build a frame with tag 9 by hand, checksummed correctly.
+        let mut bytes = vec![MAGIC[0], MAGIC[1], PROTOCOL_VERSION, 9, 0, 0, 0, 0];
+        let sum = fnv1a(&bytes);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        assert_eq!(Frame::decode(&bytes), Err(FrameError::UnknownTag { got: 9 }));
+    }
+
+    #[test]
+    fn job_spec_and_record_snapshot_roundtrip() {
+        let spec = JobSpec {
+            job_id: u64::MAX,
+            workload: "jacobi".into(),
+            policy: String::new(),
+            scale_milli: 1000,
+            error_prob_pct: 0,
+        };
+        assert_eq!(JobSpec::from_bytes(&spec.to_bytes()), Some(spec.clone()));
+        for state in [JobState::Accepted, JobState::Done { ok: false, checksum_bits: 77 }] {
+            let rec = JobRecord { spec: spec.clone(), state };
+            assert_eq!(JobRecord::from_bytes(&rec.to_bytes()), Some(rec));
+        }
+        // Corrupt journal bytes decode to None, never panic.
+        assert_eq!(JobRecord::from_bytes(&[]), None);
+        assert_eq!(JobRecord::from_bytes(&[7, 1, 2, 3]), None);
+        let mut truncated = JobRecord { spec, state: JobState::Accepted }.to_bytes();
+        truncated.pop();
+        assert_eq!(JobRecord::from_bytes(&truncated), None);
+    }
+
+    #[test]
+    fn spec_unit_conversions() {
+        let spec = JobSpec {
+            job_id: 1,
+            workload: "stream".into(),
+            policy: String::new(),
+            scale_milli: 250,
+            error_prob_pct: 40,
+        };
+        assert!((spec.scale() - 0.25).abs() < 1e-12);
+        assert!((spec.error_prob() - 0.40).abs() < 1e-12);
+    }
+}

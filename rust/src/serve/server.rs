@@ -1,0 +1,940 @@
+//! `serve::server` — the long-running resilient task service.
+//!
+//! Composition of the three service-level resilience layers over the
+//! task-level machinery the rest of the crate already provides:
+//!
+//! ```text
+//!   client ──Frame──▶ AdmissionGate ──▶ CircuitBreaker ──▶ journal
+//!                       (containment)     (detection)       (recovery)
+//!                                                             │
+//!                        executor threads ◀── pending queue ◀─┘
+//!                             │ workloads::run + PolicySpec decorators
+//!                             ▼
+//!                        journal Done ──▶ Result frame / future
+//! ```
+//!
+//! Every accepted job is journaled as [`JobState::Accepted`] through a
+//! [`SnapshotStore`] *before* the Ack leaves the server, and re-journaled
+//! as [`JobState::Done`] after execution. A restarted server scans the
+//! journal: `Done` records refill the duplicate-answer cache, `Accepted`
+//! records re-enter the queue — so killing the daemon loses no accepted
+//! work, and completed work is never re-run (the lineage-ledger pattern
+//! at job granularity). The exactly-once boundary is the journal write:
+//! a crash *between* execution and the `Done` write re-runs that job on
+//! restart, which is safe because workload bodies are pure.
+//!
+//! Time for the breaker is milliseconds since server start — monotonic,
+//! and trivially replaced by a virtual clock in the scheduled tests.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::checkpoint::{SnapshotData, SnapshotStore};
+use crate::future::Future;
+use crate::runtime_handle::Runtime;
+use crate::stencil::ExecPolicy;
+use crate::workloads::{self, RunParams};
+use crate::Promise;
+
+use super::admission::{AdmissionGate, Decision};
+use super::breaker::{Admission, BreakerConfig, CircuitBreaker};
+use super::protocol::{Frame, FrameError, JobRecord, JobSpec, JobState, StatusReport};
+
+/// Server tuning.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Admission bound: jobs queued or executing at once.
+    pub queue_capacity: usize,
+    /// Executor threads draining the queue (0 = manual stepping via
+    /// [`Server::run_one`], which the tests and the recovery bench use).
+    pub executors: usize,
+    /// Worker threads in the shared task runtime.
+    pub workers: usize,
+    /// Retry hint handed out on queue-full rejections.
+    pub retry_after_ms: u64,
+    /// Circuit-breaker tuning (per task class = workload name).
+    pub breaker: BreakerConfig,
+    /// Base seed; each job runs with `seed ^ job_id`.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_capacity: 64,
+            executors: 2,
+            workers: 4,
+            retry_after_ms: 50,
+            breaker: BreakerConfig::default(),
+            seed: 0x1CE,
+        }
+    }
+}
+
+/// Terminal outcome of an accepted job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobOutcome {
+    pub job_id: u64,
+    /// Ran to completion with zero unrecovered launch errors.
+    pub ok: bool,
+    /// Workload final checksum as `f64` bits (for client-side
+    /// cross-validation against a known-good run).
+    pub checksum_bits: u64,
+    pub detail: String,
+}
+
+/// Why a submission was not accepted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    QueueFull,
+    BreakerOpen,
+    UnknownWorkload,
+    BadPolicy,
+    DuplicateInFlight,
+    JournalFailed,
+}
+
+impl RejectReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue full",
+            RejectReason::BreakerOpen => "circuit open",
+            RejectReason::UnknownWorkload => "unknown workload",
+            RejectReason::BadPolicy => "bad policy",
+            RejectReason::DuplicateInFlight => "duplicate job id in flight",
+            RejectReason::JournalFailed => "journal write failed",
+        }
+    }
+}
+
+/// Outcome of [`Server::submit`].
+#[derive(Debug)]
+pub enum SubmitResponse {
+    /// Journaled and queued; the future resolves with the outcome. If
+    /// the server is stopped before the job runs, the future resolves
+    /// with the broken-promise error — the job itself stays journaled
+    /// and completes after restart.
+    Accepted { future: Future<JobOutcome> },
+    /// This `job_id` already completed — cached outcome, no re-run.
+    AlreadyDone { outcome: JobOutcome },
+    /// Not accepted; nothing was journaled.
+    Rejected { reason: RejectReason, retry_after_ms: u64 },
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    accepted: AtomicU64,
+    completed_ok: AtomicU64,
+    failed: AtomicU64,
+    rejected_queue: AtomicU64,
+    rejected_breaker: AtomicU64,
+    rejected_other: AtomicU64,
+    executions: AtomicU64,
+    deduped: AtomicU64,
+    recovered_pending: AtomicU64,
+    recovered_done: AtomicU64,
+    journal_errors: AtomicU64,
+}
+
+/// Counter snapshot for benches and tests (the "counter algebra":
+/// `executions + deduped` accounts for every queue pop, and
+/// `completed_ok + failed == executions`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    pub submitted: u64,
+    pub accepted: u64,
+    pub completed_ok: u64,
+    pub failed: u64,
+    pub rejected_queue: u64,
+    pub rejected_breaker: u64,
+    pub rejected_other: u64,
+    pub executions: u64,
+    pub deduped: u64,
+    pub recovered_pending: u64,
+    pub recovered_done: u64,
+    pub journal_errors: u64,
+    /// Deepest the admission gate ever was (bounded-queue evidence; can
+    /// exceed capacity only via restart recovery).
+    pub queue_high_water: u64,
+}
+
+impl ServerStats {
+    /// Every rejection, whatever the layer.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_queue + self.rejected_breaker + self.rejected_other
+    }
+}
+
+struct Inner {
+    cfg: ServeConfig,
+    rt: Runtime,
+    gate: AdmissionGate,
+    breaker: CircuitBreaker,
+    journal: Arc<dyn SnapshotStore>,
+    queue: Mutex<VecDeque<JobSpec>>,
+    queue_cv: Condvar,
+    /// Queued-or-executing job ids — the duplicate guard for jobs that
+    /// have no cached outcome yet (including recovered ones).
+    pending_ids: Mutex<HashSet<u64>>,
+    waiters: Mutex<HashMap<u64, Promise<JobOutcome>>>,
+    results: Mutex<HashMap<u64, JobOutcome>>,
+    inflight: AtomicUsize,
+    counters: Counters,
+    shutdown: AtomicBool,
+    started: Instant,
+}
+
+fn journal_key(job_id: u64) -> String {
+    format!("job_{job_id}")
+}
+
+impl Inner {
+    fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    fn submit(&self, spec: JobSpec) -> SubmitResponse {
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+
+        // Validate before consuming any slot: a malformed request must
+        // not cost admission capacity.
+        if workloads::by_name(&spec.workload, spec.scale()).is_none() {
+            self.counters.rejected_other.fetch_add(1, Ordering::Relaxed);
+            return SubmitResponse::Rejected { reason: RejectReason::UnknownWorkload, retry_after_ms: 0 };
+        }
+        if !spec.policy.is_empty() && ExecPolicy::parse(&spec.policy).is_err() {
+            self.counters.rejected_other.fetch_add(1, Ordering::Relaxed);
+            return SubmitResponse::Rejected { reason: RejectReason::BadPolicy, retry_after_ms: 0 };
+        }
+
+        // Exactly-once: a completed job id answers from the cache…
+        if let Some(outcome) = self.results.lock().unwrap().get(&spec.job_id).cloned() {
+            return SubmitResponse::AlreadyDone { outcome };
+        }
+        // …and an in-flight one is never double-queued.
+        if self.pending_ids.lock().unwrap().contains(&spec.job_id) {
+            self.counters.rejected_other.fetch_add(1, Ordering::Relaxed);
+            return SubmitResponse::Rejected {
+                reason: RejectReason::DuplicateInFlight,
+                retry_after_ms: self.cfg.retry_after_ms,
+            };
+        }
+
+        // Containment layer 1: bounded queue depth.
+        match self.gate.try_admit() {
+            Decision::Rejected { retry_after_ms } => {
+                self.counters.rejected_queue.fetch_add(1, Ordering::Relaxed);
+                return SubmitResponse::Rejected { reason: RejectReason::QueueFull, retry_after_ms };
+            }
+            Decision::Admitted => {}
+        }
+
+        // Containment layer 2: per-class circuit breaker.
+        match self.breaker.allow(&spec.workload, self.now_ms()) {
+            Admission::Reject { retry_after_ticks } => {
+                self.gate.release();
+                self.counters.rejected_breaker.fetch_add(1, Ordering::Relaxed);
+                return SubmitResponse::Rejected {
+                    reason: RejectReason::BreakerOpen,
+                    retry_after_ms: retry_after_ticks,
+                };
+            }
+            Admission::Admit | Admission::Probe => {}
+        }
+
+        // Recovery layer: journal *before* acking. If the journal write
+        // fails the job was never accepted — undo both admissions.
+        let record = JobRecord { spec: spec.clone(), state: JobState::Accepted };
+        if self.journal.save(&journal_key(spec.job_id), &record.to_bytes()).is_err() {
+            self.gate.release();
+            self.breaker.abandon_probe(&spec.workload);
+            self.counters.journal_errors.fetch_add(1, Ordering::Relaxed);
+            self.counters.rejected_other.fetch_add(1, Ordering::Relaxed);
+            return SubmitResponse::Rejected {
+                reason: RejectReason::JournalFailed,
+                retry_after_ms: self.cfg.retry_after_ms,
+            };
+        }
+
+        let (promise, future) = Promise::new();
+        self.pending_ids.lock().unwrap().insert(spec.job_id);
+        self.waiters.lock().unwrap().insert(spec.job_id, promise);
+        self.counters.accepted.fetch_add(1, Ordering::Relaxed);
+        self.queue.lock().unwrap().push_back(spec);
+        self.queue_cv.notify_one();
+        SubmitResponse::Accepted { future }
+    }
+
+    /// Re-admit what a previous process journaled.
+    fn recover(&self) {
+        for key in self.journal.keys() {
+            if !key.starts_with("job_") {
+                continue;
+            }
+            let Some(bytes) = self.journal.load(&key) else { continue };
+            let Some(record) = JobRecord::from_bytes(&bytes) else {
+                // A corrupt journal entry is counted, not trusted.
+                self.counters.journal_errors.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
+            match record.state {
+                JobState::Done { ok, checksum_bits } => {
+                    self.results.lock().unwrap().insert(
+                        record.spec.job_id,
+                        JobOutcome {
+                            job_id: record.spec.job_id,
+                            ok,
+                            checksum_bits,
+                            detail: "recovered".into(),
+                        },
+                    );
+                    self.counters.recovered_done.fetch_add(1, Ordering::Relaxed);
+                }
+                JobState::Accepted => {
+                    // Already accepted once — re-enter even past the cap
+                    // rather than drop acked work.
+                    self.gate.admit_unchecked();
+                    self.pending_ids.lock().unwrap().insert(record.spec.job_id);
+                    self.counters.recovered_pending.fetch_add(1, Ordering::Relaxed);
+                    self.queue.lock().unwrap().push_back(record.spec);
+                }
+            }
+        }
+        self.queue_cv.notify_all();
+    }
+
+    /// Pop one job if available (never blocks).
+    fn pop(&self) -> Option<JobSpec> {
+        let spec = self.queue.lock().unwrap().pop_front()?;
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        Some(spec)
+    }
+
+    /// Run one popped job to completion and settle every layer.
+    fn execute(&self, spec: JobSpec) {
+        let outcome = if let Some(record) = self
+            .journal
+            .load(&journal_key(spec.job_id))
+            .and_then(|b| JobRecord::from_bytes(&b))
+            .filter(|r| matches!(r.state, JobState::Done { .. }))
+        {
+            // Journal says Done (a restart raced a duplicate): dedup.
+            self.counters.deduped.fetch_add(1, Ordering::Relaxed);
+            let JobState::Done { ok, checksum_bits } = record.state else { unreachable!() };
+            JobOutcome { job_id: spec.job_id, ok, checksum_bits, detail: "deduplicated".into() }
+        } else {
+            self.counters.executions.fetch_add(1, Ordering::Relaxed);
+            let outcome = self.run_workload(&spec);
+            let record = JobRecord {
+                spec: spec.clone(),
+                state: JobState::Done { ok: outcome.ok, checksum_bits: outcome.checksum_bits },
+            };
+            if self.journal.save(&journal_key(spec.job_id), &record.to_bytes()).is_err() {
+                // The run stands; a restart may re-run this job (at-least
+                // -once at this boundary, by design).
+                self.counters.journal_errors.fetch_add(1, Ordering::Relaxed);
+            }
+            let now = self.now_ms();
+            if outcome.ok {
+                self.breaker.on_success(&spec.workload, now);
+                self.counters.completed_ok.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.breaker.on_failure(&spec.workload, now);
+                self.counters.failed.fetch_add(1, Ordering::Relaxed);
+            }
+            outcome
+        };
+
+        self.results.lock().unwrap().insert(spec.job_id, outcome.clone());
+        self.pending_ids.lock().unwrap().remove(&spec.job_id);
+        if let Some(promise) = self.waiters.lock().unwrap().remove(&spec.job_id) {
+            promise.set_value(outcome);
+        }
+        self.gate.release();
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    fn run_workload(&self, spec: &JobSpec) -> JobOutcome {
+        let Some(w) = workloads::by_name(&spec.workload, spec.scale()) else {
+            // Validated at submit; a recovered record could still name a
+            // workload this build no longer has.
+            return JobOutcome {
+                job_id: spec.job_id,
+                ok: false,
+                checksum_bits: 0,
+                detail: "unknown workload".into(),
+            };
+        };
+        let resilience = if spec.policy.is_empty() {
+            None
+        } else {
+            match ExecPolicy::parse(&spec.policy) {
+                Ok(p) => Some(p),
+                Err(_) => {
+                    return JobOutcome {
+                        job_id: spec.job_id,
+                        ok: false,
+                        checksum_bits: 0,
+                        detail: "bad policy".into(),
+                    }
+                }
+            }
+        };
+        let p = spec.error_prob();
+        let params = RunParams {
+            resilience,
+            error_rate: (p > 0.0).then(|| -p.ln()),
+            seed: self.cfg.seed ^ spec.job_id,
+            ..RunParams::default()
+        };
+        match workloads::run(&self.rt, w.as_ref(), &params) {
+            Ok((_, report)) => {
+                let ok = report.launch_errors == 0;
+                JobOutcome {
+                    job_id: spec.job_id,
+                    ok,
+                    checksum_bits: report.final_checksum.to_bits(),
+                    detail: format!(
+                        "{} {}",
+                        report.mode,
+                        if ok { "ok" } else { "degraded" }
+                    ),
+                }
+            }
+            Err(e) => JobOutcome {
+                job_id: spec.job_id,
+                ok: false,
+                checksum_bits: 0,
+                detail: e.to_string(),
+            },
+        }
+    }
+
+    fn status(&self) -> StatusReport {
+        let s = self.stats();
+        StatusReport {
+            submitted: s.submitted,
+            accepted: s.accepted,
+            completed: s.completed_ok + s.deduped,
+            failed: s.failed,
+            rejected_queue: s.rejected_queue,
+            rejected_breaker: s.rejected_breaker,
+            queue_depth: self.gate.depth() as u64,
+            queue_capacity: self.gate.capacity() as u64,
+        }
+    }
+
+    fn stats(&self) -> ServerStats {
+        let c = &self.counters;
+        ServerStats {
+            submitted: c.submitted.load(Ordering::Relaxed),
+            accepted: c.accepted.load(Ordering::Relaxed),
+            completed_ok: c.completed_ok.load(Ordering::Relaxed),
+            failed: c.failed.load(Ordering::Relaxed),
+            rejected_queue: c.rejected_queue.load(Ordering::Relaxed),
+            rejected_breaker: c.rejected_breaker.load(Ordering::Relaxed),
+            rejected_other: c.rejected_other.load(Ordering::Relaxed),
+            executions: c.executions.load(Ordering::Relaxed),
+            deduped: c.deduped.load(Ordering::Relaxed),
+            recovered_pending: c.recovered_pending.load(Ordering::Relaxed),
+            recovered_done: c.recovered_done.load(Ordering::Relaxed),
+            journal_errors: c.journal_errors.load(Ordering::Relaxed),
+            queue_high_water: self.gate.counters().2 as u64,
+        }
+    }
+}
+
+/// The `rhpx serve` daemon, transport-free core. TCP is one adapter
+/// ([`Server::listen`]); tests drive [`Server::submit`] and
+/// [`Server::handle_frame`] directly as an in-memory transport.
+pub struct Server {
+    inner: Arc<Inner>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Server {
+    /// Start a server over `journal`, recover journaled work from a
+    /// previous process, and spawn the executor threads.
+    pub fn start(cfg: ServeConfig, journal: Arc<dyn SnapshotStore>) -> Server {
+        let rt = Runtime::builder().workers(cfg.workers.max(1)).build();
+        let inner = Arc::new(Inner {
+            gate: AdmissionGate::new(cfg.queue_capacity, cfg.retry_after_ms),
+            breaker: CircuitBreaker::new(cfg.breaker.clone()),
+            cfg,
+            rt,
+            journal,
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            pending_ids: Mutex::new(HashSet::new()),
+            waiters: Mutex::new(HashMap::new()),
+            results: Mutex::new(HashMap::new()),
+            inflight: AtomicUsize::new(0),
+            counters: Counters::default(),
+            shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+        });
+        inner.recover();
+        let mut threads = Vec::new();
+        for i in 0..inner.cfg.executors {
+            let inner = Arc::clone(&inner);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("rhpx-serve-exec-{i}"))
+                    .spawn(move || executor_loop(&inner))
+                    .expect("spawn executor thread"),
+            );
+        }
+        Server { inner, threads: Mutex::new(threads) }
+    }
+
+    /// Submit a job (the in-memory transport).
+    pub fn submit(&self, spec: JobSpec) -> SubmitResponse {
+        self.inner.submit(spec)
+    }
+
+    /// Protocol adapter: answer one client frame. `Submit` answers with
+    /// `Ack`/`Result`/`Reject` plus (for fresh acceptances) the future
+    /// the transport should watch to send the eventual `Result` frame.
+    pub fn handle_frame(&self, frame: &Frame) -> (Frame, Option<Future<JobOutcome>>) {
+        match frame {
+            Frame::Submit(spec) => {
+                let job_id = spec.job_id;
+                match self.inner.submit(spec.clone()) {
+                    SubmitResponse::Accepted { future } => (Frame::Ack { job_id }, Some(future)),
+                    SubmitResponse::AlreadyDone { outcome } => (result_frame(&outcome), None),
+                    SubmitResponse::Rejected { reason, retry_after_ms } => (
+                        Frame::Reject {
+                            job_id,
+                            retry_after_ms,
+                            reason: reason.as_str().to_string(),
+                        },
+                        None,
+                    ),
+                }
+            }
+            Frame::Status(_) => (Frame::Status(self.inner.status()), None),
+            other => {
+                // Server-to-client frames arriving at the server are a
+                // client bug, answered explicitly rather than dropped.
+                let job_id = match other {
+                    Frame::Ack { job_id } | Frame::Result { job_id, .. } | Frame::Reject { job_id, .. } => {
+                        *job_id
+                    }
+                    _ => 0,
+                };
+                (
+                    Frame::Reject { job_id, retry_after_ms: 0, reason: "unexpected frame".into() },
+                    None,
+                )
+            }
+        }
+    }
+
+    /// Execute one queued job on the calling thread; false if the queue
+    /// is empty. Manual stepping for tests and the recovery bench
+    /// (`executors: 0`).
+    pub fn run_one(&self) -> bool {
+        match self.inner.pop() {
+            Some(spec) => {
+                self.inner.execute(spec);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Cached outcome of a completed job.
+    pub fn outcome(&self, job_id: u64) -> Option<JobOutcome> {
+        self.inner.results.lock().unwrap().get(&job_id).cloned()
+    }
+
+    /// Queued + executing jobs.
+    pub fn pending(&self) -> usize {
+        self.inner.queue.lock().unwrap().len() + self.inner.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Block until the queue drains (true) or `timeout` elapses (false).
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while self.pending() > 0 {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        true
+    }
+
+    pub fn status(&self) -> StatusReport {
+        self.inner.status()
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.inner.stats()
+    }
+
+    /// Stop accepting and executing: executor threads finish their
+    /// current job and exit, queued jobs stay journaled as `Accepted`
+    /// (a restart picks them up) and their futures resolve with the
+    /// broken-promise error. This is the test harness's "kill the
+    /// daemon mid-flight".
+    pub fn stop(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.queue_cv.notify_all();
+        let threads: Vec<_> = self.threads.lock().unwrap().drain(..).collect();
+        for t in threads {
+            let _ = t.join();
+        }
+        // Unexecuted jobs: drop their promises so waiting clients see
+        // the broken-promise error instead of hanging.
+        self.inner.waiters.lock().unwrap().clear();
+    }
+
+    /// Bind `addr` and serve the framed protocol; returns the bound
+    /// address (so `:0` works in tests) and the acceptor handle, which
+    /// exits shortly after [`Server::stop`].
+    pub fn listen(&self, addr: &str) -> std::io::Result<(SocketAddr, std::thread::JoinHandle<()>)> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let inner = Arc::clone(&self.inner);
+        let handle = std::thread::Builder::new()
+            .name("rhpx-serve-accept".into())
+            .spawn(move || {
+                while !inner.shutdown.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            // A thread-less Server wrapper: connections
+                            // share the core but own no executors.
+                            let conn = Server {
+                                inner: Arc::clone(&inner),
+                                threads: Mutex::new(Vec::new()),
+                            };
+                            let _ = std::thread::Builder::new()
+                                .name("rhpx-serve-conn".into())
+                                .spawn(move || handle_connection(&conn, stream));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok((local, handle))
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Only the executor-owning instance has threads to stop; the
+        // per-connection clones carry none.
+        if !self.threads.lock().unwrap().is_empty() {
+            self.stop();
+        }
+    }
+}
+
+fn result_frame(outcome: &JobOutcome) -> Frame {
+    Frame::Result {
+        job_id: outcome.job_id,
+        ok: outcome.ok,
+        checksum_bits: outcome.checksum_bits,
+        detail: outcome.detail.clone(),
+    }
+}
+
+fn executor_loop(inner: &Arc<Inner>) {
+    loop {
+        let spec = {
+            let mut queue = inner.queue.lock().unwrap();
+            loop {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    // Deliberately abandons the queue: pending jobs stay
+                    // journaled for the next incarnation.
+                    return;
+                }
+                if let Some(spec) = queue.pop_front() {
+                    inner.inflight.fetch_add(1, Ordering::SeqCst);
+                    break spec;
+                }
+                let (q, _) =
+                    inner.queue_cv.wait_timeout(queue, Duration::from_millis(50)).unwrap();
+                queue = q;
+            }
+        };
+        inner.execute(spec);
+    }
+}
+
+/// One client connection: accumulate bytes, decode frames, dispatch,
+/// stream back `Result` frames as accepted jobs finish.
+fn handle_connection(server: &Server, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut watched: Vec<Future<JobOutcome>> = Vec::new();
+    loop {
+        if server.inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // Flush outcomes whose futures resolved since the last pass.
+        let mut i = 0;
+        while i < watched.len() {
+            if watched[i].is_ready() {
+                let f = watched.swap_remove(i);
+                let reply = match f.get() {
+                    Ok(outcome) => result_frame(&outcome),
+                    // Broken promise: the server stopped before running
+                    // the job; the client reconnects after restart.
+                    Err(e) => Frame::Reject {
+                        job_id: 0,
+                        retry_after_ms: 0,
+                        reason: format!("job interrupted: {e}"),
+                    },
+                };
+                if writer.write_all(&reply.encode()).is_err() {
+                    return;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        match reader.read(&mut chunk) {
+            Ok(0) => return, // client hung up
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        }
+        loop {
+            match Frame::decode(&buf) {
+                Ok((frame, consumed)) => {
+                    buf.drain(..consumed);
+                    let (reply, future) = server.handle_frame(&frame);
+                    if let Some(f) = future {
+                        watched.push(f);
+                    }
+                    if writer.write_all(&reply.encode()).is_err() {
+                        return;
+                    }
+                }
+                Err(FrameError::Truncated { .. }) => break, // need more bytes
+                Err(e) => {
+                    // Framing is lost: answer once, then drop the
+                    // connection (resynchronizing a corrupt byte stream
+                    // is not possible with length-prefixed frames).
+                    let reply = Frame::Reject {
+                        job_id: 0,
+                        retry_after_ms: 0,
+                        reason: format!("protocol error: {e}"),
+                    };
+                    let _ = writer.write_all(&reply.encode());
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::MemorySnapshotStore;
+
+    fn quick_cfg(executors: usize) -> ServeConfig {
+        ServeConfig {
+            queue_capacity: 8,
+            executors,
+            workers: 2,
+            retry_after_ms: 5,
+            breaker: BreakerConfig { failure_threshold: 2, ..BreakerConfig::default() },
+            seed: 0x1CE,
+        }
+    }
+
+    fn spec(job_id: u64, workload: &str, error_prob_pct: u32) -> JobSpec {
+        JobSpec {
+            job_id,
+            workload: workload.into(),
+            policy: String::new(),
+            scale_milli: 100,
+            error_prob_pct,
+        }
+    }
+
+    #[test]
+    fn submit_executes_and_resolves_the_future() {
+        let server = Server::start(quick_cfg(1), Arc::new(MemorySnapshotStore::new()));
+        let SubmitResponse::Accepted { future } = server.submit(spec(1, "stencil1d", 0)) else {
+            panic!("expected acceptance");
+        };
+        let outcome = future.get().expect("job completes");
+        assert!(outcome.ok, "{outcome:?}");
+        assert_eq!(outcome.job_id, 1);
+        assert!(server.drain(Duration::from_secs(10)));
+        let stats = server.stats();
+        assert_eq!(stats.accepted, 1);
+        assert_eq!(stats.executions, 1);
+        assert_eq!(stats.completed_ok, 1);
+        server.stop();
+    }
+
+    #[test]
+    fn duplicate_completed_job_answers_from_cache() {
+        let server = Server::start(quick_cfg(0), Arc::new(MemorySnapshotStore::new()));
+        assert!(matches!(
+            server.submit(spec(5, "forkjoin", 0)),
+            SubmitResponse::Accepted { .. }
+        ));
+        assert!(server.run_one());
+        let first = server.outcome(5).expect("completed");
+        match server.submit(spec(5, "forkjoin", 0)) {
+            SubmitResponse::AlreadyDone { outcome } => assert_eq!(outcome, first),
+            other => panic!("expected cached outcome, got {other:?}"),
+        }
+        assert_eq!(server.stats().executions, 1, "no re-execution");
+    }
+
+    #[test]
+    fn duplicate_in_flight_is_rejected_not_requeued() {
+        let server = Server::start(quick_cfg(0), Arc::new(MemorySnapshotStore::new()));
+        assert!(matches!(server.submit(spec(9, "stream", 0)), SubmitResponse::Accepted { .. }));
+        match server.submit(spec(9, "stream", 0)) {
+            SubmitResponse::Rejected { reason, .. } => {
+                assert_eq!(reason, RejectReason::DuplicateInFlight)
+            }
+            other => panic!("expected duplicate rejection, got {other:?}"),
+        }
+        assert_eq!(server.pending(), 1);
+    }
+
+    #[test]
+    fn queue_full_rejects_with_backpressure() {
+        let cfg = ServeConfig { queue_capacity: 2, ..quick_cfg(0) };
+        let server = Server::start(cfg, Arc::new(MemorySnapshotStore::new()));
+        assert!(matches!(server.submit(spec(1, "stencil1d", 0)), SubmitResponse::Accepted { .. }));
+        assert!(matches!(server.submit(spec(2, "stencil1d", 0)), SubmitResponse::Accepted { .. }));
+        match server.submit(spec(3, "stencil1d", 0)) {
+            SubmitResponse::Rejected { reason, retry_after_ms } => {
+                assert_eq!(reason, RejectReason::QueueFull);
+                assert_eq!(retry_after_ms, 5);
+            }
+            other => panic!("expected queue-full rejection, got {other:?}"),
+        }
+        // The rejected job was never journaled: nothing to recover.
+        assert!(!server.inner.journal.contains(&journal_key(3)));
+    }
+
+    #[test]
+    fn malformed_submissions_cost_no_capacity() {
+        let cfg = ServeConfig { queue_capacity: 1, ..quick_cfg(0) };
+        let server = Server::start(cfg, Arc::new(MemorySnapshotStore::new()));
+        match server.submit(spec(1, "no-such-workload", 0)) {
+            SubmitResponse::Rejected { reason, .. } => {
+                assert_eq!(reason, RejectReason::UnknownWorkload)
+            }
+            other => panic!("{other:?}"),
+        }
+        let mut bad = spec(2, "stencil1d", 0);
+        bad.policy = "replay:zero".into();
+        match server.submit(bad) {
+            SubmitResponse::Rejected { reason, .. } => assert_eq!(reason, RejectReason::BadPolicy),
+            other => panic!("{other:?}"),
+        }
+        // The single slot is still free.
+        assert!(matches!(server.submit(spec(3, "stencil1d", 0)), SubmitResponse::Accepted { .. }));
+    }
+
+    #[test]
+    fn failing_class_trips_the_breaker_and_healthy_class_still_runs() {
+        let cfg = ServeConfig {
+            breaker: BreakerConfig {
+                failure_threshold: 2,
+                cooldown_ticks: 60_000, // stays open for the whole test
+                jitter_ticks: 0,
+                ..BreakerConfig::default()
+            },
+            ..quick_cfg(0)
+        };
+        let server = Server::start(cfg, Arc::new(MemorySnapshotStore::new()));
+        // error_prob 99%: with no resilience policy the run fails.
+        for id in 1..=2 {
+            assert!(matches!(
+                server.submit(spec(id, "stencil1d", 99)),
+                SubmitResponse::Accepted { .. }
+            ));
+            assert!(server.run_one());
+        }
+        assert_eq!(server.stats().failed, 2);
+        match server.submit(spec(3, "stencil1d", 0)) {
+            SubmitResponse::Rejected { reason, retry_after_ms } => {
+                assert_eq!(reason, RejectReason::BreakerOpen);
+                assert!(retry_after_ms > 0, "retry hint carries the cooldown");
+            }
+            other => panic!("expected breaker rejection, got {other:?}"),
+        }
+        // Another class is unaffected, and a replay policy makes the
+        // same faulty class survivable.
+        assert!(matches!(server.submit(spec(4, "forkjoin", 0)), SubmitResponse::Accepted { .. }));
+        assert_eq!(server.stats().rejected_breaker, 1);
+    }
+
+    #[test]
+    fn restart_recovers_pending_and_done_jobs() {
+        let journal: Arc<MemorySnapshotStore> = Arc::new(MemorySnapshotStore::new());
+        let first = Server::start(quick_cfg(0), Arc::clone(&journal) as Arc<dyn SnapshotStore>);
+        for id in 1..=3 {
+            assert!(matches!(
+                first.submit(spec(id, "forkjoin", 0)),
+                SubmitResponse::Accepted { .. }
+            ));
+        }
+        assert!(first.run_one()); // job 1 completes, 2 and 3 stay pending
+        first.stop();
+        drop(first);
+
+        let second = Server::start(quick_cfg(0), journal as Arc<dyn SnapshotStore>);
+        let stats = second.stats();
+        assert_eq!(stats.recovered_done, 1);
+        assert_eq!(stats.recovered_pending, 2);
+        assert_eq!(second.pending(), 2);
+        assert!(second.outcome(1).is_some(), "done job answers from cache");
+        while second.run_one() {}
+        assert_eq!(second.stats().executions, 2, "each pending job runs exactly once");
+        for id in 1..=3 {
+            assert!(second.outcome(id).expect("completed").ok);
+        }
+    }
+
+    #[test]
+    fn status_and_frame_adapter_roundtrip() {
+        let server = Server::start(quick_cfg(0), Arc::new(MemorySnapshotStore::new()));
+        let (reply, f) = server.handle_frame(&Frame::Submit(spec(1, "stencil1d", 0)));
+        assert_eq!(reply, Frame::Ack { job_id: 1 });
+        assert!(f.is_some());
+        let (reply, f) = server.handle_frame(&Frame::Status(StatusReport::default()));
+        assert!(f.is_none());
+        let Frame::Status(s) = reply else { panic!("expected status") };
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.accepted, 1);
+        assert_eq!(s.queue_depth, 1);
+        // A server-to-client frame sent by a client is answered, typed.
+        let (reply, _) = server.handle_frame(&Frame::Ack { job_id: 7 });
+        assert!(matches!(reply, Frame::Reject { job_id: 7, .. }));
+    }
+}

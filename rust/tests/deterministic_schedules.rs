@@ -26,6 +26,7 @@ use std::sync::{Arc, Mutex};
 
 use rhpx::resilience::ReplicaTeam;
 use rhpx::scheduler::{Injector, Lineage, LineageLedger, WorkQueue};
+use rhpx::serve::{Admission, AdmissionGate, BreakerConfig, CircuitBreaker, Decision};
 use rhpx::testing::det::{step, Interleaver};
 use rhpx::TaskError;
 
@@ -333,6 +334,216 @@ fn det_kill_drain_before_claim_wins_the_epoch() {
     assert!(executed.borrow().is_empty(), "a drained epoch must not execute on the corpse");
     assert_eq!(*relaunched.lock().unwrap(), vec![0, 1, 2, 3]);
     assert!(ledger.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Circuit breaker: Open → HalfOpen transitions on the virtual clock
+// ---------------------------------------------------------------------
+
+/// Breaker tuning for scripted tests: trips on the second failure,
+/// 3-tick base cooldown, zero jitter so every retry hint is exact.
+fn scripted_breaker() -> CircuitBreaker {
+    CircuitBreaker::new(BreakerConfig {
+        failure_threshold: 2,
+        cooldown_ticks: 3,
+        max_doublings: 4,
+        jitter_ticks: 0,
+        seed: 1,
+    })
+}
+
+#[test]
+fn det_breaker_opens_then_halfopens_only_after_the_cooldown_tick() {
+    let br = scripted_breaker();
+    let admissions: RefCell<Vec<Admission>> = RefCell::new(Vec::new());
+
+    let mut il = Interleaver::new();
+    il.spawn(
+        "service",
+        vec![
+            step(|clock| br.on_failure("stencil1d", clock.now())),
+            step(|clock| br.on_failure("stencil1d", clock.now())),
+        ],
+    );
+    il.spawn(
+        "client",
+        vec![
+            // Tick 0 (just tripped, until = 3): rejected, full cooldown.
+            step(|clock| {
+                admissions.borrow_mut().push(br.allow("stencil1d", clock.now()));
+                clock.advance(2);
+            }),
+            // Tick 2: still open, hint counts down.
+            step(|clock| {
+                admissions.borrow_mut().push(br.allow("stencil1d", clock.now()));
+                clock.advance(1);
+            }),
+            // Tick 3, exactly the cooldown boundary: the probe slot.
+            step(|clock| {
+                admissions.borrow_mut().push(br.allow("stencil1d", clock.now()));
+            }),
+        ],
+    );
+
+    il.run_script("service service client client client").unwrap();
+
+    assert_eq!(
+        *admissions.borrow(),
+        vec![
+            Admission::Reject { retry_after_ticks: 3 },
+            Admission::Reject { retry_after_ticks: 1 },
+            Admission::Probe,
+        ],
+        "Open admits nothing before the cooldown tick, the probe exactly at it"
+    );
+    assert!(!br.is_open("other", u64::MAX), "classes stay independent");
+}
+
+#[test]
+fn det_breaker_probe_success_vs_rival_both_interleavings() {
+    // Interleaving A: the rival's request lands while the probe is
+    // still in flight — it must be rejected, one probe at a time.
+    // Interleaving B: the rival lands after the probe's success — the
+    // class is Closed again and the rival is admitted.
+    for (script, expect_rival) in [
+        (
+            "probe rival settle rival",
+            vec![
+                Admission::Reject { retry_after_ticks: 3 },
+                Admission::Admit,
+            ],
+        ),
+        ("probe settle rival rival", vec![Admission::Admit, Admission::Admit]),
+    ] {
+        let br = scripted_breaker();
+        br.on_failure("w", 0);
+        br.on_failure("w", 0); // Open until tick 3
+        let rival_saw: RefCell<Vec<Admission>> = RefCell::new(Vec::new());
+        let probe_got: RefCell<Option<Admission>> = RefCell::new(None);
+
+        let mut il = Interleaver::new();
+        il.spawn("probe", {
+            let br = &br;
+            let probe_got = &probe_got;
+            vec![step(move |clock| {
+                clock.advance(3); // cooldown elapses
+                *probe_got.borrow_mut() = Some(br.allow("w", clock.now()));
+            })]
+        });
+        il.spawn("settle", {
+            let br = &br;
+            vec![step(move |clock| br.on_success("w", clock.now()))]
+        });
+        il.spawn("rival", {
+            let br = &br;
+            let rival_saw = &rival_saw;
+            (0..2)
+                .map(|_| {
+                    step(move |clock| {
+                        rival_saw.borrow_mut().push(br.allow("w", clock.now()));
+                    })
+                })
+                .collect::<Vec<_>>()
+        });
+
+        il.run_script(script).unwrap();
+
+        assert_eq!(*probe_got.borrow(), Some(Admission::Probe), "script {script:?}");
+        assert_eq!(*rival_saw.borrow(), expect_rival, "script {script:?}");
+        assert_eq!(br.opens("w"), 0, "probe success resets the backoff ({script:?})");
+    }
+}
+
+#[test]
+fn det_breaker_probe_failure_reopens_with_doubled_cooldown() {
+    let br = scripted_breaker();
+    let outcomes: RefCell<Vec<Admission>> = RefCell::new(Vec::new());
+
+    let mut il = Interleaver::new();
+    il.spawn(
+        "service",
+        vec![
+            step(|clock| br.on_failure("w", clock.now())),
+            step(|clock| br.on_failure("w", clock.now())), // trip #1: until 3
+            step(|clock| br.on_failure("w", clock.now())), // probe fails → trip #2
+        ],
+    );
+    il.spawn(
+        "client",
+        vec![
+            step(|clock| {
+                clock.advance(3);
+                outcomes.borrow_mut().push(br.allow("w", clock.now())); // the probe
+            }),
+            // Right after the failed probe: cooldown doubled to 6,
+            // so the hint from tick 3 is the full 6 ticks.
+            step(|clock| {
+                outcomes.borrow_mut().push(br.allow("w", clock.now()));
+                clock.advance(6);
+            }),
+            // Tick 9 = 3 + 6: the doubled cooldown elapses, next probe.
+            step(|clock| {
+                outcomes.borrow_mut().push(br.allow("w", clock.now()));
+            }),
+        ],
+    );
+
+    il.run_script("service service client service client client").unwrap();
+
+    assert_eq!(
+        *outcomes.borrow(),
+        vec![
+            Admission::Probe,
+            Admission::Reject { retry_after_ticks: 6 },
+            Admission::Probe,
+        ],
+        "probe failure reopens at exactly double the base cooldown"
+    );
+    assert_eq!(br.opens("w"), 2, "two trips: the original and the failed probe");
+}
+
+// ---------------------------------------------------------------------
+// Admission gate: two clients racing the last slot, both orders
+// ---------------------------------------------------------------------
+
+#[test]
+fn det_admission_last_slot_race_admits_exactly_one() {
+    for script in ["a b", "b a"] {
+        let gate = AdmissionGate::new(3, 7);
+        assert!(matches!(gate.try_admit(), Decision::Admitted));
+        assert!(matches!(gate.try_admit(), Decision::Admitted)); // 1 slot left
+
+        let decisions: RefCell<Vec<(&'static str, Decision)>> = RefCell::new(Vec::new());
+        let mut il = Interleaver::new();
+        for name in ["a", "b"] {
+            let gate = &gate;
+            let decisions = &decisions;
+            il.spawn(
+                name,
+                vec![step(move |_| {
+                    decisions.borrow_mut().push((name, gate.try_admit()));
+                })],
+            );
+        }
+        il.run_script(script).unwrap();
+
+        let decisions = decisions.borrow();
+        let admitted: Vec<&str> =
+            decisions.iter().filter(|(_, d)| matches!(d, Decision::Admitted)).map(|(n, _)| *n).collect();
+        let rejected: Vec<&str> = decisions
+            .iter()
+            .filter(|(_, d)| matches!(d, Decision::Rejected { retry_after_ms: 7 }))
+            .map(|(n, _)| *n)
+            .collect();
+        let first = script.split(' ').next().unwrap();
+        assert_eq!(admitted, vec![first], "script {script:?}: first requester takes the last slot");
+        assert_eq!(rejected.len(), 1, "script {script:?}: the loser gets typed backpressure");
+        assert_eq!(gate.depth(), 3, "gate is full either way");
+
+        // Releasing one slot re-opens admission — backpressure, not ban.
+        gate.release();
+        assert!(matches!(gate.try_admit(), Decision::Admitted));
+    }
 }
 
 // ---------------------------------------------------------------------

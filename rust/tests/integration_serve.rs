@@ -1,0 +1,249 @@
+//! Integration: the `rhpx serve` daemon end to end — crash-restart with
+//! exactly-once completion of all accepted work (the ISSUE's headline
+//! invariant), and the framed protocol over a real TCP loopback socket.
+//!
+//! The crash is in-process: `Server::stop` + drop abandons the queue
+//! exactly the way a killed daemon would, leaving the journal as the
+//! only survivor. The counter algebra from the lineage-ledger work
+//! (executions across both lives == accepted jobs, deduped == 0,
+//! every id has exactly one cached outcome) is what "exactly once"
+//! means here.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use rhpx::checkpoint::{MemorySnapshotStore, SnapshotStore};
+use rhpx::serve::{
+    BreakerConfig, Frame, JobSpec, ServeConfig, Server, StatusReport, SubmitResponse,
+};
+
+fn spec(job_id: u64, workload: &str) -> JobSpec {
+    JobSpec {
+        job_id,
+        workload: workload.into(),
+        policy: String::new(),
+        scale_milli: 100,
+        error_prob_pct: 0,
+    }
+}
+
+fn manual_cfg() -> ServeConfig {
+    ServeConfig {
+        queue_capacity: 16,
+        executors: 0, // manual stepping: we control exactly when jobs run
+        workers: 2,
+        retry_after_ms: 5,
+        breaker: BreakerConfig::default(),
+        seed: 0x1CE,
+    }
+}
+
+/// Accept K jobs, run some, kill the daemon mid-flight, restart over the
+/// same journal: every accepted job completes exactly once, nothing
+/// un-acked sneaks in, nothing acked is dropped.
+#[test]
+fn crash_restart_completes_every_accepted_job_exactly_once() {
+    const K: u64 = 8;
+    const RAN_BEFORE_CRASH: u64 = 3;
+
+    let journal: Arc<MemorySnapshotStore> = Arc::new(MemorySnapshotStore::new());
+    let first = Server::start(manual_cfg(), Arc::clone(&journal) as Arc<dyn SnapshotStore>);
+
+    let mut futures = Vec::new();
+    for id in 1..=K {
+        match first.submit(spec(id, if id % 2 == 0 { "forkjoin" } else { "stencil1d" })) {
+            SubmitResponse::Accepted { future } => futures.push((id, future)),
+            other => panic!("job {id} not accepted: {other:?}"),
+        }
+    }
+    // A rejected submission must leave no journal trace to recover.
+    assert!(matches!(
+        first.submit(spec(99, "no-such-workload")),
+        SubmitResponse::Rejected { .. }
+    ));
+
+    for _ in 0..RAN_BEFORE_CRASH {
+        assert!(first.run_one());
+    }
+    let before = first.stats();
+    assert_eq!(before.accepted, K);
+    assert_eq!(before.executions, RAN_BEFORE_CRASH);
+    assert_eq!(first.pending() as u64, K - RAN_BEFORE_CRASH);
+
+    // The crash: stop mid-flight and drop. Clients waiting on unfinished
+    // jobs observe the broken promise, never a silent hang.
+    first.stop();
+    for (id, future) in futures {
+        let done_before_crash = id <= RAN_BEFORE_CRASH;
+        assert_eq!(
+            future.get().is_ok(),
+            done_before_crash,
+            "job {id}: finished jobs resolve, interrupted ones error"
+        );
+    }
+    drop(first);
+
+    // Restart from the journal alone.
+    let second = Server::start(manual_cfg(), Arc::clone(&journal) as Arc<dyn SnapshotStore>);
+    let after_recover = second.stats();
+    assert_eq!(after_recover.recovered_done, RAN_BEFORE_CRASH);
+    assert_eq!(after_recover.recovered_pending, K - RAN_BEFORE_CRASH);
+    assert!(second.outcome(99).is_none(), "rejected job was never journaled");
+    for id in 1..=RAN_BEFORE_CRASH {
+        assert!(second.outcome(id).is_some(), "done job {id} answers from cache, not re-run");
+    }
+
+    while second.run_one() {}
+
+    // Exactly once, by counter algebra across both lives.
+    let after = second.stats();
+    assert_eq!(
+        before.executions + after.executions,
+        K,
+        "every accepted job ran exactly once across both incarnations"
+    );
+    assert_eq!(after.deduped, 0);
+    for id in 1..=K {
+        let outcome = second.outcome(id).unwrap_or_else(|| panic!("job {id} silently dropped"));
+        assert!(outcome.ok, "job {id}: {outcome:?}");
+    }
+
+    // Resubmitting any completed id answers from the cache without
+    // touching the executor.
+    for id in 1..=K {
+        assert!(matches!(
+            second.submit(spec(id, "stencil1d")),
+            SubmitResponse::AlreadyDone { .. }
+        ));
+    }
+    assert_eq!(second.stats().executions, after.executions, "no re-execution on resubmit");
+    second.stop();
+}
+
+/// A second crash while recovered jobs are still queued must not
+/// double-run anything: Accepted journal records are idempotent.
+#[test]
+fn double_crash_still_exactly_once() {
+    let journal: Arc<MemorySnapshotStore> = Arc::new(MemorySnapshotStore::new());
+
+    let first = Server::start(manual_cfg(), Arc::clone(&journal) as Arc<dyn SnapshotStore>);
+    for id in 1..=4 {
+        assert!(matches!(first.submit(spec(id, "stream")), SubmitResponse::Accepted { .. }));
+    }
+    first.stop();
+    drop(first);
+
+    // Second life: recover, run one, crash again.
+    let second = Server::start(manual_cfg(), Arc::clone(&journal) as Arc<dyn SnapshotStore>);
+    assert_eq!(second.stats().recovered_pending, 4);
+    assert!(second.run_one());
+    second.stop();
+    drop(second);
+
+    // Third life: only the three unfinished jobs come back as pending.
+    let third = Server::start(manual_cfg(), Arc::clone(&journal) as Arc<dyn SnapshotStore>);
+    let stats = third.stats();
+    assert_eq!(stats.recovered_done, 1);
+    assert_eq!(stats.recovered_pending, 3);
+    while third.run_one() {}
+    assert_eq!(third.stats().executions, 3);
+    for id in 1..=4 {
+        assert!(third.outcome(id).expect("completed").ok);
+    }
+    third.stop();
+}
+
+/// Read frames off a blocking client socket until `want` frames arrived
+/// or the deadline passes.
+fn read_frames(stream: &mut TcpStream, want: usize) -> Vec<Frame> {
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let mut buf = Vec::new();
+    let mut frames = Vec::new();
+    let mut chunk = [0u8; 4096];
+    while frames.len() < want {
+        assert!(std::time::Instant::now() < deadline, "timed out: got {frames:?}");
+        match stream.read(&mut chunk) {
+            Ok(0) => panic!("server closed early: got {frames:?}"),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => panic!("read error: {e}"),
+        }
+        loop {
+            match Frame::decode(&buf) {
+                Ok((frame, consumed)) => {
+                    buf.drain(..consumed);
+                    frames.push(frame);
+                }
+                Err(rhpx::serve::FrameError::Truncated { .. }) => break,
+                Err(e) => panic!("client-side decode error: {e}"),
+            }
+        }
+    }
+    frames
+}
+
+/// The full wire path: TCP submit → Ack → Result, Status query, and a
+/// typed Reject for garbage bytes.
+#[test]
+fn tcp_loopback_submit_ack_result_and_status() {
+    let cfg = ServeConfig { executors: 2, workers: 2, ..ServeConfig::default() };
+    let server = Server::start(cfg, Arc::new(MemorySnapshotStore::new()));
+    let (addr, _accept) = server.listen("127.0.0.1:0").expect("bind loopback");
+
+    let mut client = TcpStream::connect(addr).expect("connect");
+    client.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+
+    // Two submissions in one write: framing must split them.
+    let mut bytes = Frame::Submit(spec(1, "stencil1d")).encode();
+    bytes.extend_from_slice(&Frame::Submit(spec(2, "forkjoin")).encode());
+    client.write_all(&bytes).unwrap();
+
+    // 2 Acks now, 2 Results as the jobs finish.
+    let frames = read_frames(&mut client, 4);
+    let acks: Vec<u64> = frames
+        .iter()
+        .filter_map(|f| match f {
+            Frame::Ack { job_id } => Some(*job_id),
+            _ => None,
+        })
+        .collect();
+    let results: Vec<(u64, bool)> = frames
+        .iter()
+        .filter_map(|f| match f {
+            Frame::Result { job_id, ok, .. } => Some((*job_id, *ok)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!({ let mut a = acks.clone(); a.sort_unstable(); a }, vec![1, 2]);
+    let mut done = results.clone();
+    done.sort_unstable();
+    assert_eq!(done, vec![(1, true), (2, true)]);
+
+    // Status over the same connection.
+    client.write_all(&Frame::Status(StatusReport::default()).encode()).unwrap();
+    let frames = read_frames(&mut client, 1);
+    let Frame::Status(s) = &frames[0] else { panic!("expected status, got {frames:?}") };
+    assert_eq!(s.submitted, 2);
+    assert_eq!(s.accepted, 2);
+    assert_eq!(s.completed, 2);
+
+    // Garbage: the server answers with a typed protocol Reject, then
+    // hangs up — it never panics and never acts on a corrupt frame.
+    let mut second = TcpStream::connect(addr).expect("connect");
+    second.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    second.write_all(b"zzzz-not-a-frame-zzzz").unwrap();
+    let frames = read_frames(&mut second, 1);
+    match &frames[0] {
+        Frame::Reject { reason, .. } => assert!(reason.contains("protocol error"), "{reason}"),
+        other => panic!("expected protocol reject, got {other:?}"),
+    }
+
+    server.stop();
+}

@@ -515,6 +515,184 @@ fn prop_team_cancellation_soundness() {
     });
 }
 
+mod serve_protocol_props {
+    use rhpx::failure::Rng;
+    use rhpx::serve::{Frame, FrameError, JobSpec, StatusReport};
+    use rhpx::testing::gen;
+
+    /// Arbitrary UTF-8 strings, multibyte characters included — the
+    /// protocol carries workload names, policy specs, and free-text
+    /// detail/reason fields.
+    pub fn arb_string(rng: &mut Rng) -> String {
+        const CHARS: &[char] =
+            &['a', 'b', 'z', '_', '-', ':', '.', '/', ' ', '0', '9', 'λ', 'π', '✓'];
+        let len = gen::usize_in(rng, 0, 12);
+        (0..len).map(|_| CHARS[gen::usize_in(rng, 0, CHARS.len() - 1)]).collect()
+    }
+
+    pub fn arb_frame(rng: &mut Rng) -> Frame {
+        match gen::usize_in(rng, 0, 4) {
+            0 => Frame::Submit(JobSpec {
+                job_id: rng.next_u64(),
+                workload: arb_string(rng),
+                policy: arb_string(rng),
+                scale_milli: rng.next_u64() as u32,
+                error_prob_pct: gen::usize_in(rng, 0, 100) as u32,
+            }),
+            1 => Frame::Ack { job_id: rng.next_u64() },
+            2 => Frame::Result {
+                job_id: rng.next_u64(),
+                ok: gen::bool_with(rng, 0.5),
+                checksum_bits: rng.next_u64(),
+                detail: arb_string(rng),
+            },
+            3 => Frame::Status(StatusReport {
+                submitted: rng.next_u64(),
+                accepted: rng.next_u64(),
+                completed: rng.next_u64(),
+                failed: rng.next_u64(),
+                rejected_queue: rng.next_u64(),
+                rejected_breaker: rng.next_u64(),
+                queue_depth: rng.next_u64(),
+                queue_capacity: rng.next_u64(),
+            }),
+            _ => Frame::Reject {
+                job_id: rng.next_u64(),
+                retry_after_ms: rng.next_u64(),
+                reason: arb_string(rng),
+            },
+        }
+    }
+
+    /// Classify: every decode failure must be one of the typed variants,
+    /// reached without panicking.
+    pub fn is_typed(e: &FrameError) -> bool {
+        matches!(
+            e,
+            FrameError::Truncated { .. }
+                | FrameError::BadMagic { .. }
+                | FrameError::BadVersion { .. }
+                | FrameError::UnknownTag { .. }
+                | FrameError::Oversize { .. }
+                | FrameError::ChecksumMismatch { .. }
+                | FrameError::BadPayload { .. }
+        )
+    }
+}
+
+/// ∀ frames: decode(encode(f)) == (f, encoded length), and a stream of
+/// two concatenated frames splits at exactly the first frame's boundary
+/// — the framing layer never under- or over-consumes.
+#[test]
+fn prop_serve_frame_roundtrip_identity() {
+    use rhpx::serve::Frame;
+    use serve_protocol_props::arb_frame;
+
+    check("serve-frame-roundtrip", PropConfig { cases: 128, seed: 0xF1 }, |rng| {
+        let frame = arb_frame(rng);
+        let bytes = frame.encode();
+        let (back, consumed) = Frame::decode(&bytes).map_err(|e| e.to_string())?;
+        if back != frame {
+            return Err(format!("round trip diverged: {frame:?} -> {back:?}"));
+        }
+        if consumed != bytes.len() {
+            return Err(format!("consumed {consumed} of {} bytes", bytes.len()));
+        }
+
+        // Stream of two frames: the first decode stops at the boundary,
+        // the remainder decodes as the second frame.
+        let second = arb_frame(rng);
+        let mut stream = bytes.clone();
+        stream.extend_from_slice(&second.encode());
+        let (first, cut) = Frame::decode(&stream).map_err(|e| e.to_string())?;
+        if first != frame || cut != bytes.len() {
+            return Err(format!("stream split at {cut}, expected {}", bytes.len()));
+        }
+        let (rest, _) = Frame::decode(&stream[cut..]).map_err(|e| e.to_string())?;
+        if rest != second {
+            return Err("second frame corrupted by the first".into());
+        }
+        Ok(())
+    });
+}
+
+/// ∀ frames and cut points: every strict prefix of an encoded frame
+/// fails with `Truncated` — never a partial frame, never a panic, and
+/// the decoder asks for more bytes rather than misparsing.
+#[test]
+fn prop_serve_frame_truncation_is_typed() {
+    use rhpx::serve::{Frame, FrameError};
+    use serve_protocol_props::arb_frame;
+
+    check("serve-frame-truncate", PropConfig { cases: 96, seed: 0xF2 }, |rng| {
+        let bytes = arb_frame(rng).encode();
+        // One random cut plus the boundary cases.
+        let cuts = [0, 1, 7, gen::usize_in(rng, 0, bytes.len() - 1), bytes.len() - 1];
+        for cut in cuts {
+            match Frame::decode(&bytes[..cut]) {
+                Err(FrameError::Truncated { needed, have }) => {
+                    if have != cut || needed <= have {
+                        return Err(format!("cut {cut}: Truncated{{{needed},{have}}}"));
+                    }
+                }
+                Ok((f, _)) => return Err(format!("cut {cut} decoded a partial frame {f:?}")),
+                Err(e) => return Err(format!("cut {cut}: wrong error {e}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ∀ frames and bit positions: flipping any single bit of the encoding
+/// is detected — decode returns a typed error (checksum mismatch, bad
+/// header, or bad payload), never Ok and never a panic. The FNV-1a
+/// step is a bijection of the running state, so a one-byte change in
+/// the covered region always reaches a different trailer.
+#[test]
+fn prop_serve_frame_bitflip_detected() {
+    use rhpx::serve::Frame;
+    use serve_protocol_props::{arb_frame, is_typed};
+
+    check("serve-frame-bitflip", PropConfig { cases: 192, seed: 0xF3 }, |rng| {
+        let mut bytes = arb_frame(rng).encode();
+        let byte = gen::usize_in(rng, 0, bytes.len() - 1);
+        let bit = gen::usize_in(rng, 0, 7);
+        bytes[byte] ^= 1 << bit;
+        match Frame::decode(&bytes) {
+            Ok((f, _)) => Err(format!("bit {bit} of byte {byte} flipped, yet decoded {f:?}")),
+            Err(e) if is_typed(&e) => Ok(()),
+            Err(e) => Err(format!("untyped error {e}")),
+        }
+    });
+}
+
+/// ∀ frames: a foreign protocol version or magic is rejected as exactly
+/// that — version skew is detected before any payload is trusted.
+#[test]
+fn prop_serve_frame_version_and_magic_gate() {
+    use rhpx::serve::{Frame, FrameError};
+    use serve_protocol_props::arb_frame;
+
+    check("serve-frame-version", PropConfig { cases: 64, seed: 0xF4 }, |rng| {
+        let good = arb_frame(rng).encode();
+
+        let mut skewed = good.clone();
+        let v = gen::usize_in(rng, 2, 255) as u8; // any version but ours
+        skewed[2] = v;
+        match Frame::decode(&skewed) {
+            Err(FrameError::BadVersion { got }) if got == v => {}
+            other => return Err(format!("version {v}: {other:?}")),
+        }
+
+        let mut alien = good;
+        alien[0] = b'X';
+        match Frame::decode(&alien) {
+            Err(FrameError::BadMagic { .. }) => Ok(()),
+            other => Err(format!("bad magic accepted: {other:?}")),
+        }
+    });
+}
+
 /// ∀ random migration sequences: AGAS locate always reflects the last
 /// migrate, and generation counts migrations exactly.
 #[test]
