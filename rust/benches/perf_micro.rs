@@ -15,18 +15,62 @@
 //! dependency through the atomic-countdown join) — the baseline every
 //! scheduler/future/resilience optimization is diffed against (see
 //! `BENCH_baseline/` and `make bench-diff`).
+//!
+//! Launch-path rows additionally report p50/p99/p999 of the *individual*
+//! submit latency through a [`LatencyHistogram`] — tail latency is what
+//! a mean hides, and scheduler regressions usually live in the tail
+//! (a lock convoy leaves the mean almost untouched while p999 explodes).
+//! Rows whose cost is only meaningful amortized (the join sweep, the
+//! stencil run) carry `null` percentiles in the JSON.
 
-use rhpx::metrics::{BenchCli, JsonValue, Timer};
+use std::time::Instant;
+
+use rhpx::metrics::{BenchCli, JsonValue, LatencyHistogram, Timer};
 use rhpx::resilience::{async_replay, async_replicate};
 use rhpx::{async_, Promise, Runtime};
 
+/// One emitted row: amortized ns per unit plus, for launch-path rows,
+/// the per-call submit-latency tail.
+struct Row {
+    name: String,
+    ns_per_launch: f64,
+    hist: Option<LatencyHistogram>,
+}
+
+impl Row {
+    fn plain(name: &str, ns: f64) -> Self {
+        Row { name: name.into(), ns_per_launch: ns, hist: None }
+    }
+
+    fn tail(&self) -> String {
+        match &self.hist {
+            Some(h) => format!(
+                " (p50 {} p99 {} p999 {} ns)",
+                h.quantile(0.50).unwrap_or(0),
+                h.quantile(0.99).unwrap_or(0),
+                h.quantile(0.999).unwrap_or(0),
+            ),
+            None => String::new(),
+        }
+    }
+}
+
 /// Launch `n` zero-work tasks through `launch`, retiring in windows of
-/// 1024 to bound memory; returns amortized ns per launch.
-fn measure<F: FnMut(&Runtime) -> rhpx::Future<i32>>(rt: &Runtime, n: usize, mut launch: F) -> f64 {
+/// 1024 to bound memory; returns amortized ns per launch plus the
+/// histogram of each individual submit call (launch only — retirement
+/// is amortized across the window, so it stays out of the tail).
+fn measure<F: FnMut(&Runtime) -> rhpx::Future<i32>>(
+    rt: &Runtime,
+    n: usize,
+    mut launch: F,
+) -> (f64, LatencyHistogram) {
+    let mut hist = LatencyHistogram::new();
     let t = Timer::start();
     let mut fs = Vec::with_capacity(1024);
     for _ in 0..n {
+        let t0 = Instant::now();
         fs.push(launch(rt));
+        hist.record_duration(t0.elapsed());
         if fs.len() == 1024 {
             for f in fs.drain(..) {
                 let _ = f.get();
@@ -36,7 +80,7 @@ fn measure<F: FnMut(&Runtime) -> rhpx::Future<i32>>(rt: &Runtime, n: usize, mut 
     for f in fs {
         let _ = f.get();
     }
-    t.elapsed_secs() * 1e9 / n as f64
+    (t.elapsed_secs() * 1e9 / n as f64, hist)
 }
 
 /// Amortized ns per dependency of a `when_all_results` join of `width`
@@ -74,40 +118,50 @@ fn main() {
         200_000
     };
 
-    let mut results: Vec<(String, f64)> = Vec::new();
+    let mut results: Vec<Row> = Vec::new();
 
-    let ns = measure(&rt, n, |rt| async_(rt, || 1i32));
-    println!("async_         : {ns:.0} ns/launch");
-    results.push(("async_".into(), ns));
+    let (ns, hist) = measure(&rt, n, |rt| async_(rt, || 1i32));
+    let row = Row { name: "async_".into(), ns_per_launch: ns, hist: Some(hist) };
+    println!("async_         : {ns:.0} ns/launch{}", row.tail());
+    results.push(row);
 
-    let ns = measure(&rt, n, |rt| async_replay(rt, 3, || 1i32));
-    println!("async_replay   : {ns:.0} ns/launch");
-    results.push(("async_replay".into(), ns));
+    let (ns, hist) = measure(&rt, n, |rt| async_replay(rt, 3, || 1i32));
+    let row = Row { name: "async_replay".into(), ns_per_launch: ns, hist: Some(hist) };
+    println!("async_replay   : {ns:.0} ns/launch{}", row.tail());
+    results.push(row);
 
-    let ns = measure(&rt, n / 3, |rt| async_replicate(rt, 3, || 1i32));
-    println!("async_replicate: {ns:.0} ns/launch");
-    results.push(("async_replicate".into(), ns));
+    let (ns, hist) = measure(&rt, n / 3, |rt| async_replicate(rt, 3, || 1i32));
+    let row = Row { name: "async_replicate".into(), ns_per_launch: ns, hist: Some(hist) };
+    println!("async_replicate: {ns:.0} ns/launch{}", row.tail());
+    results.push(row);
 
-    // dataflow chain: per-link cost of dependency tracking.
+    // dataflow chain: per-link cost of dependency tracking, each link's
+    // construction individually histogrammed.
     let links = n / 4;
+    let mut hist = LatencyHistogram::new();
     let t = Timer::start();
     let mut f = async_(&rt, || 0i64);
     for _ in 0..links {
+        let t0 = Instant::now();
         f = rhpx::dataflow(&rt, |v: Vec<i64>| v[0] + 1, vec![f]);
+        hist.record_duration(t0.elapsed());
     }
     let _ = f.get();
     let ns = t.elapsed_secs() * 1e9 / links as f64;
-    println!("dataflow       : {ns:.0} ns/link");
-    results.push(("dataflow".into(), ns));
+    let row = Row { name: "dataflow".into(), ns_per_launch: ns, hist: Some(hist) };
+    println!("dataflow       : {ns:.0} ns/link{}", row.tail());
+    results.push(row);
 
     // when_all join-width sweep: the dependency-completion path at the
     // fan-in widths a real DAG sees (stencil = 3, reductions = wide).
+    // Per-dependency cost only exists amortized, so these rows carry no
+    // histogram.
     for &width in &[8usize, 64, 512, 4096] {
         // ~n total dependency completions per width, at least 8 rounds.
         let rounds = (n / width).max(8);
         let ns = measure_when_all(width, rounds);
         println!("when_all_{width:<6}: {ns:.0} ns/dep ({rounds} rounds)");
-        results.push((format!("when_all_{width}"), ns));
+        results.push(Row::plain(&format!("when_all_{width}"), ns));
     }
 
     // stencil-shaped dataflow (3 deps, Chunk-sized payload clones)
@@ -125,17 +179,27 @@ fn main() {
     let (_, rep) = rhpx::stencil::run(&rt, &params).unwrap();
     let ns = t.elapsed_secs() * 1e9 / rep.tasks as f64;
     println!("stencil task   : {ns:.0} ns/task ({} tasks)", rep.tasks);
-    results.push(("stencil_task".into(), ns));
+    results.push(Row::plain("stencil_task", ns));
 
     cli.emit(
         "perf_micro",
         JsonValue::Arr(
             results
                 .into_iter()
-                .map(|(name, ns)| {
+                .map(|row| {
+                    let q = |q: f64| {
+                        row.hist
+                            .as_ref()
+                            .and_then(|h| h.quantile(q))
+                            .map(JsonValue::from)
+                            .unwrap_or(JsonValue::Null)
+                    };
                     JsonValue::obj([
-                        ("name".to_string(), JsonValue::from(name)),
-                        ("ns_per_launch".to_string(), JsonValue::from(ns)),
+                        ("name".to_string(), JsonValue::from(row.name.clone())),
+                        ("ns_per_launch".to_string(), JsonValue::from(row.ns_per_launch)),
+                        ("p50_ns".to_string(), q(0.50)),
+                        ("p99_ns".to_string(), q(0.99)),
+                        ("p999_ns".to_string(), q(0.999)),
                     ])
                 })
                 .collect(),

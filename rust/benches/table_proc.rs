@@ -1,0 +1,36 @@
+//! Bench: the process-backed survival experiment — real spawned worker
+//! processes, a literal `SIGKILL` mid-run, heartbeat detection latency,
+//! and lineage recovery across {no-resilience, replay:3, team:3,
+//! checkpoint:2} arms.
+//!
+//!   cargo run --release --bin table_proc -- [--smoke] [--json PATH]
+//!   cargo bench --bench table_proc
+//!
+//! Env: RHPX_BENCH_SCALE (default 0.01), RHPX_BENCH_REPEATS (default 3),
+//!      RHPX_WORKER_BIN (worker binary override; defaults to the `rhpx`
+//!      CLI Cargo just built when run via `cargo bench`, else to the
+//!      `rhpx` binary next to this one).
+
+use rhpx::harness::{emit, table_proc, HarnessOpts};
+use rhpx::metrics::BenchCli;
+
+fn main() {
+    // `cargo bench` compiles this target with CARGO_BIN_EXE_rhpx set;
+    // the plain `--bin table_proc` build does not, and then the worker
+    // resolver falls back to the `rhpx` binary sitting next to this one.
+    if std::env::var_os("RHPX_WORKER_BIN").is_none() {
+        if let Some(bin) = option_env!("CARGO_BIN_EXE_rhpx") {
+            std::env::set_var("RHPX_WORKER_BIN", bin);
+        }
+    }
+    let cli = BenchCli::parse();
+    let opts = HarnessOpts {
+        scale: cli.scale_from_env(0.01),
+        repeats: cli.repeats_from_env(3),
+        csv: Some("bench_table_proc.csv".into()),
+        ..Default::default()
+    };
+    let rows = table_proc::run_table_proc(&opts);
+    emit(&table_proc::to_table(&rows), &opts);
+    cli.emit("table_proc", table_proc::to_json(&rows));
+}

@@ -13,6 +13,7 @@
 //!            [--backend native|pjrt]
 //! rhpx serve [--addr HOST:PORT] [--queue N] [--executors N] [--workers N]
 //!            [--journal DIR] [--for-secs N]
+//! rhpx worker --connect HOST:PORT --id N [--heartbeat-ms N] [--crash-after N]
 //! rhpx stencil [--case a|b|tiny] [--mode MODE] [--backend native|pjrt]
 //!              [--resilience replay:N|replicate:N|adaptive[:CEIL]|
 //!                            adaptive_replicate[:CEIL]]
@@ -40,9 +41,10 @@
 use std::collections::HashMap;
 
 use crate::config::RuntimeConfig;
+use crate::distributed::proc::{self, ProcSpec, WorkerConfig};
 use crate::harness::{
-    emit, fig2, fig3, table1, table2, table_ckpt, table_dist, table_serve, table_zoo,
-    HarnessOpts, KernelBackend, BENCH_MODES,
+    emit, fig2, fig3, table1, table2, table_ckpt, table_dist, table_proc, table_serve,
+    table_zoo, HarnessOpts, KernelBackend, BENCH_MODES,
 };
 use crate::metrics::{BenchCli, JsonValue, Table};
 use crate::runtime_handle::Runtime;
@@ -148,6 +150,7 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
         "run" => cmd_run(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "stencil" => cmd_stencil(&args),
         "workload" => cmd_workload(&args),
         "distributed" => cmd_distributed(&args),
@@ -162,7 +165,8 @@ USAGE:
   rhpx run <WORKLOAD> | rhpx run --list
        [--resilience replay:N|replicate:N|team:N|drain|adaptive[:CEIL]|
                      adaptive_replicate[:CEIL]|checkpoint:K[:mem|disk|agas]]
-       [--cluster LOCALITIES[:kill=STEP@LOC,...]]
+       [--cluster LOCALITIES[:kill=STEP@LOC,...]
+                 | proc:N[:kill=STEP@LOC,...][:crash=N@LOC]]
        [--latency-us N] [--loc-workers N] [--scale F] [--workers N]
        [--error-prob PCT] [--sdc-prob PCT] [--no-validate]
        [--seed N] [--json [PATH]]
@@ -196,6 +200,17 @@ leak), `--cluster` adds scheduled locality kills. Every run reports
 survival rate, recovery latency, and tasks re-executed uniformly, so
 workloads compare directly. `--json` without a path prints the payload
 to stdout.
+
+`--cluster proc:N` promotes localities to real OS processes: N `rhpx
+worker` children are spawned, task inputs/outputs travel the framed
+serve protocol over TCP, `kill=STEP@LOC` is a literal SIGKILL of the
+child's PID (`crash=N@LOC` makes worker LOC abort itself on its N-th
+launch — deterministic CI), and death is decided by missed heartbeats,
+never assumed — the report's detection latency is the real
+SIGKILL-to-verdict time. The workload scale is quantized to 1/1000 on
+this route (parent and workers must agree on geometry). `rhpx worker`
+is the child-process entry point; it is spawned by the parent and not
+normally run by hand.
 
 `rhpx serve` runs the resilient task service: a long-lived daemon that
 accepts framed job submissions over TCP (any zoo workload plus a
@@ -351,6 +366,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         "table_serve" => {
             emit(&table_serve::to_table(&table_serve::run_table_serve(&opts)), &opts)
         }
+        "table_proc" => {
+            emit(&table_proc::to_table(&table_proc::run_table_proc(&opts)), &opts)
+        }
         "all" => {
             emit(&table1::run_table1(&opts, &table1::default_cores(), replicas), &opts);
             emit(
@@ -364,6 +382,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             emit(&table_ckpt::to_table(&table_ckpt::run_table_ckpt(&opts)), &opts);
             emit(&table_zoo::to_table(&table_zoo::run_table_zoo(&opts)), &opts);
             emit(&table_serve::to_table(&table_serve::run_table_serve(&opts)), &opts);
+            emit(&table_proc::to_table(&table_proc::run_table_proc(&opts)), &opts);
         }
         other => {
             return Err(format!(
@@ -415,7 +434,24 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         Some(spec) => Some(parse_resilience(spec)?),
         None => None,
     };
+    let mut proc_spec: Option<ProcSpec> = None;
     let cluster = match args.flags.get("cluster") {
+        Some(spec) if spec.starts_with("proc:") || spec == "proc" => {
+            // The process-backed substrate: real spawned workers, so the
+            // simulated-cluster tuning knobs don't apply.
+            if args.flags.contains_key("loc-workers") || args.flags.contains_key("latency-us") {
+                return Err(
+                    "--loc-workers/--latency-us only apply to the simulated cluster".to_string()
+                );
+            }
+            let rest = spec.strip_prefix("proc:").unwrap_or("");
+            let mut p = ProcSpec::parse(rest).map_err(|e| format!("--cluster proc: {e}"))?;
+            // Milli-quantized scale is the geometry authority shared with
+            // the worker processes.
+            p.scale_milli = ((scale * 1000.0).round() as u32).max(1);
+            proc_spec = Some(p);
+            None
+        }
         Some(spec) => {
             let mut cluster =
                 ClusterSpec::parse(spec).map_err(|e| format!("--cluster: {e}"))?;
@@ -436,10 +472,11 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     };
     let p_err = args.get_f64("error-prob", 0.0)? / 100.0;
     let p_sdc = args.get_f64("sdc-prob", 0.0)? / 100.0;
-    let on_cluster = cluster.is_some();
+    let on_cluster = cluster.is_some() || proc_spec.is_some();
     let params = RunParams {
         resilience,
         cluster,
+        proc: proc_spec,
         error_rate: if p_err > 0.0 { Some(-p_err.ln()) } else { None },
         sdc_rate: if p_sdc > 0.0 { Some(p_sdc) } else { None },
         validate: !args.flags.contains_key("no-validate"),
@@ -467,10 +504,20 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                     c.schedule.events().len()
                 )
             })
+            .or_else(|| {
+                params.proc.as_ref().map(|p| {
+                    format!(
+                        ", {} worker processes ({} scheduled SIGKILLs{})",
+                        p.localities,
+                        p.schedule.events().len(),
+                        if p.crash.is_some() { ", 1 self-crash" } else { "" }
+                    )
+                })
+            })
             .unwrap_or_default()
     );
 
-    // Cluster routes idle this runtime (the localities' pools execute).
+    // Cluster/proc routes idle this runtime (the localities execute).
     let rt = Runtime::builder().workers(if on_cluster { 1 } else { workers }).build();
     let (_, rep) = workloads::run(&rt, w.as_ref(), &params).map_err(|e| e.to_string())?;
 
@@ -520,6 +567,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         print!("{}", lt.render());
         if let Some(lat) = rep.recovery_latency_secs {
             println!("mean recovery latency: {lat:.4}s (queue drain, or kill -> next barrier)");
+        }
+        if let Some(lat) = rep.detection_latency_secs {
+            println!("mean detection latency: {lat:.4}s (SIGKILL -> heartbeat verdict)");
         }
     }
 
@@ -574,6 +624,10 @@ fn run_report_json(rep: &RunReport) -> JsonValue {
             rep.recovery_latency_secs.map(JsonValue::from).unwrap_or(JsonValue::Null),
         ),
         (
+            "detection_latency_secs".to_string(),
+            rep.detection_latency_secs.map(JsonValue::from).unwrap_or(JsonValue::Null),
+        ),
+        (
             "localities".to_string(),
             JsonValue::Arr(
                 rep.localities
@@ -598,6 +652,32 @@ fn run_report_json(rep: &RunReport) -> JsonValue {
         ),
         ("final_checksum".to_string(), JsonValue::from(rep.final_checksum)),
     ])
+}
+
+/// `rhpx worker`: one process-backed locality (see
+/// [`crate::distributed::proc`]). Spawned by the parent's `ProcCluster`;
+/// connects back, heartbeats, and serves task launches until the parent
+/// hangs up or the process is killed.
+fn cmd_worker(args: &Args) -> Result<(), String> {
+    let connect = args
+        .flags
+        .get("connect")
+        .cloned()
+        .ok_or_else(|| "worker: --connect HOST:PORT is required".to_string())?;
+    let cfg = WorkerConfig {
+        connect,
+        id: args.get_usize("id", 0)? as u32,
+        heartbeat_ms: args
+            .get_usize("heartbeat-ms", proc::DEFAULT_HEARTBEAT_MS as usize)? as u64,
+        crash_after: match args.flags.get("crash-after") {
+            Some(v) => Some(
+                v.parse()
+                    .map_err(|_| format!("--crash-after: bad integer {v:?}"))?,
+            ),
+            None => None,
+        },
+    };
+    proc::run_worker(&cfg)
 }
 
 /// Parse `--resilience replay:N|replicate:N|team:N|drain|adaptive[:CEIL]|
@@ -1220,7 +1300,7 @@ mod tests {
             names,
             [
                 "table1", "table1_exec", "fig2", "table2", "fig3", "table_dist", "table_ckpt",
-                "table_zoo", "table_serve"
+                "table_zoo", "table_serve", "table_proc"
             ],
             "bench registry changed: update cmd_bench, Makefile BENCHES, and ci.yml to match"
         );
@@ -1327,6 +1407,34 @@ mod tests {
     fn run_rejects_cluster_only_flags_off_cluster() {
         let r = dispatch(&argv(&["run", "forkjoin", "--loc-workers", "2", "--workers", "2"]));
         assert!(r.is_err(), "--loc-workers without --cluster must be rejected");
+    }
+
+    #[test]
+    fn run_rejects_bad_proc_specs_at_parse_time() {
+        // These die in ProcSpec::parse / flag validation — no worker
+        // processes are ever spawned, so they are safe as unit tests.
+        let r = dispatch(&argv(&["run", "forkjoin", "--cluster", "proc:0", "--workers", "2"]));
+        assert!(r.is_err(), "zero workers must be rejected");
+        let r = dispatch(&argv(&[
+            "run", "forkjoin", "--cluster", "proc:3:kill=1@9", "--workers", "2",
+        ]));
+        assert!(r.is_err(), "out-of-range SIGKILL locality must be rejected");
+        let r = dispatch(&argv(&[
+            "run", "forkjoin", "--cluster", "proc:3", "--loc-workers", "2", "--workers", "2",
+        ]));
+        assert!(r.is_err(), "--loc-workers is simulation-only");
+        let r = dispatch(&argv(&[
+            "run", "forkjoin", "--cluster", "proc:3:crash=0@1", "--workers", "2",
+        ]));
+        assert!(r.is_err(), "crash launch count is 1-based");
+    }
+
+    #[test]
+    fn worker_subcommand_requires_connect() {
+        let r = dispatch(&argv(&["worker", "--id", "0"]));
+        assert!(r.is_err(), "{r:?}");
+        let r = dispatch(&argv(&["worker", "--connect", "127.0.0.1:1", "--id", "x"]));
+        assert!(r.is_err(), "bad --id must be rejected");
     }
 
     #[test]

@@ -39,12 +39,24 @@
 //!
 //! Values crossing localities require `Clone` (the in-process stand-in
 //! for serializability over a real wire).
+//!
+//! The simulation is no longer the only substrate: [`proc`] promotes
+//! localities to real OS processes (`rhpx worker` children speaking the
+//! framed [`crate::serve::protocol`] over TCP), where failure detection
+//! is missed heartbeats ([`HeartbeatMonitor`]) and fault injection is a
+//! literal `SIGKILL` of a child PID. The in-process [`Cluster`] remains
+//! the deterministic test substrate; [`ProcCluster`] is the honest one.
 
 pub mod detector;
 mod locality;
+pub mod proc;
 
 pub use detector::{FailureDetector, MembershipEvent, MembershipView};
 pub use locality::{Cluster, Locality, NetworkConfig};
+pub use proc::{
+    HeartbeatMonitor, ProcCluster, ProcExec, ProcMirrorStore, ProcSpec, RemoteWorkload,
+    WorkerConfig,
+};
 
 use std::sync::Arc;
 

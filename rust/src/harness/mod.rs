@@ -11,6 +11,7 @@ pub mod table1;
 pub mod table2;
 pub mod table_ckpt;
 pub mod table_dist;
+pub mod table_proc;
 pub mod table_serve;
 pub mod table_zoo;
 
@@ -39,6 +40,11 @@ pub const BENCH_MODES: &[(&str, &str)] = &[
         "table_serve",
         "rhpx serve under sustained load — throughput/latency, overload shedding, \
          crash-restart recovery",
+    ),
+    (
+        "table_proc",
+        "process-backed localities — SIGKILL survival, heartbeat detection and \
+         recovery latency",
     ),
 ];
 

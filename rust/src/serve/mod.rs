@@ -54,5 +54,5 @@ pub mod server;
 
 pub use admission::{AdmissionGate, Decision};
 pub use breaker::{Admission, BreakerConfig, CircuitBreaker};
-pub use protocol::{Frame, FrameError, JobRecord, JobSpec, JobState, StatusReport};
+pub use protocol::{Frame, FrameError, JobRecord, JobSpec, JobState, StatusReport, TaskDesc};
 pub use server::{JobOutcome, RejectReason, ServeConfig, Server, ServerStats, SubmitResponse};

@@ -40,6 +40,12 @@ const TAG_ACK: u8 = 2;
 const TAG_RESULT: u8 = 3;
 const TAG_STATUS: u8 = 4;
 const TAG_REJECT: u8 = 5;
+// Process-locality substrate (`distributed::proc`): parent ⇄ worker
+// task traffic rides the same framing as the service protocol.
+const TAG_LAUNCH: u8 = 6;
+const TAG_TASK_RESULT: u8 = 7;
+const TAG_HEARTBEAT: u8 = 8;
+const TAG_SNAPSHOT: u8 = 9;
 
 /// FNV-1a over `bytes`. Every step is a bijection of the running state,
 /// so any single-byte difference in the covered region is guaranteed to
@@ -164,6 +170,65 @@ impl SnapshotData for JobRecord {
     }
 }
 
+/// One task launch shipped to a worker process
+/// ([`crate::distributed::proc`]): which zoo workload body to run
+/// (named, not serialized — bodies are pure per the [`Workload`
+/// contract](crate::workloads::Workload), so `(workload, layer, index)`
+/// identifies the exact function on both sides) plus the resolved
+/// dependency values as [`SnapshotData`] chunk bytes.
+///
+/// Implements [`SnapshotData`] so the Launch payload shares the same
+/// untrusted-bytes hardening as every other wire structure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskDesc {
+    /// Parent-chosen launch identifier; `TaskResult` frames echo it.
+    pub task_id: u64,
+    /// Workload name from the zoo registry (`workloads::WORKLOADS`).
+    pub workload: String,
+    /// Workload scale ×1000 (the worker rebuilds the workload with it).
+    pub scale_milli: u32,
+    /// DAG layer of the task body (`Workload::layer_tasks(layer)`).
+    pub layer: u32,
+    /// Slot index within the layer.
+    pub index: u32,
+    /// Resolved dependency values, one `Chunk::to_bytes()` each.
+    pub inputs: Vec<Vec<u8>>,
+}
+
+impl SnapshotData for TaskDesc {
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&self.task_id.to_le_bytes());
+        out.extend_from_slice(&self.scale_milli.to_le_bytes());
+        out.extend_from_slice(&self.layer.to_le_bytes());
+        out.extend_from_slice(&self.index.to_le_bytes());
+        put_str(&mut out, &self.workload);
+        out.extend_from_slice(&(self.inputs.len() as u32).to_le_bytes());
+        for input in &self.inputs {
+            put_bytes(&mut out, input);
+        }
+        out
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Option<Self> {
+        let mut c = Cursor::new(bytes);
+        let task_id = c.u64()?;
+        let scale_milli = c.u32()?;
+        let layer = c.u32()?;
+        let index = c.u32()?;
+        let workload = c.str()?;
+        let n = usize::try_from(c.u32()?).ok()?;
+        // The count field is untrusted: capacity is bounded by the bytes
+        // actually present (each input costs ≥ 4 length bytes).
+        let mut inputs = Vec::with_capacity(n.min(bytes.len() / 4 + 1));
+        for _ in 0..n {
+            inputs.push(c.bytes()?.to_vec());
+        }
+        c.done()?;
+        Some(TaskDesc { task_id, workload, scale_milli, layer, index, inputs })
+    }
+}
+
 /// Server-side counters a Status frame carries.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StatusReport {
@@ -195,6 +260,20 @@ pub enum Frame {
     /// Server → client: not accepted — back off and retry (or fix the
     /// request; `reason` says which).
     Reject { job_id: u64, retry_after_ms: u64, reason: String },
+    /// Parent → worker: run this task ([`crate::distributed::proc`]).
+    Launch(TaskDesc),
+    /// Worker → parent: outcome of a [`Frame::Launch`]. On success
+    /// `payload` is the task output (`Vec<f64>` snapshot bytes); on
+    /// failure it is the UTF-8 error text.
+    TaskResult { task_id: u64, ok: bool, payload: Vec<u8> },
+    /// Worker → parent: liveness beacon. The first beat (`seq` 0) also
+    /// serves as the connection hello that maps a socket to a locality;
+    /// the parent's `HeartbeatMonitor` declares a locality dead after K
+    /// missed periods.
+    Heartbeat { locality: u32, seq: u64 },
+    /// Parent → worker: mirror this snapshot (checkpoint re-homing for
+    /// the `checkpoint:K` policy on the process substrate).
+    Snapshot { key: String, bytes: Vec<u8> },
 }
 
 /// Typed decode failure. `Truncated` is retryable with more bytes;
@@ -249,6 +328,10 @@ impl Frame {
             Frame::Result { .. } => TAG_RESULT,
             Frame::Status(_) => TAG_STATUS,
             Frame::Reject { .. } => TAG_REJECT,
+            Frame::Launch(_) => TAG_LAUNCH,
+            Frame::TaskResult { .. } => TAG_TASK_RESULT,
+            Frame::Heartbeat { .. } => TAG_HEARTBEAT,
+            Frame::Snapshot { .. } => TAG_SNAPSHOT,
         }
     }
 
@@ -281,6 +364,20 @@ impl Frame {
                 p.extend_from_slice(&job_id.to_le_bytes());
                 p.extend_from_slice(&retry_after_ms.to_le_bytes());
                 put_str(&mut p, reason);
+            }
+            Frame::Launch(desc) => p = desc.to_bytes(),
+            Frame::TaskResult { task_id, ok, payload } => {
+                p.extend_from_slice(&task_id.to_le_bytes());
+                p.push(*ok as u8);
+                put_bytes(&mut p, payload);
+            }
+            Frame::Heartbeat { locality, seq } => {
+                p.extend_from_slice(&locality.to_le_bytes());
+                p.extend_from_slice(&seq.to_le_bytes());
+            }
+            Frame::Snapshot { key, bytes } => {
+                put_str(&mut p, key);
+                put_bytes(&mut p, bytes);
             }
         }
         p
@@ -386,6 +483,44 @@ impl Frame {
                 };
                 parse().ok_or(FrameError::BadPayload { tag: "Reject" })?
             }
+            TAG_LAUNCH => Frame::Launch(
+                TaskDesc::from_bytes(payload).ok_or(FrameError::BadPayload { tag: "Launch" })?,
+            ),
+            TAG_TASK_RESULT => {
+                let mut c = Cursor::new(payload);
+                let parse = || -> Option<Frame> {
+                    let task_id = c.u64()?;
+                    let ok = match c.u8()? {
+                        0 => false,
+                        1 => true,
+                        _ => return None,
+                    };
+                    let payload = c.bytes()?.to_vec();
+                    c.done()?;
+                    Some(Frame::TaskResult { task_id, ok, payload })
+                };
+                parse().ok_or(FrameError::BadPayload { tag: "TaskResult" })?
+            }
+            TAG_HEARTBEAT => {
+                let mut c = Cursor::new(payload);
+                let parse = || -> Option<Frame> {
+                    let locality = c.u32()?;
+                    let seq = c.u64()?;
+                    c.done()?;
+                    Some(Frame::Heartbeat { locality, seq })
+                };
+                parse().ok_or(FrameError::BadPayload { tag: "Heartbeat" })?
+            }
+            TAG_SNAPSHOT => {
+                let mut c = Cursor::new(payload);
+                let parse = || -> Option<Frame> {
+                    let key = c.str()?;
+                    let bytes = c.bytes()?.to_vec();
+                    c.done()?;
+                    Some(Frame::Snapshot { key, bytes })
+                };
+                parse().ok_or(FrameError::BadPayload { tag: "Snapshot" })?
+            }
             other => return Err(FrameError::UnknownTag { got: other }),
         };
         Ok((frame, total))
@@ -396,6 +531,12 @@ impl Frame {
 fn put_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(&(s.len() as u32).to_le_bytes());
     out.extend_from_slice(s.as_bytes());
+}
+
+/// Length-prefixed raw bytes (u32 LE length + bytes).
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
 }
 
 /// Bounds-checked little-endian reader over untrusted bytes: every
@@ -436,6 +577,13 @@ impl<'a> Cursor<'a> {
         String::from_utf8(bytes.to_vec()).ok()
     }
 
+    /// Length-prefixed raw bytes (the [`put_bytes`] inverse); the length
+    /// field is checked against the bytes present before any slice.
+    fn bytes(&mut self) -> Option<&'a [u8]> {
+        let len = usize::try_from(self.u32()?).ok()?;
+        self.take(len)
+    }
+
     /// All bytes consumed — trailing garbage is a decode failure.
     fn done(&self) -> Option<()> {
         (self.pos == self.buf.len()).then_some(())
@@ -473,6 +621,18 @@ mod tests {
                 queue_capacity: 16,
             }),
             Frame::Reject { job_id: 9, retry_after_ms: 250, reason: "queue full".into() },
+            Frame::Launch(TaskDesc {
+                task_id: 1001,
+                workload: "stencil1d".into(),
+                scale_milli: 10,
+                layer: 3,
+                index: 2,
+                inputs: vec![vec![1, 2, 3], vec![], vec![0xFF; 9]],
+            }),
+            Frame::TaskResult { task_id: 1001, ok: true, payload: vec![9, 8, 7] },
+            Frame::TaskResult { task_id: 1002, ok: false, payload: b"kernel diverged".to_vec() },
+            Frame::Heartbeat { locality: 2, seq: 0 },
+            Frame::Snapshot { key: "ckpt_4_1".into(), bytes: vec![0; 24] },
         ]
     }
 
@@ -541,11 +701,12 @@ mod tests {
 
     #[test]
     fn unknown_tag_with_valid_checksum_is_typed() {
-        // Build a frame with tag 9 by hand, checksummed correctly.
-        let mut bytes = vec![MAGIC[0], MAGIC[1], PROTOCOL_VERSION, 9, 0, 0, 0, 0];
+        // Build a frame with tag 42 by hand, checksummed correctly (tags
+        // 1..=9 are all assigned now).
+        let mut bytes = vec![MAGIC[0], MAGIC[1], PROTOCOL_VERSION, 42, 0, 0, 0, 0];
         let sum = fnv1a(&bytes);
         bytes.extend_from_slice(&sum.to_le_bytes());
-        assert_eq!(Frame::decode(&bytes), Err(FrameError::UnknownTag { got: 9 }));
+        assert_eq!(Frame::decode(&bytes), Err(FrameError::UnknownTag { got: 42 }));
     }
 
     #[test]
@@ -568,6 +729,34 @@ mod tests {
         let mut truncated = JobRecord { spec, state: JobState::Accepted }.to_bytes();
         truncated.pop();
         assert_eq!(JobRecord::from_bytes(&truncated), None);
+    }
+
+    #[test]
+    fn task_desc_snapshot_roundtrip_and_hostile_bytes() {
+        let desc = TaskDesc {
+            task_id: u64::MAX,
+            workload: "jacobi".into(),
+            scale_milli: 1000,
+            layer: 0,
+            index: 0,
+            inputs: vec![vec![0u8; 64], vec![1]],
+        };
+        assert_eq!(TaskDesc::from_bytes(&desc.to_bytes()), Some(desc.clone()));
+        // Truncated bytes decode to None, never panic.
+        let bytes = desc.to_bytes();
+        for cut in 0..bytes.len() {
+            assert_eq!(TaskDesc::from_bytes(&bytes[..cut]), None, "cut {cut}");
+        }
+        // A hostile input count (claims 4 billion chunks, carries none)
+        // must fail bounds checks instead of allocating.
+        let mut hostile = TaskDesc { inputs: vec![], ..desc.clone() }.to_bytes();
+        let count_at = hostile.len() - 4;
+        hostile[count_at..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(TaskDesc::from_bytes(&hostile), None);
+        // Trailing garbage is a decode failure, not silently ignored.
+        let mut trailing = desc.to_bytes();
+        trailing.push(0);
+        assert_eq!(TaskDesc::from_bytes(&trailing), None);
     }
 
     #[test]

@@ -7,13 +7,20 @@
 //! both from [`Workload::layer_tasks`] ([`TaskSpec`] declares each
 //! task's dependency slots) and so runs fork-join trees, global
 //! reductions, and pipelines through byte-for-byte the same recovery
-//! machinery. Four routes, selected exactly like the driver's:
+//! machinery. Six routes, selected exactly like the driver's:
 //!
-//! * pool / cluster (plain or decorated): the shared layered-DAG loop,
-//!   every task launched through a [`BuiltExecutor`] route;
-//! * pool / cluster checkpoint (`--resilience checkpoint:K[:backend]`):
-//!   the windowed snapshot/repair loop — snapshot layers every K
-//!   windows, barrier-triggered cone repair, eager barriers on kills.
+//! * pool / cluster / proc (plain or decorated): the shared layered-DAG
+//!   loop, every task launched through a [`BuiltExecutor`] route;
+//! * pool / cluster / proc checkpoint
+//!   (`--resilience checkpoint:K[:backend]`): the windowed
+//!   snapshot/repair loop — snapshot layers every K windows,
+//!   barrier-triggered cone repair, eager barriers on kills.
+//!
+//! The proc routes (`--cluster proc:N`) swap the simulated substrate
+//! for real spawned worker processes ([`crate::distributed::proc`]):
+//! same DAG loop, same decorators, but kills are literal `SIGKILL`s and
+//! death is a heartbeat verdict, so the reported detection and recovery
+//! latencies are honest wall-clock measurements.
 //!
 //! Reports are uniform ([`RunReport`]): survival rate, recovery
 //! latency, `tasks_reexecuted`, snapshot traffic — same semantics as
@@ -24,11 +31,15 @@ use std::cell::RefCell;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::agas::LocalityId;
 use crate::checkpoint::store::SnapshotStore;
 use crate::checkpoint::{DiskSnapshotStore, MemorySnapshotStore};
-use crate::distributed::{Cluster, ClusterExecutor, ClusterSpec, KillEvent};
+use crate::distributed::{
+    Cluster, ClusterExecutor, ClusterSpec, KillEvent, ProcCluster, ProcExec, ProcMirrorStore,
+    ProcSpec, RemoteWorkload,
+};
 use crate::error::{TaskError, TaskResult};
 use crate::failure::{FaultInjector, SdcInjector};
 use crate::future::Future;
@@ -72,6 +83,11 @@ pub struct RunParams {
     /// the spec's fault schedule kills localities mid-run
     /// (`--cluster N:kill=STEP@LOC`).
     pub cluster: Option<ClusterSpec>,
+    /// When set, tasks execute on real spawned worker *processes*
+    /// (`--cluster proc:N[:kill=STEP@LOC][:crash=N@LOC]`): kills are a
+    /// literal `SIGKILL` of a child PID and death is decided by missed
+    /// heartbeats, not bookkeeping. Mutually exclusive with `cluster`.
+    pub proc: Option<ProcSpec>,
     /// Exception-style failures: the paper's error-rate factor *x*,
     /// P(failure per task) = e^{-x}. `None` disables injection.
     pub error_rate: Option<f64>,
@@ -90,6 +106,7 @@ impl Default for RunParams {
         RunParams {
             resilience: None,
             cluster: None,
+            proc: None,
             error_rate: None,
             sdc_rate: None,
             validate: true,
@@ -119,8 +136,13 @@ pub struct RunReport {
     pub launch_errors: u64,
     pub kills_applied: usize,
     /// Mean kill→barrier-drain time on cluster routes; mean repair-pass
-    /// duration on the pool checkpoint route.
+    /// duration on the pool checkpoint route; on the proc route, mean
+    /// verdict→re-completion time of re-materialized in-flight tasks.
     pub recovery_latency_secs: Option<f64>,
+    /// Proc route only: mean SIGKILL→heartbeat-verdict time. `None` on
+    /// the simulated routes (a scripted kill is "detected" by fiat) and
+    /// for self-crash arms (nobody marked a kill instant).
+    pub detection_latency_secs: Option<f64>,
     pub localities: Vec<LocalityReport>,
     /// Work beyond one execution per DAG node (retries, replicas,
     /// repairs, dead-locality rejections) — see
@@ -161,15 +183,25 @@ pub fn run(
                 "checkpoint:K needs window > 0: snapshots are taken at window barriers".into(),
             ));
         }
-        return match &params.cluster {
-            None => run_pool_ckpt(rt, w, params, every, backend),
-            Some(spec) => run_cluster_ckpt(w, params, spec, every, backend),
+        return match (&params.proc, &params.cluster) {
+            (Some(_), Some(_)) => Err(substrate_conflict()),
+            (Some(pspec), None) => run_proc_ckpt(w, params, pspec, every, backend),
+            (None, None) => run_pool_ckpt(rt, w, params, every, backend),
+            (None, Some(spec)) => run_cluster_ckpt(w, params, spec, every, backend),
         };
     }
-    match &params.cluster {
-        None => run_pool(rt, w, params),
-        Some(spec) => run_cluster(w, params, spec),
+    match (&params.proc, &params.cluster) {
+        (Some(_), Some(_)) => Err(substrate_conflict()),
+        (Some(pspec), None) => run_proc(w, params, pspec),
+        (None, None) => run_pool(rt, w, params),
+        (None, Some(spec)) => run_cluster(w, params, spec),
     }
+}
+
+fn substrate_conflict() -> TaskError {
+    TaskError::Runtime(
+        "the simulated cluster and the proc substrate are mutually exclusive".into(),
+    )
 }
 
 /// The per-run fault wiring, shared by every route: exception injector,
@@ -397,6 +429,7 @@ fn run_pool(
         launch_errors: out.launch_errors,
         kills_applied: 0,
         recovery_latency_secs: None,
+        detection_latency_secs: None,
         localities: Vec::new(),
         tasks_reexecuted: wiring
             .runs
@@ -486,6 +519,7 @@ fn run_cluster(
         launch_errors: out.launch_errors,
         kills_applied: kills_applied.len(),
         recovery_latency_secs: recovery,
+        detection_latency_secs: None,
         tasks_reexecuted: cluster_reexecuted(&localities, out.tasks),
         snapshots: SnapshotCounts::default(),
         localities,
@@ -798,6 +832,7 @@ fn run_pool_ckpt(
         launch_errors: out.launch_errors,
         kills_applied: 0,
         recovery_latency_secs: mean_secs(&out.repair_latencies),
+        detection_latency_secs: None,
         localities: Vec::new(),
         tasks_reexecuted: wiring
             .runs
@@ -894,6 +929,198 @@ fn run_cluster_ckpt(
         launch_errors: out.launch_errors,
         kills_applied: kills_applied.len(),
         recovery_latency_secs: mean_secs(&latencies),
+        detection_latency_secs: None,
+        tasks_reexecuted: cluster_reexecuted(&localities, out.tasks),
+        snapshots: exec.snapshots().counts(),
+        localities,
+        final_checksum: checksum_of(&out.finals),
+    };
+    Ok((gather(&out.finals), report))
+}
+
+// ---------------------------------------------------------------------
+// The process-backed routes (--cluster proc:N)
+// ---------------------------------------------------------------------
+
+/// Spawn the spec's worker fleet and the parent-side twin of the
+/// workload (both built at the spec's milli-quantized scale, the shared
+/// geometry authority).
+fn proc_setup(
+    w: &dyn Workload,
+    pspec: &ProcSpec,
+    resilient: bool,
+) -> TaskResult<(ProcCluster, RemoteWorkload)> {
+    let cluster = ProcCluster::start(pspec).map_err(TaskError::Runtime)?;
+    let rw = RemoteWorkload::from_spec(w.name(), pspec, &cluster, resilient).ok_or_else(|| {
+        TaskError::Runtime(format!("workload {:?} is not in the registry", w.name()))
+    })?;
+    Ok((cluster, rw))
+}
+
+/// Give the heartbeat monitor time to match every SIGKILL with a
+/// verdict, so detection latency is reported even when the DAG finished
+/// before the detector fired.
+fn proc_settle(cluster: &ProcCluster, pspec: &ProcSpec) {
+    let deadline_ms = pspec.heartbeat_ms * pspec.k_missed;
+    cluster.settle_verdicts(Duration::from_millis(deadline_ms * 4 + 500));
+}
+
+/// The process-backed route: the same DAG loop, every task body a
+/// remote call onto a spawned worker process, the spec's schedule fired
+/// as real `SIGKILL`s at the same task-index clock the simulated route
+/// uses. Death is decided by the heartbeat monitor, never assumed —
+/// which is what makes the reported detection latency honest.
+fn run_proc(
+    w: &dyn Workload,
+    params: &RunParams,
+    pspec: &ProcSpec,
+) -> TaskResult<(Vec<f64>, RunReport)> {
+    let wiring = FaultWiring::new(params);
+    let resilient = params.resilience.is_some();
+    let (cluster, rw) = proc_setup(w, pspec, resilient)?;
+    let exec = ProcExec::new(&cluster);
+    let route: BuiltExecutor<ProcExec> = match params.resilience {
+        Some(p) => p.build_over(exec, w.name(), ADAPTIVE_FLOOR),
+        None => BuiltExecutor::Single(exec),
+    };
+    let (validate, tol) = (params.validate, rw.tol());
+
+    let mut kills_applied: Vec<KillEvent> = Vec::new();
+    let pending: RefCell<Vec<Timer>> = RefCell::new(Vec::new());
+    let mut latencies: Vec<f64> = Vec::new();
+
+    let timer = Timer::start();
+    let out = run_layers(
+        &rw,
+        |task_idx| {
+            for ev in cluster.advance_schedule(task_idx) {
+                kills_applied.push(ev);
+                pending.borrow_mut().push(Timer::start());
+            }
+        },
+        |spec, deps| launch_via(&route, spec, &wiring, validate, tol, deps),
+        || {
+            for t in pending.borrow_mut().drain(..) {
+                latencies.push(t.elapsed_secs());
+            }
+        },
+    );
+    for t in pending.borrow_mut().drain(..) {
+        latencies.push(t.elapsed_secs());
+    }
+    let wall = timer.elapsed_secs();
+    proc_settle(&cluster, pspec);
+
+    let localities = cluster.locality_reports(&kills_applied);
+    let drain = cluster.drain_latency_secs();
+    let recovery = if drain.is_empty() { mean_secs(&latencies) } else { mean_secs(&drain) };
+
+    let report = RunReport {
+        workload: w.name().into(),
+        mode: mode_label(params),
+        launcher: route.base_label(),
+        wall_secs: wall,
+        tasks: out.tasks,
+        subdomains: out.width,
+        failures_injected: wiring.injector.counters().injected(),
+        silent_corruptions: wiring.sdc.count(),
+        launch_errors: out.launch_errors,
+        kills_applied: kills_applied.len(),
+        recovery_latency_secs: recovery,
+        detection_latency_secs: mean_secs(&cluster.detection_latency_secs()),
+        tasks_reexecuted: cluster_reexecuted(&localities, out.tasks),
+        snapshots: SnapshotCounts::default(),
+        localities,
+        final_checksum: checksum_of(&out.finals),
+    };
+    Ok((gather(&out.finals), report))
+}
+
+/// The process-backed checkpoint route: snapshots live in the parent's
+/// authoritative store and are mirrored onto workers over the wire
+/// ([`ProcMirrorStore`]); a scheduled kill re-homes the corpse's mirrors
+/// and forces an eager barrier, exactly like the AGAS route.
+fn run_proc_ckpt(
+    w: &dyn Workload,
+    params: &RunParams,
+    pspec: &ProcSpec,
+    every: usize,
+    backend: SnapshotBackend,
+) -> TaskResult<(Vec<f64>, RunReport)> {
+    let wiring = FaultWiring::new(params);
+    let (cluster, rw) = proc_setup(w, pspec, true)?;
+    let (store, disk_dir): (Arc<dyn SnapshotStore>, Option<PathBuf>) = match backend {
+        SnapshotBackend::Agas => {
+            return Err(TaskError::Runtime(
+                "checkpoint: the agas backend is simulation-only; the proc route mirrors \
+                 snapshots onto workers by default"
+                    .into(),
+            ))
+        }
+        SnapshotBackend::Disk => {
+            let dir = disk_snapshot_dir();
+            (Arc::new(DiskSnapshotStore::new(dir.clone())) as Arc<dyn SnapshotStore>, Some(dir))
+        }
+        SnapshotBackend::Auto | SnapshotBackend::Memory => {
+            (Arc::new(ProcMirrorStore::new(&cluster)) as Arc<dyn SnapshotStore>, None)
+        }
+    };
+    let exec = CheckpointExecutor::new(ProcExec::new(&cluster), store, w.name());
+    let snaps = Arc::clone(exec.snapshots());
+
+    let mut kills_applied: Vec<KillEvent> = Vec::new();
+    let pending: RefCell<Vec<Timer>> = RefCell::new(Vec::new());
+    let mut latencies: Vec<f64> = Vec::new();
+
+    let timer = Timer::start();
+    let outcome = run_ckpt_dag(
+        &rw,
+        params,
+        every,
+        &exec,
+        &wiring,
+        |task_idx| {
+            let fired = cluster.advance_schedule(task_idx);
+            for ev in &fired {
+                kills_applied.push(*ev);
+                pending.borrow_mut().push(Timer::start());
+                snaps.on_locality_killed(ev.loc);
+            }
+            !fired.is_empty()
+        },
+        || {
+            for t in pending.borrow_mut().drain(..) {
+                latencies.push(t.elapsed_secs());
+            }
+        },
+    );
+    for t in pending.borrow_mut().drain(..) {
+        latencies.push(t.elapsed_secs());
+    }
+    let wall = timer.elapsed_secs();
+    if let Some(dir) = disk_dir {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+    let out = outcome?;
+    proc_settle(&cluster, pspec);
+
+    let localities = cluster.locality_reports(&kills_applied);
+    let drain = cluster.drain_latency_secs();
+    let recovery = if drain.is_empty() { mean_secs(&latencies) } else { mean_secs(&drain) };
+
+    let report = RunReport {
+        workload: w.name().into(),
+        mode: mode_label(params),
+        launcher: exec.base().base_label(),
+        wall_secs: wall,
+        tasks: out.tasks,
+        subdomains: out.width,
+        failures_injected: wiring.injector.counters().injected(),
+        silent_corruptions: wiring.sdc.count(),
+        launch_errors: out.launch_errors,
+        kills_applied: kills_applied.len(),
+        recovery_latency_secs: recovery,
+        detection_latency_secs: mean_secs(&cluster.detection_latency_secs()),
         tasks_reexecuted: cluster_reexecuted(&localities, out.tasks),
         snapshots: exec.snapshots().counts(),
         localities,

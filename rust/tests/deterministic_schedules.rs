@@ -547,6 +547,155 @@ fn det_admission_last_slot_race_admits_exactly_one() {
 }
 
 // ---------------------------------------------------------------------
+// Heartbeat monitor: verdict boundaries on the virtual clock
+// ---------------------------------------------------------------------
+
+/// The monitor's whole contract is clock arithmetic, so the virtual
+/// clock pins its boundaries exactly: period 10, K = 3 → a locality is
+/// declared dead at precisely 30 ticks of silence, not 29.
+#[test]
+fn det_monitor_declares_dead_exactly_at_k_missed_periods() {
+    use rhpx::agas::LocalityId;
+    use rhpx::distributed::HeartbeatMonitor;
+
+    let mon = RefCell::new(HeartbeatMonitor::new(1, 10, 3, 0));
+    let polls: RefCell<Vec<(u64, Vec<LocalityId>)>> = RefCell::new(Vec::new());
+
+    let mut il = Interleaver::new();
+    il.spawn(
+        "worker",
+        vec![step(|clock| {
+            clock.advance(5);
+            assert!(mon.borrow_mut().beat(LocalityId(0), clock.now()), "a live beat lands");
+        })],
+    );
+    il.spawn(
+        "monitor",
+        vec![
+            // Tick 34: 29 ticks of silence — one short of the deadline.
+            step(|clock| {
+                clock.advance(29);
+                polls.borrow_mut().push((clock.now(), mon.borrow_mut().poll(clock.now())));
+            }),
+            // Tick 35: exactly K missed periods — the verdict.
+            step(|clock| {
+                clock.advance(1);
+                polls.borrow_mut().push((clock.now(), mon.borrow_mut().poll(clock.now())));
+            }),
+            // A verdict is reported exactly once.
+            step(|clock| {
+                polls.borrow_mut().push((clock.now(), mon.borrow_mut().poll(clock.now())));
+            }),
+        ],
+    );
+    il.run_script("worker monitor monitor monitor").unwrap();
+
+    assert_eq!(
+        *polls.borrow(),
+        vec![(34, vec![]), (35, vec![LocalityId(0)]), (35, vec![])],
+        "dead at exactly beat + period*K, reported once"
+    );
+    assert!(mon.borrow().is_dead(LocalityId(0)));
+    assert!(mon.borrow().alive_ids().is_empty());
+}
+
+/// A late heartbeat racing the death verdict, both orders. Beat first:
+/// the beat refreshes the deadline and the poll finds a live worker.
+/// Poll first: the verdict lands, is final, and the late beat is
+/// refused — a locality never resurrects (its drained tasks have
+/// already been re-materialized elsewhere; see
+/// `det_kill_drain_before_claim_wins_the_epoch` for why coming back
+/// would break exactly-once).
+#[test]
+fn det_monitor_late_beat_vs_verdict_both_orders() {
+    use rhpx::agas::LocalityId;
+    use rhpx::distributed::HeartbeatMonitor;
+
+    for (script, beat_accepted, dead) in
+        [("time beat poll", true, false), ("time poll beat", false, true)]
+    {
+        let mon = RefCell::new(HeartbeatMonitor::new(1, 10, 3, 0));
+        let beat_landed: RefCell<Option<bool>> = RefCell::new(None);
+
+        let mut il = Interleaver::new();
+        // Advance straight to the deadline tick: the next two steps race
+        // at the exact instant the verdict becomes available.
+        il.spawn("time", vec![step(|clock| clock.advance(30))]);
+        il.spawn(
+            "beat",
+            vec![step(|clock| {
+                *beat_landed.borrow_mut() =
+                    Some(mon.borrow_mut().beat(LocalityId(0), clock.now()));
+            })],
+        );
+        il.spawn(
+            "poll",
+            vec![step(|clock| {
+                let _ = mon.borrow_mut().poll(clock.now());
+            })],
+        );
+        il.run_script(script).unwrap();
+
+        assert_eq!(
+            *beat_landed.borrow(),
+            Some(beat_accepted),
+            "script {script:?}: beat acceptance follows the race order"
+        );
+        assert_eq!(
+            mon.borrow().is_dead(LocalityId(0)),
+            dead,
+            "script {script:?}: verdict follows the race order"
+        );
+    }
+}
+
+/// A slow-but-alive worker: every beat arrives one tick inside the
+/// deadline, forever. The monitor must never produce a false positive —
+/// jitter short of K full missed periods is not death.
+#[test]
+fn det_monitor_never_declares_a_slow_but_alive_worker() {
+    use rhpx::agas::LocalityId;
+    use rhpx::distributed::HeartbeatMonitor;
+
+    let mon = RefCell::new(HeartbeatMonitor::new(1, 10, 3, 0));
+
+    let mut il = Interleaver::new();
+    il.spawn(
+        "worker",
+        (0..5)
+            .map(|_| {
+                step(|clock| {
+                    clock.advance(29); // maximally late, still inside 30
+                    assert!(mon.borrow_mut().beat(LocalityId(0), clock.now()));
+                })
+            })
+            .collect::<Vec<_>>(),
+    );
+    il.spawn(
+        "monitor",
+        (0..5)
+            .map(|_| {
+                step(|clock| {
+                    assert_eq!(
+                        mon.borrow_mut().poll(clock.now()),
+                        vec![],
+                        "no verdict at tick {}",
+                        clock.now()
+                    );
+                })
+            })
+            .collect::<Vec<_>>(),
+    );
+    // Strictly alternating: each near-deadline beat is immediately
+    // followed by a poll at the same instant.
+    il.run_script("worker monitor worker monitor worker monitor worker monitor worker monitor")
+        .unwrap();
+
+    assert!(!mon.borrow().is_dead(LocalityId(0)));
+    assert_eq!(mon.borrow().alive_ids(), vec![LocalityId(0)]);
+}
+
+// ---------------------------------------------------------------------
 // Replica teams: cancel vs. resolve, both orders
 // ---------------------------------------------------------------------
 

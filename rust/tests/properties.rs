@@ -517,7 +517,7 @@ fn prop_team_cancellation_soundness() {
 
 mod serve_protocol_props {
     use rhpx::failure::Rng;
-    use rhpx::serve::{Frame, FrameError, JobSpec, StatusReport};
+    use rhpx::serve::{Frame, FrameError, JobSpec, StatusReport, TaskDesc};
     use rhpx::testing::gen;
 
     /// Arbitrary UTF-8 strings, multibyte characters included — the
@@ -530,8 +530,14 @@ mod serve_protocol_props {
         (0..len).map(|_| CHARS[gen::usize_in(rng, 0, CHARS.len() - 1)]).collect()
     }
 
+    /// Arbitrary opaque payload bytes (task inputs, results, snapshots).
+    pub fn arb_bytes(rng: &mut Rng) -> Vec<u8> {
+        let len = gen::usize_in(rng, 0, 24);
+        (0..len).map(|_| rng.next_u64() as u8).collect()
+    }
+
     pub fn arb_frame(rng: &mut Rng) -> Frame {
-        match gen::usize_in(rng, 0, 4) {
+        match gen::usize_in(rng, 0, 8) {
             0 => Frame::Submit(JobSpec {
                 job_id: rng.next_u64(),
                 workload: arb_string(rng),
@@ -556,11 +562,29 @@ mod serve_protocol_props {
                 queue_depth: rng.next_u64(),
                 queue_capacity: rng.next_u64(),
             }),
-            _ => Frame::Reject {
+            4 => Frame::Reject {
                 job_id: rng.next_u64(),
                 retry_after_ms: rng.next_u64(),
                 reason: arb_string(rng),
             },
+            5 => Frame::Launch(TaskDesc {
+                task_id: rng.next_u64(),
+                workload: arb_string(rng),
+                scale_milli: rng.next_u64() as u32,
+                layer: rng.next_u64() as u32,
+                index: rng.next_u64() as u32,
+                inputs: {
+                    let n = gen::usize_in(rng, 0, 3);
+                    (0..n).map(|_| arb_bytes(rng)).collect()
+                },
+            }),
+            6 => Frame::TaskResult {
+                task_id: rng.next_u64(),
+                ok: gen::bool_with(rng, 0.5),
+                payload: arb_bytes(rng),
+            },
+            7 => Frame::Heartbeat { locality: rng.next_u64() as u32, seq: rng.next_u64() },
+            _ => Frame::Snapshot { key: arb_string(rng), bytes: arb_bytes(rng) },
         }
     }
 
@@ -689,6 +713,46 @@ fn prop_serve_frame_version_and_magic_gate() {
         match Frame::decode(&alien) {
             Err(FrameError::BadMagic { .. }) => Ok(()),
             other => Err(format!("bad magic accepted: {other:?}")),
+        }
+    });
+}
+
+/// ∀ heartbeat frames: the liveness beat of the process substrate
+/// round-trips identically, every strict prefix is reported as
+/// `Truncated` (a half-received beat is never mistaken for a whole one,
+/// which would skew the failure detector), and any single flipped bit is
+/// rejected with a typed error — a corrupted beat must never count as
+/// proof of life.
+#[test]
+fn prop_serve_heartbeat_roundtrip_truncation_and_bitflip() {
+    use rhpx::serve::{Frame, FrameError};
+    use serve_protocol_props::is_typed;
+
+    check("serve-heartbeat", PropConfig { cases: 128, seed: 0xF5 }, |rng| {
+        let frame = Frame::Heartbeat {
+            locality: rng.next_u64() as u32,
+            seq: rng.next_u64(),
+        };
+        let bytes = frame.encode();
+        let (back, consumed) = Frame::decode(&bytes).map_err(|e| e.to_string())?;
+        if back != frame || consumed != bytes.len() {
+            return Err(format!("round trip diverged: {frame:?} -> {back:?}"));
+        }
+        // A heartbeat is short enough to check *every* prefix.
+        for cut in 0..bytes.len() {
+            match Frame::decode(&bytes[..cut]) {
+                Err(FrameError::Truncated { needed, have }) if have == cut && needed > cut => {}
+                other => return Err(format!("prefix {cut}: {other:?}")),
+            }
+        }
+        let mut flipped = bytes.clone();
+        let byte = rhpx::testing::gen::usize_in(rng, 0, flipped.len() - 1);
+        let bit = rhpx::testing::gen::usize_in(rng, 0, 7);
+        flipped[byte] ^= 1 << bit;
+        match Frame::decode(&flipped) {
+            Ok((f, _)) => Err(format!("bit {bit} of byte {byte} flipped, yet decoded {f:?}")),
+            Err(e) if is_typed(&e) => Ok(()),
+            Err(e) => Err(format!("untyped error {e}")),
         }
     });
 }
