@@ -6,7 +6,7 @@
 
 CARGO ?= cargo
 PYTHON ?= python3
-BENCHES := perf_micro table1_async_overheads fig2_error_rates table2_stencil fig3_stencil_errors ablations table_dist table_ckpt table_zoo table_serve table_proc
+BENCHES := perf_micro table1_async_overheads fig2_error_rates table2_stencil fig3_stencil_errors ablations table_dist table_ckpt table_zoo table_serve table_proc table_obs
 
 .PHONY: all build test docs bench bench-smoke bench-baseline bench-diff artifacts fmt fmt-check clippy clean help
 

@@ -1,0 +1,25 @@
+//! Bench: the flight recorder's own price — ns/task with the recorder
+//! off, on, and on-with-Chrome-export, at 20 µs and 200 µs task grains
+//! (see `rhpx::harness::table_obs`). CI asserts the 200 µs trace-on arm
+//! stays within 5% of trace-off.
+//!
+//!   cargo run --release --bin table_obs -- [--smoke] [--json PATH]
+//!   cargo bench --bench table_obs
+//!
+//! Env: RHPX_BENCH_SCALE (default 0.01), RHPX_BENCH_REPEATS (default 3).
+
+use rhpx::harness::{emit, table_obs, HarnessOpts};
+use rhpx::metrics::BenchCli;
+
+fn main() {
+    let cli = BenchCli::parse();
+    let opts = HarnessOpts {
+        scale: cli.scale_from_env(0.01),
+        repeats: cli.repeats_from_env(3),
+        csv: Some("bench_table_obs.csv".into()),
+        ..Default::default()
+    };
+    let rows = table_obs::run_table_obs(&opts);
+    emit(&table_obs::to_table(&rows), &opts);
+    cli.emit("table_obs", table_obs::to_json(&rows));
+}

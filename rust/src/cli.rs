@@ -14,6 +14,8 @@
 //! rhpx serve [--addr HOST:PORT] [--queue N] [--executors N] [--workers N]
 //!            [--journal DIR] [--for-secs N]
 //! rhpx worker --connect HOST:PORT --id N [--heartbeat-ms N] [--crash-after N]
+//!             [--trace-spool DIR]
+//! rhpx trace convert --spool DIR [--out PATH]
 //! rhpx stencil [--case a|b|tiny] [--mode MODE] [--backend native|pjrt]
 //!              [--resilience replay:N|replicate:N|adaptive[:CEIL]|
 //!                            adaptive_replicate[:CEIL]]
@@ -43,8 +45,8 @@ use std::collections::HashMap;
 use crate::config::RuntimeConfig;
 use crate::distributed::proc::{self, ProcSpec, WorkerConfig};
 use crate::harness::{
-    emit, fig2, fig3, table1, table2, table_ckpt, table_dist, table_proc, table_serve,
-    table_zoo, HarnessOpts, KernelBackend, BENCH_MODES,
+    emit, fig2, fig3, table1, table2, table_ckpt, table_dist, table_obs, table_proc,
+    table_serve, table_zoo, HarnessOpts, KernelBackend, BENCH_MODES,
 };
 use crate::metrics::{BenchCli, JsonValue, Table};
 use crate::runtime_handle::Runtime;
@@ -151,6 +153,7 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
         "worker" => cmd_worker(&args),
+        "trace" => cmd_trace(&args),
         "stencil" => cmd_stencil(&args),
         "workload" => cmd_workload(&args),
         "distributed" => cmd_distributed(&args),
@@ -169,13 +172,14 @@ USAGE:
                  | proc:N[:kill=STEP@LOC,...][:crash=N@LOC]]
        [--latency-us N] [--loc-workers N] [--scale F] [--workers N]
        [--error-prob PCT] [--sdc-prob PCT] [--no-validate]
-       [--seed N] [--json [PATH]]
+       [--seed N] [--json [PATH]] [--trace PATH]
   rhpx bench <MODE|all> | rhpx bench --list
        [--scale F] [--repeats N] [--workers N] [--csv PATH]
        [--backend native|pjrt] [--replicas N]
        (modes: see `rhpx bench --list`)
   rhpx serve [--addr HOST:PORT] [--queue N] [--executors N] [--workers N]
        [--journal DIR] [--for-secs N]
+  rhpx trace convert --spool DIR [--out PATH]
   rhpx stencil [--case a|b|tiny] [--mode pure|replay|replay_checksum|
                replicate|replicate_checksum|replicate_vote|replicate_replay]
                [--resilience replay:N|replicate:N|team:N|drain|
@@ -211,6 +215,16 @@ SIGKILL-to-verdict time. The workload scale is quantized to 1/1000 on
 this route (parent and workers must agree on geometry). `rhpx worker`
 is the child-process entry point; it is spawned by the parent and not
 normally run by hand.
+
+`--trace PATH` turns on the task-lifecycle flight recorder (lock-free
+per-worker rings; see docs/ARCHITECTURE.md, "Observability") and writes
+the run's merged timeline to PATH as Chrome trace-event JSON — open it
+at https://ui.perfetto.dev. On `--cluster proc:N` every worker also
+fsyncs its events to a scratch spool, so the export includes a
+SIGKILLed worker's final pre-death events next to the parent's
+heartbeat-miss and death-verdict instants. `rhpx trace convert` stitches
+a surviving spool directory into the same JSON by hand — the post-mortem
+path when the parent itself died.
 
 `rhpx serve` runs the resilient task service: a long-lived daemon that
 accepts framed job submissions over TCP (any zoo workload plus a
@@ -369,6 +383,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         "table_proc" => {
             emit(&table_proc::to_table(&table_proc::run_table_proc(&opts)), &opts)
         }
+        "table_obs" => {
+            emit(&table_obs::to_table(&table_obs::run_table_obs(&opts)), &opts)
+        }
         "all" => {
             emit(&table1::run_table1(&opts, &table1::default_cores(), replicas), &opts);
             emit(
@@ -383,6 +400,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             emit(&table_zoo::to_table(&table_zoo::run_table_zoo(&opts)), &opts);
             emit(&table_serve::to_table(&table_serve::run_table_serve(&opts)), &opts);
             emit(&table_proc::to_table(&table_proc::run_table_proc(&opts)), &opts);
+            emit(&table_obs::to_table(&table_obs::run_table_obs(&opts)), &opts);
         }
         other => {
             return Err(format!(
@@ -470,6 +488,23 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             None
         }
     };
+    // `--trace PATH`: turn on the flight recorder for the whole run and
+    // export the merged timeline to PATH afterwards. On the proc route
+    // the workers additionally fsync their events to a scratch spool, so
+    // a SIGKILLed worker's final moments still reach the export.
+    let trace_out = args.flags.get("trace").cloned();
+    let mut trace_spool_dir: Option<std::path::PathBuf> = None;
+    if trace_out.is_some() {
+        crate::trace::enable();
+        if let Some(p) = proc_spec.as_mut() {
+            let dir = std::env::temp_dir().join(format!("rhpx-trace-{}", std::process::id()));
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| format!("--trace: create spool dir {}: {e}", dir.display()))?;
+            p.trace_spool = Some(dir.clone());
+            trace_spool_dir = Some(dir);
+        }
+    }
+
     let p_err = args.get_f64("error-prob", 0.0)? / 100.0;
     let p_sdc = args.get_f64("sdc-prob", 0.0)? / 100.0;
     let on_cluster = cluster.is_some() || proc_spec.is_some();
@@ -573,9 +608,32 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         }
     }
 
+    // Worker perfcounters folded from proc localities (satellite of the
+    // flight-recorder work): `/locality/<id>/...` gauges set from the
+    // Counters frames each worker piggybacks on its heartbeat stream.
+    let worker_counters: Vec<(String, u64)> = crate::perfcounters::global()
+        .snapshot()
+        .into_iter()
+        .filter(|(k, _)| k.starts_with("/locality/"))
+        .collect();
+    if !worker_counters.is_empty() {
+        println!("\nworker counters (folded from proc localities):");
+        for (k, v) in &worker_counters {
+            println!("{k}  {v}");
+        }
+    }
+
     if let Some(path) = args.flags.get("json") {
         let payload_name = format!("run_{}", rep.workload);
-        let results = run_report_json(&rep);
+        let mut results = run_report_json(&rep);
+        if let JsonValue::Obj(m) = &mut results {
+            m.insert(
+                "counters".to_string(),
+                JsonValue::obj(
+                    worker_counters.iter().map(|(k, v)| (k.clone(), JsonValue::from(*v))),
+                ),
+            );
+        }
         if path == "-" {
             // Bare `--json`: same envelope as the file path, on stdout.
             let payload = JsonValue::obj([
@@ -590,6 +648,19 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             sink.try_emit(&payload_name, results)
                 .map_err(|e| format!("failed to write {path}: {e}"))?;
         }
+    }
+
+    if let Some(path) = &trace_out {
+        let summary = crate::trace::chrome::export(path)
+            .map_err(|e| format!("--trace: write {path}: {e}"))?;
+        crate::trace::disable();
+        if let Some(dir) = &trace_spool_dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+        println!(
+            "trace: wrote {path} ({} tracks, {} spans, {} instants, {} events dropped)",
+            summary.tracks, summary.spans, summary.instants, summary.dropped
+        );
     }
     Ok(())
 }
@@ -676,8 +747,42 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
             ),
             None => None,
         },
+        trace_spool: args.flags.get("trace-spool").map(std::path::PathBuf::from),
     };
     proc::run_worker(&cfg)
+}
+
+/// `rhpx trace convert`: stitch a spool directory (the crash-surviving
+/// per-worker `locN.spool` files a traced `--cluster proc:N` run leaves
+/// behind) into one Chrome trace-event JSON file — the post-mortem
+/// forensics path, usable even when the parent itself died.
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    match args.positional.first().map(String::as_str) {
+        Some("convert") => {}
+        other => {
+            return Err(format!(
+                "trace: unknown subcommand {other:?} (expected `rhpx trace convert \
+                 --spool DIR --out PATH`)"
+            ))
+        }
+    }
+    let spool = args
+        .flags
+        .get("spool")
+        .ok_or_else(|| "trace convert: --spool DIR is required".to_string())?;
+    let out = args.get_str("out", "trace.json");
+    let chunks = crate::trace::spool::read_spool_dir(std::path::Path::new(spool));
+    if chunks.is_empty() {
+        return Err(format!("trace convert: no spool chunks under {spool}"));
+    }
+    let (tracks, dropped) = crate::trace::spool::tracks_from_chunks(chunks);
+    let summary = crate::trace::chrome::export_tracks(&out, &tracks, dropped)
+        .map_err(|e| format!("trace convert: write {out}: {e}"))?;
+    println!(
+        "trace convert: {} -> {} ({} tracks, {} spans, {} instants, {} dropped)",
+        spool, out, summary.tracks, summary.spans, summary.instants, summary.dropped
+    );
+    Ok(())
 }
 
 /// Parse `--resilience replay:N|replicate:N|team:N|drain|adaptive[:CEIL]|
@@ -1300,7 +1405,7 @@ mod tests {
             names,
             [
                 "table1", "table1_exec", "fig2", "table2", "fig3", "table_dist", "table_ckpt",
-                "table_zoo", "table_serve", "table_proc"
+                "table_zoo", "table_serve", "table_proc", "table_obs"
             ],
             "bench registry changed: update cmd_bench, Makefile BENCHES, and ci.yml to match"
         );

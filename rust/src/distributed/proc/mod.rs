@@ -147,6 +147,17 @@ impl HeartbeatMonitor {
     pub fn deadline_ms(&self) -> u64 {
         self.period_ms * self.k_missed
     }
+
+    /// Whole heartbeat periods elapsed since `loc` was last heard from —
+    /// 0 for a prompt worker, rising toward `k_missed` as the verdict
+    /// nears. 0 for dead or unknown localities (their silence is priced
+    /// by the verdict, not the miss counter).
+    pub fn missed_periods(&self, loc: LocalityId, now_ms: u64) -> u64 {
+        match (self.dead.get(loc.0), self.last_beat.get(loc.0)) {
+            (Some(false), Some(&last)) => now_ms.saturating_sub(last) / self.period_ms,
+            _ => 0,
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -173,6 +184,10 @@ pub struct ProcSpec {
     /// the workload at `scale_milli / 1000`, so layer/slot indices in
     /// [`TaskDesc`] resolve to the same DAG on both ends.
     pub scale_milli: u32,
+    /// Flight-recorder spool directory (`--trace`): workers fsync their
+    /// trace chunks to `<dir>/locN.spool` *and* stream them to the
+    /// parent, so a SIGKILLed worker's final events survive in the file.
+    pub trace_spool: Option<PathBuf>,
 }
 
 impl ProcSpec {
@@ -185,6 +200,7 @@ impl ProcSpec {
             heartbeat_ms: DEFAULT_HEARTBEAT_MS,
             k_missed: DEFAULT_K_MISSED,
             scale_milli: 1000,
+            trace_spool: None,
         }
     }
 
@@ -306,6 +322,10 @@ pub struct WorkerConfig {
     pub heartbeat_ms: u64,
     /// Abort the process on the N-th (1-based) received launch.
     pub crash_after: Option<u64>,
+    /// Enable the flight recorder and fsync its chunks to
+    /// `<dir>/loc<id>.spool` (also streamed to the parent as
+    /// [`Frame::Trace`]).
+    pub trace_spool: Option<PathBuf>,
 }
 
 /// Run one locality: connect to the parent, say hello (a
@@ -323,9 +343,23 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<(), String> {
         return Err(format!("worker {}: parent rejected hello", cfg.id));
     }
 
+    // Flight recorder: fsync chunks locally (they survive our own
+    // SIGKILL) and stream the identical bytes to the parent.
+    let mut spool = match &cfg.trace_spool {
+        Some(dir) => {
+            crate::trace::enable();
+            Some(
+                crate::trace::spool::SpoolWriter::create(dir, cfg.id)
+                    .map_err(|e| format!("worker {}: create trace spool: {e}", cfg.id))?,
+            )
+        }
+        None => None,
+    };
+
     // Heartbeats ride a dedicated thread so a long task body cannot
     // silence a healthy worker (the slow-but-alive case the monitor must
-    // not false-positive on). The thread dies with the process.
+    // not false-positive on). The thread dies with the process. Every
+    // 8th beat piggybacks a perfcounter snapshot for the parent to fold.
     {
         let writer = Arc::clone(&writer);
         let (id, period) = (cfg.id, cfg.heartbeat_ms.max(1));
@@ -336,6 +370,15 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<(), String> {
                     std::thread::sleep(Duration::from_millis(period));
                     if !send_locked(&writer, &Frame::Heartbeat { locality: id, seq }) {
                         return;
+                    }
+                    if seq % 8 == 0 {
+                        let counters: Vec<(String, u64)> =
+                            crate::perfcounters::global().snapshot().into_iter().collect();
+                        if !counters.is_empty()
+                            && !send_locked(&writer, &Frame::Counters { locality: id, counters })
+                        {
+                            return;
+                        }
                     }
                 }
             })
@@ -361,14 +404,49 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<(), String> {
                     match frame {
                         Frame::Launch(desc) => {
                             launches += 1;
+                            crate::trace::emit(
+                                crate::trace::EventKind::ExecBegin,
+                                desc.task_id,
+                                cfg.id as u64,
+                            );
+                            crate::perfcounters::global()
+                                .counter("/worker/count/launches")
+                                .increment(1);
                             if cfg.crash_after == Some(launches) {
                                 // The deterministic-CI stand-in for
                                 // SIGKILL: die mid-task, reply never sent.
+                                // Flush the spool first so the post-mortem
+                                // shows the fatal launch as unfinished.
+                                if let Some(s) = spool.as_mut() {
+                                    let d = crate::trace::drain_all();
+                                    s.append(&d.events, d.dropped).ok();
+                                }
                                 std::process::abort();
                             }
                             let reply = execute_launch(&mut cache, &desc);
+                            crate::trace::emit(
+                                crate::trace::EventKind::ExecEnd,
+                                desc.task_id,
+                                cfg.id as u64,
+                            );
                             if !send_locked(&writer, &reply) {
                                 return Ok(()); // parent gone
+                            }
+                            if let Some(s) = spool.as_mut() {
+                                let d = crate::trace::drain_all();
+                                match s.append(&d.events, d.dropped) {
+                                    // The spool is authoritative; streaming is
+                                    // best-effort (a dead parent reads the
+                                    // spool instead).
+                                    Ok(chunks) => {
+                                        for chunk in chunks {
+                                            if !send_locked(&writer, &Frame::Trace(chunk)) {
+                                                break;
+                                            }
+                                        }
+                                    }
+                                    Err(_) => {}
+                                }
                             }
                         }
                         Frame::Snapshot { key, bytes } => {
@@ -490,6 +568,10 @@ struct ProcInner {
     fired: Mutex<usize>,
     stop: AtomicBool,
     monitor_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Trace chunks streamed live from workers, keyed by (locality,
+    /// seq) so a post-mortem spool read can fill gaps without
+    /// duplicating what already arrived.
+    trace_chunks: Mutex<HashMap<(u32, u64), crate::trace::spool::TraceChunk>>,
 }
 
 impl ProcInner {
@@ -533,22 +615,40 @@ impl ProcInner {
     fn on_frame(&self, loc: usize, frame: Frame) {
         let now = self.now_ms();
         self.monitor.lock().unwrap().beat(LocalityId(loc), now);
-        if let Frame::TaskResult { task_id, ok, payload } = frame {
-            self.workers[loc].executed.fetch_add(1, Ordering::Relaxed);
-            let entry = self.pending.lock().unwrap().remove(&task_id);
-            if let Some(p) = entry {
-                let outcome = if ok {
-                    match Vec::<f64>::from_bytes(&payload) {
-                        Some(v) => CallOutcome::Value(v),
-                        None => CallOutcome::RemoteErr("undecodable result payload".into()),
-                    }
-                } else {
-                    CallOutcome::RemoteErr(String::from_utf8_lossy(&payload).into_owned())
-                };
-                p.promise.set_result(Ok(outcome));
+        match frame {
+            Frame::TaskResult { task_id, ok, payload } => {
+                self.workers[loc].executed.fetch_add(1, Ordering::Relaxed);
+                let entry = self.pending.lock().unwrap().remove(&task_id);
+                if let Some(p) = entry {
+                    let outcome = if ok {
+                        match Vec::<f64>::from_bytes(&payload) {
+                            Some(v) => CallOutcome::Value(v),
+                            None => CallOutcome::RemoteErr("undecodable result payload".into()),
+                        }
+                    } else {
+                        CallOutcome::RemoteErr(String::from_utf8_lossy(&payload).into_owned())
+                    };
+                    p.promise.set_result(Ok(outcome));
+                }
+                // else: a stale result for a call already drained and
+                // re-sent elsewhere — the first settlement won.
             }
-            // else: a stale result for a call already drained and
-            // re-sent elsewhere — the first settlement won.
+            Frame::Trace(chunk) => {
+                self.trace_chunks
+                    .lock()
+                    .unwrap()
+                    .insert((chunk.locality, chunk.seq), chunk);
+            }
+            Frame::Counters { locality, counters } => {
+                // Fold worker counters into the parent registry under a
+                // per-locality prefix; gauges, since each snapshot is a
+                // fresh absolute reading, not a delta.
+                let reg = crate::perfcounters::global();
+                for (name, value) in counters {
+                    reg.gauge(&format!("/locality/{locality}{name}")).set(value);
+                }
+            }
+            _ => {}
         }
     }
 
@@ -558,17 +658,19 @@ impl ProcInner {
     fn on_death(&self, loc: usize) {
         self.workers[loc].alive.store(false, Ordering::SeqCst);
         let verdict = Instant::now();
+        crate::trace::emit(crate::trace::EventKind::DeathVerdict, loc as u64, 0);
         if let Some(mark) = self.kill_marks.lock().unwrap().remove(&loc) {
             self.detection_secs.lock().unwrap().push((verdict - mark).as_secs_f64());
         }
-        let drained: Vec<PendingCall> = {
+        let drained: Vec<(u64, PendingCall)> = {
             let mut pending = self.pending.lock().unwrap();
             let ids: Vec<u64> =
                 pending.iter().filter(|(_, p)| p.loc == loc).map(|(id, _)| *id).collect();
-            ids.into_iter().filter_map(|id| pending.remove(&id)).collect()
+            ids.into_iter().filter_map(|id| pending.remove(&id).map(|p| (id, p))).collect()
         };
-        for p in drained {
+        for (task_id, p) in drained {
             self.workers[loc].lost.fetch_add(1, Ordering::Relaxed);
+            crate::trace::emit(crate::trace::EventKind::Drain, loc as u64, task_id);
             p.promise.set_result(Ok(CallOutcome::Died(verdict)));
         }
     }
@@ -620,6 +722,9 @@ impl ProcCluster {
                 .arg(i.to_string())
                 .arg("--heartbeat-ms")
                 .arg(spec.heartbeat_ms.to_string());
+            if let Some(dir) = &spec.trace_spool {
+                cmd.arg("--trace-spool").arg(dir);
+            }
             if let Some(ev) = spec.crash {
                 if ev.loc.0 == i {
                     cmd.arg("--crash-after").arg(ev.step.to_string());
@@ -719,6 +824,7 @@ impl ProcCluster {
             fired: Mutex::new(0),
             stop: AtomicBool::new(false),
             monitor_thread: Mutex::new(None),
+            trace_chunks: Mutex::new(HashMap::new()),
             spec: spec.clone(),
         });
 
@@ -809,6 +915,11 @@ impl ProcCluster {
                     }
                     // Lineage re-materialization: the retained descriptor
                     // re-enters the loop and lands on a survivor.
+                    crate::trace::emit(
+                        crate::trace::EventKind::Rematerialize,
+                        task_id,
+                        loc as u64,
+                    );
                     recovery_from.get_or_insert(verdict);
                 }
                 Err(e) => return Err(e), // broken promise: cluster shut down
@@ -903,6 +1014,23 @@ impl ProcCluster {
     pub fn spec(&self) -> &ProcSpec {
         &self.inner.spec
     }
+
+    /// Collect the cluster's trace: chunks streamed live from workers,
+    /// merged with whatever their fsynced spool files hold. For a worker
+    /// that died mid-task the spool supplies the final pre-death events
+    /// its severed socket never delivered — the post-mortem case.
+    /// Streamed chunks win ties (same bytes, already in memory).
+    pub fn take_trace(&self) -> Vec<crate::trace::spool::TraceChunk> {
+        let streamed: Vec<crate::trace::spool::TraceChunk> = {
+            let mut held = self.inner.trace_chunks.lock().unwrap();
+            std::mem::take(&mut *held).into_values().collect()
+        };
+        let spooled = match &self.inner.spec.trace_spool {
+            Some(dir) => crate::trace::spool::read_spool_dir(dir),
+            None => Vec::new(),
+        };
+        crate::trace::spool::merge_chunks(streamed, spooled)
+    }
 }
 
 /// First frame of a fresh worker connection: `Heartbeat { locality,
@@ -960,6 +1088,7 @@ fn reader_loop(weak: Weak<ProcInner>, loc: usize, mut stream: TcpStream, mut buf
 }
 
 fn monitor_loop(weak: Weak<ProcInner>, tick_ms: u64) {
+    let mut reported_misses: Vec<u64> = Vec::new();
     loop {
         std::thread::sleep(Duration::from_millis(tick_ms));
         let Some(inner) = weak.upgrade() else { return };
@@ -967,7 +1096,27 @@ fn monitor_loop(weak: Weak<ProcInner>, tick_ms: u64) {
             return;
         }
         let now = inner.now_ms();
-        let newly_dead = inner.monitor.lock().unwrap().poll(now);
+        let newly_dead = {
+            let mut mon = inner.monitor.lock().unwrap();
+            // Each freshly crossed missed-period boundary becomes one
+            // HeartbeatMiss instant, so a post-mortem timeline shows the
+            // silence growing toward the verdict.
+            reported_misses.resize(inner.workers.len(), 0);
+            for i in 0..inner.workers.len() {
+                let missed = mon.missed_periods(LocalityId(i), now);
+                if missed > reported_misses[i] {
+                    crate::trace::emit(
+                        crate::trace::EventKind::HeartbeatMiss,
+                        i as u64,
+                        missed,
+                    );
+                    reported_misses[i] = missed;
+                } else if missed < reported_misses[i] {
+                    reported_misses[i] = missed; // beat arrived: reset
+                }
+            }
+            mon.poll(now)
+        };
         for id in newly_dead {
             inner.on_death(id.0);
         }

@@ -11,6 +11,7 @@ pub mod table1;
 pub mod table2;
 pub mod table_ckpt;
 pub mod table_dist;
+pub mod table_obs;
 pub mod table_proc;
 pub mod table_serve;
 pub mod table_zoo;
@@ -45,6 +46,11 @@ pub const BENCH_MODES: &[(&str, &str)] = &[
         "table_proc",
         "process-backed localities — SIGKILL survival, heartbeat detection and \
          recovery latency",
+    ),
+    (
+        "table_obs",
+        "flight-recorder overhead — ns/task at trace-off/on/on+export across the \
+         200 µs grain boundary",
     ),
 ];
 

@@ -1,0 +1,249 @@
+//! Bench harness: what does the flight recorder cost? ([`crate::trace`])
+//!
+//! Observability that perturbs the system it observes is worse than
+//! none — a recorder priced at microseconds per task would change every
+//! overhead number this repo reports. This table prices the record path
+//! directly: the same spawn/execute stream is run with the recorder
+//! off, on, and on-with-export, at two task grains straddling the
+//! paper's 200 µs operating point:
+//!
+//! * **20 µs grain** — tasks so small that scheduler overhead (and any
+//!   recorder cost) is a visible fraction of the work;
+//! * **200 µs grain** — the paper's grain, where the recorder must be
+//!   invisible (CI asserts the trace-on arm within 5% of trace-off).
+//!
+//! Each arm reports ns/task, the delta vs. the trace-off arm at the
+//! same grain, and the events recorded/dropped — the ring is
+//! fixed-capacity overwrite-oldest, so a drop count here is the honest
+//! price of the no-allocation record path, never a silent loss. The
+//! bench binary (`cargo run --release --bin table_obs`) wraps this as
+//! `BENCH_table_obs.json`.
+
+use std::time::Instant;
+
+use crate::metrics::{busy_wait_ns, JsonValue, Stats, Table};
+use crate::runtime_handle::Runtime;
+
+use super::HarnessOpts;
+
+/// Task grains (ns) straddling the paper's 200 µs operating point.
+const GRAINS_NS: &[u64] = &[20_000, 200_000];
+
+/// One measured arm: a (grain, recorder mode) cell.
+#[derive(Debug, Clone)]
+pub struct ObsRow {
+    /// Task grain in µs.
+    pub grain_us: u64,
+    /// `off`, `on`, or `on_export`.
+    pub mode: String,
+    /// Tasks spawned per repeat.
+    pub tasks: usize,
+    /// Mean wall time per task (ns) — wall / tasks, so the number
+    /// prices throughput, and the vs-off delta isolates the recorder.
+    pub ns_per_task: f64,
+    /// `ns_per_task` minus the trace-off arm at the same grain.
+    pub overhead_ns_vs_off: f64,
+    /// Same delta as a percentage of the trace-off arm.
+    pub overhead_pct_vs_off: f64,
+    /// Events the rings accepted during the arm (last repeat).
+    pub events_recorded: u64,
+    /// Events lost to ring overwrite during the arm (last repeat).
+    pub events_dropped: u64,
+}
+
+/// Tasks per repeat: enough that per-task cost dominates pool spin-up,
+/// scaled with the harness knob but floored for tiny smoke scales.
+fn tasks_for(opts: &HarnessOpts) -> usize {
+    ((20_000.0 * opts.scale) as usize).max(200)
+}
+
+/// One timed pass: spawn `tasks` grain-sized bodies through the real
+/// scheduler (the instrumented path: Spawn + ExecBegin/ExecEnd per
+/// task), wait for all, optionally export the accumulated trace —
+/// export inside the timed window, since "on + export" prices exactly
+/// that.
+fn run_arm(rt: &Runtime, tasks: usize, grain_ns: u64, export_to: Option<&str>) -> f64 {
+    let t0 = Instant::now();
+    let futs: Vec<_> = (0..tasks)
+        .map(|_| {
+            crate::api::async_(rt, move || {
+                busy_wait_ns(grain_ns);
+                42i32
+            })
+        })
+        .collect();
+    for f in futs {
+        let _ = f.get();
+    }
+    if let Some(path) = export_to {
+        let _ = crate::trace::chrome::export(path);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Run the six-arm grid (2 grains × {off, on, on_export}).
+///
+/// This toggles the process-global trace session, so nothing else in
+/// the process should be tracing concurrently (true in the bench
+/// binaries and the CLI). The session is left disabled and drained.
+pub fn run_table_obs(opts: &HarnessOpts) -> Vec<ObsRow> {
+    let tasks = tasks_for(opts);
+    let rt = Runtime::builder().workers(opts.workers.max(1)).build();
+    let export_path = std::env::temp_dir().join("rhpx_table_obs_trace.json");
+    let export_path = export_path.to_string_lossy().into_owned();
+
+    let mut rows = Vec::new();
+    for &grain_ns in GRAINS_NS {
+        let mut off_ns_per_task = 0.0f64;
+        for mode in ["off", "on", "on_export"] {
+            match mode {
+                "off" => crate::trace::disable(),
+                _ => crate::trace::enable(),
+            }
+            let mut wall = Stats::new();
+            let mut recorded = 0u64;
+            let mut dropped = 0u64;
+            for _ in 0..opts.repeats.max(1) {
+                let (rec0, drop0) = crate::trace::totals();
+                let secs = run_arm(
+                    &rt,
+                    tasks,
+                    grain_ns,
+                    (mode == "on_export").then_some(export_path.as_str()),
+                );
+                wall.push(secs);
+                let (rec1, drop1) = crate::trace::totals();
+                recorded = rec1 - rec0;
+                dropped = drop1 - drop0;
+            }
+            let ns_per_task = wall.mean() * 1e9 / tasks as f64;
+            if mode == "off" {
+                off_ns_per_task = ns_per_task;
+            }
+            rows.push(ObsRow {
+                grain_us: grain_ns / 1000,
+                mode: mode.to_string(),
+                tasks,
+                ns_per_task,
+                overhead_ns_vs_off: ns_per_task - off_ns_per_task,
+                overhead_pct_vs_off: 100.0 * (ns_per_task - off_ns_per_task)
+                    / off_ns_per_task.max(f64::MIN_POSITIVE),
+                events_recorded: recorded,
+                events_dropped: dropped,
+            });
+        }
+    }
+    crate::trace::disable();
+    let _ = crate::trace::drain_all(); // leave the session empty
+    let _ = std::fs::remove_file(&export_path);
+    rows
+}
+
+/// Render the rows as the printable harness table.
+pub fn to_table(rows: &[ObsRow]) -> Table {
+    let mut t = Table::new(
+        "Table-Obs: flight-recorder overhead (ns/task, off vs on vs on+export)",
+        &[
+            "grain_us", "mode", "tasks", "ns_per_task", "overhead_ns", "overhead_pct",
+            "events", "dropped",
+        ],
+    );
+    for r in rows {
+        t.add([
+            r.grain_us.to_string(),
+            r.mode.clone(),
+            r.tasks.to_string(),
+            format!("{:.0}", r.ns_per_task),
+            format!("{:+.0}", r.overhead_ns_vs_off),
+            format!("{:+.2}", r.overhead_pct_vs_off),
+            r.events_recorded.to_string(),
+            r.events_dropped.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The machine-readable payload for `BENCH_table_obs.json`. CI asserts
+/// the 200 µs trace-on arm's `ns_per_task` is within 5% (plus a small
+/// absolute floor for timer noise) of the trace-off arm.
+pub fn to_json(rows: &[ObsRow]) -> JsonValue {
+    JsonValue::obj([
+        (
+            "rows".to_string(),
+            JsonValue::Arr(
+                rows.iter()
+                    .map(|r| {
+                        JsonValue::obj([
+                            ("grain_us".to_string(), JsonValue::from(r.grain_us)),
+                            ("mode".to_string(), JsonValue::from(r.mode.clone())),
+                            ("tasks".to_string(), JsonValue::from(r.tasks)),
+                            ("ns_per_task".to_string(), JsonValue::from(r.ns_per_task)),
+                            (
+                                "overhead_ns_vs_off".to_string(),
+                                JsonValue::from(r.overhead_ns_vs_off),
+                            ),
+                            (
+                                "overhead_pct_vs_off".to_string(),
+                                JsonValue::from(r.overhead_pct_vs_off),
+                            ),
+                            (
+                                "events_recorded".to_string(),
+                                JsonValue::from(r.events_recorded),
+                            ),
+                            (
+                                "events_dropped".to_string(),
+                                JsonValue::from(r.events_dropped),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("table".to_string(), to_table(rows).to_json()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The timed grid (which toggles the process-global trace session)
+    // runs only in the bench binary; here we cover the pure pieces.
+
+    fn sample_row(mode: &str, ns: f64, off: f64) -> ObsRow {
+        ObsRow {
+            grain_us: 200,
+            mode: mode.into(),
+            tasks: 200,
+            ns_per_task: ns,
+            overhead_ns_vs_off: ns - off,
+            overhead_pct_vs_off: 100.0 * (ns - off) / off,
+            events_recorded: if mode == "off" { 0 } else { 600 },
+            events_dropped: 0,
+        }
+    }
+
+    #[test]
+    fn table_and_json_carry_the_overhead_story() {
+        let rows = vec![
+            sample_row("off", 201_000.0, 201_000.0),
+            sample_row("on", 201_400.0, 201_000.0),
+            sample_row("on_export", 203_000.0, 201_000.0),
+        ];
+        let t = to_table(&rows);
+        assert_eq!(t.to_csv().lines().count(), 4, "header + 3 arms");
+        let text = t.render();
+        assert!(text.contains("ns_per_task"), "{text}");
+        assert!(text.contains("on_export"), "{text}");
+        let json = to_json(&rows).render();
+        assert!(json.contains(r#""mode":"off""#), "{json}");
+        assert!(json.contains(r#""events_recorded":600"#), "{json}");
+        assert!(json.contains(r#""ns_per_task":"#), "{json}");
+    }
+
+    #[test]
+    fn task_count_scales_and_floors() {
+        assert_eq!(tasks_for(&HarnessOpts { scale: 0.001, ..Default::default() }), 200);
+        assert_eq!(tasks_for(&HarnessOpts { scale: 1.0, ..Default::default() }), 20_000);
+    }
+}

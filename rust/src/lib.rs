@@ -34,6 +34,7 @@
 //! | Scenario diversity beyond §V-B (fork-join, global reduction, streaming; arXiv 1611.02717, 1710.09074) | [`workloads`] (the `Workload` trait + zoo), [`workloads::engine`] (the generic resilient engine), [`harness::table_zoo`] |
 //! | §Future-Work: distributed resiliency, "special executors", replay-in-replicate | [`distributed`], [`resilience::executor`] (decorators + adaptive budgets/width), [`executor`] (algorithm-facing policies), `*_replicate_replay` |
 //! | Service-level resilience: detection, containment, recovery for a long-running daemon (arXiv 1611.02717 pattern catalogue) | [`serve`] (`rhpx serve`: framed protocol, admission control, circuit breaker, journaled crash-restart), [`harness::table_serve`] |
+//! | Observability: task-lifecycle forensics for every layer above | [`trace`] (lock-free flight recorder, Chrome-trace export, crash-surviving spool), [`harness::table_obs`] |
 //!
 //! Each harness module's header states exactly which table/figure it
 //! regenerates; the bench binaries under `rust/benches/` emit the same
@@ -94,6 +95,7 @@ pub mod scheduler;
 pub mod serve;
 pub mod stencil;
 pub mod testing;
+pub mod trace;
 pub mod workload;
 pub mod workloads;
 

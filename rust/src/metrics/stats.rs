@@ -300,7 +300,7 @@ mod tests {
         assert_eq!(s.ci95(), 0.0);
     }
 
-    / ---- LatencyHistogram ------------------------------------------
+    // ---- LatencyHistogram -----------------------------------------
 
     /// Tiny deterministic generator so histogram tests don't depend on
     /// the crate's failure RNG.

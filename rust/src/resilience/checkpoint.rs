@@ -142,6 +142,11 @@ impl Snapshots {
         self.bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         self.c_saved.increment(1);
         self.c_bytes.increment(bytes.len() as u64);
+        crate::trace::emit(
+            crate::trace::EventKind::CheckpointSave,
+            crate::trace::key_hash(key),
+            bytes.len() as u64,
+        );
         Ok(())
     }
 
@@ -159,6 +164,11 @@ impl Snapshots {
             Some(v) if validate.map(|check| check(&v)).unwrap_or(true) => {
                 self.restored.fetch_add(1, Ordering::Relaxed);
                 self.c_restored.increment(1);
+                crate::trace::emit(
+                    crate::trace::EventKind::CheckpointRestore,
+                    crate::trace::key_hash(key),
+                    bytes.len() as u64,
+                );
                 Some(v)
             }
             _ => {
@@ -178,6 +188,11 @@ impl Snapshots {
     pub fn on_locality_killed(&self, loc: LocalityId) {
         self.store.on_locality_killed(loc);
         self.c_lost.set(self.store.lost());
+        crate::trace::emit(
+            crate::trace::EventKind::CheckpointRehome,
+            loc.0 as u64,
+            self.store.lost(),
+        );
     }
 
     /// Current totals (refreshes the loss gauge from the backend).

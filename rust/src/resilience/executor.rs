@@ -290,8 +290,15 @@ pub(crate) fn base_spawn_into<E, T>(
 {
     base.submit(body).on_ready(move |r| match r {
         Ok(v) => match &validate {
-            Some(check) if !check(v) => promise.set_error(TaskError::ValidationRejected),
-            _ => promise.set_value(v.clone()),
+            Some(check) if !check(v) => {
+                crate::trace::emit(crate::trace::EventKind::ValidateFail, 0, 0);
+                promise.set_error(TaskError::ValidationRejected)
+            }
+            Some(_) => {
+                crate::trace::emit(crate::trace::EventKind::ValidatePass, 0, 0);
+                promise.set_value(v.clone())
+            }
+            None => promise.set_value(v.clone()),
         },
         Err(e) => promise.set_error(e.clone()),
     });
@@ -589,8 +596,15 @@ fn replay_attempt<E, T>(
     fut.on_ready(move |r| {
         let outcome = match r {
             Ok(v) => match &validate {
-                Some(check) if !check(v) => Err(TaskError::ValidationRejected),
-                _ => Ok(v.clone()),
+                Some(check) if !check(v) => {
+                    crate::trace::emit(crate::trace::EventKind::ValidateFail, token as u64, 0);
+                    Err(TaskError::ValidationRejected)
+                }
+                Some(_) => {
+                    crate::trace::emit(crate::trace::EventKind::ValidatePass, token as u64, 0);
+                    Ok(v.clone())
+                }
+                None => Ok(v.clone()),
             },
             Err(e) => Err(e.clone()),
         };
@@ -601,6 +615,11 @@ fn replay_attempt<E, T>(
             }
             Err(_) if attempt < n => {
                 budget.record(true);
+                crate::trace::emit(
+                    crate::trace::EventKind::ReplayAttempt,
+                    token as u64,
+                    (attempt + 1) as u64,
+                );
                 replay_attempt(base, budget, promise, body, validate, token, n, attempt + 1);
             }
             Err(e) => {
@@ -777,6 +796,7 @@ impl<E: TaskLauncher> ReplicateExecutor<E> {
         let state = ReplicateState::new(promise, n, voter);
         let token = self.base.placement_token();
         for i in 0..n {
+            crate::trace::emit(crate::trace::EventKind::ReplicaLaunch, token as u64, i as u64);
             let state = Arc::clone(&state);
             let validate = validate.clone();
             let budget = self.budget.clone();
@@ -813,6 +833,7 @@ impl<E: TaskLauncher> ReplicateExecutor<E> {
         let team = ReplicaTeam::with_promise(promise, n);
         let token = self.base.placement_token();
         for i in 0..n {
+            crate::trace::emit(crate::trace::EventKind::ReplicaLaunch, token as u64, i as u64);
             let team = Arc::clone(&team);
             let cancel = team.token();
             let validate = validate.clone();

@@ -127,7 +127,10 @@ impl<T: Send + 'static> ReplicateState<T> {
         };
         match action {
             Action::None => {}
-            Action::Resolve(p, v) => p.set_value(v),
+            Action::Resolve(p, v) => {
+                crate::trace::emit(crate::trace::EventKind::ReplicaWin, self.replicas as u64, 0);
+                p.set_value(v)
+            }
             Action::Finish => self.finish(),
         }
     }
@@ -388,6 +391,11 @@ impl<T: Send + 'static> ReplicaTeam<T> {
                 }
                 Err(TaskError::Cancelled) => {
                     g.retired += 1;
+                    crate::trace::emit(
+                        crate::trace::EventKind::ReplicaCancel,
+                        self.replicas as u64,
+                        g.retired as u64,
+                    );
                 }
                 Err(e) => {
                     g.last_error = Some(e);
@@ -402,7 +410,10 @@ impl<T: Send + 'static> ReplicaTeam<T> {
         };
         match action {
             Action::None => {}
-            Action::Resolve(p, v) => p.set_value(v),
+            Action::Resolve(p, v) => {
+                crate::trace::emit(crate::trace::EventKind::ReplicaWin, self.replicas as u64, 0);
+                p.set_value(v)
+            }
             Action::Fail(p, finite, last) => {
                 let err = if finite > 0 {
                     ResilienceError::ValidationFailed { replicas: self.replicas }

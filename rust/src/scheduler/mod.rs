@@ -168,6 +168,7 @@ impl Pool {
                 if let Some(j) = self.queues[v].steal() {
                     // Relaxed: statistics only.
                     self.stolen.fetch_add(1, Ordering::Relaxed);
+                    crate::trace::emit(crate::trace::EventKind::Steal, v as u64, idx as u64);
                     return Some(j);
                 }
             }
@@ -199,7 +200,20 @@ impl Pool {
     }
 
     fn run_job(self: &Arc<Self>, job: Job) {
+        // Exec span: a fresh id ties the begin/end pair even when the
+        // job migrated queues; the id RMW is skipped entirely when the
+        // flight recorder is off (one relaxed load + branch).
+        let exec_id = if crate::trace::active() {
+            let id = EXEC_SEQ.fetch_add(1, Ordering::Relaxed) + 1;
+            crate::trace::emit(crate::trace::EventKind::ExecBegin, id, 0);
+            id
+        } else {
+            0
+        };
         job();
+        if exec_id != 0 {
+            crate::trace::emit(crate::trace::EventKind::ExecEnd, exec_id, 0);
+        }
         // SeqCst RMW: (a) Dekker with `wait_idle`'s interest registration
         // (we bump `completed` then read `idle_interest`; the waiter
         // registers interest then reads `completed`), and (b) each
@@ -331,6 +345,10 @@ impl Drop for Scheduler {
     }
 }
 
+/// Process-wide exec-span ids for the flight recorder (only advanced
+/// while tracing is on).
+static EXEC_SEQ: AtomicU64 = AtomicU64::new(0);
+
 /// Submit `job` to `pool`, preferring the current worker's local queue.
 pub fn spawn_on(pool: &Arc<Pool>, job: Job) {
     // Relaxed: the spawn count is published to whoever needs it by
@@ -338,7 +356,8 @@ pub fn spawn_on(pool: &Arc<Pool>, job: Job) {
     // that runs the job, and that worker's completion RMW (SeqCst)
     // hands it to idle waiters. No one reads `spawned` expecting this
     // increment without first crossing one of those edges.
-    pool.spawned.fetch_add(1, Ordering::Relaxed);
+    let seq = pool.spawned.fetch_add(1, Ordering::Relaxed) + 1;
+    crate::trace::emit(crate::trace::EventKind::Spawn, seq, 0);
     let local = CURRENT.with(|c| {
         c.borrow()
             .as_ref()

@@ -46,6 +46,11 @@ const TAG_LAUNCH: u8 = 6;
 const TAG_TASK_RESULT: u8 = 7;
 const TAG_HEARTBEAT: u8 = 8;
 const TAG_SNAPSHOT: u8 = 9;
+// Observability: flight-recorder chunks streamed worker → parent (the
+// same bytes the worker fsyncs to its local spool), and periodic
+// perfcounter snapshots folded into the parent registry.
+const TAG_TRACE: u8 = 10;
+const TAG_COUNTERS: u8 = 11;
 
 /// FNV-1a over `bytes`. Every step is a bijection of the running state,
 /// so any single-byte difference in the covered region is guaranteed to
@@ -229,8 +234,11 @@ impl SnapshotData for TaskDesc {
     }
 }
 
-/// Server-side counters a Status frame carries.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// Server-side counters a Status frame carries, plus end-to-end job
+/// latency quantiles (µs, from the server's `LatencyHistogram`; 0 until
+/// a job has completed) and a named perfcounter snapshot — a live
+/// daemon is observable without restarting it.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StatusReport {
     pub submitted: u64,
     pub accepted: u64,
@@ -240,6 +248,15 @@ pub struct StatusReport {
     pub rejected_breaker: u64,
     pub queue_depth: u64,
     pub queue_capacity: u64,
+    /// Median job latency, microseconds.
+    pub p50_us: u64,
+    /// 99th-percentile job latency, microseconds.
+    pub p99_us: u64,
+    /// 99.9th-percentile job latency, microseconds.
+    pub p999_us: u64,
+    /// Perfcounter snapshot (`/serve/...`, `/scheduler/...`,
+    /// `/resilience/...`) — empty in client-side query frames.
+    pub counters: Vec<(String, u64)>,
 }
 
 /// One protocol message. Clients send `Submit` and (empty) `Status`
@@ -274,6 +291,13 @@ pub enum Frame {
     /// Parent → worker: mirror this snapshot (checkpoint re-homing for
     /// the `checkpoint:K` policy on the process substrate).
     Snapshot { key: String, bytes: Vec<u8> },
+    /// Worker → parent: a flight-recorder chunk
+    /// ([`crate::trace::spool::TraceChunk`]) — streamed opportunistically
+    /// while the identical bytes are fsynced to the worker's local spool.
+    Trace(crate::trace::spool::TraceChunk),
+    /// Worker → parent: periodic perfcounter snapshot, folded into the
+    /// parent registry as `/locality/<id>/...`.
+    Counters { locality: u32, counters: Vec<(String, u64)> },
 }
 
 /// Typed decode failure. `Truncated` is retryable with more bytes;
@@ -332,6 +356,8 @@ impl Frame {
             Frame::TaskResult { .. } => TAG_TASK_RESULT,
             Frame::Heartbeat { .. } => TAG_HEARTBEAT,
             Frame::Snapshot { .. } => TAG_SNAPSHOT,
+            Frame::Trace(_) => TAG_TRACE,
+            Frame::Counters { .. } => TAG_COUNTERS,
         }
     }
 
@@ -356,9 +382,13 @@ impl Frame {
                     s.rejected_breaker,
                     s.queue_depth,
                     s.queue_capacity,
+                    s.p50_us,
+                    s.p99_us,
+                    s.p999_us,
                 ] {
                     p.extend_from_slice(&v.to_le_bytes());
                 }
+                put_counters(&mut p, &s.counters);
             }
             Frame::Reject { job_id, retry_after_ms, reason } => {
                 p.extend_from_slice(&job_id.to_le_bytes());
@@ -378,6 +408,11 @@ impl Frame {
             Frame::Snapshot { key, bytes } => {
                 put_str(&mut p, key);
                 put_bytes(&mut p, bytes);
+            }
+            Frame::Trace(chunk) => p = chunk.to_bytes(),
+            Frame::Counters { locality, counters } => {
+                p.extend_from_slice(&locality.to_le_bytes());
+                put_counters(&mut p, counters);
             }
         }
         p
@@ -466,6 +501,10 @@ impl Frame {
                         rejected_breaker: c.u64()?,
                         queue_depth: c.u64()?,
                         queue_capacity: c.u64()?,
+                        p50_us: c.u64()?,
+                        p99_us: c.u64()?,
+                        p999_us: c.u64()?,
+                        counters: c.counters()?,
                     };
                     c.done()?;
                     Some(Frame::Status(s))
@@ -521,6 +560,20 @@ impl Frame {
                 };
                 parse().ok_or(FrameError::BadPayload { tag: "Snapshot" })?
             }
+            TAG_TRACE => Frame::Trace(
+                crate::trace::spool::TraceChunk::from_bytes(payload)
+                    .ok_or(FrameError::BadPayload { tag: "Trace" })?,
+            ),
+            TAG_COUNTERS => {
+                let mut c = Cursor::new(payload);
+                let parse = || -> Option<Frame> {
+                    let locality = c.u32()?;
+                    let counters = c.counters()?;
+                    c.done()?;
+                    Some(Frame::Counters { locality, counters })
+                };
+                parse().ok_or(FrameError::BadPayload { tag: "Counters" })?
+            }
             other => return Err(FrameError::UnknownTag { got: other }),
         };
         Ok((frame, total))
@@ -537,6 +590,16 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
 fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
     out.extend_from_slice(&(b.len() as u32).to_le_bytes());
     out.extend_from_slice(b);
+}
+
+/// Named counter list: u32 LE count, then per entry a length-prefixed
+/// name followed by a u64 LE value.
+fn put_counters(out: &mut Vec<u8>, counters: &[(String, u64)]) {
+    out.extend_from_slice(&(counters.len() as u32).to_le_bytes());
+    for (name, v) in counters {
+        put_str(out, name);
+        out.extend_from_slice(&v.to_le_bytes());
+    }
 }
 
 /// Bounds-checked little-endian reader over untrusted bytes: every
@@ -584,6 +647,20 @@ impl<'a> Cursor<'a> {
         self.take(len)
     }
 
+    /// Named counter list (the [`put_counters`] inverse). The count
+    /// field is untrusted: capacity is bounded by the bytes actually
+    /// present (each entry costs ≥ 12 length + value bytes).
+    fn counters(&mut self) -> Option<Vec<(String, u64)>> {
+        let n = usize::try_from(self.u32()?).ok()?;
+        let mut out = Vec::with_capacity(n.min(self.buf.len() / 12 + 1));
+        for _ in 0..n {
+            let name = self.str()?;
+            let v = self.u64()?;
+            out.push((name, v));
+        }
+        Some(out)
+    }
+
     /// All bytes consumed — trailing garbage is a decode failure.
     fn done(&self) -> Option<()> {
         (self.pos == self.buf.len()).then_some(())
@@ -619,7 +696,16 @@ mod tests {
                 rejected_breaker: 1,
                 queue_depth: 1,
                 queue_capacity: 16,
+                p50_us: 120,
+                p99_us: 950,
+                p999_us: 2400,
+                counters: vec![
+                    ("/serve/count/accepted".into(), 8),
+                    ("/scheduler/count/spawned".into(), 41),
+                ],
             }),
+            // A client-side query frame: the all-zero default report.
+            Frame::Status(StatusReport::default()),
             Frame::Reject { job_id: 9, retry_after_ms: 250, reason: "queue full".into() },
             Frame::Launch(TaskDesc {
                 task_id: 1001,
@@ -633,6 +719,31 @@ mod tests {
             Frame::TaskResult { task_id: 1002, ok: false, payload: b"kernel diverged".to_vec() },
             Frame::Heartbeat { locality: 2, seq: 0 },
             Frame::Snapshot { key: "ckpt_4_1".into(), bytes: vec![0; 24] },
+            Frame::Trace(crate::trace::spool::TraceChunk {
+                locality: 1,
+                seq: 3,
+                dropped: 2,
+                events: vec![
+                    crate::trace::Event {
+                        ts_ns: 1_000,
+                        kind: crate::trace::EventKind::ExecBegin,
+                        track: 0,
+                        a: 7,
+                        b: 0,
+                    },
+                    crate::trace::Event {
+                        ts_ns: 2_500,
+                        kind: crate::trace::EventKind::ExecEnd,
+                        track: 0,
+                        a: 7,
+                        b: 1,
+                    },
+                ],
+            }),
+            Frame::Counters {
+                locality: 2,
+                counters: vec![("/resilience/count/executed".into(), 17)],
+            },
         ]
     }
 
@@ -702,7 +813,7 @@ mod tests {
     #[test]
     fn unknown_tag_with_valid_checksum_is_typed() {
         // Build a frame with tag 42 by hand, checksummed correctly (tags
-        // 1..=9 are all assigned now).
+        // 1..=11 are all assigned now).
         let mut bytes = vec![MAGIC[0], MAGIC[1], PROTOCOL_VERSION, 42, 0, 0, 0, 0];
         let sum = fnv1a(&bytes);
         bytes.extend_from_slice(&sum.to_le_bytes());

@@ -35,8 +35,10 @@ use std::time::{Duration, Instant};
 
 use crate::checkpoint::{SnapshotData, SnapshotStore};
 use crate::future::Future;
+use crate::metrics::LatencyHistogram;
 use crate::runtime_handle::Runtime;
 use crate::stencil::ExecPolicy;
+use crate::trace::{self, EventKind};
 use crate::workloads::{self, RunParams};
 use crate::Promise;
 
@@ -185,6 +187,9 @@ struct Inner {
     results: Mutex<HashMap<u64, JobOutcome>>,
     inflight: AtomicUsize,
     counters: Counters,
+    /// End-to-end job latency (µs), recorded around each execution;
+    /// feeds the Status frame's p50/p99/p999.
+    latency: Mutex<LatencyHistogram>,
     shutdown: AtomicBool,
     started: Instant,
 }
@@ -229,6 +234,7 @@ impl Inner {
         match self.gate.try_admit() {
             Decision::Rejected { retry_after_ms } => {
                 self.counters.rejected_queue.fetch_add(1, Ordering::Relaxed);
+                trace::emit(EventKind::AdmissionReject, spec.job_id, 0);
                 return SubmitResponse::Rejected { reason: RejectReason::QueueFull, retry_after_ms };
             }
             Decision::Admitted => {}
@@ -239,6 +245,7 @@ impl Inner {
             Admission::Reject { retry_after_ticks } => {
                 self.gate.release();
                 self.counters.rejected_breaker.fetch_add(1, Ordering::Relaxed);
+                trace::emit(EventKind::AdmissionReject, spec.job_id, 1);
                 return SubmitResponse::Rejected {
                     reason: RejectReason::BreakerOpen,
                     retry_after_ms: retry_after_ticks,
@@ -329,7 +336,9 @@ impl Inner {
             JobOutcome { job_id: spec.job_id, ok, checksum_bits, detail: "deduplicated".into() }
         } else {
             self.counters.executions.fetch_add(1, Ordering::Relaxed);
+            let t0 = Instant::now();
             let outcome = self.run_workload(&spec);
+            self.latency.lock().unwrap().record(t0.elapsed().as_micros() as u64);
             let record = JobRecord {
                 spec: spec.clone(),
                 state: JobState::Done { ok: outcome.ok, checksum_bits: outcome.checksum_bits },
@@ -344,7 +353,16 @@ impl Inner {
                 self.breaker.on_success(&spec.workload, now);
                 self.counters.completed_ok.fetch_add(1, Ordering::Relaxed);
             } else {
+                let opens_before = self.breaker.opens(&spec.workload);
                 self.breaker.on_failure(&spec.workload, now);
+                let opens = self.breaker.opens(&spec.workload);
+                if opens > opens_before {
+                    trace::emit(
+                        EventKind::BreakerTransition,
+                        trace::key_hash(&spec.workload),
+                        opens as u64,
+                    );
+                }
                 self.counters.failed.fetch_add(1, Ordering::Relaxed);
             }
             outcome
@@ -417,6 +435,28 @@ impl Inner {
 
     fn status(&self) -> StatusReport {
         let s = self.stats();
+        let (p50_us, p99_us, p999_us) = {
+            let h = self.latency.lock().unwrap();
+            (
+                h.quantile(0.5).unwrap_or(0),
+                h.quantile(0.99).unwrap_or(0),
+                h.quantile(0.999).unwrap_or(0),
+            )
+        };
+        // Named counters: the server's own algebra under `/serve/...`,
+        // plus whatever the process-wide registry holds (`/scheduler/...`
+        // and `/resilience/...` once a run has published them).
+        let mut counters: Vec<(String, u64)> = vec![
+            ("/serve/count/submitted".into(), s.submitted),
+            ("/serve/count/accepted".into(), s.accepted),
+            ("/serve/count/completed".into(), s.completed_ok + s.deduped),
+            ("/serve/count/failed".into(), s.failed),
+            ("/serve/count/rejected-queue".into(), s.rejected_queue),
+            ("/serve/count/rejected-breaker".into(), s.rejected_breaker),
+            ("/serve/count/executions".into(), s.executions),
+            ("/serve/count/deduped".into(), s.deduped),
+        ];
+        counters.extend(crate::perfcounters::global().snapshot());
         StatusReport {
             submitted: s.submitted,
             accepted: s.accepted,
@@ -426,6 +466,10 @@ impl Inner {
             rejected_breaker: s.rejected_breaker,
             queue_depth: self.gate.depth() as u64,
             queue_capacity: self.gate.capacity() as u64,
+            p50_us,
+            p99_us,
+            p999_us,
+            counters,
         }
     }
 
@@ -475,6 +519,7 @@ impl Server {
             results: Mutex::new(HashMap::new()),
             inflight: AtomicUsize::new(0),
             counters: Counters::default(),
+            latency: Mutex::new(LatencyHistogram::new()),
             shutdown: AtomicBool::new(false),
             started: Instant::now(),
         });

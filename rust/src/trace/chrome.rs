@@ -1,0 +1,361 @@
+//! `trace::chrome` — Chrome trace-event JSON export.
+//!
+//! Output is the [Trace Event Format] JSON object form: a
+//! `traceEvents` array of `ph:"B"`/`ph:"E"` span pairs (task exec
+//! spans), `ph:"i"` instants (everything else — faults render with
+//! `cat:"fault"` so they stand out), and `ph:"M"` metadata naming each
+//! process/thread lane. Load the file at `ui.perfetto.dev` or
+//! `chrome://tracing`. Timestamps are microseconds since the trace
+//! session epoch.
+//!
+//! Built on the crate's own [`JsonValue`] encoder, so every export
+//! round-trips through [`JsonValue::parse`] — the property test in
+//! `tests/properties.rs` pins that, plus B/E balance per lane.
+//!
+//! [Trace Event Format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+//!
+//! ```
+//! use rhpx::trace::{chrome, Event, EventKind, Track};
+//!
+//! let track = Track {
+//!     pid: 1,
+//!     tid: 1,
+//!     name: "worker-0".into(),
+//!     events: vec![
+//!         Event { ts_ns: 1_000, kind: EventKind::ExecBegin, track: 0, a: 7, b: 0 },
+//!         Event { ts_ns: 9_000, kind: EventKind::ExecEnd, track: 0, a: 7, b: 1 },
+//!     ],
+//! };
+//! let json = chrome::chrome_trace(&[track], 0);
+//! let text = json.render();
+//! assert!(text.contains("\"ph\":\"B\"") && text.contains("\"ph\":\"E\""));
+//! ```
+
+use std::collections::BTreeSet;
+
+use crate::metrics::JsonValue;
+
+use super::{take_tracks, Event, EventKind, Track, WORKER_PID_BASE};
+
+/// What an export produced (printed by `rhpx run --trace`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExportSummary {
+    /// Exportable tracks (threads + remote locality lanes).
+    pub tracks: usize,
+    /// Matched exec spans (one B + one E each).
+    pub spans: usize,
+    /// Instant events (faults, lifecycle marks, unmatched span halves).
+    pub instants: usize,
+    /// Events lost to ring overwrite before export (session-cumulative,
+    /// local + remote). Reported, never silent.
+    pub dropped: u64,
+}
+
+fn us(ts_ns: u64) -> JsonValue {
+    JsonValue::Num(ts_ns as f64 / 1000.0)
+}
+
+fn base(name: &str, ph: &str, ts_ns: u64, track: &Track) -> Vec<(String, JsonValue)> {
+    vec![
+        ("name".to_string(), JsonValue::from(name)),
+        ("ph".to_string(), JsonValue::from(ph)),
+        ("ts".to_string(), us(ts_ns)),
+        ("pid".to_string(), JsonValue::from(track.pid as u64)),
+        ("tid".to_string(), JsonValue::from(track.tid as u64)),
+    ]
+}
+
+fn instant(e: &Event, track: &Track, name: &str) -> JsonValue {
+    let mut fields = base(name, "i", e.ts_ns, track);
+    fields.push(("s".to_string(), JsonValue::from("t")));
+    fields.push((
+        "cat".to_string(),
+        JsonValue::from(if e.kind.is_fault() { "fault" } else { "task" }),
+    ));
+    fields.push((
+        "args".to_string(),
+        JsonValue::obj([
+            ("a".to_string(), JsonValue::from(e.a)),
+            ("b".to_string(), JsonValue::from(e.b)),
+        ]),
+    ));
+    JsonValue::obj(fields)
+}
+
+fn metadata(name: &str, pid: u32, tid: Option<u32>, value: &str) -> JsonValue {
+    let mut fields = vec![
+        ("name".to_string(), JsonValue::from(name)),
+        ("ph".to_string(), JsonValue::from("M")),
+        ("pid".to_string(), JsonValue::from(pid as u64)),
+        (
+            "args".to_string(),
+            JsonValue::obj([("name".to_string(), JsonValue::from(value))]),
+        ),
+    ];
+    if let Some(tid) = tid {
+        fields.push(("tid".to_string(), JsonValue::from(tid as u64)));
+    }
+    JsonValue::obj(fields)
+}
+
+/// Per-event export role, decided by the span-matching pass.
+enum Role {
+    /// Matched `ExecBegin` — emit `ph:"B"`.
+    Begin,
+    /// Matched `ExecEnd` — emit `ph:"E"`.
+    End,
+    /// Everything else (including unmatched span halves) — `ph:"i"`.
+    Instant(&'static str),
+}
+
+/// Match `ExecBegin`/`ExecEnd` pairs within one track. Events arrive in
+/// time order and task execution on one thread nests (LIFO), so a stack
+/// suffices; an end that does not match the innermost open begin — or a
+/// begin the trace never saw closed (the killed-worker case) — degrades
+/// to an instant rather than corrupting the viewer's span stack.
+fn classify(events: &[Event]) -> Vec<Role> {
+    let mut roles: Vec<Role> = events
+        .iter()
+        .map(|e| Role::Instant(e.kind.name()))
+        .collect();
+    let mut stack: Vec<usize> = Vec::new();
+    for (i, e) in events.iter().enumerate() {
+        match e.kind {
+            EventKind::ExecBegin => stack.push(i),
+            EventKind::ExecEnd => match stack.last() {
+                Some(&top) if events[top].a == e.a => {
+                    stack.pop();
+                    roles[top] = Role::Begin;
+                    roles[i] = Role::End;
+                }
+                _ => roles[i] = Role::Instant("exec_end_orphan"),
+            },
+            _ => {}
+        }
+    }
+    for &i in &stack {
+        roles[i] = Role::Instant("exec_unfinished");
+    }
+    roles
+}
+
+fn build(tracks: &[Track], dropped: u64) -> (JsonValue, ExportSummary) {
+    let mut out: Vec<JsonValue> = Vec::new();
+    let mut summary = ExportSummary { tracks: tracks.len(), dropped, ..Default::default() };
+
+    let pids: BTreeSet<u32> = tracks.iter().map(|t| t.pid).collect();
+    for pid in pids {
+        let pname = if pid < WORKER_PID_BASE {
+            "rhpx".to_string()
+        } else {
+            format!("locality {}", pid - WORKER_PID_BASE)
+        };
+        out.push(metadata("process_name", pid, None, &pname));
+    }
+    for t in tracks {
+        out.push(metadata("thread_name", t.pid, Some(t.tid), &t.name));
+    }
+
+    for t in tracks {
+        let roles = classify(&t.events);
+        for (e, role) in t.events.iter().zip(&roles) {
+            match role {
+                Role::Begin => {
+                    let mut fields = base("exec", "B", e.ts_ns, t);
+                    fields.push(("cat".to_string(), JsonValue::from("task")));
+                    fields.push((
+                        "args".to_string(),
+                        JsonValue::obj([("task".to_string(), JsonValue::from(e.a))]),
+                    ));
+                    out.push(JsonValue::obj(fields));
+                    summary.spans += 1;
+                }
+                Role::End => {
+                    let mut fields = base("exec", "E", e.ts_ns, t);
+                    fields.push(("cat".to_string(), JsonValue::from("task")));
+                    out.push(JsonValue::obj(fields));
+                }
+                Role::Instant(name) => {
+                    out.push(instant(e, t, name));
+                    summary.instants += 1;
+                }
+            }
+        }
+    }
+
+    let json = JsonValue::obj([
+        ("traceEvents".to_string(), JsonValue::Arr(out)),
+        ("displayTimeUnit".to_string(), JsonValue::from("ms")),
+        (
+            "otherData".to_string(),
+            JsonValue::obj([
+                ("dropped_events".to_string(), JsonValue::from(dropped)),
+                ("tracks".to_string(), JsonValue::from(tracks.len())),
+            ]),
+        ),
+    ]);
+    (json, summary)
+}
+
+/// Render `tracks` as a Chrome trace-event JSON document. Pure — the
+/// `rhpx trace convert` subcommand and the tests feed it spool-derived
+/// tracks without ever touching the global session.
+pub fn chrome_trace(tracks: &[Track], dropped: u64) -> JsonValue {
+    build(tracks, dropped).0
+}
+
+/// Drain the global session ([`take_tracks`]) and write it to `path` as
+/// Chrome trace-event JSON.
+pub fn export(path: &str) -> std::io::Result<ExportSummary> {
+    let (tracks, dropped) = take_tracks();
+    export_tracks(path, &tracks, dropped)
+}
+
+/// Write pre-assembled tracks to `path` (the convert path).
+pub fn export_tracks(
+    path: &str,
+    tracks: &[Track],
+    dropped: u64,
+) -> std::io::Result<ExportSummary> {
+    let (json, summary) = build(tracks, dropped);
+    std::fs::write(path, json.render() + "\n")?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ts_ns: u64, kind: EventKind, a: u64, b: u64) -> Event {
+        Event { ts_ns, kind, track: 0, a, b }
+    }
+
+    fn phases(json: &JsonValue) -> Vec<(String, String)> {
+        json.get("traceEvents")
+            .and_then(JsonValue::as_arr)
+            .unwrap()
+            .iter()
+            .map(|e| {
+                (
+                    e.get("ph").and_then(JsonValue::as_str).unwrap().to_string(),
+                    e.get("name").and_then(JsonValue::as_str).unwrap().to_string(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spans_pair_and_faults_are_instants() {
+        let track = Track {
+            pid: 1,
+            tid: 1,
+            name: "worker-0".into(),
+            events: vec![
+                ev(1_000, EventKind::Spawn, 7, 0),
+                ev(2_000, EventKind::ExecBegin, 7, 0),
+                ev(3_000, EventKind::ValidateFail, 7, 0),
+                ev(4_000, EventKind::ExecEnd, 7, 1),
+            ],
+        };
+        let (json, summary) = build(&[track], 5);
+        assert_eq!(summary.spans, 1);
+        assert_eq!(summary.instants, 2);
+        assert_eq!(summary.dropped, 5);
+        let ph = phases(&json);
+        let b = ph.iter().filter(|(p, _)| p == "B").count();
+        let e = ph.iter().filter(|(p, _)| p == "E").count();
+        assert_eq!((b, e), (1, 1));
+        let text = json.render();
+        assert!(text.contains("\"cat\":\"fault\""), "{text}");
+        assert!(text.contains("\"dropped_events\":5"), "{text}");
+        // ts is microseconds: 1_000 ns = 1 µs (keys render sorted, so
+        // "ts" is the last field of its object).
+        assert!(text.contains("\"ts\":1}"), "{text}");
+        // Round-trips through the crate's own parser.
+        assert_eq!(JsonValue::parse(&text).unwrap(), json);
+    }
+
+    #[test]
+    fn nested_spans_stay_nested() {
+        let track = Track {
+            pid: 1,
+            tid: 2,
+            name: "w".into(),
+            events: vec![
+                ev(10, EventKind::ExecBegin, 1, 0),
+                ev(20, EventKind::ExecBegin, 2, 0),
+                ev(30, EventKind::ExecEnd, 2, 1),
+                ev(40, EventKind::ExecEnd, 1, 1),
+            ],
+        };
+        let (json, summary) = build(&[track], 0);
+        assert_eq!(summary.spans, 2);
+        // B B E E in event order: the viewer's span stack never breaks.
+        let seq: Vec<String> = phases(&json)
+            .into_iter()
+            .filter(|(p, _)| p == "B" || p == "E")
+            .map(|(p, _)| p)
+            .collect();
+        assert_eq!(seq, vec!["B", "B", "E", "E"]);
+    }
+
+    #[test]
+    fn unmatched_halves_degrade_to_instants() {
+        // A killed worker's last ExecBegin never sees its end; a replayed
+        // stream may carry an orphan end after a wraparound.
+        let track = Track {
+            pid: 3,
+            tid: 1,
+            name: "loc1/t0".into(),
+            events: vec![
+                ev(10, EventKind::ExecEnd, 9, 1),
+                ev(20, EventKind::ExecBegin, 5, 0),
+            ],
+        };
+        let (json, summary) = build(&[track], 0);
+        assert_eq!(summary.spans, 0);
+        assert_eq!(summary.instants, 2);
+        let names: Vec<String> = phases(&json)
+            .into_iter()
+            .filter(|(p, _)| p == "i")
+            .map(|(_, n)| n)
+            .collect();
+        assert!(names.contains(&"exec_end_orphan".to_string()), "{names:?}");
+        assert!(names.contains(&"exec_unfinished".to_string()), "{names:?}");
+        // No B without E anywhere in the document.
+        assert!(phases(&json).iter().all(|(p, _)| p != "B" && p != "E"));
+    }
+
+    #[test]
+    fn metadata_names_every_lane() {
+        let tracks = vec![
+            Track { pid: 1, tid: 1, name: "main".into(), events: vec![] },
+            Track { pid: 4, tid: 1, name: "loc2/t0".into(), events: vec![] },
+        ];
+        let (json, _) = build(&tracks, 0);
+        let text = json.render();
+        assert!(text.contains("\"process_name\""), "{text}");
+        assert!(text.contains("locality 2"), "{text}");
+        assert!(text.contains("\"thread_name\""), "{text}");
+        assert!(text.contains("\"main\""), "{text}");
+    }
+
+    #[test]
+    fn export_tracks_writes_parseable_json() {
+        let path = std::env::temp_dir()
+            .join(format!("rhpx_chrome_{}.trace.json", std::process::id()));
+        let track = Track {
+            pid: 1,
+            tid: 1,
+            name: "t".into(),
+            events: vec![ev(1, EventKind::Spawn, 1, 0)],
+        };
+        let summary =
+            export_tracks(path.to_str().unwrap(), &[track], 2).expect("write");
+        assert_eq!(summary.instants, 1);
+        assert_eq!(summary.dropped, 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(JsonValue::parse(&text).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,660 @@
+//! `trace` — a per-worker, lock-free flight recorder for task-lifecycle
+//! events, with Chrome-trace export ([`chrome`]) and a crash-surviving
+//! binary spool for process-backed localities ([`spool`]).
+//!
+//! The paper's headline claim is an *attribution* claim — most of the
+//! resilience overhead comes from replayed/replicated task bodies, not
+//! the APIs — and aggregate counters cannot show attribution. This
+//! module records *where time went*: every spawn, steal, exec span,
+//! replay attempt, replica race, checkpoint save/restore, validation
+//! verdict, heartbeat miss, and death verdict, stamped with monotonic
+//! nanoseconds and a per-thread track id.
+//!
+//! Design (the ORNL resilience-patterns "monitoring" structural pattern,
+//! arXiv 1611.02717, applied to the runtime itself):
+//!
+//! - **One [`Ring`] per recording thread** — fixed capacity, overwrite-
+//!   oldest, a single atomic write cursor. The record path performs no
+//!   allocation and takes no lock: five atomic stores into a seqlock-
+//!   stamped slot. Readers ([`Ring::drain`]) run concurrently on any
+//!   thread; a slot overwritten mid-read is *counted as dropped*, never
+//!   silently lost or torn.
+//! - **A process-global session** gated by one static `AtomicBool`:
+//!   when tracing is off, [`emit`] is a single relaxed load and a
+//!   branch — effectively a no-op compiled into the seams. Threads
+//!   register lazily on first emit and get a named track.
+//! - **Two sinks.** [`chrome::export`] writes Chrome trace-event JSON
+//!   (load it at `ui.perfetto.dev` or `chrome://tracing`);
+//!   [`spool::SpoolWriter`] appends framed [`spool::TraceChunk`]s to an
+//!   fsynced file *and* streams the same chunks to the parent process,
+//!   so a `kill -9`'d worker's final flushed events survive for
+//!   post-mortem stitching ([`spool::merge_chunks`]).
+//!
+//! ```
+//! use rhpx::trace::{EventKind, Ring};
+//!
+//! let ring = Ring::new(8, 0);
+//! ring.record(10, EventKind::Spawn, 1, 0);
+//! ring.record(20, EventKind::ExecBegin, 1, 0);
+//! ring.record(30, EventKind::ExecEnd, 1, 0);
+//! let d = ring.drain();
+//! assert_eq!(d.dropped, 0);
+//! assert_eq!(d.events.len(), 3);
+//! assert_eq!(d.events[0].kind, EventKind::Spawn);
+//! ```
+
+pub mod chrome;
+pub mod spool;
+
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread ring capacity (events), rounded up to a power of
+/// two. At ~3 events per task this holds the last ~5k tasks per worker.
+pub const DEFAULT_CAPACITY: usize = 1 << 14;
+
+/// Chrome-trace `pid` of the driving (parent) process.
+pub const PARENT_PID: u32 = 1;
+
+/// Chrome-trace `pid` base for worker localities: locality `L` renders
+/// as pid `WORKER_PID_BASE + L`.
+pub const WORKER_PID_BASE: u32 = 2;
+
+/// Typed task-lifecycle event kinds. Discriminants are the wire
+/// encoding ([`spool`]) — append-only; never renumber.
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// Task handed to the scheduler. `a` = spawn sequence number.
+    Spawn = 1,
+    /// A worker stole a task. `a` = thief index, `b` = victim index.
+    Steal = 2,
+    /// Task body starts on this track. `a` = task/launch id (0 for
+    /// anonymous pool jobs). Paired with [`EventKind::ExecEnd`].
+    ExecBegin = 3,
+    /// Task body finished. `a` = task/launch id, `b` = 1 if it returned
+    /// Ok.
+    ExecEnd = 4,
+    /// Replay retry `b` (1-based) of launch token `a`.
+    ReplayAttempt = 5,
+    /// Replica `b` of launch token `a` submitted.
+    ReplicaLaunch = 6,
+    /// A replica's result was accepted for token `a`.
+    ReplicaWin = 7,
+    /// A losing team replica observed cancellation (token `a`).
+    ReplicaCancel = 8,
+    /// Checkpoint stored. `a` = FNV hash of the key, `b` = bytes.
+    CheckpointSave = 9,
+    /// Checkpoint hit. `a` = FNV hash of the key, `b` = bytes.
+    CheckpointRestore = 10,
+    /// Snapshots re-homed off dead locality `a`.
+    CheckpointRehome = 11,
+    /// Validator accepted a result (launch token `a`).
+    ValidatePass = 12,
+    /// Validator rejected a result (launch token `a`).
+    ValidateFail = 13,
+    /// Injected silent-data-corruption bit-flip actually landed.
+    SdcFlip = 14,
+    /// Service admission rejected job `a` (`b`: 0 = queue, 1 = breaker).
+    AdmissionReject = 15,
+    /// Circuit-breaker observation for class hash `a` (`b`: 0 = open
+    /// rejected a request, 1 = half-open probe admitted).
+    BreakerTransition = 16,
+    /// Locality `a` has missed `b` consecutive heartbeat periods.
+    HeartbeatMiss = 17,
+    /// The monitor declared locality `a` dead.
+    DeathVerdict = 18,
+    /// In-flight call `b`, homed on dead locality `a`, drained.
+    Drain = 19,
+    /// Call `a` (lost on locality `b`) re-materialized on a survivor.
+    Rematerialize = 20,
+}
+
+impl EventKind {
+    /// Every kind, in discriminant order (the taxonomy table in
+    /// ARCHITECTURE.md mirrors this).
+    pub const ALL: [EventKind; 20] = [
+        EventKind::Spawn,
+        EventKind::Steal,
+        EventKind::ExecBegin,
+        EventKind::ExecEnd,
+        EventKind::ReplayAttempt,
+        EventKind::ReplicaLaunch,
+        EventKind::ReplicaWin,
+        EventKind::ReplicaCancel,
+        EventKind::CheckpointSave,
+        EventKind::CheckpointRestore,
+        EventKind::CheckpointRehome,
+        EventKind::ValidatePass,
+        EventKind::ValidateFail,
+        EventKind::SdcFlip,
+        EventKind::AdmissionReject,
+        EventKind::BreakerTransition,
+        EventKind::HeartbeatMiss,
+        EventKind::DeathVerdict,
+        EventKind::Drain,
+        EventKind::Rematerialize,
+    ];
+
+    /// Decode a wire discriminant.
+    pub fn from_u8(b: u8) -> Option<EventKind> {
+        EventKind::ALL.get(b.wrapping_sub(1) as usize).copied()
+    }
+
+    /// Stable display name (the Chrome-trace event name).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Spawn => "spawn",
+            EventKind::Steal => "steal",
+            EventKind::ExecBegin => "exec_begin",
+            EventKind::ExecEnd => "exec_end",
+            EventKind::ReplayAttempt => "replay_attempt",
+            EventKind::ReplicaLaunch => "replica_launch",
+            EventKind::ReplicaWin => "replica_win",
+            EventKind::ReplicaCancel => "replica_cancel",
+            EventKind::CheckpointSave => "checkpoint_save",
+            EventKind::CheckpointRestore => "checkpoint_restore",
+            EventKind::CheckpointRehome => "checkpoint_rehome",
+            EventKind::ValidatePass => "validate_pass",
+            EventKind::ValidateFail => "validate_fail",
+            EventKind::SdcFlip => "sdc_flip",
+            EventKind::AdmissionReject => "admission_reject",
+            EventKind::BreakerTransition => "breaker_transition",
+            EventKind::HeartbeatMiss => "heartbeat_miss",
+            EventKind::DeathVerdict => "death_verdict",
+            EventKind::Drain => "drain",
+            EventKind::Rematerialize => "rematerialize",
+        }
+    }
+
+    /// Fault-ish kinds render as highlighted instants in the export.
+    pub fn is_fault(self) -> bool {
+        matches!(
+            self,
+            EventKind::ValidateFail
+                | EventKind::SdcFlip
+                | EventKind::AdmissionReject
+                | EventKind::BreakerTransition
+                | EventKind::HeartbeatMiss
+                | EventKind::DeathVerdict
+                | EventKind::Drain
+        )
+    }
+}
+
+/// One recorded event: monotonic nanoseconds since the session start,
+/// the kind, the recording track, and two kind-specific operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub ts_ns: u64,
+    pub kind: EventKind,
+    pub track: u32,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// FNV-1a over a string key — the stable 64-bit handle events carry for
+/// string-typed operands (checkpoint keys, breaker classes).
+pub fn key_hash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One seqlock-stamped slot. Fields are individually atomic (no torn
+/// word is possible); `seq` guards cross-field consistency: odd while a
+/// write is in flight, `2 * (index + 1)` once generation `index` is
+/// stable. `seq == 0` means never written.
+#[derive(Default)]
+struct Slot {
+    seq: AtomicU64,
+    ts: AtomicU64,
+    kind_track: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+/// Result of [`Ring::drain`]: the consistent events read, plus how many
+/// were lost to overwrite (or to a writer racing the read) since the
+/// previous drain. Dropped events are *counted*, never silent.
+#[derive(Debug, Default)]
+pub struct Drained {
+    pub events: Vec<Event>,
+    pub dropped: u64,
+}
+
+/// Fixed-capacity, overwrite-oldest event ring with one atomic write
+/// cursor. Single producer (the owning thread), any-thread reader.
+///
+/// The record path is five atomic stores and one cursor store — no
+/// allocation, no lock, no CAS loop. Overwrite never blocks on the
+/// reader: a reader that loses the race to an overwriting writer
+/// discards the torn slot and counts it dropped.
+pub struct Ring {
+    slots: Box<[Slot]>,
+    /// Total events ever recorded (monotonic write cursor).
+    cursor: AtomicU64,
+    /// Low-water mark of [`Ring::drain`] (events consumed).
+    read_cursor: AtomicU64,
+    /// Events overwritten or torn before a drain could read them.
+    dropped: AtomicU64,
+    track: u32,
+}
+
+impl Ring {
+    /// A ring holding the last `capacity` events (rounded up to a power
+    /// of two, minimum 2) for track `track`.
+    pub fn new(capacity: usize, track: u32) -> Ring {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots: Vec<Slot> = (0..cap).map(|_| Slot::default()).collect();
+        Ring {
+            slots: slots.into_boxed_slice(),
+            cursor: AtomicU64::new(0),
+            read_cursor: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            track,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn track(&self) -> u32 {
+        self.track
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.cursor.load(Ordering::Acquire)
+    }
+
+    /// Cumulative events lost to overwrite/tearing across all drains.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record one event. Single-producer: only the owning thread calls
+    /// this. Seqlock write protocol: mark the slot odd, publish the
+    /// fields, mark it even with the new generation.
+    #[inline]
+    pub fn record(&self, ts_ns: u64, kind: EventKind, a: u64, b: u64) {
+        let i = self.cursor.load(Ordering::Relaxed);
+        let slot = &self.slots[(i as usize) & (self.slots.len() - 1)];
+        slot.seq.store(2 * i + 1, Ordering::Relaxed);
+        // The odd mark must hit memory before any field does, or a
+        // racing reader could mix generations without noticing.
+        fence(Ordering::Release);
+        slot.ts.store(ts_ns, Ordering::Relaxed);
+        slot.kind_track.store(kind as u64 | ((self.track as u64) << 32), Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        slot.seq.store(2 * (i + 1), Ordering::Release);
+        self.cursor.store(i + 1, Ordering::Release);
+    }
+
+    /// Seqlock read of logical index `i`; `None` if the slot no longer
+    /// (or not yet consistently) holds generation `i`.
+    fn read_at(&self, i: u64) -> Option<Event> {
+        let slot = &self.slots[(i as usize) & (self.slots.len() - 1)];
+        let s1 = slot.seq.load(Ordering::Acquire);
+        let ts = slot.ts.load(Ordering::Relaxed);
+        let kind_track = slot.kind_track.load(Ordering::Relaxed);
+        let a = slot.a.load(Ordering::Relaxed);
+        let b = slot.b.load(Ordering::Relaxed);
+        fence(Ordering::Acquire);
+        let s2 = slot.seq.load(Ordering::Relaxed);
+        if s1 != s2 || s1 % 2 == 1 || s1 != 2 * (i + 1) {
+            return None; // torn, in-flight, or already overwritten
+        }
+        let kind = EventKind::from_u8((kind_track & 0xFF) as u8)?;
+        Some(Event { ts_ns: ts, kind, track: (kind_track >> 32) as u32, a, b })
+    }
+
+    /// Read and consume everything recorded since the previous drain
+    /// (oldest first). Events overwritten before this drain reached
+    /// them — and slots torn by a writer racing the read — are counted
+    /// in [`Drained::dropped`] and in the cumulative [`Ring::dropped`].
+    pub fn drain(&self) -> Drained {
+        let cur = self.cursor.load(Ordering::Acquire);
+        let next = self.read_cursor.load(Ordering::Relaxed);
+        let lo = cur.saturating_sub(self.slots.len() as u64).max(next);
+        let overwritten = lo - next;
+        let mut events = Vec::with_capacity((cur - lo) as usize);
+        let mut torn = 0u64;
+        for i in lo..cur {
+            match self.read_at(i) {
+                Some(e) => events.push(e),
+                None => torn += 1,
+            }
+        }
+        // The writer may have advanced while we scanned; anything it
+        // wrote past `cur` stays for the next drain.
+        self.read_cursor.store(cur, Ordering::Relaxed);
+        let dropped = overwritten + torn;
+        if dropped > 0 {
+            self.dropped.fetch_add(dropped, Ordering::Relaxed);
+        }
+        Drained { events, dropped }
+    }
+}
+
+/// A per-thread handle into the session's ring. Cloning is cheap (an
+/// `Arc` bump); [`Recorder::off`] is the no-op handle used when tracing
+/// is disabled — its [`Recorder::emit`] compiles down to a null check.
+#[derive(Clone)]
+pub struct Recorder {
+    ring: Option<Arc<Ring>>,
+}
+
+impl Recorder {
+    /// The no-op recorder (tracing off).
+    pub fn off() -> Recorder {
+        Recorder { ring: None }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.ring.is_some()
+    }
+
+    /// Record an event on this thread's track (no-op when off).
+    #[inline]
+    pub fn emit(&self, kind: EventKind, a: u64, b: u64) {
+        if let Some(ring) = &self.ring {
+            ring.record(now_ns(), kind, a, b);
+        }
+    }
+}
+
+/// One exportable track: a Chrome-trace (pid, tid) lane plus its name
+/// and time-ordered events.
+#[derive(Debug, Clone)]
+pub struct Track {
+    pub pid: u32,
+    pub tid: u32,
+    pub name: String,
+    pub events: Vec<Event>,
+}
+
+struct Session {
+    start: Instant,
+    rings: Mutex<Vec<Arc<Ring>>>,
+    names: Mutex<Vec<String>>,
+    remote: Mutex<Vec<(u32, Vec<Event>)>>,
+    remote_dropped: AtomicU64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn session() -> &'static Session {
+    static S: OnceLock<Session> = OnceLock::new();
+    S.get_or_init(|| Session {
+        start: Instant::now(),
+        rings: Mutex::new(Vec::new()),
+        names: Mutex::new(Vec::new()),
+        remote: Mutex::new(Vec::new()),
+        remote_dropped: AtomicU64::new(0),
+    })
+}
+
+/// Monotonic nanoseconds since the session epoch.
+pub fn now_ns() -> u64 {
+    session().start.elapsed().as_nanos() as u64
+}
+
+/// Turn the global recorder on. Threads register their track lazily on
+/// first [`emit`]. Idempotent.
+pub fn enable() {
+    session();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn the global recorder off: [`emit`] returns to its one-load
+/// fast path. Already-recorded events stay drainable.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Is the global recorder on?
+#[inline]
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    static RECORDER: std::cell::RefCell<Option<Recorder>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// This thread's recorder handle: registers a named track on first use
+/// while tracing is on; [`Recorder::off`] while tracing is off.
+pub fn recorder() -> Recorder {
+    if !active() {
+        return Recorder::off();
+    }
+    RECORDER.with(|r| {
+        let mut r = r.borrow_mut();
+        if r.is_none() {
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_default();
+            *r = Some(register_track(name));
+        }
+        r.as_ref().expect("registered above").clone()
+    })
+}
+
+fn register_track(name: String) -> Recorder {
+    let s = session();
+    let mut rings = s.rings.lock().unwrap();
+    let track = rings.len() as u32;
+    let ring = Arc::new(Ring::new(DEFAULT_CAPACITY, track));
+    rings.push(Arc::clone(&ring));
+    let name = if name.is_empty() { format!("thread-{track}") } else { name };
+    s.names.lock().unwrap().push(name);
+    Recorder { ring: Some(ring) }
+}
+
+/// Record one event on the calling thread's track. This is the call the
+/// runtime seams compile in: when tracing is off it is one relaxed
+/// atomic load and a branch.
+#[inline]
+pub fn emit(kind: EventKind, a: u64, b: u64) {
+    if !active() {
+        return;
+    }
+    recorder().emit(kind, a, b);
+}
+
+/// Fold events shipped from a worker process (locality `locality`) into
+/// the session, with that process's own dropped count.
+pub fn ingest_remote(locality: u32, events: Vec<Event>, dropped: u64) {
+    let s = session();
+    if dropped > 0 {
+        s.remote_dropped.fetch_add(dropped, Ordering::Relaxed);
+    }
+    if !events.is_empty() {
+        s.remote.lock().unwrap().push((locality, events));
+    }
+}
+
+/// Session totals: `(events recorded on local tracks, events dropped —
+/// local rings + remote chunks)`.
+pub fn totals() -> (u64, u64) {
+    let s = session();
+    let rings: Vec<Arc<Ring>> = s.rings.lock().unwrap().clone();
+    let recorded = rings.iter().map(|r| r.total()).sum();
+    let dropped = rings.iter().map(|r| r.dropped()).sum::<u64>()
+        + s.remote_dropped.load(Ordering::Relaxed);
+    (recorded, dropped)
+}
+
+/// Drain every local ring (for the spool flusher in worker processes).
+/// Returns all undrained events across tracks plus the incremental
+/// dropped count.
+pub fn drain_all() -> Drained {
+    let s = session();
+    let rings: Vec<Arc<Ring>> = s.rings.lock().unwrap().clone();
+    let mut out = Drained::default();
+    for ring in rings {
+        let d = ring.drain();
+        out.events.extend(d.events);
+        out.dropped += d.dropped;
+    }
+    out
+}
+
+/// Drain the session into exportable tracks: one per local thread, one
+/// per (locality, remote track) of ingested worker events. Returns the
+/// tracks and the *cumulative* session dropped count.
+pub fn take_tracks() -> (Vec<Track>, u64) {
+    let s = session();
+    let rings: Vec<Arc<Ring>> = s.rings.lock().unwrap().clone();
+    let names: Vec<String> = s.names.lock().unwrap().clone();
+    let mut tracks = Vec::new();
+    for ring in &rings {
+        let d = ring.drain();
+        let name = names
+            .get(ring.track() as usize)
+            .cloned()
+            .unwrap_or_else(|| format!("thread-{}", ring.track()));
+        tracks.push(Track { pid: PARENT_PID, tid: ring.track() + 1, name, events: d.events });
+    }
+    let remote: Vec<(u32, Vec<Event>)> = std::mem::take(&mut *s.remote.lock().unwrap());
+    let mut by: std::collections::BTreeMap<(u32, u32), Vec<Event>> = Default::default();
+    for (loc, events) in remote {
+        for e in events {
+            by.entry((loc, e.track)).or_default().push(e);
+        }
+    }
+    for ((loc, track), mut events) in by {
+        events.sort_by_key(|e| e.ts_ns);
+        tracks.push(Track {
+            pid: WORKER_PID_BASE + loc,
+            tid: track + 1,
+            name: format!("loc{loc}/t{track}"),
+            events,
+        });
+    }
+    let dropped = rings.iter().map(|r| r.dropped()).sum::<u64>()
+        + s.remote_dropped.load(Ordering::Relaxed);
+    (tracks, dropped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_discriminants_roundtrip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::from_u8(k as u8), Some(k), "{k:?}");
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(EventKind::from_u8(0), None);
+        assert_eq!(EventKind::from_u8(21), None);
+        assert_eq!(EventKind::from_u8(255), None);
+    }
+
+    #[test]
+    fn ring_records_in_order() {
+        let ring = Ring::new(8, 3);
+        for i in 0..5u64 {
+            ring.record(100 + i, EventKind::Spawn, i, i * 2);
+        }
+        let d = ring.drain();
+        assert_eq!(d.dropped, 0);
+        assert_eq!(d.events.len(), 5);
+        for (i, e) in d.events.iter().enumerate() {
+            assert_eq!(e.ts_ns, 100 + i as u64);
+            assert_eq!(e.a, i as u64);
+            assert_eq!(e.track, 3);
+        }
+        // A second drain sees only what arrived since.
+        assert!(ring.drain().events.is_empty());
+        ring.record(999, EventKind::Steal, 7, 8);
+        let d = ring.drain();
+        assert_eq!(d.events.len(), 1);
+        assert_eq!(d.events[0].kind, EventKind::Steal);
+    }
+
+    #[test]
+    fn wraparound_overwrites_oldest_and_counts_drops() {
+        let ring = Ring::new(4, 0);
+        for i in 0..10u64 {
+            ring.record(i, EventKind::Spawn, i, 0);
+        }
+        let d = ring.drain();
+        // Capacity 4: the last 4 events survive, 6 were overwritten.
+        assert_eq!(d.events.len(), 4);
+        assert_eq!(d.dropped, 6);
+        assert_eq!(ring.dropped(), 6);
+        assert_eq!(ring.total(), 10);
+        let kept: Vec<u64> = d.events.iter().map(|e| e.a).collect();
+        assert_eq!(kept, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        assert_eq!(Ring::new(0, 0).capacity(), 2);
+        assert_eq!(Ring::new(5, 0).capacity(), 8);
+        assert_eq!(Ring::new(8, 0).capacity(), 8);
+    }
+
+    #[test]
+    fn off_recorder_is_a_noop() {
+        let r = Recorder::off();
+        assert!(!r.is_on());
+        r.emit(EventKind::Spawn, 1, 2); // must not panic or record
+    }
+
+    #[test]
+    fn key_hash_is_stable_fnv() {
+        assert_eq!(key_hash(""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(key_hash("a"), key_hash("b"));
+        assert_eq!(key_hash("ckpt_4_1"), key_hash("ckpt_4_1"));
+    }
+
+    // The single test in this binary that touches the global session
+    // (everything else drives `Ring`s directly so parallel test threads
+    // never fight over the ENABLED flag).
+    #[test]
+    fn global_session_registers_tracks_and_exports() {
+        enable();
+        assert!(active());
+        emit(EventKind::Spawn, 41, 0);
+        emit(EventKind::ExecBegin, 41, 0);
+        emit(EventKind::ExecEnd, 41, 1);
+        ingest_remote(
+            2,
+            vec![Event { ts_ns: 5, kind: EventKind::DeathVerdict, track: 0, a: 2, b: 0 }],
+            3,
+        );
+        let (tracks, dropped) = take_tracks();
+        assert!(dropped >= 3, "remote dropped count folds in: {dropped}");
+        let mine = tracks
+            .iter()
+            .find(|t| t.pid == PARENT_PID && t.events.iter().any(|e| e.a == 41))
+            .expect("this thread's track");
+        assert_eq!(mine.events.iter().filter(|e| e.a == 41).count(), 3);
+        let remote = tracks
+            .iter()
+            .find(|t| t.pid == WORKER_PID_BASE + 2)
+            .expect("remote track");
+        assert_eq!(remote.name, "loc2/t0");
+        assert_eq!(remote.events[0].kind, EventKind::DeathVerdict);
+        disable();
+        assert!(!active());
+        emit(EventKind::Spawn, 999, 0); // no-op while off
+        let (tracks, _) = take_tracks();
+        assert!(
+            tracks.iter().all(|t| t.events.iter().all(|e| e.a != 999)),
+            "emit after disable recorded"
+        );
+    }
+}

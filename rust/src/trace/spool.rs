@@ -1,0 +1,343 @@
+//! `trace::spool` — the crash-surviving binary trace sink for
+//! process-backed localities.
+//!
+//! Worker processes drain their rings into [`TraceChunk`]s and write
+//! them twice: appended to a local spool file and fsynced
+//! ([`SpoolWriter::append`]), *and* streamed to the parent as
+//! [`Frame::Trace`] frames over the existing worker connection. After a
+//! literal `kill -9` the parent stitches the two sources
+//! ([`merge_chunks`] dedups by `(locality, seq)`), so the corpse's last
+//! fsynced events make it into the merged timeline even though its
+//! socket died mid-stream — post-mortem forensics the simulated cluster
+//! never needed.
+//!
+//! A spool file is nothing but concatenated encoded frames (the PR 8
+//! framing: magic, version, tag, length, FNV-1a trailer). A process
+//! killed mid-append leaves a truncated final frame; [`read_spool_file`]
+//! keeps the valid prefix and drops the torn tail — the same
+//! "total decode" discipline as the wire.
+
+use std::path::{Path, PathBuf};
+
+use crate::checkpoint::SnapshotData;
+use crate::serve::protocol::Frame;
+
+use super::{Event, EventKind, Track, WORKER_PID_BASE};
+
+/// Events per chunk cap: keeps every encoded frame well under the
+/// protocol's payload cap (29 bytes/event ⇒ ~240 KiB per chunk).
+pub const MAX_EVENTS_PER_CHUNK: usize = 8192;
+
+const EVENT_WIRE_BYTES: usize = 29;
+
+/// One framed batch of trace events from one locality. `seq` is
+/// per-locality and monotonic — the dedup key when the streamed and
+/// spooled copies of the same chunk both survive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceChunk {
+    pub locality: u32,
+    pub seq: u64,
+    /// Ring-dropped count the producer observed with this batch.
+    pub dropped: u64,
+    pub events: Vec<Event>,
+}
+
+impl SnapshotData for TraceChunk {
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(24 + self.events.len() * EVENT_WIRE_BYTES);
+        out.extend_from_slice(&self.locality.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&self.dropped.to_le_bytes());
+        out.extend_from_slice(&(self.events.len() as u32).to_le_bytes());
+        for e in &self.events {
+            out.extend_from_slice(&e.ts_ns.to_le_bytes());
+            out.extend_from_slice(&e.a.to_le_bytes());
+            out.extend_from_slice(&e.b.to_le_bytes());
+            out.extend_from_slice(&e.track.to_le_bytes());
+            out.push(e.kind as u8);
+        }
+        out
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Option<Self> {
+        if bytes.len() < 24 {
+            return None;
+        }
+        let locality = u32::from_le_bytes(bytes[0..4].try_into().ok()?);
+        let seq = u64::from_le_bytes(bytes[4..12].try_into().ok()?);
+        let dropped = u64::from_le_bytes(bytes[12..20].try_into().ok()?);
+        let n = u32::from_le_bytes(bytes[20..24].try_into().ok()?) as usize;
+        let body = &bytes[24..];
+        // The count is untrusted: it must exactly cover the bytes present.
+        if body.len() != n.checked_mul(EVENT_WIRE_BYTES)? {
+            return None;
+        }
+        let mut events = Vec::with_capacity(n);
+        for chunk in body.chunks_exact(EVENT_WIRE_BYTES) {
+            events.push(Event {
+                ts_ns: u64::from_le_bytes(chunk[0..8].try_into().ok()?),
+                a: u64::from_le_bytes(chunk[8..16].try_into().ok()?),
+                b: u64::from_le_bytes(chunk[16..24].try_into().ok()?),
+                track: u32::from_le_bytes(chunk[24..28].try_into().ok()?),
+                kind: EventKind::from_u8(chunk[28])?,
+            });
+        }
+        Some(TraceChunk { locality, seq, dropped, events })
+    }
+}
+
+/// Append-only, fsynced spool of framed [`TraceChunk`]s for one
+/// locality. [`SpoolWriter::append`] returns the chunks it framed so
+/// the caller can stream the identical bytes to the parent.
+pub struct SpoolWriter {
+    file: std::fs::File,
+    locality: u32,
+    next_seq: u64,
+}
+
+/// Spool file path for `locality` under `dir`.
+pub fn spool_path(dir: &Path, locality: u32) -> PathBuf {
+    dir.join(format!("loc{locality}.spool"))
+}
+
+impl SpoolWriter {
+    /// Create (truncate) the spool for `locality` under `dir`, creating
+    /// the directory if needed.
+    pub fn create(dir: &Path, locality: u32) -> std::io::Result<SpoolWriter> {
+        std::fs::create_dir_all(dir)?;
+        let file = std::fs::File::create(spool_path(dir, locality))?;
+        Ok(SpoolWriter { file, locality, next_seq: 0 })
+    }
+
+    /// Frame `events` (split into ≤ [`MAX_EVENTS_PER_CHUNK`] batches),
+    /// append to the spool, and fsync — only after the sync returns are
+    /// the chunks considered durable. `dropped` rides on the first
+    /// chunk. With no events and no drops this is a no-op.
+    pub fn append(
+        &mut self,
+        events: &[Event],
+        dropped: u64,
+    ) -> std::io::Result<Vec<TraceChunk>> {
+        use std::io::Write as _;
+        if events.is_empty() && dropped == 0 {
+            return Ok(Vec::new());
+        }
+        let mut chunks = Vec::new();
+        let mut batches: Vec<&[Event]> =
+            events.chunks(MAX_EVENTS_PER_CHUNK).collect();
+        if batches.is_empty() {
+            batches.push(&[]); // dropped-only chunk
+        }
+        for (i, batch) in batches.into_iter().enumerate() {
+            let chunk = TraceChunk {
+                locality: self.locality,
+                seq: self.next_seq,
+                dropped: if i == 0 { dropped } else { 0 },
+                events: batch.to_vec(),
+            };
+            self.next_seq += 1;
+            self.file.write_all(&Frame::Trace(chunk.clone()).encode())?;
+            chunks.push(chunk);
+        }
+        self.file.sync_data()?;
+        Ok(chunks)
+    }
+}
+
+/// Read every intact [`TraceChunk`] frame from a spool file. A torn
+/// final frame (the producer died mid-append) truncates silently to the
+/// valid prefix; a missing file reads as empty.
+pub fn read_spool_file(path: &Path) -> Vec<TraceChunk> {
+    let Ok(bytes) = std::fs::read(path) else { return Vec::new() };
+    let mut out = Vec::new();
+    let mut off = 0;
+    while off < bytes.len() {
+        match Frame::decode(&bytes[off..]) {
+            Ok((Frame::Trace(chunk), n)) => {
+                out.push(chunk);
+                off += n;
+            }
+            Ok((_, n)) => off += n, // foreign frame: skip, keep scanning
+            Err(_) => break,        // torn tail from the kill: stop here
+        }
+    }
+    out
+}
+
+/// Read every `*.spool` file under `dir`.
+pub fn read_spool_dir(dir: &Path) -> Vec<TraceChunk> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Vec::new() };
+    let mut out = Vec::new();
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("spool") {
+            out.extend(read_spool_file(&path));
+        }
+    }
+    out
+}
+
+/// Union of the streamed and spooled copies, deduplicated by
+/// `(locality, seq)` and ordered by it — the post-mortem stitch.
+pub fn merge_chunks(
+    streamed: Vec<TraceChunk>,
+    spooled: Vec<TraceChunk>,
+) -> Vec<TraceChunk> {
+    let mut by: std::collections::BTreeMap<(u32, u64), TraceChunk> = Default::default();
+    for chunk in spooled.into_iter().chain(streamed) {
+        by.insert((chunk.locality, chunk.seq), chunk);
+    }
+    by.into_values().collect()
+}
+
+/// Fold chunks into `(locality, events-in-seq-order, dropped-total)`
+/// triples — the shape [`crate::trace::ingest_remote`] takes.
+pub fn per_locality(chunks: Vec<TraceChunk>) -> Vec<(u32, Vec<Event>, u64)> {
+    let mut by: std::collections::BTreeMap<u32, (Vec<Event>, u64)> = Default::default();
+    for chunk in merge_chunks(chunks, Vec::new()) {
+        let slot = by.entry(chunk.locality).or_default();
+        slot.0.extend(chunk.events);
+        slot.1 += chunk.dropped;
+    }
+    by.into_iter().map(|(loc, (events, dropped))| (loc, events, dropped)).collect()
+}
+
+/// Build exportable tracks straight from chunks (the standalone
+/// `rhpx trace convert` path — no global session involved). Returns the
+/// tracks and the summed producer-side dropped count.
+pub fn tracks_from_chunks(chunks: Vec<TraceChunk>) -> (Vec<Track>, u64) {
+    let mut tracks = Vec::new();
+    let mut dropped_total = 0;
+    for (loc, events, dropped) in per_locality(chunks) {
+        dropped_total += dropped;
+        let mut by: std::collections::BTreeMap<u32, Vec<Event>> = Default::default();
+        for e in events {
+            by.entry(e.track).or_default().push(e);
+        }
+        for (track, mut events) in by {
+            events.sort_by_key(|e| e.ts_ns);
+            tracks.push(Track {
+                pid: WORKER_PID_BASE + loc,
+                tid: track + 1,
+                name: format!("loc{loc}/t{track}"),
+                events,
+            });
+        }
+    }
+    (tracks, dropped_total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ts_ns: u64, kind: EventKind, a: u64) -> Event {
+        Event { ts_ns, kind, track: 0, a, b: 0 }
+    }
+
+    fn chunk(locality: u32, seq: u64, ids: &[u64]) -> TraceChunk {
+        TraceChunk {
+            locality,
+            seq,
+            dropped: 0,
+            events: ids.iter().map(|&a| ev(a * 10, EventKind::Spawn, a)).collect(),
+        }
+    }
+
+    #[test]
+    fn chunk_bytes_roundtrip() {
+        let c = TraceChunk {
+            locality: 2,
+            seq: 17,
+            dropped: 3,
+            events: vec![
+                ev(1, EventKind::ExecBegin, 9),
+                Event { ts_ns: 2, kind: EventKind::HeartbeatMiss, track: 5, a: 1, b: 4 },
+            ],
+        };
+        assert_eq!(TraceChunk::from_bytes(&c.to_bytes()), Some(c.clone()));
+        // Truncations never panic and never decode.
+        let bytes = c.to_bytes();
+        for cut in 0..bytes.len() {
+            assert_eq!(TraceChunk::from_bytes(&bytes[..cut]), None, "cut {cut}");
+        }
+        // A hostile count field fails the exact-coverage check.
+        let mut hostile = c.to_bytes();
+        hostile[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(TraceChunk::from_bytes(&hostile), None);
+        // An unknown kind byte is a decode failure, not a panic.
+        let mut bad_kind = c.to_bytes();
+        let kind_at = 24 + EVENT_WIRE_BYTES - 1;
+        bad_kind[kind_at] = 200;
+        assert_eq!(TraceChunk::from_bytes(&bad_kind), None);
+    }
+
+    #[test]
+    fn writer_appends_and_reader_reads_back() {
+        let dir = std::env::temp_dir().join(format!("rhpx_spool_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = SpoolWriter::create(&dir, 1).expect("create");
+        let events: Vec<Event> = (0..5).map(|i| ev(i, EventKind::Spawn, i)).collect();
+        let first = w.append(&events, 2).expect("append");
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].seq, 0);
+        assert_eq!(first[0].dropped, 2);
+        let second = w.append(&events[..1], 0).expect("append");
+        assert_eq!(second[0].seq, 1);
+        assert!(w.append(&[], 0).expect("noop").is_empty());
+        let back = read_spool_file(&spool_path(&dir, 1));
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0], first[0]);
+        assert_eq!(back[1], second[0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_keeps_the_valid_prefix() {
+        let dir = std::env::temp_dir().join(format!("rhpx_spool_torn_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = SpoolWriter::create(&dir, 0).expect("create");
+        w.append(&[ev(1, EventKind::Spawn, 1)], 0).expect("append");
+        w.append(&[ev(2, EventKind::ExecBegin, 2)], 0).expect("append");
+        drop(w);
+        // Simulate the kill landing mid-append: chop the last frame.
+        let path = spool_path(&dir, 0);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        let back = read_spool_file(&path);
+        assert_eq!(back.len(), 1, "valid prefix survives the torn tail");
+        assert_eq!(back[0].events[0].a, 1);
+        // A missing file is just empty.
+        assert!(read_spool_file(Path::new("/nonexistent/x.spool")).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_dedups_streamed_and_spooled_copies() {
+        let streamed = vec![chunk(0, 0, &[1]), chunk(0, 1, &[2]), chunk(1, 0, &[5])];
+        // The spool has everything the stream has, plus the chunk the
+        // parent never received before the kill.
+        let spooled = vec![chunk(0, 0, &[1]), chunk(0, 1, &[2]), chunk(0, 2, &[3])];
+        let merged = merge_chunks(streamed, spooled);
+        let keys: Vec<(u32, u64)> = merged.iter().map(|c| (c.locality, c.seq)).collect();
+        assert_eq!(keys, vec![(0, 0), (0, 1), (0, 2), (1, 0)]);
+        let per = per_locality(merged);
+        assert_eq!(per.len(), 2);
+        let loc0: Vec<u64> = per[0].1.iter().map(|e| e.a).collect();
+        assert_eq!(loc0, vec![1, 2, 3], "seq order, exactly once");
+    }
+
+    #[test]
+    fn tracks_from_chunks_groups_by_locality_and_track() {
+        let mut c = chunk(3, 0, &[1, 2]);
+        c.events[1].track = 1;
+        c.dropped = 4;
+        let (tracks, dropped) = tracks_from_chunks(vec![c]);
+        assert_eq!(dropped, 4);
+        assert_eq!(tracks.len(), 2);
+        assert!(tracks.iter().all(|t| t.pid == WORKER_PID_BASE + 3));
+        assert_eq!(tracks[0].name, "loc3/t0");
+        assert_eq!(tracks[1].name, "loc3/t1");
+    }
+}

@@ -240,7 +240,9 @@ impl FaultWiring {
             injector.draw("workload-task")?;
             let mut out = body(vals)?;
             let cksum = kernel::checksum(&out);
-            sdc.maybe_corrupt(&mut out);
+            if sdc.maybe_corrupt(&mut out) {
+                crate::trace::emit(crate::trace::EventKind::SdcFlip, sdc.count(), 0);
+            }
             Ok(Chunk::with_checksum(out, cksum))
         }
     }
@@ -965,6 +967,18 @@ fn proc_settle(cluster: &ProcCluster, pspec: &ProcSpec) {
     cluster.settle_verdicts(Duration::from_millis(deadline_ms * 4 + 500));
 }
 
+/// Fold the workers' flight-recorder chunks (streamed frames merged with
+/// the fsynced spool files, so a SIGKILLed worker's final events are
+/// included) into the parent's trace session. No-op when tracing is off.
+fn ingest_cluster_trace(cluster: &ProcCluster) {
+    if !crate::trace::active() {
+        return;
+    }
+    for (loc, events, dropped) in crate::trace::spool::per_locality(cluster.take_trace()) {
+        crate::trace::ingest_remote(loc, events, dropped);
+    }
+}
+
 /// The process-backed route: the same DAG loop, every task body a
 /// remote call onto a spawned worker process, the spec's schedule fired
 /// as real `SIGKILL`s at the same task-index clock the simulated route
@@ -1010,6 +1024,7 @@ fn run_proc(
     }
     let wall = timer.elapsed_secs();
     proc_settle(&cluster, pspec);
+    ingest_cluster_trace(&cluster);
 
     let localities = cluster.locality_reports(&kills_applied);
     let drain = cluster.drain_latency_secs();
@@ -1103,6 +1118,7 @@ fn run_proc_ckpt(
     }
     let out = outcome?;
     proc_settle(&cluster, pspec);
+    ingest_cluster_trace(&cluster);
 
     let localities = cluster.locality_reports(&kills_applied);
     let drain = cluster.drain_latency_secs();

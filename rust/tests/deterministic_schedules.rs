@@ -14,7 +14,10 @@
 //! * kill-mid-drain orderings on the lineage ledger (claim-then-drain
 //!   and drain-then-claim — the exactly-once arbitration);
 //! * replica-team cancel-vs-resolve, both orders (a loser's late result
-//!   never lands).
+//!   never lands);
+//! * flight-recorder ring record-vs-drain orderings, and wraparound
+//!   where drain timing decides whether overwrite-oldest costs events
+//!   (the loss is always counted, never silent).
 //!
 //! CI runs this file with `--test-threads=1`: the schedules are already
 //! deterministic, serial execution keeps their traces readable when one
@@ -693,6 +696,140 @@ fn det_monitor_never_declares_a_slow_but_alive_worker() {
 
     assert!(!mon.borrow().is_dead(LocalityId(0)));
     assert_eq!(mon.borrow().alive_ids(), vec![LocalityId(0)]);
+}
+
+// ---------------------------------------------------------------------
+// Flight-recorder ring: record vs. drain orderings and wraparound
+// ---------------------------------------------------------------------
+
+/// Record vs. drain, both orders, on a private ring (no global
+/// session). Drain-first sees an empty batch; record-first sees both
+/// events, oldest first. Either way nothing is dropped and nothing is
+/// delivered twice.
+#[test]
+fn det_ring_record_vs_drain_both_orders() {
+    use rhpx::trace::{EventKind, Ring};
+
+    for (script, expect_batches) in [
+        ("writer reader reader", vec![vec![10u64, 20], vec![]]),
+        ("reader writer reader", vec![vec![], vec![10, 20]]),
+    ] {
+        let ring = Ring::new(8, 0);
+        let batches: RefCell<Vec<Vec<u64>>> = RefCell::new(Vec::new());
+
+        let mut il = Interleaver::new();
+        il.spawn(
+            "writer",
+            vec![step(|_| {
+                ring.record(10, EventKind::ExecBegin, 1, 0);
+                ring.record(20, EventKind::ExecEnd, 1, 0);
+            })],
+        );
+        il.spawn(
+            "reader",
+            (0..2)
+                .map(|_| {
+                    step(|_| {
+                        let d = ring.drain();
+                        assert_eq!(d.dropped, 0, "no overwrite in an 8-slot ring");
+                        batches
+                            .borrow_mut()
+                            .push(d.events.iter().map(|e| e.ts_ns).collect());
+                    })
+                })
+                .collect::<Vec<_>>(),
+        );
+        il.run_script(script).unwrap();
+
+        assert_eq!(*batches.borrow(), expect_batches, "script {script:?}");
+        assert_eq!(ring.total(), 2, "script {script:?}");
+        assert_eq!(ring.dropped(), 0, "script {script:?}");
+    }
+}
+
+/// Six records into a four-slot ring before any drain: the two oldest
+/// events are overwritten, the drain returns the surviving four in
+/// order, and the loss is *counted* — the overwrite-oldest contract is
+/// honest, never silent.
+#[test]
+fn det_ring_wraparound_overwrites_oldest_and_counts_the_loss() {
+    use rhpx::trace::{EventKind, Ring};
+
+    let ring = Ring::new(4, 0);
+    let drained: RefCell<Vec<u64>> = RefCell::new(Vec::new());
+    let lost: RefCell<u64> = RefCell::new(0);
+
+    let mut il = Interleaver::new();
+    il.spawn(
+        "writer",
+        vec![step(|_| {
+            for i in 0..6u64 {
+                ring.record(i, EventKind::Spawn, i, 0);
+            }
+        })],
+    );
+    il.spawn(
+        "reader",
+        vec![step(|_| {
+            let d = ring.drain();
+            *lost.borrow_mut() = d.dropped;
+            drained.borrow_mut().extend(d.events.iter().map(|e| e.ts_ns));
+        })],
+    );
+    il.run_script("writer reader").unwrap();
+
+    assert_eq!(*drained.borrow(), vec![2, 3, 4, 5], "survivors, oldest first");
+    assert_eq!(*lost.borrow(), 2, "the overwritten pair is priced");
+    assert_eq!(ring.total(), 6);
+    assert_eq!(ring.dropped(), 2);
+}
+
+/// The same six records, but the reader drains mid-stream — before the
+/// write cursor laps the read cursor. Now nothing is lost: drain timing
+/// alone decides whether wraparound costs events, which is exactly the
+/// trade the fixed-capacity record path makes.
+#[test]
+fn det_ring_mid_stream_drain_prevents_the_loss() {
+    use rhpx::trace::{EventKind, Ring};
+
+    let ring = Ring::new(4, 0);
+    let batches: RefCell<Vec<Vec<u64>>> = RefCell::new(Vec::new());
+
+    let mut il = Interleaver::new();
+    il.spawn(
+        "writer",
+        vec![
+            step(|_| {
+                for i in 0..3u64 {
+                    ring.record(i, EventKind::Spawn, i, 0);
+                }
+            }),
+            step(|_| {
+                for i in 3..6u64 {
+                    ring.record(i, EventKind::Spawn, i, 0);
+                }
+            }),
+        ],
+    );
+    il.spawn(
+        "reader",
+        (0..2)
+            .map(|_| {
+                step(|_| {
+                    let d = ring.drain();
+                    assert_eq!(d.dropped, 0, "mid-stream drains stay ahead of the writer");
+                    batches
+                        .borrow_mut()
+                        .push(d.events.iter().map(|e| e.ts_ns).collect());
+                })
+            })
+            .collect::<Vec<_>>(),
+    );
+    il.run_script("writer reader writer reader").unwrap();
+
+    assert_eq!(*batches.borrow(), vec![vec![0, 1, 2], vec![3, 4, 5]]);
+    assert_eq!(ring.total(), 6);
+    assert_eq!(ring.dropped(), 0, "same writes as the wraparound test, zero loss");
 }
 
 // ---------------------------------------------------------------------

@@ -152,6 +152,107 @@ fn checkpointed_run_survives_a_sigkill_with_snapshots_saved() {
     assert!(rep.detection_latency_secs.unwrap_or(0.0) > 0.0);
 }
 
+/// Post-mortem forensics: a traced `proc:3` kill run must yield a merged
+/// timeline that still contains the SIGKILLed worker's pre-death events
+/// (recovered from its fsynced spool — the severed socket never
+/// delivered them), the parent's growing heartbeat silence, the death
+/// verdict, and the re-materialization of the in-flight task — and the
+/// whole thing must export to a well-formed Chrome trace.
+///
+/// This is the one test in this binary that touches the global trace
+/// session; concurrent tests can only *add* parent-side events, and the
+/// worker-pid tracks asserted on are fed exclusively by this cluster's
+/// spool.
+#[test]
+fn sigkill_post_mortem_trace_contains_the_victims_final_events() {
+    use rhpx::trace::{self, chrome, EventKind, WORKER_PID_BASE};
+
+    pin_worker_bin();
+    const VICTIM: u32 = 1;
+    let total = total_tasks("stencil1d");
+    // Kill halfway through the stream so the victim has completed (and
+    // fsynced) launches before dying, with work left to re-materialize.
+    let mut spec =
+        ProcSpec::parse(&format!("{WORKERS}:kill={}@{VICTIM}", (total / 2).max(1))).unwrap();
+    spec.scale_milli = ((SCALE * 1000.0).round() as u32).max(1);
+    let spool = std::env::temp_dir().join(format!("rhpx-postmortem-{}", std::process::id()));
+    std::fs::create_dir_all(&spool).expect("create spool dir");
+    spec.trace_spool = Some(spool.clone());
+
+    trace::enable();
+    let (_, rep) = run_arm("stencil1d", Some(spec), Some(PolicySpec::Replay { n: 3 }));
+    let (tracks, dropped) = trace::take_tracks();
+    trace::disable();
+    let _ = std::fs::remove_dir_all(&spool);
+
+    assert_eq!(rep.kills_applied, 1, "the scheduled SIGKILL fired");
+    assert!(!rep.localities[VICTIM as usize].alive_at_end, "the victim died");
+    assert!(
+        rep.localities[VICTIM as usize].tasks_executed > 0,
+        "the victim completed launches before the kill: {:?}",
+        rep.localities
+    );
+
+    // The corpse's own story, recovered from the spool: every launch it
+    // completed before the SIGKILL is on its track.
+    let victim_events: Vec<_> = tracks
+        .iter()
+        .filter(|t| t.pid == WORKER_PID_BASE + VICTIM)
+        .flat_map(|t| t.events.iter())
+        .collect();
+    assert!(
+        victim_events.iter().any(|e| e.kind == EventKind::ExecBegin),
+        "no pre-death events recovered for the victim; tracks: {:?}",
+        tracks.iter().map(|t| (t.pid, t.name.clone(), t.events.len())).collect::<Vec<_>>()
+    );
+    // The worker flushes its spool *after* sending each reply, so a
+    // SIGKILL can cost at most the events of the one launch whose reply
+    // beat its flush to the wire.
+    let begins = victim_events.iter().filter(|e| e.kind == EventKind::ExecBegin).count();
+    assert!(
+        begins + 1 >= rep.localities[VICTIM as usize].tasks_executed,
+        "completed launches must leave spooled ExecBegins: {} begins vs {} executed",
+        begins,
+        rep.localities[VICTIM as usize].tasks_executed
+    );
+
+    // The parent's side of the death: silence grew (HeartbeatMiss), the
+    // verdict fell on the victim, and the in-flight task re-materialized.
+    let parent: Vec<&rhpx::trace::Event> = tracks
+        .iter()
+        .filter(|t| t.pid < WORKER_PID_BASE)
+        .flat_map(|t| t.events.iter())
+        .collect();
+    let has = |kind: EventKind, pred: fn(&rhpx::trace::Event) -> bool| {
+        parent.iter().any(|e| e.kind == kind && pred(e))
+    };
+    assert!(has(EventKind::HeartbeatMiss, |e| e.a == VICTIM as u64), "no heartbeat misses");
+    assert!(has(EventKind::DeathVerdict, |e| e.a == VICTIM as u64), "no death verdict");
+    assert!(
+        has(EventKind::Rematerialize, |e| e.b == VICTIM as u64),
+        "no re-materialization of the victim's in-flight work"
+    );
+
+    // And the merged timeline exports as a loadable Chrome trace with
+    // the victim's process in it.
+    let out = std::env::temp_dir().join(format!("rhpx-postmortem-{}.json", std::process::id()));
+    let summary =
+        chrome::export_tracks(out.to_str().unwrap(), &tracks, dropped).expect("export");
+    assert!(summary.spans > 0, "{summary:?}");
+    let text = std::fs::read_to_string(&out).expect("read trace");
+    let _ = std::fs::remove_file(&out);
+    let json = rhpx::metrics::JsonValue::parse(&text).expect("trace is valid JSON");
+    let events = json.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents");
+    let victim_pid = f64::from(WORKER_PID_BASE + VICTIM);
+    assert!(
+        events.iter().any(|e| matches!(
+            e.get("pid"),
+            Some(rhpx::metrics::JsonValue::Num(p)) if *p == victim_pid
+        )),
+        "the killed worker's process is absent from the exported trace"
+    );
+}
+
 /// Fault-free proc run: pure distribution, no deaths, bit-identical
 /// output — the sanity floor under all the kill arms above.
 #[test]

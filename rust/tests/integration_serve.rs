@@ -234,6 +234,25 @@ fn tcp_loopback_submit_ack_result_and_status() {
     assert_eq!(s.accepted, 2);
     assert_eq!(s.completed, 2);
 
+    // The Status frame now carries observability payload too: latency
+    // quantiles measured from the two real executions (monotone by
+    // construction) and the named-counter snapshot whose `/serve/...`
+    // entries must agree with the headline fields on the same frame.
+    assert!(s.p50_us >= 1, "two real jobs ran; the p50 cannot be zero: {s:?}");
+    assert!(s.p50_us <= s.p99_us && s.p99_us <= s.p999_us, "{s:?}");
+    let counter = |name: &str| {
+        s.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("missing counter {name}: {:?}", s.counters))
+            .1
+    };
+    assert_eq!(counter("/serve/count/submitted"), s.submitted);
+    assert_eq!(counter("/serve/count/accepted"), s.accepted);
+    assert_eq!(counter("/serve/count/completed"), s.completed);
+    assert_eq!(counter("/serve/count/executions"), 2);
+    assert_eq!(counter("/serve/count/deduped"), 0);
+
     // Garbage: the server answers with a typed protocol Reject, then
     // hangs up — it never panics and never acts on a corrupt frame.
     let mut second = TcpStream::connect(addr).expect("connect");

@@ -536,8 +536,30 @@ mod serve_protocol_props {
         (0..len).map(|_| rng.next_u64() as u8).collect()
     }
 
+    /// Arbitrary counter snapshots (the Counters frame payload and the
+    /// StatusReport counter list).
+    pub fn arb_counters(rng: &mut Rng) -> Vec<(String, u64)> {
+        let n = gen::usize_in(rng, 0, 4);
+        (0..n).map(|_| (arb_string(rng), rng.next_u64())).collect()
+    }
+
+    /// Arbitrary trace events — every kind, full-range payload words.
+    pub fn arb_events(rng: &mut Rng) -> Vec<rhpx::trace::Event> {
+        use rhpx::trace::EventKind;
+        let n = gen::usize_in(rng, 0, 6);
+        (0..n)
+            .map(|_| rhpx::trace::Event {
+                ts_ns: rng.next_u64(),
+                kind: EventKind::ALL[gen::usize_in(rng, 0, EventKind::ALL.len() - 1)],
+                track: rng.next_u64() as u32,
+                a: rng.next_u64(),
+                b: rng.next_u64(),
+            })
+            .collect()
+    }
+
     pub fn arb_frame(rng: &mut Rng) -> Frame {
-        match gen::usize_in(rng, 0, 8) {
+        match gen::usize_in(rng, 0, 10) {
             0 => Frame::Submit(JobSpec {
                 job_id: rng.next_u64(),
                 workload: arb_string(rng),
@@ -561,6 +583,10 @@ mod serve_protocol_props {
                 rejected_breaker: rng.next_u64(),
                 queue_depth: rng.next_u64(),
                 queue_capacity: rng.next_u64(),
+                p50_us: rng.next_u64(),
+                p99_us: rng.next_u64(),
+                p999_us: rng.next_u64(),
+                counters: arb_counters(rng),
             }),
             4 => Frame::Reject {
                 job_id: rng.next_u64(),
@@ -584,7 +610,17 @@ mod serve_protocol_props {
                 payload: arb_bytes(rng),
             },
             7 => Frame::Heartbeat { locality: rng.next_u64() as u32, seq: rng.next_u64() },
-            _ => Frame::Snapshot { key: arb_string(rng), bytes: arb_bytes(rng) },
+            8 => Frame::Snapshot { key: arb_string(rng), bytes: arb_bytes(rng) },
+            9 => Frame::Trace(rhpx::trace::spool::TraceChunk {
+                locality: rng.next_u64() as u32,
+                seq: rng.next_u64(),
+                dropped: rng.next_u64(),
+                events: arb_events(rng),
+            }),
+            _ => Frame::Counters {
+                locality: rng.next_u64() as u32,
+                counters: arb_counters(rng),
+            },
         }
     }
 
@@ -754,6 +790,78 @@ fn prop_serve_heartbeat_roundtrip_truncation_and_bitflip() {
             Err(e) if is_typed(&e) => Ok(()),
             Err(e) => Err(format!("untyped error {e}")),
         }
+    });
+}
+
+/// ∀ random event streams (arbitrary kinds, timestamps, and payload
+/// words, across several tracks, with matched, unmatched, and orphaned
+/// exec spans): the Chrome export round-trips through the crate's own
+/// JSON parser, every event carries a phase from {B, E, i, M}, and
+/// begins balance ends exactly — an orphaned half-span must degrade to
+/// an instant, never corrupt the viewer's span stack.
+#[test]
+fn prop_chrome_export_json_valid_and_balanced() {
+    use rhpx::metrics::JsonValue;
+    use rhpx::trace::{chrome, Event, EventKind, Track};
+    use serve_protocol_props::arb_events;
+
+    check("chrome-export", PropConfig { cases: 48, seed: 0xE7 }, |rng| {
+        let n_tracks = gen::usize_in(rng, 1, 3);
+        let mut tracks = Vec::new();
+        for t in 0..n_tracks {
+            // Random noise events (any kind, any timestamp) plus
+            // synthesized spans, some deliberately left unclosed — the
+            // killed-worker shape.
+            let mut events = arb_events(rng);
+            let spans = gen::usize_in(rng, 0, 4);
+            let mut ts = 0u64;
+            for s in 0..spans {
+                ts += 10;
+                events.push(Event {
+                    ts_ns: ts,
+                    kind: EventKind::ExecBegin,
+                    track: 0,
+                    a: s as u64,
+                    b: 0,
+                });
+                if gen::bool_with(rng, 0.7) {
+                    ts += 10;
+                    events.push(Event {
+                        ts_ns: ts,
+                        kind: EventKind::ExecEnd,
+                        track: 0,
+                        a: s as u64,
+                        b: 0,
+                    });
+                }
+            }
+            events.sort_by_key(|e| e.ts_ns);
+            tracks.push(Track {
+                pid: gen::usize_in(rng, 1, 4) as u32,
+                tid: t as u32 + 1,
+                name: format!("lane-{t}"),
+                events,
+            });
+        }
+        let rendered = chrome::chrome_trace(&tracks, rng.next_u64() % 5).render();
+        let back = JsonValue::parse(&rendered).map_err(|e| e.to_string())?;
+        let events = back
+            .get("traceEvents")
+            .and_then(JsonValue::as_arr)
+            .ok_or("no traceEvents array")?;
+        let (mut begins, mut ends) = (0u64, 0u64);
+        for e in events {
+            match e.get("ph").and_then(JsonValue::as_str).ok_or("event without ph")? {
+                "B" => begins += 1,
+                "E" => ends += 1,
+                "i" | "M" => {}
+                other => return Err(format!("unexpected phase {other:?}")),
+            }
+        }
+        if begins != ends {
+            return Err(format!("{begins} begins vs {ends} ends"));
+        }
+        Ok(())
     });
 }
 

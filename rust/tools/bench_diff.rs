@@ -3,7 +3,8 @@
 //!
 //!   cargo run --release --bin bench_diff -- [--baseline DIR] [FILE...]
 //!
-//! Defaults: baseline dir `BENCH_baseline`, files `BENCH_perf_micro.json`.
+//! Defaults: baseline dir `BENCH_baseline`, files `BENCH_perf_micro.json`
+//! and `BENCH_table_obs.json`.
 //! Dependency-free: reuses the crate's own `metrics::bench_json` parser.
 //! Always exits 0 — this is a *report* (CI runs it as a non-blocking
 //! step); regressions are surfaced, not enforced, so noisy runners never
@@ -27,6 +28,14 @@ fn flatten(v: &JsonValue, prefix: &str, out: &mut BTreeMap<String, f64>) {
     match v {
         JsonValue::Num(x) => {
             out.insert(prefix.to_string(), *x);
+        }
+        // Numeric-looking strings are metrics too: rendered table cells
+        // and quantile fields (p50/p99/p999) arrive as strings in some
+        // payloads, and skipping them would hide latency regressions.
+        JsonValue::Str(s) => {
+            if let Ok(x) = s.trim().parse::<f64>() {
+                out.insert(prefix.to_string(), x);
+            }
         }
         JsonValue::Obj(map) => {
             for (k, val) in map {
@@ -146,6 +155,7 @@ fn main() {
     }
     if files.is_empty() {
         files.push("BENCH_perf_micro.json".to_string());
+        files.push("BENCH_table_obs.json".to_string());
     }
     for f in &files {
         diff_one(Path::new(&baseline_dir), f);
